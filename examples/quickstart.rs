@@ -1,0 +1,49 @@
+//! Quickstart: simulate one workload under Rainbow and the Flat-static
+//! baseline, print the headline comparison.
+//!
+//! ```sh
+//! cargo run --release --example quickstart [app]
+//! ```
+
+use rainbow::report::{run_uncached, RunSpec};
+use rainbow::util::tables::Table;
+
+fn main() {
+    let app = std::env::args().nth(1).unwrap_or_else(|| "DICT".to_string());
+    println!("simulating {app} under Flat-static and Rainbow \
+              (1/8-scale Table IV machine)...\n");
+
+    let mut spec = RunSpec::new(&app, "flat");
+    spec.instructions = 3_000_000;
+    let flat = run_uncached(&spec);
+    spec.policy = "rainbow".to_string();
+    let rb = run_uncached(&spec);
+
+    let mut t = Table::new(
+        &format!("{app}: Rainbow vs Flat-static"),
+        &["metric", "Flat-static", "Rainbow", "ratio"]);
+    let ratio = |a: f64, b: f64| {
+        if b == 0.0 { "-".to_string() } else { format!("{:.2}x", a / b) }
+    };
+    t.row(&["IPC".into(), format!("{:.4}", flat.ipc()),
+            format!("{:.4}", rb.ipc()), ratio(rb.ipc(), flat.ipc())]);
+    t.row(&["MPKI".into(), format!("{:.2}", flat.mpki()),
+            format!("{:.3}", rb.mpki()), ratio(flat.mpki(), rb.mpki())]);
+    t.row(&["TLB-miss cycles %".into(),
+            format!("{:.1}%", 100.0 * flat.tlb_miss_cycle_frac()),
+            format!("{:.2}%", 100.0 * rb.tlb_miss_cycle_frac()),
+            "".into()]);
+    t.row(&["energy (mJ)".into(), format!("{:.1}", flat.energy_mj()),
+            format!("{:.1}", rb.energy_mj()),
+            ratio(flat.energy_mj(), rb.energy_mj())]);
+    t.row(&["pages migrated".into(), "0".into(),
+            rb.migrations.to_string(), "".into()]);
+    t.row(&["TLB shootdowns".into(), "0".into(),
+            rb.shootdowns.to_string(),
+            "(zero by design: §III-F)".into()]);
+    t.emit(None);
+
+    println!("Rainbow speedup over Flat-static: {:.2}x \
+              (paper: 1.727x average across its suite)",
+             rb.ipc() / flat.ipc());
+}

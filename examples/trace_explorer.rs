@@ -1,0 +1,90 @@
+//! Trace explorer: record a workload trace, persist it, reload it, and
+//! print the paper's motivation analytics over it — a Fig.-1-style CDF of
+//! touched 4 KB pages per superpage and a Table-II-style hot-page
+//! distribution — exercising the trace substrate end to end.
+//!
+//! ```sh
+//! cargo run --release --example trace_explorer [app] [n_accesses]
+//! ```
+
+use std::collections::HashMap;
+
+use rainbow::config::{PAGES_PER_SP, PAGE_SIZE};
+use rainbow::util::stats::{cdf_at, Histogram};
+use rainbow::util::tables::Table;
+use rainbow::workloads::{AppProfile, Synth, Trace, HOT_HIST_BOUNDS};
+
+fn main() {
+    let app = std::env::args().nth(1).unwrap_or_else(|| "mcf".into());
+    let n: usize = std::env::args()
+        .nth(2)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300_000);
+
+    let profile = AppProfile::by_name(&app)
+        .unwrap_or_else(|| panic!("unknown app {app}"))
+        .scaled(8);
+    println!("{app}: footprint {} MB, working set {} MB (1/8 scale)",
+             profile.footprint >> 20, profile.working_set >> 20);
+
+    // Record + persist + reload (round-trip through the binary format).
+    let mut synth = Synth::new(profile, 0, 7);
+    let trace = Trace::record(|| synth.next_op(), n);
+    let path = std::env::temp_dir().join(format!("{app}.trace"));
+    trace.save(&path).unwrap();
+    let trace = Trace::load(&path).unwrap();
+    println!("trace: {} memory records, {} instructions, saved to {}\n",
+             trace.len(), trace.instructions(), path.display());
+
+    // Per-page access counts from the reloaded trace.
+    let mut counts: HashMap<u64, u64> = HashMap::new();
+    let mut writes = 0u64;
+    for r in &trace.recs {
+        *counts.entry(r.vaddr / PAGE_SIZE).or_default() += 1;
+        writes += r.is_write as u64;
+    }
+    println!("write ratio: {:.1}%  touched pages: {}",
+             100.0 * writes as f64 / trace.len() as f64, counts.len());
+
+    // Fig. 1: CDF of touched pages per superpage.
+    let mut per_sp: HashMap<u64, u64> = HashMap::new();
+    for &pg in counts.keys() {
+        *per_sp.entry(pg / PAGES_PER_SP).or_default() += 1;
+    }
+    let touched: Vec<u64> = per_sp.values().copied().collect();
+    let points = [1u64, 8, 32, 64, 128, 256, 384, 512];
+    let cdf = cdf_at(&touched, &points);
+    let mut t = Table::new(
+        &format!("Fig 1 (from trace): {app} — CDF of touched 4KB pages/superpage"),
+        &["<= pages", "fraction of superpages"]);
+    for (p, c) in points.iter().zip(cdf.iter()) {
+        t.row(&[p.to_string(), format!("{c:.3}")]);
+    }
+    t.emit(None);
+
+    // Table II: hot pages (top pages carrying 70% of accesses) per sp.
+    let mut by_count: Vec<(u64, u64)> =
+        counts.iter().map(|(&p, &c)| (p, c)).collect();
+    by_count.sort_by(|a, b| b.1.cmp(&a.1));
+    let target = (trace.len() as u64 * 7) / 10;
+    let mut acc = 0;
+    let mut hot_per_sp: HashMap<u64, u64> = HashMap::new();
+    for (pg, c) in by_count {
+        if acc >= target {
+            break;
+        }
+        acc += c;
+        *hot_per_sp.entry(pg / PAGES_PER_SP).or_default() += 1;
+    }
+    let mut h = Histogram::with_bounds(&HOT_HIST_BOUNDS);
+    for (_, c) in hot_per_sp {
+        h.add(c);
+    }
+    let fr = h.fractions();
+    let mut t = Table::new(
+        &format!("Table II (from trace): {app} — hot 4KB pages per superpage"),
+        &["1-32", "33-64", "65-128", "129-256", "257-384", "385-512"]);
+    t.row(&(0..6).map(|i| format!("{:.1}%", 100.0 * fr[i]))
+        .collect::<Vec<_>>());
+    t.emit(None);
+}

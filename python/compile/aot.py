@@ -1,0 +1,66 @@
+"""AOT lowering: JAX pipeline -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:  hotpage_stage1.hlo.txt, hotpage_stage2.hlo.txt, manifest.txt
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, example_args, name, out_dir):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {name}: {len(text)} chars -> {path}")
+    return path, text
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat single-file flag used by older Makefile rules.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for spec_fn, fn in ((model.stage1_spec, model.stage1),
+                        (model.stage2_spec, model.stage2)):
+        example_args, name = spec_fn()
+        path, text = lower_one(fn, example_args, name, out_dir)
+        manifest.append((name, os.path.basename(path), len(text)))
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"n_sp={model.N_SP} top_n={model.TOP_N} "
+                f"sp_pages={model.SP_PAGES}\n")
+        for name, base, size in manifest:
+            f.write(f"{name} {base} {size}\n")
+    print(f"manifest -> {out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

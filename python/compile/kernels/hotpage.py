@@ -1,0 +1,102 @@
+"""L1 Pallas kernels for the Rainbow interval analytics.
+
+Two kernels, both VPU-elementwise (no MXU), tiled so each block fits
+comfortably in VMEM on a real TPU (see DESIGN.md §7):
+
+* ``score_kernel``   — stage-1 weighted superpage scoring over the
+  (N_SP,) counter arrays. Block = 2048 lanes = 8 KiB/operand in f32.
+* ``benefit_kernel`` — stage-2 fused Eq.-1 benefit + hot classification
+  over the (TOP_N, 512) small-page counter tiles. Block = (16, 512)
+  = 32 KiB/operand in f32; three operands in, two out -> ~160 KiB live,
+  double-bufferable within 16 MiB VMEM.
+
+``interpret=True`` is mandatory in this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+both jax-CPU and the rust PJRT client run (and that AOT serializes).
+
+Scalar parameters are broadcast as small (1, 8) blocks replicated to every
+grid step rather than SMEM scalars, which keeps the lowering portable
+across interpret/Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+SCORE_BLOCK = 2048          # lanes per stage-1 grid step
+BENEFIT_BLOCK_ROWS = 16     # superpages per stage-2 grid step
+
+
+def _score_kernel(params_ref, reads_ref, writes_ref, score_ref):
+    w = params_ref[0, ref.P_WWEIGHT]
+    score_ref[...] = (
+        reads_ref[...].astype(jnp.float32)
+        + w * writes_ref[...].astype(jnp.float32)
+    )
+
+
+def superpage_score_pallas(sp_reads, sp_writes, params, block=SCORE_BLOCK):
+    """Pallas version of ``ref.superpage_score`` (f32[N])."""
+    n = sp_reads.shape[0]
+    assert n % block == 0, f"N_SP={n} must be a multiple of block={block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(params.reshape(1, 8), sp_reads, sp_writes)
+
+
+def _benefit_kernel(params_ref, reads_ref, writes_ref, benefit_ref, hot_ref):
+    p = params_ref[0]
+    dr = p[ref.P_TNR] - p[ref.P_TDR]
+    dw = p[ref.P_TNW] - p[ref.P_TDW]
+    r = reads_ref[...]
+    w = writes_ref[...]
+    benefit = (
+        dr * r.astype(jnp.float32)
+        + dw * w.astype(jnp.float32)
+        - p[ref.P_TMIG]
+    )
+    touched = (r + w) > 0
+    benefit_ref[...] = benefit
+    hot_ref[...] = ((benefit > p[ref.P_THRESH]) & touched).astype(jnp.int32)
+
+
+def benefit_classify_pallas(
+    pg_reads, pg_writes, params, block_rows=BENEFIT_BLOCK_ROWS
+):
+    """Pallas version of stage 2: (benefit f32[N,512], hot i32[N,512])."""
+    n, cols = pg_reads.shape
+    assert cols == ref.SP_PAGES, f"expected {ref.SP_PAGES} pages/superpage"
+    assert n % block_rows == 0, f"TOP_N={n} not multiple of {block_rows}"
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _benefit_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, cols), jnp.float32),
+            jax.ShapeDtypeStruct((n, cols), jnp.int32),
+        ],
+        interpret=True,
+    )(params.reshape(1, 8), pg_reads, pg_writes)

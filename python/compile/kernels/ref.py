@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracle for the Rainbow interval-analytics pipeline.
+
+This is the correctness ground truth for the Pallas kernels in
+``hotpage.py`` and for the Rust native fallback
+(``rust/src/runtime/native.rs``), which is written to be bit-exact with
+the math here (f32 arithmetic, stable lowest-index tie-break in top-k).
+
+The pipeline implements the paper's two-stage hot-page identification
+(Fig. 3/4) and the utility migration model (Eq. 1):
+
+  stage 1:  score(sp)   = reads(sp) + write_weight * writes(sp)
+            top-N superpages by score (stable: ties -> lower index)
+  stage 2:  benefit(pg) = (t_nr - t_dr) * C_r + (t_nw - t_dw) * C_w - T_mig
+            hot(pg)     = benefit > threshold  (and touched at all)
+
+Parameter vector layout (f32[8]):
+  [0] t_nr   NVM read latency (cycles)
+  [1] t_nw   NVM write latency
+  [2] t_dr   DRAM read latency
+  [3] t_dw   DRAM write latency
+  [4] T_mig  cycles per 4 KB page migration
+  [5] T_wb   cycles per dirty-page writeback (Eq. 2 path, used by caller)
+  [6] threshold  minimum benefit (cycles) to classify hot
+  [7] write_weight  weighting of writes in superpage scoring
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+# Fixed AOT shapes (see DESIGN.md §5). The simulator pads/truncates to these.
+N_SP = 16384      # superpages tracked by the stage-1 counter array
+TOP_N = 128       # superpages monitored at 4 KB granularity in stage 2
+SP_PAGES = 512    # 4 KB pages per 2 MB superpage
+
+P_TNR, P_TNW, P_TDR, P_TDW, P_TMIG, P_TWB, P_THRESH, P_WWEIGHT = range(8)
+
+
+def superpage_score(sp_reads, sp_writes, params):
+    """Stage-1 scoring: weighted access count per superpage (f32)."""
+    w = params[P_WWEIGHT]
+    return sp_reads.astype(jnp.float32) + w * sp_writes.astype(jnp.float32)
+
+
+def top_n_superpages(score, n=TOP_N):
+    """Indices of the n highest-scoring superpages, stable by lower index.
+
+    ``lax.top_k`` already breaks ties by lowest index; we rely on that and
+    mirror it in the Rust fallback.
+    """
+    _, idx = lax.top_k(score, n)
+    return idx.astype(jnp.int32)
+
+
+def page_benefit(pg_reads, pg_writes, params):
+    """Eq. 1 migration benefit per 4 KB page (f32, cycles)."""
+    dr = params[P_TNR] - params[P_TDR]
+    dw = params[P_TNW] - params[P_TDW]
+    return (
+        dr * pg_reads.astype(jnp.float32)
+        + dw * pg_writes.astype(jnp.float32)
+        - params[P_TMIG]
+    )
+
+
+def classify_hot(benefit, pg_reads, pg_writes, params):
+    """Hot mask: benefit above threshold and the page was touched."""
+    touched = (pg_reads + pg_writes) > 0
+    return ((benefit > params[P_THRESH]) & touched).astype(jnp.int32)
+
+
+def stage1_ref(sp_reads, sp_writes, params):
+    """Full stage 1: (score f32[N], topn i32[TOP_N])."""
+    score = superpage_score(sp_reads, sp_writes, params)
+    return score, top_n_superpages(score, TOP_N)
+
+
+def stage2_ref(pg_reads, pg_writes, params):
+    """Full stage 2: (benefit f32[N,512], hot i32[N,512])."""
+    benefit = page_benefit(pg_reads, pg_writes, params)
+    return benefit, classify_hot(benefit, pg_reads, pg_writes, params)

@@ -1,0 +1,74 @@
+"""L2 JAX model: the Rainbow per-interval hot-page analytics pipeline.
+
+Composes the L1 Pallas kernels (``kernels.hotpage``) with the top-k
+selection into the two artifacts the Rust coordinator executes every
+sampling interval:
+
+* ``stage1(sp_reads i32[N_SP], sp_writes i32[N_SP], params f32[8])
+      -> (score f32[N_SP], topn i32[TOP_N])``
+  Weighted superpage scoring (Pallas) + lax.top_k selection. The Rust
+  side then gathers the 4 KB counters of the selected superpages.
+
+* ``stage2(pg_reads i32[TOP_N,512], pg_writes i32[TOP_N,512], params)
+      -> (benefit f32[TOP_N,512], hot i32[TOP_N,512])``
+  Fused Eq.-1 benefit + threshold classification (Pallas).
+
+Both are pure functions of their inputs with fixed shapes, so they lower
+once (``aot.py``) and never require Python at simulation time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import hotpage, ref
+
+N_SP = ref.N_SP
+TOP_N = ref.TOP_N
+SP_PAGES = ref.SP_PAGES
+
+
+def stage1(sp_reads, sp_writes, params):
+    """Superpage scoring + top-N selection. Returns (score, topn_idx).
+
+    Top-N uses a stable argsort on the negated score rather than
+    ``lax.top_k``: semantics are identical (descending value, ties to the
+    lowest index — what the Rust native fallback mirrors), but the sort
+    lowering parses on xla_extension 0.5.1, whose HLO parser predates the
+    TopK op's ``largest`` attribute.
+    """
+    score = hotpage.superpage_score_pallas(sp_reads, sp_writes, params)
+    idx = jnp.argsort(-score, stable=True)[:TOP_N]
+    return score, idx.astype(jnp.int32)
+
+
+def stage2(pg_reads, pg_writes, params):
+    """Per-page migration benefit + hot classification."""
+    benefit, hot = hotpage.benefit_classify_pallas(pg_reads, pg_writes, params)
+    return benefit, hot
+
+
+def stage1_spec():
+    """(example_args, name) for AOT lowering of stage1."""
+    import jax
+
+    return (
+        (
+            jax.ShapeDtypeStruct((N_SP,), jnp.int32),
+            jax.ShapeDtypeStruct((N_SP,), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        ),
+        "hotpage_stage1",
+    )
+
+
+def stage2_spec():
+    """(example_args, name) for AOT lowering of stage2."""
+    import jax
+
+    return (
+        (
+            jax.ShapeDtypeStruct((TOP_N, SP_PAGES), jnp.int32),
+            jax.ShapeDtypeStruct((TOP_N, SP_PAGES), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        ),
+        "hotpage_stage2",
+    )

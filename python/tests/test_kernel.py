@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/values; fixed seeds keep runs deterministic.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hotpage, ref
+
+RNG = np.random.default_rng(0x5EED)
+
+PARAMS = np.array(
+    # tnr   tnw   tdr   tdw   tmig   twb   thresh  wweight
+    [62.0, 547.0, 43.0, 91.0, 4096.0, 4096.0, 64.0, 3.0],
+    dtype=np.float32,
+)
+
+
+def rand_counts(shape, hi=0x7FFF):
+    return RNG.integers(0, hi, size=shape, dtype=np.int32)
+
+
+# ---------------------------------------------------------------- stage 1
+
+def test_score_matches_ref_full_shape():
+    r = rand_counts((ref.N_SP,))
+    w = rand_counts((ref.N_SP,))
+    got = hotpage.superpage_score_pallas(jnp.array(r), jnp.array(w),
+                                         jnp.array(PARAMS))
+    want = ref.superpage_score(jnp.array(r), jnp.array(w), jnp.array(PARAMS))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_score_zero_counts_is_zero():
+    z = jnp.zeros((ref.N_SP,), jnp.int32)
+    got = hotpage.superpage_score_pallas(z, z, jnp.array(PARAMS))
+    assert not np.any(np.asarray(got))
+
+
+def test_score_write_weighting():
+    """A write must count write_weight times a read (paper §III-B)."""
+    r = np.zeros(ref.N_SP, np.int32)
+    w = np.zeros(ref.N_SP, np.int32)
+    r[7] = 1
+    w[9] = 1
+    got = np.asarray(
+        hotpage.superpage_score_pallas(jnp.array(r), jnp.array(w),
+                                       jnp.array(PARAMS)))
+    assert got[7] == 1.0
+    assert got[9] == PARAMS[ref.P_WWEIGHT]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    block_pow=st.integers(min_value=7, max_value=11),
+    nblocks=st.integers(min_value=1, max_value=4),
+    hi=st.integers(min_value=1, max_value=0x8000),
+    wweight=st.floats(min_value=0.0, max_value=16.0, allow_nan=False),
+)
+def test_score_hypothesis_shapes(block_pow, nblocks, hi, wweight):
+    """Sweep block sizes and counter magnitudes (incl. 15-bit overflow cap)."""
+    block = 1 << block_pow
+    n = block * nblocks
+    rng = np.random.default_rng(block + nblocks + hi)
+    r = rng.integers(0, hi, size=n, dtype=np.int32)
+    w = rng.integers(0, hi, size=n, dtype=np.int32)
+    p = PARAMS.copy()
+    p[ref.P_WWEIGHT] = np.float32(wweight)
+    got = hotpage.superpage_score_pallas(jnp.array(r), jnp.array(w),
+                                         jnp.array(p), block=block)
+    want = ref.superpage_score(jnp.array(r), jnp.array(w), jnp.array(p))
+    # XLA may fuse the multiply-add into an FMA on one path only, so the
+    # pallas and jnp results can differ by 1 ULP for non-representable
+    # weights; exact-weight tests above stay bit-exact.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- stage 2
+
+def test_benefit_matches_ref_full_shape():
+    r = rand_counts((ref.TOP_N, ref.SP_PAGES))
+    w = rand_counts((ref.TOP_N, ref.SP_PAGES))
+    gb, gh = hotpage.benefit_classify_pallas(jnp.array(r), jnp.array(w),
+                                             jnp.array(PARAMS))
+    wb, wh = ref.stage2_ref(jnp.array(r), jnp.array(w), jnp.array(PARAMS))
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(wb))
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(wh))
+
+
+def test_untouched_page_never_hot():
+    """benefit = -T_mig < 0 for untouched pages, and the touched-guard holds
+    even with a negative threshold."""
+    z = jnp.zeros((ref.TOP_N, ref.SP_PAGES), jnp.int32)
+    p = PARAMS.copy()
+    p[ref.P_THRESH] = -1e9
+    benefit, hot = hotpage.benefit_classify_pallas(z, z, jnp.array(p))
+    assert float(np.max(np.asarray(benefit))) == -PARAMS[ref.P_TMIG]
+    assert not np.any(np.asarray(hot))
+
+
+def test_write_heavy_page_hotter_than_read_heavy():
+    """NVM writes are ~9x slower than DRAM writes vs ~1.4x for reads, so a
+    write-heavy page must show a larger benefit (paper Observation/Eq. 1)."""
+    r = np.zeros((ref.TOP_N, ref.SP_PAGES), np.int32)
+    w = np.zeros((ref.TOP_N, ref.SP_PAGES), np.int32)
+    r[0, 0] = 100  # read-heavy page
+    w[0, 1] = 100  # write-heavy page
+    benefit, _ = hotpage.benefit_classify_pallas(
+        jnp.array(r), jnp.array(w), jnp.array(PARAMS))
+    b = np.asarray(benefit)
+    assert b[0, 1] > b[0, 0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows_pow=st.integers(min_value=0, max_value=3),
+    nblocks=st.integers(min_value=1, max_value=4),
+    thresh=st.floats(min_value=-1e4, max_value=1e4, allow_nan=False),
+)
+def test_benefit_hypothesis_shapes(rows_pow, nblocks, thresh):
+    block_rows = 1 << rows_pow
+    n = block_rows * nblocks
+    rng = np.random.default_rng(rows_pow * 131 + nblocks)
+    r = rng.integers(0, 0x7FFF, size=(n, ref.SP_PAGES), dtype=np.int32)
+    w = rng.integers(0, 0x7FFF, size=(n, ref.SP_PAGES), dtype=np.int32)
+    p = PARAMS.copy()
+    p[ref.P_THRESH] = np.float32(thresh)
+    gb, gh = hotpage.benefit_classify_pallas(
+        jnp.array(r), jnp.array(w), jnp.array(p), block_rows=block_rows)
+    wb, wh = ref.stage2_ref(jnp.array(r), jnp.array(w), jnp.array(p))
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(wb))
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(wh))
+
+
+# ------------------------------------------------------------- invariants
+
+def test_hot_mask_is_binary_and_implies_positive_net_benefit():
+    r = rand_counts((ref.TOP_N, ref.SP_PAGES), hi=128)
+    w = rand_counts((ref.TOP_N, ref.SP_PAGES), hi=128)
+    benefit, hot = hotpage.benefit_classify_pallas(
+        jnp.array(r), jnp.array(w), jnp.array(PARAMS))
+    b, h = np.asarray(benefit), np.asarray(hot)
+    assert set(np.unique(h)) <= {0, 1}
+    assert np.all(b[h == 1] > PARAMS[ref.P_THRESH])
+    # complement: cold pages are below-threshold OR untouched
+    cold = h == 0
+    below = b <= PARAMS[ref.P_THRESH]
+    untouched = (r + w) == 0
+    assert np.all(below[cold] | untouched[cold])

@@ -1,0 +1,105 @@
+"""L2 pipeline tests: stage composition, top-k semantics, AOT lowering."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+PARAMS = jnp.array([62.0, 547.0, 43.0, 91.0, 4096.0, 4096.0, 64.0, 3.0],
+                   dtype=jnp.float32)
+
+
+def test_stage1_selects_known_hot_superpages():
+    rng = np.random.default_rng(42)
+    r = rng.integers(0, 4, size=model.N_SP).astype(np.int32)
+    w = np.zeros(model.N_SP, np.int32)
+    hot = rng.choice(model.N_SP, size=model.TOP_N, replace=False)
+    r[hot] = 10_000
+    score, idx = model.stage1(jnp.array(r), jnp.array(w), PARAMS)
+    assert score.shape == (model.N_SP,)
+    assert idx.shape == (model.TOP_N,)
+    assert set(np.asarray(idx).tolist()) == set(hot.tolist())
+
+
+def test_stage1_topk_tie_break_lowest_index():
+    """All-equal scores -> top_k must return 0..TOP_N-1 (the Rust native
+    fallback mirrors exactly this)."""
+    ones = jnp.ones(model.N_SP, jnp.int32)
+    _, idx = model.stage1(ones, ones, PARAMS)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.arange(model.TOP_N, dtype=np.int32))
+
+
+def test_stage1_topk_descending_scores():
+    rng = np.random.default_rng(7)
+    r = rng.integers(0, 1000, size=model.N_SP).astype(np.int32)
+    w = rng.integers(0, 1000, size=model.N_SP).astype(np.int32)
+    score, idx = model.stage1(jnp.array(r), jnp.array(w), PARAMS)
+    s = np.asarray(score)[np.asarray(idx)]
+    assert np.all(np.diff(s) <= 0), "top-k scores must be non-increasing"
+    # and nothing outside the selection beats the minimum selected score
+    mask = np.ones(model.N_SP, bool)
+    mask[np.asarray(idx)] = False
+    assert np.all(np.asarray(score)[mask] <= s[-1])
+
+
+def test_stage2_threshold_monotonicity():
+    """Raising the threshold can only shrink the hot set (paper §IV-F)."""
+    rng = np.random.default_rng(3)
+    r = jnp.array(rng.integers(0, 200, size=(model.TOP_N, model.SP_PAGES)),
+                  jnp.int32)
+    w = jnp.array(rng.integers(0, 200, size=(model.TOP_N, model.SP_PAGES)),
+                  jnp.int32)
+    hots = []
+    for t in (0.0, 1e3, 1e4, 1e5):
+        p = np.asarray(PARAMS).copy()
+        p[ref.P_THRESH] = t
+        _, hot = model.stage2(r, w, jnp.array(p))
+        hots.append(int(np.asarray(hot).sum()))
+    assert hots == sorted(hots, reverse=True)
+
+
+def test_full_pipeline_against_ref():
+    rng = np.random.default_rng(11)
+    spr = jnp.array(rng.integers(0, 0x7FFF, model.N_SP), jnp.int32)
+    spw = jnp.array(rng.integers(0, 0x7FFF, model.N_SP), jnp.int32)
+    s_got, i_got = model.stage1(spr, spw, PARAMS)
+    s_ref, i_ref = ref.stage1_ref(spr, spw, PARAMS)
+    np.testing.assert_array_equal(np.asarray(s_got), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(i_got), np.asarray(i_ref))
+
+    pgr = jnp.array(rng.integers(0, 0x7FFF, (model.TOP_N, model.SP_PAGES)),
+                    jnp.int32)
+    pgw = jnp.array(rng.integers(0, 0x7FFF, (model.TOP_N, model.SP_PAGES)),
+                    jnp.int32)
+    b_got, h_got = model.stage2(pgr, pgw, PARAMS)
+    b_ref, h_ref = ref.stage2_ref(pgr, pgw, PARAMS)
+    np.testing.assert_array_equal(np.asarray(b_got), np.asarray(b_ref))
+    np.testing.assert_array_equal(np.asarray(h_got), np.asarray(h_ref))
+
+
+def test_aot_lowering_emits_parseable_hlo(tmp_path):
+    """Both artifacts lower to HLO text containing an ENTRY computation."""
+    from compile import aot
+
+    for spec_fn, fn in ((model.stage1_spec, model.stage1),
+                        (model.stage2_spec, model.stage2)):
+        example_args, name = spec_fn()
+        path, text = aot.lower_one(fn, example_args, name, str(tmp_path))
+        assert "ENTRY" in text
+        assert "HloModule" in text
+        assert (tmp_path / f"{name}.hlo.txt").exists()
+
+
+def test_stage1_jit_roundtrip_stablehlo():
+    """The lowering path used by aot.py must preserve numerics vs eager."""
+    rng = np.random.default_rng(5)
+    spr = jnp.array(rng.integers(0, 100, model.N_SP), jnp.int32)
+    spw = jnp.array(rng.integers(0, 100, model.N_SP), jnp.int32)
+    eager = model.stage1(spr, spw, PARAMS)
+    jitted = jax.jit(model.stage1)(spr, spw, PARAMS)
+    np.testing.assert_array_equal(np.asarray(eager[0]), np.asarray(jitted[0]))
+    np.testing.assert_array_equal(np.asarray(eager[1]), np.asarray(jitted[1]))

@@ -1,0 +1,10 @@
+//! §III-E analytic model: Rainbow DRAM-page addressing vs 4-level PTW,
+//! including the R_hit ≈ 67% crossover the paper derives.
+mod common;
+use rainbow::config::Config;
+use rainbow::report::figures;
+
+fn main() {
+    common::figure_bench("ana_remap_cost",
+        || figures::ana_remap_cost(&Config::paper()));
+}

@@ -1,0 +1,39 @@
+//! Shared bench-harness glue: every `benches/*.rs` binary regenerates one
+//! paper table/figure (DESIGN.md §4) through the cached experiment
+//! harness, then reports wall time. Results cache lives under
+//! target/rainbow_results, so the first bench populates it and the rest
+//! reuse it.
+#![allow(dead_code)]
+
+use rainbow::report::figures::FigureCtx;
+use rainbow::report::{self, RunSpec};
+
+/// Standard bench context: the default workload subset at 1/8 scale.
+pub fn ctx() -> FigureCtx {
+    let mut base = RunSpec::new("", "");
+    base.scale = 8;
+    base.instructions = bench_instructions();
+    FigureCtx::new(
+        report::default_workloads().iter().map(|s| s.to_string()).collect(),
+        base,
+    )
+}
+
+pub fn bench_instructions() -> u64 {
+    std::env::var("RAINBOW_BENCH_INSTR")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_500_000)
+}
+
+/// Time a figure generator and emit its table.
+pub fn figure_bench<F>(name: &str, f: F)
+where
+    F: FnOnce() -> rainbow::util::tables::Table,
+{
+    let t0 = std::time::Instant::now();
+    let table = f();
+    let dt = t0.elapsed();
+    table.emit(Some(&format!("target/figures/{name}.csv")));
+    println!("bench {name}: generated in {:.2}s\n", dt.as_secs_f64());
+}

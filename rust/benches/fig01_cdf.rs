@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig01_cdf (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig01_cdf", || figures::fig01_cdf(&ctx));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig07_mpki (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig07_mpki", || figures::fig07_mpki(&ctx));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig08_tlbcycles (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig08_tlbcycles", || figures::fig08_tlbcycles(&ctx));
+}

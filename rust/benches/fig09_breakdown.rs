@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig09_breakdown (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig09_breakdown", || figures::fig09_breakdown(&ctx));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig10_ipc (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig10_ipc", || figures::fig10_ipc(&ctx));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig11_traffic (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig11_traffic", || figures::fig11_traffic(&ctx));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig12_energy (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig12_energy", || figures::fig12_energy(&ctx));
+}

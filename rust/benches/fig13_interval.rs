@@ -1,0 +1,11 @@
+//! Fig. 13: sensitivity of migration traffic + IPC to the sampling
+//! interval (paper sweeps 1e5..1e9; we sweep the same factors around the
+//! scaled default).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig13_interval",
+        || figures::fig13_interval(&ctx, &["mcf", "soplex", "GUPS"]));
+}

@@ -1,0 +1,9 @@
+//! Fig. 14: sensitivity to the number of monitored top-N hot superpages.
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig14_topn",
+        || figures::fig14_topn(&ctx, &["mcf", "soplex", "GUPS"]));
+}

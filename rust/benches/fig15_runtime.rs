@@ -1,0 +1,8 @@
+//! Regenerates the paper's fig15_runtime (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("fig15_runtime", || figures::fig15_runtime(&ctx));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's tab01_hotstats (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("tab01_hotstats", || figures::tab01_hotstats(&ctx));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's tab02_hotdist (see DESIGN.md §4).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    let ctx = common::ctx();
+    common::figure_bench("tab02_hotdist", || figures::tab02_hotdist(&ctx));
+}

@@ -1,0 +1,7 @@
+//! Table VI: storage overhead of Rainbow with 1 TB PCM (analytic model).
+mod common;
+use rainbow::report::figures;
+
+fn main() {
+    common::figure_bench("tab06_storage", figures::tab06_storage);
+}

@@ -1,0 +1,201 @@
+//! Three-level cache hierarchy: private L1D/L2 per core, shared L3.
+//!
+//! The hierarchy is non-inclusive and tag-only. An access walks
+//! L1 -> L2 -> L3; the returned outcome tells the caller (the policy)
+//! whether main memory must be consulted and which dirty victims must be
+//! written back to their home device. clflush for page migration flushes a
+//! physical range out of every level of every core (broadcast through the
+//! coherence domain, as §III-F describes).
+
+use crate::config::Config;
+
+use super::cache::{Cache, Writeback};
+
+/// Result of a hierarchy access.
+#[derive(Clone, Debug, Default)]
+pub struct HierOutcome {
+    /// Cycles spent in the cache path (lookup latencies of levels touched).
+    pub cycles: u64,
+    /// True if the request must go to main memory (LLC miss).
+    pub llc_miss: bool,
+    /// Dirty victim lines displaced at any level; the caller writes them
+    /// to their home memory device.
+    pub writebacks: Vec<Writeback>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CacheHierarchy {
+    l1: Vec<Cache>,
+    l2: Vec<Cache>,
+    l3: Cache,
+}
+
+impl CacheHierarchy {
+    pub fn new(cfg: &Config) -> CacheHierarchy {
+        CacheHierarchy {
+            l1: (0..cfg.cores)
+                .map(|_| Cache::new(cfg.l1_cache.size, cfg.l1_cache.assoc,
+                                    cfg.l1_cache.latency))
+                .collect(),
+            l2: (0..cfg.cores)
+                .map(|_| Cache::new(cfg.l2_cache.size, cfg.l2_cache.assoc,
+                                    cfg.l2_cache.latency))
+                .collect(),
+            l3: Cache::new(cfg.l3_cache.size, cfg.l3_cache.assoc,
+                           cfg.l3_cache.latency),
+        }
+    }
+
+    /// Access physical address `paddr` from `core`.
+    pub fn access(&mut self, core: usize, paddr: u64, is_write: bool)
+                  -> HierOutcome {
+        let mut out = HierOutcome::default();
+        // L1
+        out.cycles += self.l1[core].latency;
+        let r1 = self.l1[core].access(paddr, is_write);
+        if let Some(wb) = r1.writeback {
+            // Dirty L1 victim spills into L2.
+            if let Some(wb2) = self.spill(core, wb) {
+                out.writebacks.push(wb2);
+            }
+        }
+        if r1.hit {
+            return out;
+        }
+        // L2
+        out.cycles += self.l2[core].latency;
+        let r2 = self.l2[core].access(paddr, false);
+        if let Some(wb) = r2.writeback {
+            if let Some(wb3) = self.spill_l3(wb) {
+                out.writebacks.push(wb3);
+            }
+        }
+        if r2.hit {
+            return out;
+        }
+        // L3 (shared)
+        out.cycles += self.l3.latency;
+        let r3 = self.l3.access(paddr, false);
+        if let Some(wb) = r3.writeback {
+            out.writebacks.push(wb);
+        }
+        out.llc_miss = !r3.hit;
+        out
+    }
+
+    /// Dirty L1 victim lands in L2 (write-back); may displace L2 victim
+    /// into L3, which may displace to memory.
+    fn spill(&mut self, core: usize, wb: Writeback) -> Option<Writeback> {
+        let r = self.l2[core].access(wb.addr, true);
+        r.writeback.and_then(|w| self.spill_l3(w))
+    }
+
+    fn spill_l3(&mut self, wb: Writeback) -> Option<Writeback> {
+        let r = self.l3.access(wb.addr, true);
+        r.writeback
+    }
+
+    /// clflush a physical range from all levels of all cores; returns the
+    /// dirty lines that must reach memory, plus the number of resident
+    /// lines invalidated (each costs `t_clflush_line`).
+    pub fn clflush_range(&mut self, start: u64, len: u64)
+                         -> (Vec<Writeback>, u64) {
+        let mut wbs = Vec::new();
+        let mut lines = 0u64;
+        for c in self.l1.iter_mut().chain(self.l2.iter_mut()) {
+            let before = c.stats.invalidations;
+            wbs.extend(c.flush_range(start, len));
+            lines += c.stats.invalidations - before;
+        }
+        let before = self.l3.stats.invalidations;
+        wbs.extend(self.l3.flush_range(start, len));
+        lines += self.l3.stats.invalidations - before;
+        (wbs, lines)
+    }
+
+    /// Aggregated stats across levels: (l1 hit rate, l2 hit rate, llc
+    /// misses).
+    pub fn summary(&self) -> (f64, f64, u64) {
+        let l1h: u64 = self.l1.iter().map(|c| c.stats.hits).sum();
+        let l1t: u64 = self.l1.iter().map(|c| c.stats.accesses()).sum();
+        let l2h: u64 = self.l2.iter().map(|c| c.stats.hits).sum();
+        let l2t: u64 = self.l2.iter().map(|c| c.stats.accesses()).sum();
+        let rate = |h: u64, t: u64| if t == 0 { 0.0 } else { h as f64 / t as f64 };
+        (rate(l1h, l1t), rate(l2h, l2t), self.l3.stats.misses)
+    }
+
+    pub fn llc_misses(&self) -> u64 {
+        self.l3.stats.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hier() -> CacheHierarchy {
+        let mut cfg = Config::paper();
+        cfg.cores = 2;
+        CacheHierarchy::new(&cfg)
+    }
+
+    #[test]
+    fn first_access_misses_everywhere_second_hits_l1() {
+        let mut h = hier();
+        let a = h.access(0, 0x10000, false);
+        assert!(a.llc_miss);
+        assert_eq!(a.cycles, 3 + 10 + 34);
+        let b = h.access(0, 0x10000, false);
+        assert!(!b.llc_miss);
+        assert_eq!(b.cycles, 3);
+    }
+
+    #[test]
+    fn sharing_through_l3() {
+        let mut h = hier();
+        h.access(0, 0x20000, false); // core 0 brings line into L3
+        let b = h.access(1, 0x20000, false); // core 1 misses L1/L2, hits L3
+        assert!(!b.llc_miss);
+        assert_eq!(b.cycles, 3 + 10 + 34);
+    }
+
+    #[test]
+    fn clflush_returns_dirty_lines_and_count() {
+        let mut h = hier();
+        for i in 0..4u64 {
+            h.access(0, 0x4000 + i * 64, true);
+        }
+        let (wbs, lines) = h.clflush_range(0x4000, 4096);
+        assert_eq!(wbs.len(), 4, "all 4 dirty lines written back");
+        assert!(lines >= 4);
+        // After the flush the lines are gone from every level.
+        let again = h.access(0, 0x4000, false);
+        assert!(again.llc_miss);
+    }
+
+    #[test]
+    fn dirty_writeback_eventually_reaches_caller() {
+        // Thrash a single L1/L2/L3 set with dirty lines until a dirty
+        // victim escapes the LLC.
+        // Working set must exceed the 8 MB LLC (131072 lines) before dirty
+        // victims can escape to memory.
+        let mut h = hier();
+        let mut got_wb = false;
+        for i in 0..400_000u64 {
+            let out = h.access(0, i * 64, true);
+            if !out.writebacks.is_empty() {
+                got_wb = true;
+                break;
+            }
+        }
+        assert!(got_wb, "dirty victims must eventually reach memory");
+    }
+
+    #[test]
+    fn llc_miss_counter_advances() {
+        let mut h = hier();
+        let before = h.llc_misses();
+        h.access(0, 0x999000, false);
+        assert_eq!(h.llc_misses(), before + 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! zsim-equivalent on-chip cache hierarchy.
+
+pub mod cache;
+pub mod hierarchy;
+
+pub use cache::{Cache, CacheOutcome, CacheStats, Writeback};
+pub use hierarchy::{CacheHierarchy, HierOutcome};

@@ -1,0 +1,22 @@
+//! # Rainbow — superpages + lightweight page migration for hybrid memory
+//!
+//! A full reproduction of *"Supporting Superpages and Lightweight Page
+//! Migration in Hybrid Memory Systems"* (Wang, 2018): the Rainbow memory
+//! management mechanism, its zsim/NVMain-equivalent simulation substrate,
+//! the paper's baseline policies, workload generators matching the paper's
+//! published access statistics, and a bench harness that regenerates every
+//! table and figure of the evaluation. See DESIGN.md for the architecture
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cache;
+pub mod config;
+pub mod mem;
+pub mod os;
+pub mod policies;
+pub mod rainbow;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tlb;
+pub mod util;
+pub mod workloads;

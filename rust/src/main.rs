@@ -1,0 +1,230 @@
+//! `rainbow` — the leader binary: run single simulations, regenerate any
+//! paper table/figure, or run the whole evaluation suite.
+
+use std::time::Instant;
+
+use rainbow::config::Config;
+use rainbow::report::figures::{self, FigureCtx};
+use rainbow::report::{self, RunSpec};
+use rainbow::util::cli::{help_text, Args, OptSpec};
+use rainbow::util::tables::Table;
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "app", help: "workload name (app or mix1..3)",
+              default: Some("mcf"), is_flag: false },
+    OptSpec { name: "policy",
+              help: "flat | hscc4k | hscc2m | rainbow | dram",
+              default: Some("rainbow"), is_flag: false },
+    OptSpec { name: "instructions", help: "instructions to simulate",
+              default: Some("4000000"), is_flag: false },
+    OptSpec { name: "scale", help: "capacity scale divisor vs Table IV",
+              default: Some("8"), is_flag: false },
+    OptSpec { name: "interval", help: "sampling interval (cycles)",
+              default: None, is_flag: false },
+    OptSpec { name: "top-n", help: "top-N monitored hot superpages",
+              default: None, is_flag: false },
+    OptSpec { name: "seed", help: "workload RNG seed",
+              default: Some("0xEA7BEEF as decimal 246202095"),
+              is_flag: false },
+    OptSpec { name: "fig",
+              help: "figure/table id: 1,7,8,9,10,11,12,13,14,15,t1,t2,t6,remap",
+              default: None, is_flag: false },
+    OptSpec { name: "csv", help: "also write CSV next to target/figures/",
+              default: None, is_flag: true },
+    OptSpec { name: "all", help: "use all 17 workloads (suite/figures)",
+              default: None, is_flag: true },
+    OptSpec { name: "accel",
+              help: "use PJRT AOT artifacts for Rainbow identification",
+              default: None, is_flag: true },
+    OptSpec { name: "paper-scale",
+              help: "full Table IV capacities (scale=1, slow)",
+              default: None, is_flag: true },
+    OptSpec { name: "no-cache", help: "ignore the results cache",
+              default: None, is_flag: true },
+];
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("run", "simulate one (workload, policy) pair and print metrics"),
+    ("figure", "regenerate one paper table/figure (--fig N)"),
+    ("suite", "regenerate every table and figure"),
+    ("analyze", "workload analytics (Fig 1 / Tables I-II) for --app"),
+    ("storage", "Table VI storage-overhead model"),
+    ("list", "list workloads and policies"),
+];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw, OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.command.is_none() {
+        print!("{}", help_text("rainbow",
+            "hybrid-memory superpage + lightweight-migration simulator \
+             (paper reproduction)", COMMANDS, OPTS));
+        return;
+    }
+    let cmd = args.command.clone().unwrap();
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn spec_from_args(args: &Args) -> Result<RunSpec, String> {
+    let mut s = RunSpec::new(args.get_or("app", "mcf"),
+                             args.get_or("policy", "rainbow"));
+    s.scale = if args.flag("paper-scale") {
+        1
+    } else {
+        args.get_u64("scale", 8)?
+    };
+    s.instructions = args.get_u64("instructions", 4_000_000)?;
+    s.interval_cycles = args.get_u64("interval", 0)?;
+    s.top_n = args.get_usize("top-n", 0)?;
+    s.seed = args.get_u64("seed", 0xEA7_BEEF)?;
+    s.accel = args.flag("accel");
+    Ok(s)
+}
+
+fn ctx_from_args(args: &Args) -> Result<FigureCtx, String> {
+    let workloads: Vec<String> = if args.flag("all") {
+        report::all_workloads()
+    } else {
+        report::default_workloads().iter().map(|s| s.to_string()).collect()
+    };
+    Ok(FigureCtx::new(workloads, spec_from_args(args)?))
+}
+
+fn csv_path(args: &Args, name: &str) -> Option<String> {
+    args.flag("csv").then(|| format!("target/figures/{name}.csv"))
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
+    match cmd {
+        "run" => cmd_run(args),
+        "figure" => cmd_figure(args),
+        "suite" => cmd_suite(args),
+        "analyze" => cmd_analyze(args),
+        "storage" => {
+            figures::tab06_storage().emit(csv_path(args, "tab06").as_deref());
+            Ok(())
+        }
+        "list" => {
+            println!("workloads: {}", report::all_workloads().join(", "));
+            println!("policies : {}", report::policy_names().join(", "));
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; try --help")),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let t0 = Instant::now();
+    let m = if args.flag("no-cache") {
+        report::run_uncached(&spec)
+    } else {
+        report::run_cached(&spec)
+    };
+    let dt = t0.elapsed();
+    let mut t = Table::new(
+        &format!("{} on {} (scale 1/{}, {} instructions, {:.1}s)",
+                 spec.policy, spec.workload, spec.scale,
+                 spec.instructions, dt.as_secs_f64()),
+        &["metric", "value"]);
+    let fp = spec.footprint_bytes();
+    t.row(&["IPC".into(), format!("{:.4}", m.ipc())]);
+    t.row(&["cycles".into(), m.cycles.to_string()]);
+    t.row(&["MPKI".into(), format!("{:.3}", m.mpki())]);
+    t.row(&["TLB-miss cycle %".into(),
+            format!("{:.2}%", 100.0 * m.tlb_miss_cycle_frac())]);
+    t.row(&["SP TLB hit rate".into(),
+            format!("{:.2}%", 100.0 * m.sp_hit_rate)]);
+    t.row(&["migrations".into(), m.migrations.to_string()]);
+    t.row(&["migration traffic/footprint".into(),
+            format!("{:.3}", m.migration_traffic_ratio(fp))]);
+    t.row(&["shootdowns".into(), m.shootdowns.to_string()]);
+    t.row(&["bitmap hit rate".into(),
+            format!("{:.2}%", 100.0 * m.bitmap_hit_rate())]);
+    t.row(&["runtime overhead %".into(),
+            format!("{:.2}%", 100.0 * m.runtime_overhead_frac())]);
+    t.row(&["rt mig/sd/clf/id Mcyc".into(),
+            format!("{:.1}/{:.1}/{:.1}/{:.1}",
+                    m.rt.migration_cycles as f64 / 1e6,
+                    m.rt.shootdown_cycles as f64 / 1e6,
+                    m.rt.clflush_cycles as f64 / 1e6,
+                    m.rt.identify_cycles as f64 / 1e6)]);
+    t.row(&["LLC misses".into(), m.llc_misses.to_string()]);
+    t.row(&["mem stall Mcyc".into(),
+            format!("{:.1}", m.mem_stall_cycles as f64 / 1e6)]);
+    t.row(&["xlat tlb/bm/ptw/sptw/remap Mcyc".into(),
+            format!("{:.1}/{:.1}/{:.1}/{:.1}/{:.1}",
+                    m.xlat.tlb_cycles as f64 / 1e6,
+                    m.xlat.bitmap_cycles as f64 / 1e6,
+                    m.xlat.ptw_cycles as f64 / 1e6,
+                    m.xlat.sptw_cycles as f64 / 1e6,
+                    m.xlat.remap_cycles as f64 / 1e6)]);
+    t.row(&["energy (mJ)".into(), format!("{:.3}", m.energy_mj())]);
+    t.row(&["DRAM/NVM reads".into(),
+            format!("{}/{}", m.dram_reads, m.nvm_reads)]);
+    t.row(&["DRAM/NVM writes".into(),
+            format!("{}/{}", m.dram_writes, m.nvm_writes)]);
+    t.emit(None);
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<(), String> {
+    let fig = args.get("fig").ok_or("--fig required (e.g. --fig 10)")?;
+    let ctx = ctx_from_args(args)?;
+    emit_figure(fig, &ctx, args)
+}
+
+fn emit_figure(fig: &str, ctx: &FigureCtx, args: &Args)
+               -> Result<(), String> {
+    let sens_apps = ["mcf", "soplex", "GUPS"];
+    let t = match fig {
+        "1" | "fig1" => figures::fig01_cdf(ctx),
+        "t1" | "tab1" => figures::tab01_hotstats(ctx),
+        "t2" | "tab2" => figures::tab02_hotdist(ctx),
+        "7" => figures::fig07_mpki(ctx),
+        "8" => figures::fig08_tlbcycles(ctx),
+        "9" => figures::fig09_breakdown(ctx),
+        "10" => figures::fig10_ipc(ctx),
+        "11" => figures::fig11_traffic(ctx),
+        "12" => figures::fig12_energy(ctx),
+        "13" => figures::fig13_interval(ctx, &sens_apps),
+        "14" => figures::fig14_topn(ctx, &sens_apps),
+        "15" => figures::fig15_runtime(ctx),
+        "t6" | "tab6" => figures::tab06_storage(),
+        "remap" => figures::ana_remap_cost(&Config::paper()),
+        other => return Err(format!("unknown figure {other:?}")),
+    };
+    t.emit(csv_path(args, &format!("fig{fig}")).as_deref());
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<(), String> {
+    let ctx = ctx_from_args(args)?;
+    let t0 = Instant::now();
+    for fig in ["1", "t1", "t2", "7", "8", "9", "10", "11", "12", "13",
+                "14", "15", "t6", "remap"] {
+        emit_figure(fig, &ctx, args)?;
+    }
+    println!("suite complete in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    let mut ctx = ctx_from_args(args)?;
+    if let Some(app) = args.get("app") {
+        ctx.workloads = vec![app.to_string()];
+    }
+    figures::fig01_cdf(&ctx).emit(csv_path(args, "fig01").as_deref());
+    figures::tab01_hotstats(&ctx).emit(csv_path(args, "tab01").as_deref());
+    figures::tab02_hotdist(&ctx).emit(csv_path(args, "tab02").as_deref());
+    Ok(())
+}

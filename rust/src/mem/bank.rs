@@ -1,0 +1,100 @@
+//! Bank/row-buffer state and physical address decode.
+//!
+//! The decode follows NVMain's default order: the line-aligned address is
+//! split into (channel, rank, bank, row, column) with channel bits lowest
+//! so consecutive lines stripe across channels (maximizing bandwidth for
+//! streaming, as the paper's 4-channel PCM configuration intends).
+
+use crate::config::MemConfig;
+
+/// Per-bank state: which row is latched in the row buffer and until when
+/// the bank is busy (Lamport-clock style timing, no event queue).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BankState {
+    pub open_row: Option<u64>,
+    pub busy_until: u64,
+}
+
+/// Decoded coordinates of a physical address within a device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coord {
+    pub channel: usize,
+    pub rank: usize,
+    pub bank: usize,
+    pub row: u64,
+}
+
+impl Coord {
+    /// Flat index of the bank across the whole device.
+    pub fn bank_index(&self, cfg: &MemConfig) -> usize {
+        (self.channel * cfg.ranks_per_channel + self.rank) * cfg.banks_per_rank
+            + self.bank
+    }
+}
+
+/// Decode a device-local physical address.
+pub fn decode(cfg: &MemConfig, addr: u64) -> Coord {
+    let line = addr / 64;
+    let mut x = line;
+    let channel = (x % cfg.channels as u64) as usize;
+    x /= cfg.channels as u64;
+    // Columns within a row buffer: row_size bytes = row_size/64 lines.
+    let cols = cfg.row_size / 64;
+    x /= cols;
+    let bank = (x % cfg.banks_per_rank as u64) as usize;
+    x /= cfg.banks_per_rank as u64;
+    let rank = (x % cfg.ranks_per_channel as u64) as usize;
+    x /= cfg.ranks_per_channel as u64;
+    let row = x % cfg.rows_per_bank;
+    Coord { channel, rank, bank, row }
+}
+
+/// Total number of banks in a device.
+pub fn total_banks(cfg: &MemConfig) -> usize {
+    cfg.channels * cfg.ranks_per_channel * cfg.banks_per_rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn decode_within_bounds() {
+        let cfg = Config::paper().nvm;
+        for addr in [0u64, 64, 4096, 1 << 20, (32u64 << 30) - 64] {
+            let c = decode(&cfg, addr);
+            assert!(c.channel < cfg.channels);
+            assert!(c.rank < cfg.ranks_per_channel);
+            assert!(c.bank < cfg.banks_per_rank);
+            assert!(c.row < cfg.rows_per_bank);
+            assert!(c.bank_index(&cfg) < total_banks(&cfg));
+        }
+    }
+
+    #[test]
+    fn consecutive_lines_stripe_channels() {
+        let cfg = Config::paper().nvm; // 4 channels
+        let c0 = decode(&cfg, 0);
+        let c1 = decode(&cfg, 64);
+        let c2 = decode(&cfg, 128);
+        assert_ne!(c0.channel, c1.channel);
+        assert_ne!(c1.channel, c2.channel);
+    }
+
+    #[test]
+    fn same_row_for_adjacent_columns() {
+        let cfg = Config::paper().dram; // 1 channel, 64-col rows
+        let a = decode(&cfg, 0);
+        let b = decode(&cfg, 64); // next line, same row (different col)
+        assert_eq!(a.row, b.row);
+        assert_eq!(a.bank, b.bank);
+    }
+
+    #[test]
+    fn paper_bank_counts() {
+        let p = Config::paper();
+        assert_eq!(total_banks(&p.dram), 32); // 1 ch x 4 ranks x 8 banks
+        assert_eq!(total_banks(&p.nvm), 256); // 4 ch x 8 ranks x 8 banks
+    }
+}

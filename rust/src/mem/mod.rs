@@ -1,0 +1,13 @@
+//! NVMain-equivalent memory subsystem: device timing (row buffers, banks,
+//! channels), FR-FCFS bulk scheduling, energy accounting, and the hybrid
+//! DRAM+NVM controller facade.
+
+pub mod bank;
+pub mod controller;
+pub mod device;
+pub mod req;
+pub mod sched;
+
+pub use controller::HybridMemory;
+pub use device::Device;
+pub use req::{MemKind, MemReq, MemResult};

@@ -1,0 +1,69 @@
+//! Memory request/response types shared across the memory subsystem.
+
+/// Which memory technology a physical address resolves to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    Dram,
+    Nvm,
+}
+
+impl MemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemKind::Dram => "DRAM",
+            MemKind::Nvm => "NVM",
+        }
+    }
+}
+
+/// One memory access as seen by a device controller.
+#[derive(Clone, Copy, Debug)]
+pub struct MemReq {
+    /// Device-local physical address (0-based within the device).
+    pub addr: u64,
+    pub is_write: bool,
+    /// Payload size in bytes (64 for a line fill, 8 for a remap read, ...).
+    pub bytes: u64,
+    /// Bulk transfers (migration copies) yield to demand requests in the
+    /// FR-FCFS scheduler and are charged as background traffic.
+    pub is_bulk: bool,
+}
+
+impl MemReq {
+    pub fn line_read(addr: u64) -> Self {
+        MemReq { addr, is_write: false, bytes: 64, is_bulk: false }
+    }
+
+    pub fn line_write(addr: u64) -> Self {
+        MemReq { addr, is_write: true, bytes: 64, is_bulk: false }
+    }
+
+    pub fn bulk(addr: u64, is_write: bool, bytes: u64) -> Self {
+        MemReq { addr, is_write, bytes, is_bulk: true }
+    }
+}
+
+/// Timing + energy outcome of a device access.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemResult {
+    /// Total latency in CPU cycles (including queueing).
+    pub latency: u64,
+    /// Dynamic energy in picojoules.
+    pub energy_pj: f64,
+    pub row_hit: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let r = MemReq::line_read(0x1000);
+        assert!(!r.is_write && r.bytes == 64 && !r.is_bulk);
+        let w = MemReq::line_write(0x40);
+        assert!(w.is_write);
+        let b = MemReq::bulk(0, true, 4096);
+        assert!(b.is_bulk && b.bytes == 4096);
+    }
+}

@@ -1,0 +1,203 @@
+//! Binary buddy allocator over physical page frames.
+//!
+//! Orders 0..=9 cover 4 KB base pages up to 2 MB superpages (order 9 =
+//! 512 contiguous frames), matching the OS module the paper added to zsim.
+//! Frames are identified by PFN relative to the managed region's base.
+
+use std::collections::HashSet;
+
+pub const MAX_ORDER: usize = 9; // 2^9 * 4 KB = 2 MB
+
+/// Buddy allocator state.
+#[derive(Clone, Debug)]
+pub struct Buddy {
+    /// free[k] holds base PFNs of free 2^k-frame blocks.
+    free: Vec<HashSet<u64>>,
+    /// Live allocations (base, order) — catches double/mismatched frees.
+    allocated: HashSet<(u64, usize)>,
+    total_frames: u64,
+    free_frames: u64,
+}
+
+impl Buddy {
+    /// Manage `total_frames` frames (must be a multiple of 512 so 2 MB
+    /// blocks tile the region exactly).
+    pub fn new(total_frames: u64) -> Buddy {
+        assert!(total_frames > 0 && total_frames % (1 << MAX_ORDER) == 0,
+                "frames {total_frames} must be a multiple of 512");
+        let mut free: Vec<HashSet<u64>> =
+            (0..=MAX_ORDER).map(|_| HashSet::new()).collect();
+        let mut pfn = 0;
+        while pfn < total_frames {
+            free[MAX_ORDER].insert(pfn);
+            pfn += 1 << MAX_ORDER;
+        }
+        Buddy { free, allocated: HashSet::new(), total_frames,
+                free_frames: total_frames }
+    }
+
+    pub fn total_frames(&self) -> u64 {
+        self.total_frames
+    }
+
+    pub fn free_frames(&self) -> u64 {
+        self.free_frames
+    }
+
+    /// Allocate a 2^order-frame block; returns its base PFN.
+    pub fn alloc(&mut self, order: usize) -> Option<u64> {
+        assert!(order <= MAX_ORDER);
+        // Find the smallest order with a free block.
+        let mut k = order;
+        while k <= MAX_ORDER && self.free[k].is_empty() {
+            k += 1;
+        }
+        if k > MAX_ORDER {
+            return None;
+        }
+        // Take one and split down to the requested order.
+        let base = *self.free[k].iter().next().unwrap();
+        self.free[k].remove(&base);
+        while k > order {
+            k -= 1;
+            // Keep the upper half free, continue splitting the lower.
+            self.free[k].insert(base + (1u64 << k));
+        }
+        self.free_frames -= 1u64 << order;
+        self.allocated.insert((base, order));
+        Some(base)
+    }
+
+    /// Free a block previously returned by `alloc(order)`; merges buddies.
+    pub fn free(&mut self, base: u64, order: usize) {
+        assert!(order <= MAX_ORDER);
+        assert_eq!(base % (1u64 << order), 0, "misaligned free");
+        assert!(self.allocated.remove(&(base, order)),
+                "double free or mismatched order: pfn {base} order {order}");
+        let mut base = base;
+        let mut k = order;
+        while k < MAX_ORDER {
+            let buddy = base ^ (1u64 << k);
+            if self.free[k].remove(&buddy) {
+                base = base.min(buddy);
+                k += 1;
+            } else {
+                break;
+            }
+        }
+        let inserted = self.free[k].insert(base);
+        debug_assert!(inserted, "free-list corruption at pfn {base} order {k}");
+        self.free_frames += 1u64 << order;
+    }
+
+    /// Largest currently-allocatable order (fragmentation probe).
+    pub fn max_free_order(&self) -> Option<usize> {
+        (0..=MAX_ORDER).rev().find(|&k| !self.free[k].is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut b = Buddy::new(1024);
+        let p = b.alloc(0).unwrap();
+        assert_eq!(b.free_frames(), 1023);
+        b.free(p, 0);
+        assert_eq!(b.free_frames(), 1024);
+        // Full merge back to two 2 MB blocks.
+        assert_eq!(b.max_free_order(), Some(MAX_ORDER));
+    }
+
+    #[test]
+    fn superpage_alloc_is_aligned() {
+        let mut b = Buddy::new(2048);
+        for _ in 0..4 {
+            let p = b.alloc(MAX_ORDER).unwrap();
+            assert_eq!(p % 512, 0);
+        }
+        assert_eq!(b.alloc(MAX_ORDER), None, "region exhausted");
+        assert_eq!(b.free_frames(), 0);
+    }
+
+    #[test]
+    fn split_and_remerge() {
+        let mut b = Buddy::new(512);
+        let a = b.alloc(0).unwrap();
+        // One 4 KB allocation fragments the single 2 MB block...
+        assert!(b.alloc(MAX_ORDER).is_none());
+        b.free(a, 0);
+        // ...and freeing it restores superpage allocability.
+        assert!(b.alloc(MAX_ORDER).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_detected() {
+        let mut b = Buddy::new(512);
+        let p = b.alloc(3).unwrap();
+        b.free(p, 3);
+        b.free(p, 3);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_not_panic() {
+        let mut b = Buddy::new(512);
+        let mut n = 0;
+        while b.alloc(0).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 512);
+    }
+
+    /// Property: any interleaving of allocs/frees conserves frames and
+    /// never hands out overlapping blocks.
+    #[test]
+    fn prop_no_overlap_and_conservation() {
+        forall(
+            "buddy-no-overlap",
+            0xB0DD7,
+            40,
+            |r: &mut Rng| {
+                (0..64)
+                    .map(|_| (r.below(5) as usize, r.below(3) == 0))
+                    .collect::<Vec<(usize, bool)>>()
+            },
+            |ops| {
+                let mut b = Buddy::new(1024);
+                let mut live: Vec<(u64, usize)> = Vec::new();
+                let mut owned = vec![false; 1024];
+                for &(order, do_free) in ops {
+                    if do_free && !live.is_empty() {
+                        let (base, o) = live.pop().unwrap();
+                        for f in base..base + (1 << o) {
+                            owned[f as usize] = false;
+                        }
+                        b.free(base, o);
+                    } else if let Some(base) = b.alloc(order) {
+                        for f in base..base + (1 << order) {
+                            if owned[f as usize] {
+                                return Err(format!("overlap at frame {f}"));
+                            }
+                            owned[f as usize] = true;
+                        }
+                        live.push((base, order));
+                    }
+                    let held: u64 =
+                        live.iter().map(|&(_, o)| 1u64 << o).sum();
+                    if b.free_frames() + held != 1024 {
+                        return Err(format!(
+                            "frame leak: free={} held={held}",
+                            b.free_frames()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! OS-level substrates: buddy allocator, page tables, virtual memory,
+//! and the HSCC-style DRAM free/clean/dirty manager.
+
+pub mod buddy;
+pub mod dram_mgr;
+pub mod page_table;
+pub mod vm;
+
+pub use buddy::Buddy;
+pub use dram_mgr::{DramMgr, Grant, Reclaim};
+pub use page_table::PageTable;
+pub use vm::{AddressSpace, Region};

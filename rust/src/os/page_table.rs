@@ -1,0 +1,77 @@
+//! Simulator-side page tables: the functional vpn -> ppn mapping each
+//! policy maintains (the *timing* of hardware walks lives in `tlb::ptw`).
+//!
+//! Policies use one or both granularities: flat systems map 4 KB pages,
+//! superpage systems map 2 MB pages, Rainbow maps superpages in NVM plus
+//! a shadow 4 KB map for DRAM-cached hot pages.
+
+use std::collections::HashMap;
+
+/// One page-size mapping table.
+#[derive(Clone, Debug, Default)]
+pub struct PageTable {
+    map: HashMap<u64, u64>,
+}
+
+impl PageTable {
+    pub fn new() -> PageTable {
+        PageTable::default()
+    }
+
+    pub fn translate(&self, vpn: u64) -> Option<u64> {
+        self.map.get(&vpn).copied()
+    }
+
+    pub fn map(&mut self, vpn: u64, ppn: u64) {
+        self.map.insert(vpn, ppn);
+    }
+
+    /// Change an existing mapping (migration); returns the old ppn.
+    pub fn remap(&mut self, vpn: u64, new_ppn: u64) -> Option<u64> {
+        self.map.insert(vpn, new_ppn)
+    }
+
+    pub fn unmap(&mut self, vpn: u64) -> Option<u64> {
+        self.map.remove(&vpn)
+    }
+
+    pub fn is_mapped(&self, vpn: u64) -> bool {
+        self.map.contains_key(&vpn)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &u64)> {
+        self.map.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_translate_unmap() {
+        let mut pt = PageTable::new();
+        assert_eq!(pt.translate(1), None);
+        pt.map(1, 100);
+        assert_eq!(pt.translate(1), Some(100));
+        assert!(pt.is_mapped(1));
+        assert_eq!(pt.unmap(1), Some(100));
+        assert!(pt.is_empty());
+    }
+
+    #[test]
+    fn remap_returns_old() {
+        let mut pt = PageTable::new();
+        pt.map(5, 50);
+        assert_eq!(pt.remap(5, 99), Some(50));
+        assert_eq!(pt.translate(5), Some(99));
+    }
+}

@@ -1,0 +1,168 @@
+//! Virtual address-space management: lazy first-touch allocation of 4 KB
+//! pages or 2 MB superpages out of a buddy-managed physical region.
+//!
+//! The placement *decision* (DRAM vs NVM, interleaving) belongs to the
+//! policy; this module provides the mechanism: region-scoped buddies and
+//! the vpn -> ppn bookkeeping.
+
+use crate::config::{PAGES_PER_SP, PAGE_SHIFT, PAGE_SIZE, SP_SHIFT};
+
+use super::buddy::{Buddy, MAX_ORDER};
+use super::page_table::PageTable;
+
+/// A physical region (e.g. "the NVM", "the DRAM") with frame allocation.
+#[derive(Clone, Debug)]
+pub struct Region {
+    /// Flat physical base address of the region.
+    pub base: u64,
+    buddy: Buddy,
+}
+
+impl Region {
+    pub fn new(base: u64, bytes: u64) -> Region {
+        assert_eq!(base % PAGE_SIZE, 0);
+        Region { base, buddy: Buddy::new(bytes / PAGE_SIZE) }
+    }
+
+    /// Allocate one 4 KB frame; returns its flat physical address.
+    pub fn alloc_4k(&mut self) -> Option<u64> {
+        self.buddy.alloc(0).map(|pfn| self.base + pfn * PAGE_SIZE)
+    }
+
+    /// Allocate one aligned 2 MB block; returns its flat physical address.
+    pub fn alloc_2m(&mut self) -> Option<u64> {
+        self.buddy.alloc(MAX_ORDER).map(|pfn| self.base + pfn * PAGE_SIZE)
+    }
+
+    pub fn free_4k(&mut self, paddr: u64) {
+        self.buddy.free((paddr - self.base) / PAGE_SIZE, 0);
+    }
+
+    pub fn free_2m(&mut self, paddr: u64) {
+        self.buddy.free((paddr - self.base) / PAGE_SIZE, MAX_ORDER);
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.buddy.free_frames() * PAGE_SIZE
+    }
+}
+
+/// One process's address space, mapped at a single page granularity.
+/// (Rainbow composes a 2 MB `AddressSpace` over NVM with a 4 KB shadow
+/// table managed by its own policy code.)
+#[derive(Clone, Debug)]
+pub struct AddressSpace {
+    pub pt_4k: PageTable,
+    pub pt_2m: PageTable,
+}
+
+impl Default for AddressSpace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AddressSpace {
+    pub fn new() -> AddressSpace {
+        AddressSpace { pt_4k: PageTable::new(), pt_2m: PageTable::new() }
+    }
+
+    /// Resolve a 4 KB-mapped vaddr to a flat physical address.
+    pub fn resolve_4k(&self, vaddr: u64) -> Option<u64> {
+        self.pt_4k
+            .translate(vaddr >> PAGE_SHIFT)
+            .map(|ppn| (ppn << PAGE_SHIFT) | (vaddr & (PAGE_SIZE - 1)))
+    }
+
+    /// Resolve a 2 MB-mapped vaddr to a flat physical address.
+    pub fn resolve_2m(&self, vaddr: u64) -> Option<u64> {
+        self.pt_2m
+            .translate(vaddr >> SP_SHIFT)
+            .map(|sppn| (sppn << SP_SHIFT) | (vaddr & ((1 << SP_SHIFT) - 1)))
+    }
+
+    /// First-touch map of a 4 KB page into `region`; no-op if mapped.
+    /// Returns the page's physical base address.
+    pub fn ensure_4k(&mut self, vaddr: u64, region: &mut Region) -> Option<u64> {
+        let vpn = vaddr >> PAGE_SHIFT;
+        if let Some(ppn) = self.pt_4k.translate(vpn) {
+            return Some(ppn << PAGE_SHIFT);
+        }
+        let paddr = region.alloc_4k()?;
+        self.pt_4k.map(vpn, paddr >> PAGE_SHIFT);
+        Some(paddr)
+    }
+
+    /// First-touch map of a 2 MB superpage into `region`.
+    pub fn ensure_2m(&mut self, vaddr: u64, region: &mut Region) -> Option<u64> {
+        let svpn = vaddr >> SP_SHIFT;
+        if let Some(sppn) = self.pt_2m.translate(svpn) {
+            return Some(sppn << SP_SHIFT);
+        }
+        let paddr = region.alloc_2m()?;
+        self.pt_2m.map(svpn, paddr >> SP_SHIFT);
+        Some(paddr)
+    }
+
+    pub fn mapped_bytes_4k(&self) -> u64 {
+        self.pt_4k.len() as u64 * PAGE_SIZE
+    }
+
+    pub fn mapped_bytes_2m(&self) -> u64 {
+        self.pt_2m.len() as u64 * PAGES_PER_SP * PAGE_SIZE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_touch_then_stable() {
+        let mut region = Region::new(0, 8 << 20);
+        let mut a = AddressSpace::new();
+        let p1 = a.ensure_4k(0x1234, &mut region).unwrap();
+        let p2 = a.ensure_4k(0x1FFF, &mut region).unwrap(); // same page
+        assert_eq!(p1, p2);
+        let p3 = a.ensure_4k(0x2000, &mut region).unwrap(); // next page
+        assert_ne!(p1, p3);
+    }
+
+    #[test]
+    fn resolve_preserves_offset() {
+        let mut region = Region::new(1 << 30, 8 << 20);
+        let mut a = AddressSpace::new();
+        a.ensure_4k(0x5678, &mut region).unwrap();
+        let pa = a.resolve_4k(0x5678).unwrap();
+        assert_eq!(pa & 0xFFF, 0x678);
+        assert!(pa >= 1 << 30);
+    }
+
+    #[test]
+    fn superpage_mapping_is_2m_aligned() {
+        let mut region = Region::new(0, 32 << 20);
+        let mut a = AddressSpace::new();
+        let base = a.ensure_2m(0x40_0000 + 12345, &mut region).unwrap();
+        assert_eq!(base % (2 << 20), 0);
+        let pa = a.resolve_2m(0x40_0000 + 12345).unwrap();
+        assert_eq!(pa, base + 12345);
+        assert_eq!(a.mapped_bytes_2m(), 2 << 20);
+    }
+
+    #[test]
+    fn exhaustion_is_none() {
+        let mut region = Region::new(0, 2 << 20); // exactly one superpage
+        let mut a = AddressSpace::new();
+        assert!(a.ensure_2m(0, &mut region).is_some());
+        assert!(a.ensure_2m(1 << SP_SHIFT << 1, &mut region).is_none());
+    }
+
+    #[test]
+    fn region_free_and_realloc() {
+        let mut region = Region::new(0, 4 << 20);
+        let p = region.alloc_2m().unwrap();
+        assert_eq!(region.free_bytes(), 2 << 20);
+        region.free_2m(p);
+        assert_eq!(region.free_bytes(), 4 << 20);
+    }
+}

@@ -1,0 +1,127 @@
+//! DRAM-only upper bound (§IV-A): a machine whose whole memory is DRAM
+//! (sized like the hybrid's NVM), 2 MB superpages everywhere, no
+//! migration. "Not a completely fair comparison, since DRAM-only uses
+//! more DRAM" — it is the performance ceiling of Figs. 7/8/10.
+
+use crate::config::{Config, SP_SHIFT};
+use crate::os::{AddressSpace, Region};
+use crate::sim::machine::{Machine, TableHome};
+use crate::tlb::HitLevel;
+
+use super::flat_static::TABLE_RESERVE;
+use super::Policy;
+
+pub struct DramOnly {
+    m: Machine,
+    aspace: AddressSpace,
+    dram: Region,
+}
+
+impl DramOnly {
+    pub fn new(cfg: &Config) -> DramOnly {
+        // Upgrade DRAM to the NVM's capacity; the NVM device sits unused.
+        let mut big = cfg.clone();
+        big.dram.size = cfg.nvm.size;
+        big.dram.rows_per_bank = cfg.nvm.rows_per_bank;
+        let m = Machine::new(&big, TableHome::Dram, TableHome::Dram);
+        DramOnly {
+            dram: Region::new(0, big.dram.size - TABLE_RESERVE),
+            aspace: AddressSpace::new(),
+            m,
+        }
+    }
+
+    fn ensure_mapped(&mut self, vaddr: u64) -> u64 {
+        if let Some(pa) = self.aspace.resolve_2m(vaddr) {
+            return pa;
+        }
+        self.aspace
+            .ensure_2m(vaddr, &mut self.dram)
+            .expect("dram-only: memory exhausted");
+        self.aspace.resolve_2m(vaddr).unwrap()
+    }
+}
+
+impl Policy for DramOnly {
+    fn name(&self) -> &'static str {
+        "DRAM-only(2MB)"
+    }
+
+    fn access(&mut self, core: usize, vaddr: u64, is_write: bool,
+              now: u64) -> u64 {
+        let look = self.m.tlbs[core].lookup_2m(vaddr);
+        let mut cycles = look.cycles;
+        self.m.metrics.xlat.tlb_cycles += look.cycles;
+        let paddr = match look.level {
+            HitLevel::Miss => {
+                let walk = self.m.walker.walk_2m(&mut self.m.mem,
+                                                 vaddr >> SP_SHIFT,
+                                                 now + cycles);
+                cycles += walk;
+                self.m.metrics.xlat.sptw_cycles += walk;
+                self.m.metrics.tlb_miss_cycles += walk;
+                let pa = self.ensure_mapped(vaddr);
+                self.m.tlbs[core].insert_2m(vaddr >> SP_SHIFT, pa >> SP_SHIFT);
+                pa
+            }
+            _ => {
+                let sppn = look.ppn.unwrap();
+                (sppn << SP_SHIFT) | (vaddr & ((1 << SP_SHIFT) - 1))
+            }
+        };
+        let (dcycles, _) = self.m.data_path(core, paddr, is_write,
+                                            now + cycles);
+        cycles + dcycles
+    }
+
+    fn on_interval(&mut self, _now: u64) -> u64 {
+        0
+    }
+
+    fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> DramOnly {
+        let mut cfg = Config::scaled(8);
+        cfg.cores = 2;
+        DramOnly::new(&cfg)
+    }
+
+    #[test]
+    fn everything_lands_in_dram() {
+        let mut p = policy();
+        for i in 0..50u64 {
+            p.access(0, i * (3 << 20), false, i * 10_000);
+        }
+        assert_eq!(p.m.mem.nvm.stats.accesses(), 0, "NVM must stay idle");
+        assert!(p.m.mem.dram.stats.accesses() > 0);
+    }
+
+    #[test]
+    fn superpage_tlb_covers_2mb() {
+        let mut p = policy();
+        let c1 = p.access(0, 0, false, 0);
+        // Anywhere within the same 2 MB: TLB hit (no walk).
+        let walks_before = p.m.walker.stats.walks_2m;
+        let c2 = p.access(0, 1 << 20, false, c1);
+        assert_eq!(p.m.walker.stats.walks_2m, walks_before);
+        assert!(c2 <= c1);
+    }
+
+    #[test]
+    fn dram_capacity_is_nvm_sized() {
+        let p = policy();
+        let cfg = Config::scaled(8);
+        assert_eq!(p.m.mem.dram_size(), cfg.nvm.size);
+    }
+}

@@ -1,0 +1,153 @@
+//! Flat-static baseline (§IV-A): DRAM and NVM in one flat 4 KB-paged
+//! address space; data spread statically DRAM:NVM = 1:8 by page hash; no
+//! migration. The comparison baseline every figure normalizes to.
+
+use crate::config::{Config, PAGE_SHIFT};
+use crate::os::{AddressSpace, Region};
+use crate::sim::machine::{Machine, TableHome};
+use crate::tlb::HitLevel;
+
+use super::Policy;
+
+/// Reserved for page tables at the top of each device.
+pub const TABLE_RESERVE: u64 = 16 << 20;
+
+pub struct FlatStatic {
+    m: Machine,
+    aspace: AddressSpace,
+    dram: Region,
+    nvm: Region,
+    /// DRAM share: 1 of every `ratio+1` pages (paper: 1:8).
+    ratio: u64,
+}
+
+impl FlatStatic {
+    pub fn new(cfg: &Config) -> FlatStatic {
+        let m = Machine::new(cfg, TableHome::Dram, TableHome::Dram);
+        let nvm_base = m.mem.nvm_base();
+        FlatStatic {
+            dram: Region::new(0, cfg.dram.size - TABLE_RESERVE),
+            nvm: Region::new(nvm_base, cfg.nvm.size - TABLE_RESERVE),
+            aspace: AddressSpace::new(),
+            ratio: cfg.nvm.size / cfg.dram.size,
+            m,
+        }
+    }
+
+    /// Static interleave: page -> DRAM iff hash(vpn) % (ratio+1) == 0.
+    fn wants_dram(&self, vpn: u64) -> bool {
+        vpn.wrapping_mul(0x9E3779B97F4A7C15) % (self.ratio + 1) == 0
+    }
+
+    fn ensure_mapped(&mut self, vaddr: u64) -> u64 {
+        let vpn = vaddr >> PAGE_SHIFT;
+        if let Some(pa) = self.aspace.resolve_4k(vaddr) {
+            return pa;
+        }
+        let page = if self.wants_dram(vpn) {
+            self.aspace
+                .ensure_4k(vaddr, &mut self.dram)
+                .or_else(|| self.aspace.ensure_4k(vaddr, &mut self.nvm))
+        } else {
+            self.aspace
+                .ensure_4k(vaddr, &mut self.nvm)
+                .or_else(|| self.aspace.ensure_4k(vaddr, &mut self.dram))
+        };
+        page.expect("flat-static: physical memory exhausted");
+        self.aspace.resolve_4k(vaddr).unwrap()
+    }
+}
+
+impl Policy for FlatStatic {
+    fn name(&self) -> &'static str {
+        "Flat-static"
+    }
+
+    fn access(&mut self, core: usize, vaddr: u64, is_write: bool,
+              now: u64) -> u64 {
+        let look = self.m.tlbs[core].lookup_4k(vaddr);
+        let mut cycles = look.cycles;
+        self.m.metrics.xlat.tlb_cycles += look.cycles;
+        let paddr = match look.level {
+            HitLevel::Miss => {
+                // Hardware 4-level walk (tables in DRAM), then install.
+                let walk =
+                    self.m.walker.walk_4k(&mut self.m.mem,
+                                          vaddr >> PAGE_SHIFT, now + cycles);
+                cycles += walk;
+                self.m.metrics.xlat.ptw_cycles += walk;
+                self.m.metrics.tlb_miss_cycles += walk;
+                let pa = self.ensure_mapped(vaddr);
+                self.m.tlbs[core]
+                    .insert_4k(vaddr >> PAGE_SHIFT, pa >> PAGE_SHIFT);
+                pa
+            }
+            _ => {
+                let ppn = look.ppn.unwrap();
+                (ppn << PAGE_SHIFT) | (vaddr & 0xFFF)
+            }
+        };
+        let (dcycles, _) = self.m.data_path(core, paddr, is_write,
+                                            now + cycles);
+        cycles + dcycles
+    }
+
+    fn on_interval(&mut self, _now: u64) -> u64 {
+        0 // no migration machinery
+    }
+
+    fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::Policy;
+
+    fn policy() -> FlatStatic {
+        let mut cfg = Config::scaled(8);
+        cfg.cores = 2;
+        FlatStatic::new(&cfg)
+    }
+
+    #[test]
+    fn placement_ratio_roughly_one_in_nine() {
+        let p = policy();
+        let dram = (0..100_000u64).filter(|&v| p.wants_dram(v)).count();
+        let frac = dram as f64 / 100_000.0;
+        assert!((frac - 1.0 / 9.0).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn access_returns_nonzero_and_maps() {
+        let mut p = policy();
+        let c1 = p.access(0, 0x1234_5678, false, 0);
+        assert!(c1 > 0);
+        // Second access: TLB hit, cheaper.
+        let c2 = p.access(0, 0x1234_5678, false, c1);
+        assert!(c2 < c1);
+        assert_eq!(p.m.metrics.xlat.ptw_cycles > 0, true);
+    }
+
+    #[test]
+    fn placement_is_stable() {
+        let mut p = policy();
+        p.access(0, 0x8000, false, 0);
+        let pa1 = p.aspace.resolve_4k(0x8000).unwrap();
+        p.access(1, 0x8000, true, 100);
+        let pa2 = p.aspace.resolve_4k(0x8000).unwrap();
+        assert_eq!(pa1, pa2, "no migration in flat-static");
+    }
+
+    #[test]
+    fn interval_is_free() {
+        let mut p = policy();
+        assert_eq!(p.on_interval(0), 0);
+    }
+}

@@ -1,0 +1,304 @@
+//! HSCC-2MB-mig (§IV-A): HSCC modified for superpages — 2 MB TLBs and
+//! page tables, with migration at whole-superpage granularity. Retains
+//! wide TLB coverage but pays 512x the migration traffic, which is the
+//! penalty Figs. 10/11 quantify (it can even underperform HSCC-4KB).
+
+use std::collections::HashMap;
+
+use crate::config::{Config, SP_SHIFT, SP_SIZE};
+use crate::mem::sched::copy_page;
+use crate::os::{AddressSpace, DramMgr, Reclaim, Region};
+use crate::rainbow::migration::{ThresholdCtl, UtilityParams};
+use crate::sim::machine::{Machine, TableHome};
+use crate::tlb::{shootdown_2m, HitLevel, ShootdownStats};
+
+use super::flat_static::TABLE_RESERVE;
+use super::Policy;
+
+pub struct Hscc2M {
+    m: Machine,
+    aspace: AddressSpace,
+    nvm: Region,
+    /// DRAM managed in 2 MB frames.
+    dram: DramMgr,
+    /// Superpage counters (svpn -> reads/writes), TLB-level.
+    counters: HashMap<u64, (u32, u32)>,
+    frame_owner: HashMap<u64, u64>,
+    nvm_home: HashMap<u64, u64>,
+    params: UtilityParams,
+    threshold: ThresholdCtl,
+    sd_stats: ShootdownStats,
+}
+
+impl Hscc2M {
+    pub fn new(cfg: &Config) -> Hscc2M {
+        let m = Machine::new(cfg, TableHome::Dram, TableHome::Dram);
+        let nvm_base = m.mem.nvm_base();
+        let mut params = UtilityParams::from_config(cfg);
+        // Migration unit is a superpage.
+        params.t_mig = cfg.t_mig_2m as f64;
+        params.t_writeback = cfg.t_mig_2m as f64;
+        Hscc2M {
+            nvm: Region::new(nvm_base, cfg.nvm.size - TABLE_RESERVE),
+            dram: DramMgr::new((cfg.dram.size - TABLE_RESERVE) / SP_SIZE),
+            aspace: AddressSpace::new(),
+            counters: HashMap::new(),
+            frame_owner: HashMap::new(),
+            nvm_home: HashMap::new(),
+            threshold: ThresholdCtl::new(params.threshold * 8.0),
+            params,
+            m,
+            sd_stats: ShootdownStats::default(),
+        }
+    }
+
+    fn ensure_mapped(&mut self, vaddr: u64) -> u64 {
+        if let Some(pa) = self.aspace.resolve_2m(vaddr) {
+            return pa;
+        }
+        let pa = self
+            .aspace
+            .ensure_2m(vaddr, &mut self.nvm)
+            .expect("hscc2m: NVM exhausted");
+        self.nvm_home.insert(vaddr >> SP_SHIFT, pa);
+        self.aspace.resolve_2m(vaddr).unwrap()
+    }
+
+    fn evict(&mut self, frame: u64, dirty: bool, now: u64) -> u64 {
+        let svpn = self.frame_owner.remove(&frame)
+            .expect("evicting unowned 2MB frame");
+        let home = self.nvm_home[&svpn];
+        let dram_pa = frame * SP_SIZE;
+        let mut cycles = 0;
+        let (wbs, lines) = self.m.caches.clflush_range(dram_pa, SP_SIZE);
+        cycles += lines * self.m.cfg.t_clflush_line;
+        self.m.metrics.rt.clflush_cycles += lines * self.m.cfg.t_clflush_line;
+        for wb in wbs {
+            self.m.mem.access(now, wb.addr, true, 64);
+        }
+        if dirty {
+            // Background DMA + the constant CPU charge (512 x 4 KB unit).
+            self.m.mem.migrate(now, dram_pa, home, SP_SIZE);
+            cycles += self.m.cfg.t_mig_2m;
+            self.m.metrics.writebacks += 1;
+            self.m.metrics.writeback_bytes += SP_SIZE;
+        }
+        self.aspace.pt_2m.remap(svpn, home >> SP_SHIFT);
+        let sd = shootdown_2m(&self.m.cfg, &mut self.m.tlbs, svpn,
+                              &mut self.sd_stats);
+        cycles += sd;
+        self.m.metrics.rt.shootdown_cycles += sd;
+        self.m.metrics.shootdowns += 1;
+        cycles
+    }
+
+    fn migrate_in(&mut self, svpn: u64, now: u64) -> u64 {
+        let src = self.nvm_home[&svpn];
+        let mut cycles = 0;
+        let grant = self.dram.take(svpn);
+        match grant.reclaim {
+            Reclaim::Free => {}
+            Reclaim::Clean { victim_owner } => {
+                cycles += self.evict_check(victim_owner, grant.frame, false,
+                                           now);
+            }
+            Reclaim::Dirty { victim_owner } => {
+                cycles += self.evict_check(victim_owner, grant.frame, true,
+                                           now);
+            }
+        }
+        let dst = grant.frame * SP_SIZE;
+        let (wbs, lines) = self.m.caches.clflush_range(src, SP_SIZE);
+        cycles += lines * self.m.cfg.t_clflush_line;
+        self.m.metrics.rt.clflush_cycles += lines * self.m.cfg.t_clflush_line;
+        for wb in wbs {
+            self.m.mem.access(now, wb.addr, true, 64);
+        }
+        {
+            let (nvm_dev, dram_dev) =
+                (&mut self.m.mem.nvm, &mut self.m.mem.dram);
+            copy_page(nvm_dev, dram_dev, src - self.nvm.base, dst, SP_SIZE,
+                      now + cycles);
+        }
+        // Background DMA; CPU pays the superpage T_mig (512x the 4 KB
+        // constant) — the cost Figs. 10/11 attribute to HSCC-2MB.
+        cycles += self.m.cfg.t_mig_2m;
+        self.m.metrics.migrations += 1;
+        self.m.metrics.migrated_bytes += SP_SIZE;
+        self.aspace.pt_2m.remap(svpn, dst >> SP_SHIFT);
+        let sd = shootdown_2m(&self.m.cfg, &mut self.m.tlbs, svpn,
+                              &mut self.sd_stats);
+        cycles += sd;
+        self.m.metrics.rt.shootdown_cycles += sd;
+        self.m.metrics.shootdowns += 1;
+        self.frame_owner.insert(grant.frame, svpn);
+        cycles
+    }
+
+    fn evict_check(&mut self, svpn: u64, frame: u64, dirty: bool,
+                   now: u64) -> u64 {
+        debug_assert_eq!(self.frame_owner.get(&frame), Some(&svpn));
+        self.evict(frame, dirty, now)
+    }
+}
+
+impl Policy for Hscc2M {
+    fn name(&self) -> &'static str {
+        "HSCC-2MB-mig"
+    }
+
+    fn access(&mut self, core: usize, vaddr: u64, is_write: bool,
+              now: u64) -> u64 {
+        let look = self.m.tlbs[core].lookup_2m(vaddr);
+        let mut cycles = look.cycles;
+        self.m.metrics.xlat.tlb_cycles += look.cycles;
+        let paddr = match look.level {
+            HitLevel::Miss => {
+                let walk = self.m.walker.walk_2m(&mut self.m.mem,
+                                                 vaddr >> SP_SHIFT,
+                                                 now + cycles);
+                cycles += walk;
+                self.m.metrics.xlat.sptw_cycles += walk;
+                self.m.metrics.tlb_miss_cycles += walk;
+                let pa = self.ensure_mapped(vaddr);
+                self.m.tlbs[core].insert_2m(vaddr >> SP_SHIFT, pa >> SP_SHIFT);
+                pa
+            }
+            _ => (look.ppn.unwrap() << SP_SHIFT)
+                | (vaddr & ((1 << SP_SHIFT) - 1)),
+        };
+        let e = self.counters.entry(vaddr >> SP_SHIFT).or_insert((0, 0));
+        if is_write {
+            e.1 += 1;
+        } else {
+            e.0 += 1;
+        }
+        if is_write && paddr < self.m.mem.dram_size() {
+            self.dram.mark_dirty(paddr / SP_SIZE);
+        }
+        let (dcycles, _) = self.m.data_path(core, paddr, is_write,
+                                            now + cycles);
+        cycles + dcycles
+    }
+
+    fn on_interval(&mut self, now: u64) -> u64 {
+        let thresh = self.threshold.threshold();
+        let mut cand: Vec<(u64, f64)> = self
+            .counters
+            .iter()
+            .filter(|(svpn, _)| {
+                self.aspace
+                    .pt_2m
+                    .translate(**svpn)
+                    .map(|p| p << SP_SHIFT >= self.m.mem.dram_size())
+                    .unwrap_or(false)
+            })
+            .map(|(&svpn, &(r, w))| {
+                (svpn, self.params.benefit(r as u64, w as u64))
+            })
+            .filter(|&(_, b)| b > thresh)
+            .collect();
+        cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let identify = (self.counters.len() as u64) * 2;
+        self.m.metrics.rt.identify_cycles += identify;
+
+        let migrated_before = self.m.metrics.migrated_bytes;
+        let wb_before = self.m.metrics.writeback_bytes;
+        let mut cycles = identify;
+        // Same DMA budget as the 4 KB policies, in superpage units.
+        let budget =
+            (super::migration_budget_pages(&self.m.cfg) / 512).max(2);
+        let spacing = self.m.cfg.interval_cycles / (budget + 1);
+        for (i, (svpn, benefit)) in cand.into_iter().enumerate() {
+            if i as u64 >= budget {
+                break;
+            }
+            if self.dram.free_count() == 0 && benefit < 2.0 * thresh {
+                continue;
+            }
+            cycles += self.migrate_in(svpn, now + i as u64 * spacing);
+        }
+        self.m.metrics.rt.migration_cycles +=
+            cycles.saturating_sub(identify);
+        self.threshold.update(
+            self.m.metrics.migrated_bytes - migrated_before,
+            self.m.metrics.writeback_bytes - wb_before,
+        );
+        self.counters.clear();
+        cycles
+    }
+
+    fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Hscc2M {
+        let mut cfg = Config::scaled(8);
+        cfg.cores = 2;
+        Hscc2M::new(&cfg)
+    }
+
+    #[test]
+    fn migrates_whole_superpage() {
+        let mut p = policy();
+        let mut now = 0;
+        for _ in 0..6000 {
+            now += p.access(0, 0x40_0000, true, now);
+        }
+        now += p.on_interval(now);
+        assert_eq!(p.m.metrics.migrations, 1);
+        assert_eq!(p.m.metrics.migrated_bytes, SP_SIZE,
+                   "2 MB moved for one hot page's worth of use");
+        let pa = p.aspace.resolve_2m(0x40_0000).unwrap();
+        assert!(pa < p.m.mem.dram_size());
+    }
+
+    #[test]
+    fn migration_cost_is_hundreds_of_times_4k() {
+        let mut p = policy();
+        let mut now = 0;
+        for _ in 0..6000 {
+            now += p.access(0, 0, true, now);
+        }
+        let os = p.on_interval(now);
+        // One 2 MB copy ≈ 512 line round-trips; must dwarf a 4 KB cost.
+        assert!(os > 100_000, "2MB migration cost {os} too cheap");
+    }
+
+    #[test]
+    fn superpage_migration_needs_much_higher_benefit() {
+        let mut p = policy();
+        let mut now = 0;
+        // 100 writes: hot enough for a 4 KB page, nowhere near enough to
+        // repay a 2 MB move (T_mig = 512 * 4096).
+        for _ in 0..100 {
+            now += p.access(0, 0, true, now);
+        }
+        p.on_interval(now);
+        assert_eq!(p.m.metrics.migrations, 0);
+    }
+
+    #[test]
+    fn shootdowns_use_2m_entries() {
+        let mut p = policy();
+        let mut now = 0;
+        for _ in 0..6000 {
+            now += p.access(0, 0x20_0000, true, now);
+        }
+        p.on_interval(now);
+        assert!(p.sd_stats.shootdowns >= 1);
+        // The 2 MB entry must be gone: next access walks again.
+        let walks = p.m.walker.stats.walks_2m;
+        p.access(0, 0x20_0000, false, now + 1_000_000);
+        assert_eq!(p.m.walker.stats.walks_2m, walks + 1);
+    }
+}

@@ -1,0 +1,336 @@
+//! HSCC-4KB-mig (§IV-A): the state-of-the-art comparator. Flat 4 KB
+//! paging, data resident in NVM, utility-based hot-page migration into a
+//! DRAM cache managed with free/clean/dirty lists. Counting is TLB-level
+//! (per access, *not* filtered by on-chip caches — the reason Fig. 11
+//! shows HSCC migrating more than Rainbow). Every migration remaps the
+//! page table, so it costs a TLB shootdown + clflush.
+
+use std::collections::HashMap;
+
+use crate::config::{Config, PAGE_SHIFT, PAGE_SIZE};
+use crate::mem::sched::copy_page;
+use crate::os::{AddressSpace, DramMgr, Reclaim, Region};
+use crate::rainbow::migration::{ThresholdCtl, UtilityParams};
+use crate::sim::machine::{Machine, TableHome};
+use crate::tlb::{shootdown_4k, HitLevel, ShootdownStats};
+
+use super::flat_static::TABLE_RESERVE;
+use super::Policy;
+
+pub struct Hscc4K {
+    m: Machine,
+    aspace: AddressSpace,
+    nvm: Region,
+    dram: DramMgr,
+    /// TLB-level access counters: vpn -> (reads, writes) this interval.
+    counters: HashMap<u64, (u32, u32)>,
+    /// DRAM frame -> vpn, for eviction bookkeeping.
+    frame_owner: HashMap<u64, u64>,
+    /// vpn -> original NVM paddr (migration is a cache: eviction returns
+    /// the page home).
+    nvm_home: HashMap<u64, u64>,
+    params: UtilityParams,
+    threshold: ThresholdCtl,
+    sd_stats: ShootdownStats,
+}
+
+impl Hscc4K {
+    pub fn new(cfg: &Config) -> Hscc4K {
+        let m = Machine::new(cfg, TableHome::Dram, TableHome::Dram);
+        let nvm_base = m.mem.nvm_base();
+        let params = UtilityParams::from_config(cfg);
+        Hscc4K {
+            nvm: Region::new(nvm_base, cfg.nvm.size - TABLE_RESERVE),
+            dram: DramMgr::new((cfg.dram.size - TABLE_RESERVE) / PAGE_SIZE),
+            aspace: AddressSpace::new(),
+            counters: HashMap::new(),
+            frame_owner: HashMap::new(),
+            nvm_home: HashMap::new(),
+            threshold: ThresholdCtl::new(params.threshold),
+            params,
+            m,
+            sd_stats: ShootdownStats::default(),
+        }
+    }
+
+    fn ensure_mapped(&mut self, vaddr: u64) -> u64 {
+        if let Some(pa) = self.aspace.resolve_4k(vaddr) {
+            return pa;
+        }
+        let pa = self
+            .aspace
+            .ensure_4k(vaddr, &mut self.nvm)
+            .expect("hscc4k: NVM exhausted");
+        self.nvm_home.insert(vaddr >> PAGE_SHIFT, pa);
+        self.aspace.resolve_4k(vaddr).unwrap()
+    }
+
+    /// Evict the page in `frame` back to its NVM home. Returns cycles.
+    fn evict(&mut self, frame: u64, dirty: bool, now: u64) -> u64 {
+        let vpn = self.frame_owner.remove(&frame)
+            .expect("evicting unowned frame");
+        let home = self.nvm_home[&vpn];
+        let dram_pa = frame * PAGE_SIZE;
+        let mut cycles = 0;
+        // Flush the page's lines out of the coherence domain.
+        let (wbs, lines) = self.m.caches.clflush_range(dram_pa, PAGE_SIZE);
+        cycles += lines * self.m.cfg.t_clflush_line;
+        self.m.metrics.rt.clflush_cycles += lines * self.m.cfg.t_clflush_line;
+        for wb in wbs {
+            self.m.mem.access(now, wb.addr, true, 64);
+        }
+        if dirty {
+            // The copy occupies the devices (background DMA); the CPU is
+            // charged the paper's constant T_writeback (Eq. 2).
+            self.m.mem.migrate(now, dram_pa, home, PAGE_SIZE);
+            cycles += self.m.cfg.t_writeback_4k;
+            self.m.metrics.writebacks += 1;
+            self.m.metrics.writeback_bytes += PAGE_SIZE;
+        }
+        // Remap back to NVM + shoot down the stale DRAM translation.
+        self.aspace.pt_4k.remap(vpn, home >> PAGE_SHIFT);
+        let sd = shootdown_4k(&self.m.cfg, &mut self.m.tlbs, vpn,
+                              &mut self.sd_stats);
+        cycles += sd;
+        self.m.metrics.rt.shootdown_cycles += sd;
+        self.m.metrics.shootdowns += 1;
+        cycles
+    }
+
+    /// Migrate `vpn` into DRAM; returns cycles spent.
+    fn migrate_in(&mut self, vpn: u64, now: u64) -> u64 {
+        let src = self.nvm_home[&vpn];
+        let mut cycles = 0;
+        let grant = self.dram.take(vpn);
+        match grant.reclaim {
+            Reclaim::Free => {}
+            Reclaim::Clean { victim_owner } => {
+                cycles += self.evict_owner(victim_owner, grant.frame, false,
+                                           now);
+            }
+            Reclaim::Dirty { victim_owner } => {
+                cycles += self.evict_owner(victim_owner, grant.frame, true,
+                                           now);
+            }
+        }
+        let dst = grant.frame * PAGE_SIZE;
+        // Source lines may be cached: flush before the copy (§III-F).
+        let (wbs, lines) = self.m.caches.clflush_range(src, PAGE_SIZE);
+        cycles += lines * self.m.cfg.t_clflush_line;
+        self.m.metrics.rt.clflush_cycles += lines * self.m.cfg.t_clflush_line;
+        for wb in wbs {
+            self.m.mem.access(now, wb.addr, true, 64);
+        }
+        {
+            let (nvm_dev, dram_dev) =
+                (&mut self.m.mem.nvm, &mut self.m.mem.dram);
+            copy_page(nvm_dev, dram_dev, src - self.nvm.base, dst,
+                      PAGE_SIZE, now + cycles);
+        }
+        // Background DMA; the CPU pays the paper's T_mig constant (Eq. 1).
+        cycles += self.m.cfg.t_mig_4k;
+        self.m.metrics.migrations += 1;
+        self.m.metrics.migrated_bytes += PAGE_SIZE;
+        // Remap + shootdown (HSCC changes the address the TLBs hold).
+        self.aspace.pt_4k.remap(vpn, dst >> PAGE_SHIFT);
+        let sd = shootdown_4k(&self.m.cfg, &mut self.m.tlbs, vpn,
+                              &mut self.sd_stats);
+        cycles += sd;
+        self.m.metrics.rt.shootdown_cycles += sd;
+        self.m.metrics.shootdowns += 1;
+        self.frame_owner.insert(grant.frame, vpn);
+        cycles
+    }
+
+    fn evict_owner(&mut self, vpn: u64, frame: u64, dirty: bool,
+                   now: u64) -> u64 {
+        debug_assert_eq!(self.frame_owner.get(&frame), Some(&vpn));
+        self.evict(frame, dirty, now)
+    }
+}
+
+impl Policy for Hscc4K {
+    fn name(&self) -> &'static str {
+        "HSCC-4KB-mig"
+    }
+
+    fn access(&mut self, core: usize, vaddr: u64, is_write: bool,
+              now: u64) -> u64 {
+        let look = self.m.tlbs[core].lookup_4k(vaddr);
+        let mut cycles = look.cycles;
+        self.m.metrics.xlat.tlb_cycles += look.cycles;
+        let paddr = match look.level {
+            HitLevel::Miss => {
+                let walk = self.m.walker.walk_4k(&mut self.m.mem,
+                                                 vaddr >> PAGE_SHIFT,
+                                                 now + cycles);
+                cycles += walk;
+                self.m.metrics.xlat.ptw_cycles += walk;
+                self.m.metrics.tlb_miss_cycles += walk;
+                let pa = self.ensure_mapped(vaddr);
+                self.m.tlbs[core]
+                    .insert_4k(vaddr >> PAGE_SHIFT, pa >> PAGE_SHIFT);
+                pa
+            }
+            _ => (look.ppn.unwrap() << PAGE_SHIFT) | (vaddr & 0xFFF),
+        };
+        // TLB-level (unfiltered) access counting — HSCC's design.
+        let e = self.counters.entry(vaddr >> PAGE_SHIFT).or_insert((0, 0));
+        if is_write {
+            e.1 += 1;
+        } else {
+            e.0 += 1;
+        }
+        // Dirty tracking for cached pages.
+        if is_write && paddr < self.m.mem.dram_size() {
+            self.dram.mark_dirty(paddr >> PAGE_SHIFT);
+        }
+        let (dcycles, _) = self.m.data_path(core, paddr, is_write,
+                                            now + cycles);
+        cycles + dcycles
+    }
+
+    fn on_interval(&mut self, now: u64) -> u64 {
+        let thresh = self.threshold.threshold();
+        // Rank candidate pages by Eq.-1 benefit.
+        let mut cand: Vec<(u64, f64, u32, u32)> = self
+            .counters
+            .iter()
+            .filter(|(vpn, _)| {
+                // Only NVM-resident pages are migration candidates.
+                self.aspace
+                    .pt_4k
+                    .translate(**vpn)
+                    .map(|ppn| ppn << PAGE_SHIFT >= self.m.mem.dram_size())
+                    .unwrap_or(false)
+            })
+            .map(|(&vpn, &(r, w))| {
+                (vpn, self.params.benefit(r as u64, w as u64), r, w)
+            })
+            .filter(|&(_, b, _, _)| b > thresh)
+            .collect();
+        cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // Software cost of the scan+sort.
+        let identify = (self.counters.len() as u64) * 2;
+        self.m.metrics.rt.identify_cycles += identify;
+
+        let migrated_before = self.m.metrics.migrated_bytes;
+        let wb_before = self.m.metrics.writeback_bytes;
+        let mut cycles = identify;
+        // Migration DMA is rate-limited (paper §IV-D: migrations consume
+        // <= ~1.35% of bandwidth) and staggered across the next interval
+        // so demand traffic doesn't queue behind a copy burst.
+        let budget = super::migration_budget_pages(&self.m.cfg);
+        let spacing = self.m.cfg.interval_cycles / (budget + 1);
+        for (i, (vpn, benefit, r, w)) in cand.into_iter().enumerate() {
+            if i as u64 >= budget {
+                break;
+            }
+            // Eq. 2 check under DRAM pressure: compare against the
+            // would-be victim's counters.
+            if self.dram.free_count() == 0 {
+                let swap_ok = self.params.swap_benefit(
+                    r as u64, w as u64, 0, 0) > thresh;
+                if !swap_ok || benefit < 2.0 * thresh {
+                    continue;
+                }
+            }
+            cycles += self.migrate_in(vpn, now + i as u64 * spacing);
+        }
+        self.m.metrics.rt.migration_cycles +=
+            cycles.saturating_sub(identify);
+        self.threshold.update(
+            self.m.metrics.migrated_bytes - migrated_before,
+            self.m.metrics.writeback_bytes - wb_before,
+        );
+        self.counters.clear();
+        cycles
+    }
+
+    fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Hscc4K {
+        let mut cfg = Config::scaled(8);
+        cfg.cores = 2;
+        Hscc4K::new(&cfg)
+    }
+
+    #[test]
+    fn first_touch_lands_in_nvm() {
+        let mut p = policy();
+        p.access(0, 0x4000, false, 0);
+        let pa = p.aspace.resolve_4k(0x4000).unwrap();
+        assert!(pa >= p.m.mem.dram_size(), "initial placement is NVM");
+    }
+
+    #[test]
+    fn hot_page_migrates_to_dram_on_interval() {
+        let mut p = policy();
+        let v = 0x40_0000u64;
+        let mut now = 0;
+        for _ in 0..500 {
+            now += p.access(0, v, true, now);
+        }
+        let os = p.on_interval(now);
+        assert!(os > 0, "migration must cost cycles");
+        let pa = p.aspace.resolve_4k(v).unwrap();
+        assert!(pa < p.m.mem.dram_size(), "hot page must now be in DRAM");
+        assert_eq!(p.m.metrics.migrations, 1);
+        assert!(p.m.metrics.shootdowns >= 1);
+    }
+
+    #[test]
+    fn cold_pages_stay_in_nvm() {
+        let mut p = policy();
+        let mut now = 0;
+        for i in 0..50u64 {
+            now += p.access(0, i * 4096, false, now); // one touch each
+        }
+        p.on_interval(now);
+        assert_eq!(p.m.metrics.migrations, 0,
+                   "single-touch pages cannot repay T_mig");
+    }
+
+    #[test]
+    fn counter_clears_each_interval() {
+        let mut p = policy();
+        let mut now = 0;
+        for _ in 0..300 {
+            now += p.access(0, 0x9000, true, now);
+        }
+        p.on_interval(now);
+        assert!(p.counters.is_empty());
+        // A single later access must not look hot.
+        p.access(0, 0x9000, false, now);
+        p.on_interval(now + 10_000);
+        assert_eq!(p.m.metrics.migrations, 1, "no re-migration");
+    }
+
+    #[test]
+    fn migrated_page_served_from_dram() {
+        let mut p = policy();
+        let v = 0x80_0000u64;
+        let mut now = 0;
+        for _ in 0..500 {
+            now += p.access(0, v, true, now);
+        }
+        now += p.on_interval(now);
+        let nvm_before = p.m.mem.nvm.stats.accesses();
+        for _ in 0..100 {
+            now += p.access(0, v, false, now);
+        }
+        // Post-migration demand traffic should not touch NVM.
+        assert_eq!(p.m.mem.nvm.stats.accesses(), nvm_before);
+    }
+}

@@ -1,0 +1,70 @@
+//! The policy boundary: each evaluated system (Flat-static, HSCC-4KB-mig,
+//! HSCC-2MB-mig, DRAM-only, Rainbow) implements [`Policy`]; the engine is
+//! policy-agnostic.
+
+use crate::sim::machine::Machine;
+
+pub mod dram_only;
+pub mod flat_static;
+pub mod hscc2m;
+pub mod hscc4k;
+
+pub use dram_only::DramOnly;
+pub use flat_static::FlatStatic;
+pub use hscc2m::Hscc2M;
+pub use hscc4k::Hscc4K;
+
+/// One evaluated memory-management system.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+
+    /// Perform one memory access: translate `vaddr`, traverse the cache
+    /// hierarchy / memory, do all bookkeeping. Returns cycles consumed.
+    fn access(&mut self, core: usize, vaddr: u64, is_write: bool,
+              now: u64) -> u64;
+
+    /// Sampling-interval boundary: identification + migration. Returns
+    /// OS/mechanism cycles that stall execution (stop-the-world model).
+    fn on_interval(&mut self, now: u64) -> u64;
+
+    fn machine(&self) -> &Machine;
+
+    fn machine_mut(&mut self) -> &mut Machine;
+
+    /// End-of-run rollup; policies may override to adjust counters whose
+    /// meaning is policy-specific (e.g. Rainbow's 4 KB-side misses).
+    fn finalize(&mut self, elapsed: u64) {
+        self.machine_mut().finalize(elapsed);
+    }
+}
+
+/// Construct a policy by name ("flat", "hscc4k", "hscc2m", "dram",
+/// "rainbow"), with `accel` choosing the Rainbow identification backend.
+pub fn by_name(name: &str, cfg: &crate::config::Config, accel: bool)
+               -> Option<Box<dyn Policy>> {
+    let p: Box<dyn Policy> = match name.to_ascii_lowercase().as_str() {
+        "flat" | "flat-static" => Box::new(FlatStatic::new(cfg)),
+        "hscc4k" | "hscc-4kb-mig" => Box::new(Hscc4K::new(cfg)),
+        "hscc2m" | "hscc-2mb-mig" => Box::new(Hscc2M::new(cfg)),
+        "dram" | "dram-only" => Box::new(DramOnly::new(cfg)),
+        "rainbow" => Box::new(crate::rainbow::policy::Rainbow::new(cfg, accel)),
+        _ => return None,
+    };
+    Some(p)
+}
+
+/// Canonical evaluation order of Figs. 7-12.
+pub fn all_names() -> [&'static str; 5] {
+    ["flat", "hscc4k", "hscc2m", "rainbow", "dram"]
+}
+
+/// Per-interval migration budget in 4 KB pages: a bandwidth cap (~10% of
+/// the NVM channels' line bandwidth over one interval) that also bounds
+/// the stop-the-world OS work. Paper §IV-D observes migrations consume
+/// at most ~1.35% of bandwidth in steady state; the cap only binds during
+/// warm-up bursts.
+pub fn migration_budget_pages(cfg: &crate::config::Config) -> u64 {
+    let lines_per_interval = cfg.interval_cycles * cfg.nvm.channels as u64
+        / crate::mem::device::LINE_XFER_CYCLES;
+    (lines_per_interval / 10 / 64).max(64)
+}

@@ -1,0 +1,182 @@
+//! Utility-based migration model (§III-C): Eq. 1 benefit, Eq. 2 swap
+//! accounting, and the dynamic threshold controller that raises the bar
+//! when bidirectional traffic (thrashing) grows.
+
+use crate::config::Config;
+
+/// Latency parameters of the utility model (cycles), mirrored into the
+/// f32[8] parameter vector the AOT kernels consume.
+#[derive(Clone, Copy, Debug)]
+pub struct UtilityParams {
+    pub t_nr: f64,
+    pub t_nw: f64,
+    pub t_dr: f64,
+    pub t_dw: f64,
+    pub t_mig: f64,
+    pub t_writeback: f64,
+    pub threshold: f64,
+    pub write_weight: f64,
+}
+
+impl UtilityParams {
+    pub fn from_config(cfg: &Config) -> UtilityParams {
+        UtilityParams {
+            t_nr: cfg.nvm.read_cycles as f64,
+            t_nw: cfg.nvm.write_cycles as f64,
+            t_dr: cfg.dram.read_cycles as f64,
+            t_dw: cfg.dram.write_cycles as f64,
+            t_mig: cfg.t_mig_4k as f64,
+            t_writeback: cfg.t_writeback_4k as f64,
+            threshold: cfg.migration_threshold,
+            write_weight: cfg.write_weight,
+        }
+    }
+
+    /// The f32[8] vector in the artifact's parameter layout (ref.py).
+    pub fn to_f32_vec(&self) -> [f32; 8] {
+        [
+            self.t_nr as f32,
+            self.t_nw as f32,
+            self.t_dr as f32,
+            self.t_dw as f32,
+            self.t_mig as f32,
+            self.t_writeback as f32,
+            self.threshold as f32,
+            self.write_weight as f32,
+        ]
+    }
+
+    /// Eq. 1: benefit of migrating a page expected to see (c_r, c_w).
+    pub fn benefit(&self, c_r: u64, c_w: u64) -> f64 {
+        (self.t_nr - self.t_dr) * c_r as f64
+            + (self.t_nw - self.t_dw) * c_w as f64
+            - self.t_mig
+    }
+
+    /// Eq. 2: net benefit when a victim page (c_r1, c_w1) must be swapped
+    /// out for the incoming page (c_r2, c_w2).
+    pub fn swap_benefit(&self, c_r2: u64, c_w2: u64, c_r1: u64, c_w1: u64)
+                        -> f64 {
+        (self.t_nr - self.t_dr) * (c_r2 as f64 - c_r1 as f64)
+            + (self.t_nw - self.t_dw) * (c_w2 as f64 - c_w1 as f64)
+            - self.t_mig
+            - self.t_writeback
+    }
+}
+
+/// Dynamic threshold controller (§III-C): "we monitor the data traffic of
+/// bidirectional page migrations, and dynamically increase the threshold
+/// ... to select hotter small pages".
+#[derive(Clone, Debug)]
+pub struct ThresholdCtl {
+    base: f64,
+    current: f64,
+    /// Raise factor when thrashing is detected; decay toward base.
+    raise: f64,
+    decay: f64,
+    /// Writeback:migration byte ratio above which we call it thrashing.
+    thrash_ratio: f64,
+}
+
+impl ThresholdCtl {
+    pub fn new(base: f64) -> ThresholdCtl {
+        ThresholdCtl {
+            base,
+            current: base,
+            raise: 2.0,
+            decay: 0.5,
+            thrash_ratio: 0.5,
+        }
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.current
+    }
+
+    /// Feed one interval's traffic; returns the updated threshold.
+    pub fn update(&mut self, migrated_bytes: u64, writeback_bytes: u64) -> f64 {
+        let ratio = if migrated_bytes == 0 {
+            0.0
+        } else {
+            writeback_bytes as f64 / migrated_bytes as f64
+        };
+        if ratio > self.thrash_ratio {
+            self.current = (self.current * self.raise).min(self.base * 64.0);
+        } else {
+            // Geometric decay back toward the base threshold.
+            self.current = self.base + (self.current - self.base) * self.decay;
+        }
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> UtilityParams {
+        UtilityParams::from_config(&Config::paper())
+    }
+
+    #[test]
+    fn eq1_write_heavy_pages_benefit_more() {
+        let p = params();
+        // (t_nw - t_dw) = 547-91 = 456 >> (t_nr - t_dr) = 19.
+        assert!(p.benefit(0, 100) > p.benefit(100, 0));
+    }
+
+    #[test]
+    fn eq1_cold_page_negative() {
+        let p = params();
+        assert!(p.benefit(0, 0) < 0.0);
+        assert!(p.benefit(1, 0) < 0.0, "one read cannot repay T_mig");
+    }
+
+    #[test]
+    fn eq2_swap_requires_hotter_incoming() {
+        let p = params();
+        // Equal hotness: pure loss (pay T_mig + T_writeback).
+        let even = p.swap_benefit(50, 50, 50, 50);
+        assert!(even < 0.0);
+        // Much hotter incoming: worth it.
+        let hot = p.swap_benefit(500, 500, 5, 5);
+        assert!(hot > 0.0);
+        // Eq. 2 <= Eq. 1 always (swap adds writeback cost).
+        assert!(p.swap_benefit(100, 100, 0, 0) < p.benefit(100, 100));
+    }
+
+    #[test]
+    fn params_vector_matches_python_layout() {
+        let v = params().to_f32_vec();
+        assert_eq!(v[0], 62.0); // t_nr
+        assert_eq!(v[1], 547.0); // t_nw
+        assert_eq!(v[2], 43.0); // t_dr
+        assert_eq!(v[3], 91.0); // t_dw
+        assert_eq!(v[7], 3.0); // write_weight
+    }
+
+    #[test]
+    fn threshold_rises_on_thrash_decays_after() {
+        let mut t = ThresholdCtl::new(64.0);
+        assert_eq!(t.threshold(), 64.0);
+        // Heavy writeback traffic -> raise.
+        t.update(1000, 900);
+        assert!(t.threshold() > 64.0);
+        let peak = t.threshold();
+        // Calm intervals -> decay toward base.
+        for _ in 0..10 {
+            t.update(1000, 0);
+        }
+        assert!(t.threshold() < peak);
+        assert!((t.threshold() - 64.0).abs() < 8.0);
+    }
+
+    #[test]
+    fn threshold_bounded() {
+        let mut t = ThresholdCtl::new(64.0);
+        for _ in 0..100 {
+            t.update(1, 1_000_000);
+        }
+        assert!(t.threshold() <= 64.0 * 64.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's contribution: two-stage access counting, migration bitmap
+//! + bitmap cache, NVM→DRAM address remapping, utility-based migration,
+//! and the full Rainbow policy tying them to the split-TLB machine.
+
+pub mod bitmap;
+pub mod counters;
+pub mod migration;
+pub mod policy;
+pub mod remap;
+
+pub use bitmap::{BitmapCache, MigrationBitmap};
+pub use counters::TwoStageCounters;
+pub use migration::{ThresholdCtl, UtilityParams};
+pub use policy::Rainbow;
+pub use remap::RemapTable;

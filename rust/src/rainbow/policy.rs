@@ -1,0 +1,535 @@
+//! The Rainbow policy (§III): NVM managed in 2 MB superpages, DRAM as a
+//! 4 KB hot-page cache, split TLBs consulted in parallel, the migration
+//! bitmap + bitmap cache, NVM→DRAM address remapping, and two-stage
+//! access counting feeding the utility migration model.
+//!
+//! Key properties implemented exactly as the paper argues:
+//! * NVM→DRAM migration never splinters a superpage and never invalidates
+//!   a superpage TLB entry (no shootdown on the migrate-in path).
+//! * The 4 KB TLB entry for a migrated page is built lazily on first
+//!   access through the superpage path (bitmap hit → 8-byte pointer read).
+//! * DRAM→NVM eviction shoots down the 4 KB entry only; clean evictions
+//!   write back just the 8-byte pointer area.
+//! * Counting is memory-controller level (LLC-filtered), superpage-
+//!   granular in stage 1 and 4 KB-granular for the monitored top-N.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::config::{Config, PAGES_PER_SP, PAGE_SHIFT, PAGE_SIZE, SP_SHIFT,
+                    SP_SIZE};
+use crate::mem::sched::copy_page;
+use crate::os::{AddressSpace, DramMgr, Reclaim, Region};
+use crate::policies::flat_static::TABLE_RESERVE;
+use crate::policies::Policy;
+use crate::runtime::HotPageIdentifier;
+use crate::sim::machine::{Machine, TableHome};
+use crate::tlb::{shootdown_4k, ShootdownStats};
+
+use super::bitmap::{BitmapCache, MigrationBitmap};
+use super::counters::TwoStageCounters;
+use super::migration::{ThresholdCtl, UtilityParams};
+use super::remap::RemapTable;
+
+pub struct Rainbow {
+    m: Machine,
+    /// Virtual 2 MB mapping into NVM.
+    aspace: AddressSpace,
+    nvm: Region,
+    /// DRAM 4 KB frame manager (free/clean/dirty lists).
+    dram: DramMgr,
+    /// NVM superpage index -> virtual superpage number (for shootdowns).
+    sp_rev: HashMap<u32, u64>,
+    counters: TwoStageCounters,
+    bitmap: MigrationBitmap,
+    bitmap_cache: BitmapCache,
+    remap: RemapTable,
+    identifier: HotPageIdentifier,
+    params: UtilityParams,
+    threshold: ThresholdCtl,
+    sd_stats: ShootdownStats,
+    nvm_base: u64,
+}
+
+impl Rainbow {
+    /// `accel`: use the PJRT AOT artifacts for hot-page identification
+    /// (falls back to the bit-exact native pipeline if unavailable).
+    pub fn new(cfg: &Config, accel: bool) -> Rainbow {
+        let m = Machine::new(cfg, TableHome::Dram, TableHome::Nvm);
+        let nvm_base = m.mem.nvm_base();
+        let n_sp = ((cfg.nvm.size - TABLE_RESERVE) / SP_SIZE) as usize;
+        let params = UtilityParams::from_config(cfg);
+        let identifier = if accel {
+            HotPageIdentifier::auto(&PathBuf::from(
+                crate::runtime::PjrtRuntime::default_dir()))
+        } else {
+            HotPageIdentifier::native()
+        };
+        Rainbow {
+            nvm: Region::new(nvm_base, cfg.nvm.size - TABLE_RESERVE),
+            dram: DramMgr::new((cfg.dram.size - TABLE_RESERVE) / PAGE_SIZE),
+            aspace: AddressSpace::new(),
+            sp_rev: HashMap::new(),
+            counters: TwoStageCounters::new(n_sp, cfg.top_n),
+            bitmap: MigrationBitmap::new(n_sp),
+            bitmap_cache: BitmapCache::new(cfg.bitmap_cache_entries,
+                                           cfg.bitmap_cache_assoc,
+                                           cfg.bitmap_cache_latency),
+            remap: RemapTable::new(),
+            identifier,
+            threshold: ThresholdCtl::new(params.threshold),
+            params,
+            m,
+            sd_stats: ShootdownStats::default(),
+            nvm_base,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.identifier.backend_name()
+    }
+
+    /// NVM superpage index of a flat NVM physical address.
+    #[inline]
+    fn sp_index(&self, nvm_paddr: u64) -> u32 {
+        ((nvm_paddr - self.nvm_base) >> SP_SHIFT) as u32
+    }
+
+    /// First-touch superpage allocation in NVM.
+    fn ensure_sp(&mut self, vaddr: u64) -> u64 {
+        if let Some(pa) = self.aspace.resolve_2m(vaddr) {
+            return pa & !(SP_SIZE - 1);
+        }
+        let base = self
+            .aspace
+            .ensure_2m(vaddr, &mut self.nvm)
+            .expect("rainbow: NVM exhausted");
+        self.sp_rev.insert(self.sp_index(base), vaddr >> SP_SHIFT);
+        base
+    }
+
+    /// Bitmap consultation for an NVM-translated access (§III-D/E).
+    /// Returns (migrated?, cycles).
+    fn check_bitmap(&mut self, sp: u32, page: u16, now: u64) -> (bool, u64) {
+        let mut cycles = self.bitmap_cache.latency;
+        if !self.bitmap_cache.touch(sp) {
+            // Miss: fetch the 64 B bitmap line from main memory (it lives
+            // in the NVM's reserved table area) — one flat NVM reference.
+            let addr = self.m.sp_walker.cfg.table_base
+                + (sp as u64 * 64) % (self.m.sp_walker.cfg.table_len - 64);
+            let r = self.m.mem.table_ref(addr, 64);
+            cycles += r.latency;
+            self.m.metrics.bitmap_misses += 1;
+        } else {
+            self.m.metrics.bitmap_hits += 1;
+        }
+        self.m.metrics.xlat.bitmap_cycles += cycles;
+        (self.bitmap.get(sp, page), cycles)
+    }
+
+    /// Follow the in-page remap pointer (8-byte NVM read) and install the
+    /// 4 KB TLB entry (§III-E case 3, path ②).
+    fn remap_read(&mut self, core: usize, vaddr: u64, nvm_page_addr: u64,
+                  _now: u64) -> (u64, u64) {
+        // One NVM reference at t_nr (§III-E's analytic cost).
+        let r = self.m.mem.table_ref(nvm_page_addr, 8);
+        self.m.metrics.xlat.remap_cycles += r.latency;
+        self.m.metrics.remap_reads += 1;
+        self.m.metrics.tlb_miss_cycles += r.latency;
+        let nvm_page = (nvm_page_addr - self.nvm_base) >> PAGE_SHIFT;
+        let frame = self.remap.lookup(nvm_page)
+            .expect("bitmap set but no remap entry");
+        let dram_pa = frame << PAGE_SHIFT;
+        self.m.tlbs[core].insert_4k(vaddr >> PAGE_SHIFT,
+                                    dram_pa >> PAGE_SHIFT);
+        (dram_pa | (vaddr & (PAGE_SIZE - 1)), r.latency)
+    }
+
+    /// Evict the DRAM frame (returns cycles). Clean pages write back only
+    /// the 8-byte pointer area; dirty pages copy the full 4 KB.
+    fn evict_frame(&mut self, frame: u64, dirty: bool, now: u64) -> u64 {
+        let nvm_page = self.remap.owner_of_frame(frame)
+            .expect("evicting frame with no remap owner");
+        let nvm_addr = self.nvm_base + (nvm_page << PAGE_SHIFT);
+        let sp = self.sp_index(nvm_addr);
+        let page_in_sp = (nvm_page % PAGES_PER_SP) as u16;
+        let dram_pa = frame << PAGE_SHIFT;
+        let mut cycles = 0;
+
+        let (wbs, lines) = self.m.caches.clflush_range(dram_pa, PAGE_SIZE);
+        cycles += lines * self.m.cfg.t_clflush_line;
+        self.m.metrics.rt.clflush_cycles += lines * self.m.cfg.t_clflush_line;
+        for wb in wbs {
+            self.m.mem.access(now, wb.addr, true, 64);
+        }
+        if dirty {
+            // Background DMA + the Eq.-2 constant T_writeback.
+            self.m.mem.migrate(now, dram_pa, nvm_addr, PAGE_SIZE);
+            cycles += self.m.cfg.t_writeback_4k;
+            self.m.metrics.writeback_bytes += PAGE_SIZE;
+        } else {
+            // Restore the 8 bytes the remap pointer overwrote.
+            let r = self.m.mem.access(now, nvm_addr, true, 8);
+            cycles += r.latency;
+            self.m.metrics.writeback_bytes += 8;
+        }
+        self.m.metrics.writebacks += 1;
+        self.bitmap.set(sp, page_in_sp, false);
+        self.remap.remove(nvm_page);
+        // Shoot down the 4 KB translation (the only shootdown Rainbow
+        // ever performs, §III-F).
+        if let Some(&svpn) = self.sp_rev.get(&sp) {
+            let vpn = svpn * PAGES_PER_SP + page_in_sp as u64;
+            let sd = shootdown_4k(&self.m.cfg, &mut self.m.tlbs, vpn,
+                                  &mut self.sd_stats);
+            cycles += sd;
+            self.m.metrics.rt.shootdown_cycles += sd;
+            self.m.metrics.shootdowns += 1;
+        }
+        self.dram.release(frame);
+        cycles
+    }
+
+    /// Migrate one hot NVM page into DRAM (§III-C/E). No superpage
+    /// shootdown; the remap pointer + bitmap make it transparent.
+    fn migrate_in(&mut self, sp: u32, page_in_sp: u16, now: u64) -> u64 {
+        let nvm_page = sp as u64 * PAGES_PER_SP + page_in_sp as u64;
+        debug_assert!(!self.bitmap.get(sp, page_in_sp));
+        let nvm_addr = self.nvm_base + (nvm_page << PAGE_SHIFT);
+        let mut cycles = 0;
+
+        let grant = self.dram.take(nvm_page);
+        match grant.reclaim {
+            Reclaim::Free => {}
+            Reclaim::Clean { .. } => {
+                cycles += self.evict_frame_of(grant.frame, false, now);
+            }
+            Reclaim::Dirty { .. } => {
+                cycles += self.evict_frame_of(grant.frame, true, now);
+            }
+        }
+        let dram_pa = grant.frame << PAGE_SHIFT;
+        // Flush any cached lines of the NVM copy (§III-F).
+        let (wbs, lines) = self.m.caches.clflush_range(nvm_addr, PAGE_SIZE);
+        cycles += lines * self.m.cfg.t_clflush_line;
+        self.m.metrics.rt.clflush_cycles += lines * self.m.cfg.t_clflush_line;
+        for wb in wbs {
+            self.m.mem.access(now, wb.addr, true, 64);
+        }
+        {
+            let (nvm_dev, dram_dev) =
+                (&mut self.m.mem.nvm, &mut self.m.mem.dram);
+            copy_page(nvm_dev, dram_dev, nvm_addr - self.nvm_base, dram_pa,
+                      PAGE_SIZE, now + cycles);
+        }
+        // Background DMA; CPU pays the Eq.-1 constant T_mig.
+        cycles += self.m.cfg.t_mig_4k;
+        // Store the destination pointer in the page's original residence
+        // (8-byte NVM write), set the migration bit.
+        let w = self.m.mem.access(now + cycles, nvm_addr, true, 8);
+        cycles += w.latency;
+        self.bitmap.set(sp, page_in_sp, true);
+        self.remap.insert(nvm_page, grant.frame);
+        self.m.metrics.migrations += 1;
+        self.m.metrics.migrated_bytes += PAGE_SIZE;
+        cycles
+    }
+
+    fn evict_frame_of(&mut self, frame: u64, dirty: bool, now: u64) -> u64 {
+        // DramMgr::take already removed residency; the remap table still
+        // knows the owner.
+        self.evict_frame(frame, dirty, now)
+    }
+
+    /// Fraction of DRAM frames in use (exposed for ablations/benches).
+    pub fn dram_utilization(&self) -> f64 {
+        self.dram.utilization()
+    }
+
+    pub fn migrated_pages(&self) -> usize {
+        self.remap.len()
+    }
+}
+
+impl Policy for Rainbow {
+    fn name(&self) -> &'static str {
+        "Rainbow"
+    }
+
+    fn access(&mut self, core: usize, vaddr: u64, is_write: bool,
+              now: u64) -> u64 {
+        let look = self.m.tlbs[core].lookup(vaddr);
+        let mut cycles = look.cycles();
+        self.m.metrics.xlat.tlb_cycles += cycles;
+
+        let paddr;
+        let mut nvm_resident = false; // final address is in NVM
+        match (look.small.ppn, look.sp.ppn) {
+            // Cases 1-2: 4 KB TLB hit — the page is cached in DRAM.
+            (Some(ppn), _) => {
+                paddr = (ppn << PAGE_SHIFT) | (vaddr & (PAGE_SIZE - 1));
+            }
+            // Case 3: superpage hit only.
+            (None, Some(sppn)) => {
+                let sp_base = sppn << SP_SHIFT;
+                let nvm_addr = sp_base | (vaddr & (SP_SIZE - 1));
+                let sp = self.sp_index(sp_base);
+                let page_in_sp =
+                    ((vaddr >> PAGE_SHIFT) % PAGES_PER_SP) as u16;
+                let (migrated, bc) = self.check_bitmap(sp, page_in_sp,
+                                                       now + cycles);
+                cycles += bc;
+                if migrated {
+                    let (pa, rc) = self.remap_read(
+                        core, vaddr, nvm_addr & !(PAGE_SIZE - 1),
+                        now + cycles);
+                    cycles += rc;
+                    paddr = pa;
+                } else {
+                    paddr = nvm_addr;
+                    nvm_resident = true;
+                }
+            }
+            // Case 4: both miss — superpage table walk (3 refs, NVM).
+            (None, None) => {
+                let walk = self.m.sp_walker.walk_2m(&mut self.m.mem,
+                                                    vaddr >> SP_SHIFT,
+                                                    now + cycles);
+                cycles += walk;
+                self.m.metrics.xlat.sptw_cycles += walk;
+                self.m.metrics.tlb_miss_cycles += walk;
+                let sp_base = self.ensure_sp(vaddr);
+                self.m.tlbs[core].insert_2m(vaddr >> SP_SHIFT,
+                                            sp_base >> SP_SHIFT);
+                let nvm_addr = sp_base | (vaddr & (SP_SIZE - 1));
+                let sp = self.sp_index(sp_base);
+                let page_in_sp =
+                    ((vaddr >> PAGE_SHIFT) % PAGES_PER_SP) as u16;
+                let (migrated, bc) = self.check_bitmap(sp, page_in_sp,
+                                                       now + cycles);
+                cycles += bc;
+                if migrated {
+                    let (pa, rc) = self.remap_read(
+                        core, vaddr, nvm_addr & !(PAGE_SIZE - 1),
+                        now + cycles);
+                    cycles += rc;
+                    paddr = pa;
+                } else {
+                    paddr = nvm_addr;
+                    nvm_resident = true;
+                }
+            }
+        }
+
+        if is_write && paddr < self.m.mem.dram_size() {
+            self.dram.mark_dirty(paddr >> PAGE_SHIFT);
+        }
+        let (dcycles, llc_miss) = self.m.data_path(core, paddr, is_write,
+                                                   now + cycles);
+        // Memory-controller counting: LLC-filtered NVM references only.
+        if llc_miss && nvm_resident {
+            let sp = self.sp_index(paddr & !(SP_SIZE - 1));
+            let page_in_sp = ((paddr >> PAGE_SHIFT) % PAGES_PER_SP) as u16;
+            self.counters.record(sp, page_in_sp, is_write);
+        }
+        cycles + dcycles
+    }
+
+    fn on_interval(&mut self, now: u64) -> u64 {
+        // Software/accelerator cost of identification (DESIGN.md §5).
+        let identify = self.counters.n_superpages() as u64 * 2
+            + self.counters.top_n() as u64 * 64;
+        self.m.metrics.rt.identify_cycles += identify;
+        let mut cycles = identify;
+
+        // Stage 2: classify the pages monitored during this interval.
+        self.params.threshold = self.threshold.threshold();
+        let verdicts = self.identifier.classify(&self.counters, &self.params);
+        let migrated_before = self.m.metrics.migrated_bytes;
+        let wb_before = self.m.metrics.writeback_bytes;
+        let under_pressure_thresh = 2.0 * self.params.threshold;
+        // Rate-limited, staggered DMA (see policies::migration_budget_pages).
+        let budget = crate::policies::migration_budget_pages(&self.m.cfg);
+        let spacing = self.m.cfg.interval_cycles / (budget + 1);
+        let mut issued = 0u64;
+        'outer: for v in verdicts {
+            for (page, r, w) in v.hot_pages {
+                if issued >= budget {
+                    break 'outer;
+                }
+                if self.bitmap.get(v.sp, page) {
+                    continue; // already cached in DRAM
+                }
+                if self.dram.free_count() == 0 {
+                    // Eq. 2 regime: demand a clearly-hotter page.
+                    let b = self.params.benefit(r as u64, w as u64);
+                    if b < under_pressure_thresh {
+                        continue;
+                    }
+                }
+                cycles += self.migrate_in(v.sp, page, now + issued * spacing);
+                issued += 1;
+            }
+        }
+        self.m.metrics.rt.migration_cycles +=
+            cycles.saturating_sub(identify);
+
+        // Stage 1: choose next interval's monitored top-N, reset counters.
+        let top = self.identifier.select_top(&self.counters, &self.params);
+        self.counters.rotate(&top);
+        self.threshold.update(
+            self.m.metrics.migrated_bytes - migrated_before,
+            self.m.metrics.writeback_bytes - wb_before,
+        );
+        cycles
+    }
+
+    fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.m
+    }
+
+    fn finalize(&mut self, elapsed: u64) {
+        self.m.finalize(elapsed);
+        // Rainbow's 4 KB-side misses never cause a walk (the superpage
+        // TLB covers them); MPKI counts true walks only (§IV-B).
+        self.m.metrics.tlb_miss_4k = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Rainbow {
+        let mut cfg = Config::scaled(8);
+        cfg.cores = 2;
+        cfg.top_n = 16;
+        // Tiny caches so unit-test traffic actually reaches the memory
+        // controller (Rainbow's counting is LLC-filtered by design).
+        cfg.l1_cache.size = 8 << 10;
+        cfg.l2_cache.size = 16 << 10;
+        cfg.l3_cache.size = 32 << 10;
+        Rainbow::new(&cfg, false)
+    }
+
+    /// Drive enough hot LLC-missing writes that pages of the superpage at
+    /// `vaddr` migrate: interval 1 selects the superpage (stage 1),
+    /// interval 2 monitors it at 4 KB grain and migrates (stage 2).
+    fn heat_and_migrate(p: &mut Rainbow, vaddr: u64) -> u64 {
+        let sp_base = vaddr & !(SP_SIZE - 1);
+        let mut now = 0;
+        for round in 0..3 {
+            // 64 pages x 8 lines = 512 lines/sweep > the 32 KB LLC, so
+            // sweeps keep missing; 20 sweeps = 160 writes per page.
+            for sweep in 0..20u64 {
+                for pg in 0..64u64 {
+                    let line = (sweep % 8) * 512;
+                    now += p.access(0, sp_base + pg * PAGE_SIZE + line,
+                                    true, now);
+                }
+            }
+            now += p.on_interval(now);
+            if p.m.metrics.migrations > 0 {
+                break;
+            }
+            assert!(round < 2, "page should migrate within two intervals");
+        }
+        now
+    }
+
+    #[test]
+    fn first_touch_maps_superpage_in_nvm() {
+        let mut p = policy();
+        p.access(0, 0x123_4567, false, 0);
+        let pa = p.aspace.resolve_2m(0x123_4567).unwrap();
+        assert!(pa >= p.m.mem.dram_size());
+        // Table VI bookkeeping: reverse map populated.
+        assert_eq!(p.sp_rev.len(), 1);
+    }
+
+    #[test]
+    fn superpage_tlb_survives_migration() {
+        let mut p = policy();
+        let v = 0x40_0000u64;
+        heat_and_migrate(&mut p, v);
+        assert!(p.m.metrics.migrations > 0, "hot page must migrate");
+        // The key claim: migration performed ZERO shootdowns.
+        assert_eq!(p.m.metrics.shootdowns, 0,
+                   "NVM->DRAM migration must not shoot down TLBs");
+        // And the superpage entry still translates (no SPTW needed).
+        let walks = p.m.sp_walker.stats.walks_2m;
+        p.access(0, v + 8192, false, 1 << 30);
+        assert_eq!(p.m.sp_walker.stats.walks_2m, walks,
+                   "superpage TLB entry must still be live");
+    }
+
+    #[test]
+    fn migrated_page_redirects_to_dram_via_remap() {
+        let mut p = policy();
+        let v = 0x40_0000u64;
+        let now = heat_and_migrate(&mut p, v);
+        assert!(p.migrated_pages() > 0);
+        // Flush 4 KB TLBs so the next access goes through case 3 + remap.
+        for t in &mut p.m.tlbs {
+            t.l1_4k.flush_all();
+            t.l2_4k.flush_all();
+        }
+        let remaps_before = p.m.metrics.remap_reads;
+        p.access(0, v, false, now);
+        assert_eq!(p.m.metrics.remap_reads, remaps_before + 1,
+                   "first access after TLB loss uses the remap pointer");
+        // Second access: 4 KB TLB hit, no more remap reads.
+        p.access(0, v, false, now + 10_000);
+        assert_eq!(p.m.metrics.remap_reads, remaps_before + 1);
+    }
+
+    #[test]
+    fn bitmap_and_remap_stay_consistent() {
+        let mut p = policy();
+        heat_and_migrate(&mut p, 0x20_0000);
+        // Every set bitmap bit must have a remap entry and vice versa.
+        let mut bits = 0;
+        for sp in 0..p.bitmap.n_superpages() as u32 {
+            bits += p.bitmap.popcount(sp) as usize;
+        }
+        assert_eq!(bits, p.remap.len());
+        assert!(bits > 0);
+    }
+
+    #[test]
+    fn cold_interval_migrates_nothing() {
+        let mut p = policy();
+        let mut now = 0;
+        for i in 0..64u64 {
+            now += p.access(0, i * PAGE_SIZE, false, now);
+        }
+        now += p.on_interval(now);
+        p.on_interval(now);
+        assert_eq!(p.m.metrics.migrations, 0);
+    }
+
+    #[test]
+    fn bitmap_checked_on_nvm_path_only() {
+        let mut p = policy();
+        let v = 0x60_0000u64;
+        p.access(0, v, false, 0); // case 4: walk + bitmap
+        let checks1 = p.m.metrics.bitmap_hits + p.m.metrics.bitmap_misses;
+        assert!(checks1 >= 1);
+        p.access(0, v, false, 50_000); // case 3 (4K miss, SP hit): bitmap
+        let checks2 = p.m.metrics.bitmap_hits + p.m.metrics.bitmap_misses;
+        assert_eq!(checks2, checks1 + 1);
+    }
+
+    #[test]
+    fn finalize_zeroes_4k_miss_mpki() {
+        let mut p = policy();
+        p.access(0, 0x1000, false, 0);
+        p.finalize(100_000);
+        assert_eq!(p.m.metrics.tlb_miss_4k, 0);
+        assert!(p.m.metrics.tlb_miss_2m > 0);
+    }
+}

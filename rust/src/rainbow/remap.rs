@@ -1,0 +1,134 @@
+//! NVM-to-DRAM address remapping (§III-E, Fig. 6).
+//!
+//! When a hot 4 KB page migrates to DRAM, its destination address is
+//! written into the first 8 bytes of the page's *original* NVM residence.
+//! Addressing a migrated page through the superpage TLB therefore costs
+//! one extra NVM read (the pointer), after which the 4 KB TLB entry is
+//! installed and subsequent accesses go straight to DRAM. Superpage TLB
+//! entries are never invalidated by NVM→DRAM migration — the paper's key
+//! transparency property.
+//!
+//! The functional side (which DRAM frame holds which NVM page) is a map;
+//! the timing side (the 8-byte NVM read / 8-byte pointer write) is charged
+//! against the memory devices by the policy.
+
+use std::collections::HashMap;
+
+/// Remap table: NVM 4 KB page number -> DRAM frame number.
+#[derive(Clone, Debug, Default)]
+pub struct RemapTable {
+    fwd: HashMap<u64, u64>,
+    /// Reverse map for eviction: DRAM frame -> NVM page.
+    rev: HashMap<u64, u64>,
+}
+
+impl RemapTable {
+    pub fn new() -> RemapTable {
+        RemapTable::default()
+    }
+
+    /// Install a remap (page migrated). Panics on double-migrate — the
+    /// bitmap must prevent that.
+    pub fn insert(&mut self, nvm_page: u64, dram_frame: u64) {
+        let old = self.fwd.insert(nvm_page, dram_frame);
+        assert!(old.is_none(), "page {nvm_page:#x} already migrated");
+        let old = self.rev.insert(dram_frame, nvm_page);
+        assert!(old.is_none(), "frame {dram_frame:#x} already in use");
+    }
+
+    /// Follow the pointer stored in the NVM page (the 8-byte read).
+    pub fn lookup(&self, nvm_page: u64) -> Option<u64> {
+        self.fwd.get(&nvm_page).copied()
+    }
+
+    /// Which NVM page a DRAM frame caches (eviction path).
+    pub fn owner_of_frame(&self, dram_frame: u64) -> Option<u64> {
+        self.rev.get(&dram_frame).copied()
+    }
+
+    /// Remove on eviction/writeback; returns the DRAM frame it occupied.
+    pub fn remove(&mut self, nvm_page: u64) -> Option<u64> {
+        let frame = self.fwd.remove(&nvm_page)?;
+        let back = self.rev.remove(&frame);
+        debug_assert_eq!(back, Some(nvm_page));
+        Some(frame)
+    }
+
+    pub fn len(&self) -> usize {
+        self.fwd.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fwd.is_empty()
+    }
+}
+
+/// Analytic DRAM-page addressing cost model (§III-E):
+/// traditional 4-level PTW costs `4*t_dr`; Rainbow costs
+/// `R_hit*t_nr + (1-R_hit)*4*t_nr`. Used by the `ana_remap_cost` bench to
+/// reproduce the paper's crossover claim (Rainbow wins iff R_hit > ~67%).
+pub fn rainbow_addressing_cost(r_hit: f64, t_nr: f64) -> f64 {
+    r_hit * t_nr + (1.0 - r_hit) * 4.0 * t_nr
+}
+
+pub fn ptw_addressing_cost(t_dr: f64) -> f64 {
+    4.0 * t_dr
+}
+
+/// The R_hit above which Rainbow's addressing is cheaper than the walk.
+pub fn crossover_r_hit(t_nr: f64, t_dr: f64) -> f64 {
+    // r*t_nr + (1-r)*4 t_nr = 4 t_dr  =>  r = (4 t_nr - 4 t_dr) / (3 t_nr)
+    (4.0 * t_nr - 4.0 * t_dr) / (3.0 * t_nr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_lookup_remove() {
+        let mut r = RemapTable::new();
+        r.insert(100, 5);
+        assert_eq!(r.lookup(100), Some(5));
+        assert_eq!(r.owner_of_frame(5), Some(100));
+        assert_eq!(r.remove(100), Some(5));
+        assert_eq!(r.lookup(100), None);
+        assert_eq!(r.owner_of_frame(5), None);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "already migrated")]
+    fn double_migration_panics() {
+        let mut r = RemapTable::new();
+        r.insert(1, 2);
+        r.insert(1, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "already in use")]
+    fn frame_reuse_panics() {
+        let mut r = RemapTable::new();
+        r.insert(1, 2);
+        r.insert(9, 2);
+    }
+
+    #[test]
+    fn paper_crossover_at_67_percent() {
+        // t_nr ≈ 2 * t_dr (paper): crossover = (8-4)/6 = 66.7%.
+        let x = crossover_r_hit(2.0, 1.0);
+        assert!((x - 0.6667).abs() < 0.01, "crossover {x}");
+        // At R_hit = 95% the paper claims 42.5% reduction.
+        let rainbow = rainbow_addressing_cost(0.95, 2.0);
+        let walk = ptw_addressing_cost(1.0);
+        let reduction = 1.0 - rainbow / walk;
+        assert!((reduction - 0.425).abs() < 0.01, "reduction {reduction}");
+    }
+
+    #[test]
+    fn cost_decreases_with_hit_rate() {
+        let c50 = rainbow_addressing_cost(0.50, 62.0);
+        let c99 = rainbow_addressing_cost(0.99, 62.0);
+        assert!(c99 < c50);
+    }
+}

@@ -1,0 +1,186 @@
+//! Experiment harness shared by `main.rs` and every bench binary: runs
+//! (workload x policy) simulations with a persistent on-disk cache so a
+//! full figure suite only simulates each pair once, and derives each
+//! paper table/figure from the cached metrics.
+
+use std::fs;
+use std::path::PathBuf;
+
+use crate::config::Config;
+use crate::policies::{self, Policy};
+use crate::sim::{engine, EngineConfig, RunMetrics};
+use crate::workloads::{AppProfile, Workload};
+
+pub mod figures;
+pub mod serde_kv;
+
+/// Parameters that identify an experiment run (cache key).
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub workload: String,
+    pub policy: String,
+    /// Memory-capacity scale divisor vs the paper's Table IV.
+    pub scale: u64,
+    pub instructions: u64,
+    pub interval_cycles: u64,
+    pub top_n: usize,
+    pub seed: u64,
+    /// Use the PJRT artifacts for Rainbow identification.
+    pub accel: bool,
+}
+
+impl RunSpec {
+    pub fn new(workload: &str, policy: &str) -> RunSpec {
+        RunSpec {
+            workload: workload.to_string(),
+            policy: policy.to_string(),
+            scale: 8,
+            instructions: 4_000_000,
+            interval_cycles: 0, // 0 = take from scaled config
+            top_n: 0,           // 0 = take from scaled config
+            seed: 0xEA7_BEEF,
+            accel: false,
+        }
+    }
+
+    pub fn config(&self) -> Config {
+        let mut cfg = Config::scaled(self.scale);
+        if self.interval_cycles > 0 {
+            cfg.interval_cycles = self.interval_cycles;
+        }
+        if self.top_n > 0 {
+            cfg.top_n = self.top_n;
+        }
+        cfg
+    }
+
+    fn cache_key(&self) -> String {
+        format!(
+            "{}_{}_s{}_i{}_v{}_n{}_r{}{}",
+            self.workload, self.policy, self.scale, self.instructions,
+            self.interval_cycles, self.top_n, self.seed,
+            if self.accel { "_accel" } else { "" }
+        )
+    }
+
+    /// Scaled footprint of the workload (for Fig. 11 normalization).
+    pub fn footprint_bytes(&self) -> u64 {
+        match AppProfile::by_name(&self.workload) {
+            Some(p) => p.scaled(self.scale).footprint,
+            None => {
+                // A mix: sum of its apps.
+                crate::workloads::mixes()
+                    .into_iter()
+                    .find(|(n, _)| n.eq_ignore_ascii_case(&self.workload))
+                    .map(|(_, apps)| {
+                        apps.iter()
+                            .map(|a| {
+                                AppProfile::by_name(a)
+                                    .unwrap()
+                                    .scaled(self.scale)
+                                    .footprint
+                            })
+                            .sum()
+                    })
+                    .unwrap_or(0)
+            }
+        }
+    }
+}
+
+fn cache_dir() -> PathBuf {
+    std::env::var_os("RAINBOW_CACHE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("target/rainbow_results"))
+}
+
+/// Run the simulation described by `spec` (or load the cached result).
+pub fn run_cached(spec: &RunSpec) -> RunMetrics {
+    let dir = cache_dir();
+    let path = dir.join(format!("{}.kv", spec.cache_key()));
+    if let Ok(text) = fs::read_to_string(&path) {
+        if let Some(m) = serde_kv::metrics_from_kv(&text) {
+            return m;
+        }
+    }
+    let m = run_uncached(spec);
+    let _ = fs::create_dir_all(&dir);
+    let _ = fs::write(&path, serde_kv::metrics_to_kv(&m));
+    m
+}
+
+/// Always simulate (no cache).
+pub fn run_uncached(spec: &RunSpec) -> RunMetrics {
+    let cfg = spec.config();
+    let mut workload =
+        Workload::by_name(&spec.workload, cfg.cores, spec.scale, spec.seed)
+            .unwrap_or_else(|| panic!("unknown workload {}", spec.workload));
+    let mut policy: Box<dyn Policy> =
+        policies::by_name(&spec.policy, &cfg, spec.accel)
+            .unwrap_or_else(|| panic!("unknown policy {}", spec.policy));
+    let ecfg = EngineConfig::new(spec.instructions, cfg.interval_cycles);
+    engine::run(policy.as_mut(), &mut workload, &ecfg).metrics
+}
+
+/// The five evaluated systems in figure order.
+pub fn policy_names() -> [&'static str; 5] {
+    policies::all_names()
+}
+
+/// Default workload set for the headline figures (subset keeps a full
+/// suite run in minutes; `--all` in the CLI uses all 17).
+pub fn default_workloads() -> Vec<&'static str> {
+    vec!["cactusADM", "mcf", "soplex", "streamcluster", "DICT",
+         "setCover", "Graph500", "GUPS", "mix2"]
+}
+
+pub fn all_workloads() -> Vec<String> {
+    Workload::all_names()
+}
+
+/// Serializes tests that mutate the RAINBOW_CACHE env var.
+#[cfg(test)]
+pub(crate) static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(w: &str, p: &str) -> RunSpec {
+        let mut s = RunSpec::new(w, p);
+        s.scale = 64;
+        s.instructions = 60_000;
+        s.interval_cycles = 100_000;
+        s.top_n = 16;
+        s
+    }
+
+    #[test]
+    fn cache_roundtrip_is_identical() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_cache_test_{}", std::process::id()));
+        std::env::set_var("RAINBOW_CACHE", &dir);
+        let spec = tiny_spec("DICT", "flat");
+        let a = run_cached(&spec);
+        let b = run_cached(&spec); // from cache
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.instructions, b.instructions);
+        assert!((a.energy_pj - b.energy_pj).abs() < 1.0);
+        std::env::remove_var("RAINBOW_CACHE");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn footprints_resolve_for_apps_and_mixes() {
+        assert!(tiny_spec("mcf", "flat").footprint_bytes() > 0);
+        assert!(tiny_spec("mix1", "flat").footprint_bytes() > 0);
+    }
+
+    #[test]
+    fn uncached_run_produces_metrics() {
+        let m = run_uncached(&tiny_spec("streamcluster", "rainbow"));
+        assert_eq!(m.instructions, 60_000);
+        assert!(m.cycles > 0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Key=value (de)serialization for RunMetrics — the on-disk results cache
+//! format (serde is unavailable offline; this is deliberately dumb and
+//! versioned).
+
+use crate::sim::metrics::{RunMetrics, RuntimeBreakdown, XlatBreakdown};
+
+const VERSION: u64 = 3;
+
+pub fn metrics_to_kv(m: &RunMetrics) -> String {
+    let mut s = String::with_capacity(1024);
+    let mut put = |k: &str, v: String| {
+        s.push_str(k);
+        s.push('=');
+        s.push_str(&v);
+        s.push('\n');
+    };
+    put("version", VERSION.to_string());
+    put("instructions", m.instructions.to_string());
+    put("cycles", m.cycles.to_string());
+    put("core_cycles", m.core_cycles.to_string());
+    put("mem_ops", m.mem_ops.to_string());
+    put("tlb_miss_4k", m.tlb_miss_4k.to_string());
+    put("tlb_miss_2m", m.tlb_miss_2m.to_string());
+    put("tlb_miss_cycles", m.tlb_miss_cycles.to_string());
+    put("x_tlb", m.xlat.tlb_cycles.to_string());
+    put("x_bitmap", m.xlat.bitmap_cycles.to_string());
+    put("x_ptw", m.xlat.ptw_cycles.to_string());
+    put("x_sptw", m.xlat.sptw_cycles.to_string());
+    put("x_remap", m.xlat.remap_cycles.to_string());
+    put("sp_hit_rate", format!("{:.6}", m.sp_hit_rate));
+    put("bitmap_hits", m.bitmap_hits.to_string());
+    put("bitmap_misses", m.bitmap_misses.to_string());
+    put("remap_reads", m.remap_reads.to_string());
+    put("migrations", m.migrations.to_string());
+    put("migrated_bytes", m.migrated_bytes.to_string());
+    put("writebacks", m.writebacks.to_string());
+    put("writeback_bytes", m.writeback_bytes.to_string());
+    put("shootdowns", m.shootdowns.to_string());
+    put("rt_migration", m.rt.migration_cycles.to_string());
+    put("rt_shootdown", m.rt.shootdown_cycles.to_string());
+    put("rt_clflush", m.rt.clflush_cycles.to_string());
+    put("rt_identify", m.rt.identify_cycles.to_string());
+    put("dram_reads", m.dram_reads.to_string());
+    put("dram_writes", m.dram_writes.to_string());
+    put("nvm_reads", m.nvm_reads.to_string());
+    put("nvm_writes", m.nvm_writes.to_string());
+    put("energy_pj", format!("{:.3}", m.energy_pj));
+    put("mem_stall_cycles", m.mem_stall_cycles.to_string());
+    put("llc_misses", m.llc_misses.to_string());
+    s
+}
+
+pub fn metrics_from_kv(text: &str) -> Option<RunMetrics> {
+    let mut m = RunMetrics::default();
+    let mut version = 0u64;
+    for line in text.lines() {
+        let (k, v) = line.split_once('=')?;
+        let u = || v.parse::<u64>().ok();
+        let f = || v.parse::<f64>().ok();
+        match k {
+            "version" => version = u()?,
+            "instructions" => m.instructions = u()?,
+            "cycles" => m.cycles = u()?,
+            "core_cycles" => m.core_cycles = u()?,
+            "mem_ops" => m.mem_ops = u()?,
+            "tlb_miss_4k" => m.tlb_miss_4k = u()?,
+            "tlb_miss_2m" => m.tlb_miss_2m = u()?,
+            "tlb_miss_cycles" => m.tlb_miss_cycles = u()?,
+            "x_tlb" => m.xlat.tlb_cycles = u()?,
+            "x_bitmap" => m.xlat.bitmap_cycles = u()?,
+            "x_ptw" => m.xlat.ptw_cycles = u()?,
+            "x_sptw" => m.xlat.sptw_cycles = u()?,
+            "x_remap" => m.xlat.remap_cycles = u()?,
+            "sp_hit_rate" => m.sp_hit_rate = f()?,
+            "bitmap_hits" => m.bitmap_hits = u()?,
+            "bitmap_misses" => m.bitmap_misses = u()?,
+            "remap_reads" => m.remap_reads = u()?,
+            "migrations" => m.migrations = u()?,
+            "migrated_bytes" => m.migrated_bytes = u()?,
+            "writebacks" => m.writebacks = u()?,
+            "writeback_bytes" => m.writeback_bytes = u()?,
+            "shootdowns" => m.shootdowns = u()?,
+            "rt_migration" => m.rt.migration_cycles = u()?,
+            "rt_shootdown" => m.rt.shootdown_cycles = u()?,
+            "rt_clflush" => m.rt.clflush_cycles = u()?,
+            "rt_identify" => m.rt.identify_cycles = u()?,
+            "dram_reads" => m.dram_reads = u()?,
+            "dram_writes" => m.dram_writes = u()?,
+            "nvm_reads" => m.nvm_reads = u()?,
+            "nvm_writes" => m.nvm_writes = u()?,
+            "energy_pj" => m.energy_pj = f()?,
+            "mem_stall_cycles" => m.mem_stall_cycles = u()?,
+            "llc_misses" => m.llc_misses = u()?,
+            _ => {} // forward-compatible: ignore unknown keys
+        }
+    }
+    (version == VERSION).then_some(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunMetrics {
+        RunMetrics {
+            instructions: 123,
+            cycles: 456,
+            core_cycles: 3648,
+            mem_ops: 78,
+            tlb_miss_4k: 9,
+            tlb_miss_2m: 8,
+            tlb_miss_cycles: 1000,
+            xlat: XlatBreakdown {
+                tlb_cycles: 1, bitmap_cycles: 2, ptw_cycles: 3,
+                sptw_cycles: 4, remap_cycles: 5,
+            },
+            sp_hit_rate: 0.991,
+            bitmap_hits: 10,
+            bitmap_misses: 2,
+            remap_reads: 3,
+            migrations: 4,
+            migrated_bytes: 4096,
+            writebacks: 1,
+            writeback_bytes: 8,
+            shootdowns: 1,
+            rt: RuntimeBreakdown {
+                migration_cycles: 11, shootdown_cycles: 12,
+                clflush_cycles: 13, identify_cycles: 14,
+            },
+            dram_reads: 20,
+            dram_writes: 21,
+            nvm_reads: 22,
+            nvm_writes: 23,
+            energy_pj: 1234.5,
+            mem_stall_cycles: 999,
+            llc_misses: 55,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_all_fields() {
+        let m = sample();
+        let kv = metrics_to_kv(&m);
+        let n = metrics_from_kv(&kv).unwrap();
+        assert_eq!(format!("{m:?}"), format!("{n:?}"));
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let kv = metrics_to_kv(&sample()).replace(
+            &format!("version={VERSION}"), "version=0");
+        assert!(metrics_from_kv(&kv).is_none());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(metrics_from_kv("not a kv file").is_none());
+    }
+}

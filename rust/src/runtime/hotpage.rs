@@ -1,0 +1,209 @@
+//! Hot-page identification facade: the per-interval analytics pipeline
+//! behind one interface, backed either by the AOT PJRT artifacts (the
+//! shipping configuration) or the bit-exact native fallback (tests,
+//! `--no-accel`, artifact-less builds).
+
+use std::path::Path;
+
+use crate::rainbow::counters::{count_value, TwoStageCounters};
+use crate::rainbow::migration::UtilityParams;
+
+use super::native;
+use super::pjrt::PjrtRuntime;
+
+/// Which engine evaluates the pipeline.
+pub enum Backend {
+    Native,
+    Pjrt(Box<PjrtRuntime>),
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// Stage-2 verdict for one monitored superpage slot.
+#[derive(Clone, Debug)]
+pub struct SlotVerdict {
+    /// The monitored NVM superpage.
+    pub sp: u32,
+    /// Hot 4 KB page indices with their (reads, writes) in the interval.
+    pub hot_pages: Vec<(u16, u32, u32)>,
+}
+
+pub struct HotPageIdentifier {
+    backend: Backend,
+}
+
+impl HotPageIdentifier {
+    pub fn native() -> HotPageIdentifier {
+        HotPageIdentifier { backend: Backend::Native }
+    }
+
+    /// Try PJRT from `dir`, falling back to native (with a warning) when
+    /// artifacts are missing.
+    pub fn auto(dir: &Path) -> HotPageIdentifier {
+        match PjrtRuntime::load(dir) {
+            Ok(rt) => HotPageIdentifier { backend: Backend::Pjrt(Box::new(rt)) },
+            Err(e) => {
+                eprintln!(
+                    "rainbow: PJRT artifacts unavailable ({e:#}); \
+                     using native identifier");
+                HotPageIdentifier::native()
+            }
+        }
+    }
+
+    pub fn pjrt(dir: &Path) -> anyhow::Result<HotPageIdentifier> {
+        Ok(HotPageIdentifier {
+            backend: Backend::Pjrt(Box::new(PjrtRuntime::load(dir)?)),
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Stage 1: select the top-N hot superpages from the interval's
+    /// superpage counters.
+    pub fn select_top(&self, counters: &TwoStageCounters,
+                      params: &UtilityParams) -> Vec<u32> {
+        let (r16, w16) = counters.sp_counts();
+        let reads: Vec<i32> =
+            r16.iter().map(|&x| count_value(x) as i32).collect();
+        let writes: Vec<i32> =
+            w16.iter().map(|&x| count_value(x) as i32).collect();
+        let p = params.to_f32_vec();
+        let top_n = counters.top_n();
+        let idx: Vec<i32> = match &self.backend {
+            Backend::Native => {
+                native::stage1(&reads, &writes, &p, top_n).1
+            }
+            Backend::Pjrt(rt) => {
+                // Artifact returns TOP_N indices over the padded array;
+                // keep the first top_n that are in range and non-zero.
+                match rt.stage1(&reads, &writes, &p) {
+                    Ok((_, idx)) => idx,
+                    Err(e) => {
+                        eprintln!("rainbow: pjrt stage1 failed ({e:#}); \
+                                   falling back to native");
+                        native::stage1(&reads, &writes, &p, top_n).1
+                    }
+                }
+            }
+        };
+        let n = reads.len() as i32;
+        idx.into_iter()
+            .filter(|&i| i < n)
+            .map(|i| i as u32)
+            // Skip completely-cold superpages (score 0).
+            .filter(|&i| reads[i as usize] != 0 || writes[i as usize] != 0)
+            .take(top_n)
+            .collect()
+    }
+
+    /// Stage 2: classify the monitored slots' 4 KB pages, returning per-
+    /// superpage hot lists (with counts for the Eq.-2 victim comparison).
+    pub fn classify(&self, counters: &TwoStageCounters,
+                    params: &UtilityParams) -> Vec<SlotVerdict> {
+        let n_slots = counters.top_n();
+        let mut reads = Vec::with_capacity(n_slots * 512);
+        let mut writes = Vec::with_capacity(n_slots * 512);
+        let mut owners = Vec::with_capacity(n_slots);
+        for slot in 0..n_slots {
+            let Some(sp) = counters.slot_owner(slot) else { continue };
+            let (r, w) = counters.slot_counts(slot);
+            owners.push(sp);
+            reads.extend(r.iter().map(|&x| count_value(x) as i32));
+            writes.extend(w.iter().map(|&x| count_value(x) as i32));
+        }
+        if owners.is_empty() {
+            return Vec::new();
+        }
+        let p = params.to_f32_vec();
+        let (_, hot) = match &self.backend {
+            Backend::Native => native::stage2(&reads, &writes, &p),
+            Backend::Pjrt(rt) => match rt.stage2(&reads, &writes, &p) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("rainbow: pjrt stage2 failed ({e:#}); \
+                               falling back to native");
+                    native::stage2(&reads, &writes, &p)
+                }
+            },
+        };
+        owners
+            .iter()
+            .enumerate()
+            .map(|(si, &sp)| {
+                let base = si * 512;
+                let hot_pages = (0..512usize)
+                    .filter(|&pg| hot[base + pg] != 0)
+                    .map(|pg| (pg as u16,
+                               reads[base + pg] as u32,
+                               writes[base + pg] as u32))
+                    .collect();
+                SlotVerdict { sp, hot_pages }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn params() -> UtilityParams {
+        UtilityParams::from_config(&Config::paper())
+    }
+
+    #[test]
+    fn native_select_top_finds_hot_superpages() {
+        let mut c = TwoStageCounters::new(256, 8);
+        for _ in 0..500 {
+            c.record(42, 0, true);
+            c.record(17, 0, false);
+        }
+        c.record(3, 0, false);
+        let id = HotPageIdentifier::native();
+        let top = id.select_top(&c, &params());
+        assert_eq!(top[0], 42, "write-weighted superpage first");
+        assert_eq!(top[1], 17);
+        assert!(top.contains(&3));
+        // Cold superpages are not selected even to fill top-N.
+        assert_eq!(top.len(), 3);
+    }
+
+    #[test]
+    fn native_classify_flags_hot_pages_only() {
+        let mut c = TwoStageCounters::new(64, 4);
+        c.rotate(&[9]);
+        // Page 5: heavily written (hot). Page 6: one read (cold).
+        for _ in 0..200 {
+            c.record(9, 5, true);
+        }
+        c.record(9, 6, false);
+        let id = HotPageIdentifier::native();
+        let verdicts = id.classify(&c, &params());
+        assert_eq!(verdicts.len(), 1);
+        assert_eq!(verdicts[0].sp, 9);
+        let hot: Vec<u16> =
+            verdicts[0].hot_pages.iter().map(|h| h.0).collect();
+        assert_eq!(hot, vec![5]);
+        let (_, r, w) = verdicts[0].hot_pages[0];
+        assert_eq!((r, w), (0, 200));
+    }
+
+    #[test]
+    fn empty_monitoring_set_is_empty_verdicts() {
+        let c = TwoStageCounters::new(16, 2);
+        let id = HotPageIdentifier::native();
+        assert!(id.classify(&c, &params()).is_empty());
+        assert!(id.select_top(&c, &params()).is_empty());
+    }
+}

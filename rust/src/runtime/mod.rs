@@ -1,0 +1,9 @@
+//! Artifact runtime: PJRT execution of the AOT-compiled analytics
+//! pipeline plus the bit-exact native fallback.
+
+pub mod hotpage;
+pub mod native;
+pub mod pjrt;
+
+pub use hotpage::{Backend, HotPageIdentifier, SlotVerdict};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,155 @@
+//! Pure-Rust fallback of the AOT analytics pipeline — bit-exact with
+//! `python/compile/kernels/ref.py` (f32 arithmetic, lax.top_k's stable
+//! lowest-index tie-break). Used when artifacts are absent (`--no-accel`)
+//! and as the oracle the PJRT integration test compares against.
+
+/// Parameter layout — must match ref.py's `P_*` indices.
+pub const P_TNR: usize = 0;
+pub const P_TNW: usize = 1;
+pub const P_TDR: usize = 2;
+pub const P_TDW: usize = 3;
+pub const P_TMIG: usize = 4;
+pub const P_TWB: usize = 5;
+pub const P_THRESH: usize = 6;
+pub const P_WWEIGHT: usize = 7;
+
+/// Stage 1: weighted scores + stable top-k indices.
+pub fn stage1(sp_reads: &[i32], sp_writes: &[i32], params: &[f32; 8],
+              top_n: usize) -> (Vec<f32>, Vec<i32>) {
+    assert_eq!(sp_reads.len(), sp_writes.len());
+    let w = params[P_WWEIGHT];
+    let score: Vec<f32> = sp_reads
+        .iter()
+        .zip(sp_writes.iter())
+        .map(|(&r, &wr)| r as f32 + w * wr as f32)
+        .collect();
+    // top_k_fast == top_k_stable (see `fast_equals_stable`) but O(n)
+    // partition instead of a full sort — §Perf optimization #1.
+    let idx = top_k_fast(&score, top_n.min(score.len()));
+    (score, idx)
+}
+
+/// lax.top_k semantics: k highest values, ties broken by lowest index,
+/// result ordered by descending value (then ascending index).
+pub fn top_k_stable(score: &[f32], k: usize) -> Vec<i32> {
+    let mut idx: Vec<i32> = (0..score.len() as i32).collect();
+    // Full sort keeps the semantics obvious; the hot-path variant uses
+    // select_nth_unstable — see `top_k_fast` + its equivalence test.
+    idx.sort_by(|&a, &b| {
+        let (sa, sb) = (score[a as usize], score[b as usize]);
+        sb.partial_cmp(&sa).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Faster top-k used on the simulation hot path: O(n) partition + sort of
+/// the k head only. Produces identical output to `top_k_stable`.
+pub fn top_k_fast(score: &[f32], k: usize) -> Vec<i32> {
+    let k = k.min(score.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<i32> = (0..score.len() as i32).collect();
+    let cmp = |a: &i32, b: &i32| {
+        let (sa, sb) = (score[*a as usize], score[*b as usize]);
+        sb.partial_cmp(&sa).unwrap().then(a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_by(cmp);
+    idx
+}
+
+/// Stage 2: Eq.-1 benefit + hot classification over flattened
+/// (n_slots x 512) counter arrays.
+pub fn stage2(pg_reads: &[i32], pg_writes: &[i32], params: &[f32; 8])
+              -> (Vec<f32>, Vec<i32>) {
+    assert_eq!(pg_reads.len(), pg_writes.len());
+    let dr = params[P_TNR] - params[P_TDR];
+    let dw = params[P_TNW] - params[P_TDW];
+    let tmig = params[P_TMIG];
+    let thresh = params[P_THRESH];
+    let mut benefit = Vec::with_capacity(pg_reads.len());
+    let mut hot = Vec::with_capacity(pg_reads.len());
+    for (&r, &w) in pg_reads.iter().zip(pg_writes.iter()) {
+        let b = dr * r as f32 + dw * w as f32 - tmig;
+        benefit.push(b);
+        hot.push(((b > thresh) && (r + w > 0)) as i32);
+    }
+    (benefit, hot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const PARAMS: [f32; 8] =
+        [62.0, 547.0, 43.0, 91.0, 4096.0, 4096.0, 64.0, 3.0];
+
+    #[test]
+    fn stage1_write_weighting() {
+        let (score, _) = stage1(&[1, 0], &[0, 1], &PARAMS, 2);
+        assert_eq!(score, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn topk_ties_lowest_index() {
+        let score = vec![1.0f32; 100];
+        let idx = top_k_stable(&score, 5);
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn topk_descending_order() {
+        let score = vec![3.0, 9.0, 1.0, 9.0, 5.0];
+        let idx = top_k_stable(&score, 3);
+        assert_eq!(idx, vec![1, 3, 4]); // 9(idx1), 9(idx3 tie), 5
+    }
+
+    #[test]
+    fn fast_equals_stable() {
+        let mut rng = Rng::new(77);
+        for trial in 0..50 {
+            let n = 1 + rng.below(2000) as usize;
+            let score: Vec<f32> = (0..n)
+                .map(|_| (rng.below(64) as f32) * 0.5) // many ties
+                .collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            assert_eq!(top_k_fast(&score, k), top_k_stable(&score, k),
+                       "trial {trial} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn stage2_matches_eq1() {
+        let (b, h) = stage2(&[100, 0, 0], &[0, 100, 0], &PARAMS);
+        // read page: 19*100 - 4096 = -2196 (cold)
+        assert_eq!(b[0], (62.0 - 43.0) * 100.0 - 4096.0);
+        assert_eq!(h[0], 0);
+        // write page: 456*100 - 4096 = 41504 (hot)
+        assert_eq!(b[1], (547.0 - 91.0) * 100.0 - 4096.0);
+        assert_eq!(h[1], 1);
+        // untouched: never hot even though -4096 < ... no: -4096 < 64.
+        assert_eq!(h[2], 0);
+    }
+
+    #[test]
+    fn stage2_untouched_guard_with_negative_threshold() {
+        let mut p = PARAMS;
+        p[P_THRESH] = -1e9;
+        let (_, h) = stage2(&[0], &[0], &p);
+        assert_eq!(h[0], 0, "untouched page must stay cold");
+    }
+
+    #[test]
+    fn stage1_empty_and_small() {
+        let (s, i) = stage1(&[], &[], &PARAMS, 10);
+        assert!(s.is_empty() && i.is_empty());
+        let (_, i) = stage1(&[5], &[5], &PARAMS, 10);
+        assert_eq!(i, vec![0]);
+    }
+}

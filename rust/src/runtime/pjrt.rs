@@ -1,0 +1,134 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client via the
+//! `xla` crate. Python never runs here — the artifacts are self-contained.
+//!
+//! Artifact shapes are fixed at lowering time (ref.py): stage 1 takes
+//! i32[N_SP] x2 + f32[8] and returns (f32[N_SP], i32[TOP_N]); stage 2
+//! takes i32[TOP_N,512] x2 + f32[8] and returns (f32[...], i32[...]).
+//! The simulator pads its (smaller, scaled) counter arrays to these
+//! shapes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Artifact shape constants — must match python/compile/kernels/ref.py.
+pub const N_SP: usize = 16384;
+pub const TOP_N: usize = 128;
+pub const SP_PAGES: usize = 512;
+
+/// A compiled pair of stage executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    stage1: xla::PjRtLoadedExecutable,
+    stage2: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Load `hotpage_stage1.hlo.txt` / `hotpage_stage2.hlo.txt` from
+    /// `artifacts_dir` and compile them on the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .context("creating PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = artifacts_dir.join(name);
+            if !path.exists() {
+                bail!("artifact {} missing — run `make artifacts`",
+                      path.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        };
+        Ok(PjrtRuntime {
+            stage1: load("hotpage_stage1.hlo.txt")?,
+            stage2: load("hotpage_stage2.hlo.txt")?,
+            client,
+        })
+    }
+
+    /// Default artifacts location: `$RAINBOW_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("RAINBOW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute stage 1. Inputs may be shorter than N_SP (padded with
+    /// zeros). Returns (scores [n], top indices [TOP_N] into the padded
+    /// array — callers filter indices >= n).
+    pub fn stage1(&self, sp_reads: &[i32], sp_writes: &[i32],
+                  params: &[f32; 8]) -> Result<(Vec<f32>, Vec<i32>)> {
+        if sp_reads.len() > N_SP {
+            bail!("n_sp {} exceeds artifact shape {N_SP}", sp_reads.len());
+        }
+        let r = pad_i32(sp_reads, N_SP);
+        let w = pad_i32(sp_writes, N_SP);
+        let lr = xla::Literal::vec1(&r);
+        let lw = xla::Literal::vec1(&w);
+        let lp = xla::Literal::vec1(&params[..]);
+        let result = self.stage1.execute::<xla::Literal>(&[lr, lw, lp])?
+            [0][0]
+            .to_literal_sync()?;
+        let (score, idx) = result.to_tuple2()?;
+        Ok((score.to_vec::<f32>()?, idx.to_vec::<i32>()?))
+    }
+
+    /// Execute stage 2 over flattened (n_slots x 512) counters
+    /// (n_slots <= TOP_N; rows padded with zeros).
+    pub fn stage2(&self, pg_reads: &[i32], pg_writes: &[i32],
+                  params: &[f32; 8]) -> Result<(Vec<f32>, Vec<i32>)> {
+        let n = TOP_N * SP_PAGES;
+        if pg_reads.len() > n {
+            bail!("stage2 input {} exceeds artifact shape {n}",
+                  pg_reads.len());
+        }
+        if pg_reads.len() % SP_PAGES != 0 {
+            bail!("stage2 input must be a multiple of {SP_PAGES}");
+        }
+        let r = pad_i32(pg_reads, n);
+        let w = pad_i32(pg_writes, n);
+        let lr = xla::Literal::vec1(&r)
+            .reshape(&[TOP_N as i64, SP_PAGES as i64])?;
+        let lw = xla::Literal::vec1(&w)
+            .reshape(&[TOP_N as i64, SP_PAGES as i64])?;
+        let lp = xla::Literal::vec1(&params[..]);
+        let result = self.stage2.execute::<xla::Literal>(&[lr, lw, lp])?
+            [0][0]
+            .to_literal_sync()?;
+        let (benefit, hot) = result.to_tuple2()?;
+        let mut b = benefit.to_vec::<f32>()?;
+        let mut h = hot.to_vec::<i32>()?;
+        b.truncate(pg_reads.len());
+        h.truncate(pg_reads.len());
+        Ok((b, h))
+    }
+}
+
+fn pad_i32(xs: &[i32], n: usize) -> Vec<i32> {
+    let mut v = Vec::with_capacity(n);
+    v.extend_from_slice(xs);
+    v.resize(n, 0);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_extends_with_zeros() {
+        assert_eq!(pad_i32(&[1, 2], 4), vec![1, 2, 0, 0]);
+        assert_eq!(pad_i32(&[1, 2], 2), vec![1, 2]);
+    }
+
+    // Execution tests against the real artifacts live in
+    // rust/tests/pjrt_integration.rs (they need `make artifacts`).
+}

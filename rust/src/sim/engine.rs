@@ -1,0 +1,187 @@
+//! The simulation engine: drives per-core instruction streams through a
+//! policy, firing sampling-interval callbacks and aggregating metrics.
+//!
+//! Clock model (DESIGN.md §5, zsim-style "bound-weave"): each core owns a
+//! local cycle counter advanced by instruction retirement (CPI = 1 for
+//! non-memory work) plus memory-path latency; cores are interleaved in
+//! fixed quanta so device-level contention is observed in rough global
+//! order. OS work at interval boundaries (identification + migration) is
+//! charged stop-the-world to every core.
+
+use crate::policies::Policy;
+use crate::sim::metrics::RunMetrics;
+use crate::workloads::{Op, Workload};
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Total instructions to retire across all cores.
+    pub instructions: u64,
+    /// Sampling interval in cycles.
+    pub interval_cycles: u64,
+    /// Core interleave quantum (instructions per scheduling turn).
+    pub quantum: u64,
+}
+
+impl EngineConfig {
+    pub fn new(instructions: u64, interval_cycles: u64) -> EngineConfig {
+        EngineConfig { instructions, interval_cycles, quantum: 2000 }
+    }
+}
+
+/// Outcome of a full simulation run.
+pub struct RunOutcome {
+    pub metrics: RunMetrics,
+    /// Policy name for reporting.
+    pub policy: &'static str,
+    pub workload: String,
+}
+
+/// Run `workload` under `policy` for `cfg.instructions` instructions.
+pub fn run(policy: &mut dyn Policy, workload: &mut Workload,
+           cfg: &EngineConfig) -> RunOutcome {
+    let cores = workload.cores();
+    let per_core = cfg.instructions / cores as u64;
+    let mut clock = vec![0u64; cores];
+    let mut retired = vec![0u64; cores];
+    let mut mem_ops = 0u64;
+    let mut next_interval = cfg.interval_cycles;
+
+    // Round-robin in quanta until every core retires its share.
+    let mut live = cores;
+    while live > 0 {
+        live = 0;
+        for core in 0..cores {
+            if retired[core] >= per_core {
+                continue;
+            }
+            live += 1;
+            let target = (retired[core] + cfg.quantum).min(per_core);
+            while retired[core] < target {
+                match workload.next_op(core) {
+                    Op::Think(n) => {
+                        let n = (n as u64).min(per_core - retired[core]).max(1);
+                        retired[core] += n;
+                        clock[core] += n; // CPI = 1
+                    }
+                    Op::Mem { vaddr, is_write } => {
+                        let c = policy.access(core, vaddr, is_write,
+                                              clock[core]);
+                        clock[core] += c + 1;
+                        retired[core] += 1;
+                        mem_ops += 1;
+                    }
+                }
+            }
+        }
+        // Interval boundary: when the slowest live core passes it.
+        let min_clock = (0..cores)
+            .filter(|&c| retired[c] < per_core)
+            .map(|c| clock[c])
+            .min()
+            .unwrap_or_else(|| *clock.iter().max().unwrap());
+        while min_clock >= next_interval {
+            // OS work starts once every core has passed the boundary; use
+            // the max clock so device timestamps are not in its future
+            // (otherwise bulk copies would charge cross-core clock skew
+            // as migration latency).
+            let os_start = *clock.iter().max().unwrap();
+            let os_cycles = policy.on_interval(os_start);
+            workload.advance_phase();
+            // Stop-the-world: OS work extends every core's timeline.
+            for c in clock.iter_mut() {
+                *c += os_cycles;
+            }
+            next_interval += cfg.interval_cycles;
+        }
+    }
+
+    let elapsed = *clock.iter().max().unwrap();
+    policy.finalize(elapsed);
+    let m = policy.machine_mut();
+    m.metrics.instructions = retired.iter().sum();
+    m.metrics.mem_ops = mem_ops;
+    m.metrics.cycles = elapsed;
+    m.metrics.core_cycles = clock.iter().sum();
+    RunOutcome {
+        metrics: m.metrics.clone(),
+        policy: policy.name(),
+        workload: workload.name.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::policies::{by_name, FlatStatic};
+    use crate::workloads::{AppProfile, Workload};
+
+    fn small_cfg() -> Config {
+        let mut c = Config::scaled(8);
+        c.cores = 2;
+        c.interval_cycles = 200_000;
+        c.top_n = 16;
+        c
+    }
+
+    fn small_workload(cfg: &Config) -> Workload {
+        let p = AppProfile::by_name("DICT").unwrap();
+        Workload::single(&p, cfg.cores, 64, 7)
+    }
+
+    #[test]
+    fn run_retires_requested_instructions() {
+        let cfg = small_cfg();
+        let mut w = small_workload(&cfg);
+        let mut p = FlatStatic::new(&cfg);
+        let out = run(&mut p, &mut w,
+                      &EngineConfig::new(100_000, cfg.interval_cycles));
+        assert_eq!(out.metrics.instructions, 100_000);
+        assert!(out.metrics.cycles > 100_000, "memory must add cycles");
+        assert!(out.metrics.mem_ops > 20_000); // ~34% memops
+        assert!(out.metrics.ipc() > 0.003 && out.metrics.ipc() < 1.0,
+                "ipc={}", out.metrics.ipc());
+    }
+
+    #[test]
+    fn intervals_fire_for_migrating_policies() {
+        let cfg = small_cfg();
+        let mut w = small_workload(&cfg);
+        let mut p = by_name("rainbow", &cfg, false).unwrap();
+        let out = run(p.as_mut(), &mut w,
+                      &EngineConfig::new(400_000, cfg.interval_cycles));
+        // DICT is hot-heavy: Rainbow must have migrated something.
+        assert!(out.metrics.migrations > 0,
+                "no migrations over {} cycles", out.metrics.cycles);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = small_cfg();
+        let mk = || {
+            let mut w = small_workload(&cfg);
+            let mut p = FlatStatic::new(&cfg);
+            run(&mut p, &mut w,
+                &EngineConfig::new(50_000, cfg.interval_cycles))
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.metrics.cycles, b.metrics.cycles);
+        assert_eq!(a.metrics.mem_ops, b.metrics.mem_ops);
+        assert!((a.metrics.energy_pj - b.metrics.energy_pj).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_policies_complete_a_run() {
+        let cfg = small_cfg();
+        for name in crate::policies::all_names() {
+            let mut w = small_workload(&cfg);
+            let mut p = by_name(name, &cfg, false).unwrap();
+            let out = run(p.as_mut(), &mut w,
+                          &EngineConfig::new(60_000, cfg.interval_cycles));
+            assert_eq!(out.metrics.instructions, 60_000, "policy {name}");
+            assert!(out.metrics.cycles > 0);
+        }
+    }
+}

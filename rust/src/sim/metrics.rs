@@ -1,0 +1,214 @@
+//! Run metrics: every counter needed to regenerate the paper's figures.
+//!
+//! One `RunMetrics` is produced per (workload, policy) simulation and the
+//! report layer derives each figure from it: Fig. 7 MPKI, Fig. 8 TLB-miss
+//! cycles, Fig. 9 translation breakdown, Fig. 10 IPC, Fig. 11 migration
+//! traffic, Fig. 12 energy, Fig. 15 runtime-overhead breakdown.
+
+/// Address-translation cycle breakdown (Fig. 9 categories).
+#[derive(Clone, Debug, Default)]
+pub struct XlatBreakdown {
+    /// Split-TLB lookup cycles (hits and the lookup part of misses).
+    pub tlb_cycles: u64,
+    /// Bitmap-cache consultation cycles (hit latency + miss fill reads).
+    pub bitmap_cycles: u64,
+    /// 4 KB page-table walk cycles (flat systems).
+    pub ptw_cycles: u64,
+    /// Superpage table walk cycles (SPTW).
+    pub sptw_cycles: u64,
+    /// Address-remapping pointer reads (Rainbow DRAM addressing).
+    pub remap_cycles: u64,
+}
+
+impl XlatBreakdown {
+    pub fn total(&self) -> u64 {
+        self.tlb_cycles + self.bitmap_cycles + self.ptw_cycles
+            + self.sptw_cycles + self.remap_cycles
+    }
+}
+
+/// Runtime (OS/mechanism) overhead breakdown (Fig. 15 categories).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeBreakdown {
+    pub migration_cycles: u64,
+    pub shootdown_cycles: u64,
+    pub clflush_cycles: u64,
+    /// Software hot-page identification (sorting/classification).
+    pub identify_cycles: u64,
+}
+
+impl RuntimeBreakdown {
+    pub fn total(&self) -> u64 {
+        self.migration_cycles + self.shootdown_cycles + self.clflush_cycles
+            + self.identify_cycles
+    }
+}
+
+/// All statistics from one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub instructions: u64,
+    /// Wall cycles (max over cores) — the IPC denominator.
+    pub cycles: u64,
+    /// Total core-cycles (sum over cores) — the denominator for all
+    /// "% of execution cycles" figures (8, 9, 15).
+    pub core_cycles: u64,
+    pub mem_ops: u64,
+
+    // TLB behaviour.
+    pub tlb_miss_4k: u64,
+    pub tlb_miss_2m: u64,
+    /// Cycles stalled on TLB miss handling (walks + remap reads).
+    pub tlb_miss_cycles: u64,
+    pub xlat: XlatBreakdown,
+    /// Superpage TLB hit rate (R_hit of §III-E), sampled at end.
+    pub sp_hit_rate: f64,
+
+    // Bitmap cache (Rainbow only).
+    pub bitmap_hits: u64,
+    pub bitmap_misses: u64,
+    /// Address-remap pointer reads performed.
+    pub remap_reads: u64,
+
+    // Migration activity.
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+    pub writebacks: u64,
+    pub writeback_bytes: u64,
+    pub shootdowns: u64,
+    pub rt: RuntimeBreakdown,
+
+    // Memory-system rollup (copied from devices at end of run).
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub nvm_reads: u64,
+    pub nvm_writes: u64,
+    pub energy_pj: f64,
+    /// Cycles cores spent stalled on memory (cache miss path).
+    pub mem_stall_cycles: u64,
+    pub llc_misses: u64,
+}
+
+impl RunMetrics {
+    /// Instructions per cycle across all cores (the paper's headline
+    /// performance metric, Fig. 10).
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.instructions as f64 / self.cycles as f64
+    }
+
+    /// TLB misses per kilo-instruction (Fig. 7). Counts true misses of
+    /// whichever page size(s) the policy uses.
+    pub fn mpki(&self) -> f64 {
+        if self.instructions == 0 {
+            return 0.0;
+        }
+        (self.tlb_miss_4k + self.tlb_miss_2m) as f64
+            / (self.instructions as f64 / 1000.0)
+    }
+
+    /// Denominator for per-cycle fractions: total core cycles when
+    /// known, else wall cycles (single-core analyses).
+    fn frac_denom(&self) -> f64 {
+        if self.core_cycles > 0 {
+            self.core_cycles as f64
+        } else {
+            self.cycles as f64
+        }
+    }
+
+    /// Fraction of total cycles spent servicing TLB misses (Fig. 8).
+    pub fn tlb_miss_cycle_frac(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.tlb_miss_cycles as f64 / self.frac_denom()
+    }
+
+    /// Fraction of cycles in address translation overall (Fig. 9 text).
+    pub fn xlat_frac(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.xlat.total() as f64 / self.frac_denom()
+    }
+
+    /// Migration traffic as a fraction of the workload footprint
+    /// (Fig. 11's y-axis). Footprint supplied by the caller.
+    pub fn migration_traffic_ratio(&self, footprint_bytes: u64) -> f64 {
+        if footprint_bytes == 0 {
+            return 0.0;
+        }
+        (self.migrated_bytes + self.writeback_bytes) as f64
+            / footprint_bytes as f64
+    }
+
+    /// Runtime overhead fraction (Fig. 15).
+    pub fn runtime_overhead_frac(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.rt.total() as f64 / self.frac_denom()
+    }
+
+    pub fn bitmap_hit_rate(&self) -> f64 {
+        let t = self.bitmap_hits + self.bitmap_misses;
+        if t == 0 { 0.0 } else { self.bitmap_hits as f64 / t as f64 }
+    }
+
+    /// Energy in millijoules.
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_pj / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let m = RunMetrics {
+            instructions: 2_000_000,
+            cycles: 4_000_000,
+            tlb_miss_4k: 1000,
+            tlb_miss_2m: 500,
+            tlb_miss_cycles: 400_000,
+            migrated_bytes: 1 << 20,
+            writeback_bytes: 1 << 20,
+            energy_pj: 5e9,
+            ..Default::default()
+        };
+        assert!((m.ipc() - 0.5).abs() < 1e-12);
+        assert!((m.mpki() - 0.75).abs() < 1e-12);
+        assert!((m.tlb_miss_cycle_frac() - 0.1).abs() < 1e-12);
+        assert!((m.migration_traffic_ratio(4 << 20) - 0.5).abs() < 1e-12);
+        assert!((m.energy_mj() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_guards() {
+        let m = RunMetrics::default();
+        assert_eq!(m.ipc(), 0.0);
+        assert_eq!(m.mpki(), 0.0);
+        assert_eq!(m.tlb_miss_cycle_frac(), 0.0);
+        assert_eq!(m.bitmap_hit_rate(), 0.0);
+        assert_eq!(m.migration_traffic_ratio(0), 0.0);
+    }
+
+    #[test]
+    fn breakdown_totals() {
+        let x = XlatBreakdown {
+            tlb_cycles: 1, bitmap_cycles: 2, ptw_cycles: 3,
+            sptw_cycles: 4, remap_cycles: 5,
+        };
+        assert_eq!(x.total(), 15);
+        let r = RuntimeBreakdown {
+            migration_cycles: 1, shootdown_cycles: 2, clflush_cycles: 3,
+            identify_cycles: 4,
+        };
+        assert_eq!(r.total(), 10);
+    }
+}

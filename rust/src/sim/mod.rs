@@ -1,0 +1,9 @@
+//! Simulation core: the shared machine, the engine loop, and run metrics.
+
+pub mod engine;
+pub mod machine;
+pub mod metrics;
+
+pub use engine::{run, EngineConfig, RunOutcome};
+pub use machine::{Machine, TableHome};
+pub use metrics::{RunMetrics, RuntimeBreakdown, XlatBreakdown};

@@ -1,0 +1,12 @@
+//! Split-TLB hierarchy, page-table walker, and shootdown cost model.
+
+pub mod ptw;
+pub mod shootdown;
+pub mod split;
+#[allow(clippy::module_inception)]
+pub mod tlb;
+
+pub use ptw::{WalkStats, Walker, WalkerConfig};
+pub use shootdown::{shootdown_2m, shootdown_4k, ShootdownStats};
+pub use split::{CoreTlbs, HitLevel, SizedLookup, SplitLookup};
+pub use tlb::{Tlb, TlbStats};

@@ -1,0 +1,129 @@
+//! Hardware page-table walker cost model.
+//!
+//! x86-64 semantics per §III-E: a 4 KB translation walks 4 levels
+//! (4 memory references), a 2 MB superpage translation walks 3. Each
+//! reference is a real 8-byte read issued to the memory device holding the
+//! page tables, so walk cost responds to device latency exactly as the
+//! paper's analytic model (4·t_dr vs 3·t_nr + remap) assumes. MMU caches
+//! are deliberately not modeled — the paper's analysis charges full walks.
+
+use crate::mem::HybridMemory;
+
+/// Where a process's page tables live in physical memory.
+#[derive(Clone, Copy, Debug)]
+pub struct WalkerConfig {
+    /// Base flat physical address of the page-table pool.
+    pub table_base: u64,
+    /// Pool size in bytes (walk targets are hashed into this window).
+    pub table_len: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct WalkStats {
+    pub walks_4k: u64,
+    pub walks_2m: u64,
+    pub cycles_4k: u64,
+    pub cycles_2m: u64,
+}
+
+/// The walker: stateless except for statistics.
+#[derive(Clone, Debug)]
+pub struct Walker {
+    pub cfg: WalkerConfig,
+    pub stats: WalkStats,
+    levels_4k: u64,
+    levels_2m: u64,
+}
+
+impl Walker {
+    pub fn new(cfg: WalkerConfig, levels_4k: u64, levels_2m: u64) -> Walker {
+        Walker { cfg, stats: WalkStats::default(), levels_4k, levels_2m }
+    }
+
+    /// Deterministic pseudo-address for level `l` of the walk of `vpn`.
+    fn table_addr(&self, vpn: u64, l: u64) -> u64 {
+        // Fibonacci hashing keeps walks spread across table banks/rows.
+        let h = (vpn.wrapping_mul(0x9E3779B97F4A7C15)).rotate_left((7 * l) as u32)
+            ^ l.wrapping_mul(0xD1B54A32D192ED03);
+        self.cfg.table_base + (h % (self.cfg.table_len / 8)) * 8
+    }
+
+    /// Walk for a 4 KB translation; returns cycles spent. Each level is a
+    /// flat-latency table reference (paper §III-E: cost = 4·t_dr).
+    pub fn walk_4k(&mut self, mem: &mut HybridMemory, vpn: u64,
+                   _now: u64) -> u64 {
+        let mut cycles = 0;
+        for l in 0..self.levels_4k {
+            cycles += mem.table_ref(self.table_addr(vpn, l), 8).latency;
+        }
+        self.stats.walks_4k += 1;
+        self.stats.cycles_4k += cycles;
+        cycles
+    }
+
+    /// Walk for a 2 MB translation (one fewer level: 3·t_nr for Rainbow's
+    /// NVM-resident superpage tables).
+    pub fn walk_2m(&mut self, mem: &mut HybridMemory, vpn: u64,
+                   _now: u64) -> u64 {
+        let mut cycles = 0;
+        for l in 0..self.levels_2m {
+            cycles +=
+                mem.table_ref(self.table_addr(vpn ^ 0x5555, l), 8).latency;
+        }
+        self.stats.walks_2m += 1;
+        self.stats.cycles_2m += cycles;
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn setup(in_nvm: bool) -> (Walker, HybridMemory) {
+        let cfg = Config::paper();
+        let mem = HybridMemory::new(&cfg);
+        let base = if in_nvm { mem.nvm_base() } else { 0 };
+        let w = Walker::new(
+            WalkerConfig { table_base: base, table_len: 16 << 20 },
+            cfg.ptw_levels_4k,
+            cfg.ptw_levels_2m,
+        );
+        (w, mem)
+    }
+
+    #[test]
+    fn walk_4k_is_four_references() {
+        let (mut w, mut mem) = setup(false);
+        let before = mem.dram.stats.reads;
+        w.walk_4k(&mut mem, 42, 0);
+        assert_eq!(mem.dram.stats.reads - before, 4);
+        assert_eq!(w.stats.walks_4k, 1);
+        assert!(w.stats.cycles_4k >= 4 * 43);
+    }
+
+    #[test]
+    fn walk_2m_is_three_references() {
+        let (mut w, mut mem) = setup(false);
+        let before = mem.dram.stats.reads;
+        w.walk_2m(&mut mem, 42, 0);
+        assert_eq!(mem.dram.stats.reads - before, 3);
+    }
+
+    #[test]
+    fn nvm_tables_cost_more() {
+        let (mut wd, mut md) = setup(false);
+        let (mut wn, mut mn) = setup(true);
+        let cd = wd.walk_2m(&mut md, 7, 0);
+        let cn = wn.walk_2m(&mut mn, 7, 0);
+        assert!(cn > cd, "NVM walk {cn} <= DRAM walk {cd}");
+    }
+
+    #[test]
+    fn walks_are_deterministic() {
+        let (mut w1, mut m1) = setup(false);
+        let (mut w2, mut m2) = setup(false);
+        assert_eq!(w1.walk_4k(&mut m1, 9, 0), w2.walk_4k(&mut m2, 9, 0));
+    }
+}

@@ -1,0 +1,105 @@
+//! TLB shootdown cost model (§III-F, citing Black et al.).
+//!
+//! When a page's mapping changes (HSCC migrations, Rainbow DRAM->NVM
+//! evictions), the initiating core interrupts every other core, each
+//! invalidates its local entry, and the initiator waits for all acks.
+//! Cost = fixed IPI/sync latency plus a small per-responding-core term;
+//! the paper models this with "reasonable latencies", we use
+//! `t_shootdown` from the config as the 8-core full-broadcast cost.
+
+use crate::config::Config;
+
+use super::split::CoreTlbs;
+
+#[derive(Clone, Debug, Default)]
+pub struct ShootdownStats {
+    pub shootdowns: u64,
+    pub cycles: u64,
+    pub entries_invalidated: u64,
+}
+
+/// Broadcast invalidation of a 4 KB translation across all cores.
+/// Returns the cycles charged to the initiating core.
+pub fn shootdown_4k(
+    cfg: &Config,
+    tlbs: &mut [CoreTlbs],
+    vpn: u64,
+    stats: &mut ShootdownStats,
+) -> u64 {
+    let mut present = 0u64;
+    for t in tlbs.iter_mut() {
+        if t.invalidate_4k(vpn) {
+            present += 1;
+        }
+    }
+    charge(cfg, present, stats)
+}
+
+/// Broadcast invalidation of a 2 MB translation across all cores.
+pub fn shootdown_2m(
+    cfg: &Config,
+    tlbs: &mut [CoreTlbs],
+    vpn: u64,
+    stats: &mut ShootdownStats,
+) -> u64 {
+    let mut present = 0u64;
+    for t in tlbs.iter_mut() {
+        if t.invalidate_2m(vpn) {
+            present += 1;
+        }
+    }
+    charge(cfg, present, stats)
+}
+
+fn charge(cfg: &Config, present: u64, stats: &mut ShootdownStats) -> u64 {
+    // Base IPI broadcast + wait; scaled mildly by how many cores actually
+    // held the entry (they must ack after invalidating).
+    let cycles = cfg.t_shootdown + present * (cfg.t_shootdown / 16);
+    stats.shootdowns += 1;
+    stats.cycles += cycles;
+    stats.entries_invalidated += present;
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shootdown_removes_entry_everywhere() {
+        let cfg = Config::paper();
+        let mut tlbs: Vec<CoreTlbs> =
+            (0..4).map(|_| CoreTlbs::new(&cfg)).collect();
+        for t in &mut tlbs {
+            t.insert_4k(77, 700);
+        }
+        let mut st = ShootdownStats::default();
+        let c = shootdown_4k(&cfg, &mut tlbs, 77, &mut st);
+        assert!(c >= cfg.t_shootdown);
+        assert_eq!(st.entries_invalidated, 4);
+        for t in &mut tlbs {
+            assert_eq!(t.lookup(77 << 12).small.ppn, None);
+        }
+    }
+
+    #[test]
+    fn absent_entry_still_pays_broadcast() {
+        let cfg = Config::paper();
+        let mut tlbs: Vec<CoreTlbs> =
+            (0..2).map(|_| CoreTlbs::new(&cfg)).collect();
+        let mut st = ShootdownStats::default();
+        let c = shootdown_2m(&cfg, &mut tlbs, 123, &mut st);
+        assert_eq!(c, cfg.t_shootdown);
+        assert_eq!(st.entries_invalidated, 0);
+        assert_eq!(st.shootdowns, 1);
+    }
+
+    #[test]
+    fn more_holders_cost_more() {
+        let cfg = Config::paper();
+        let mut st = ShootdownStats::default();
+        let few = charge(&cfg, 1, &mut st);
+        let many = charge(&cfg, 8, &mut st);
+        assert!(many > few);
+    }
+}

@@ -1,0 +1,229 @@
+//! Per-core split TLBs: a two-level hierarchy for each page size
+//! (4 KB and 2 MB), consulted in parallel as §II-A / §III-E describe.
+//!
+//! The lookup result distinguishes the four cases of Fig. 6:
+//! (1) 4K hit + SP hit, (2) 4K hit + SP miss, (3) 4K miss + SP hit,
+//! (4) both miss — the policy decides what each case costs.
+
+use crate::config::{Config, PAGE_SHIFT, SP_SHIFT};
+
+use super::tlb::Tlb;
+
+/// Which level produced a hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HitLevel {
+    L1,
+    L2,
+    Miss,
+}
+
+/// Outcome of one page-size lookup through L1 then L2.
+#[derive(Clone, Copy, Debug)]
+pub struct SizedLookup {
+    pub level: HitLevel,
+    pub ppn: Option<u64>,
+    /// Cycles charged for this lookup path.
+    pub cycles: u64,
+}
+
+/// The two split lookups performed in parallel (Fig. 6): total latency is
+/// the max of the two paths, not the sum.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitLookup {
+    pub small: SizedLookup,
+    pub sp: SizedLookup,
+}
+
+impl SplitLookup {
+    pub fn cycles(&self) -> u64 {
+        self.small.cycles.max(self.sp.cycles)
+    }
+}
+
+/// One core's split TLBs.
+#[derive(Clone, Debug)]
+pub struct CoreTlbs {
+    pub l1_4k: Tlb,
+    pub l1_2m: Tlb,
+    pub l2_4k: Tlb,
+    pub l2_2m: Tlb,
+}
+
+impl CoreTlbs {
+    pub fn new(cfg: &Config) -> CoreTlbs {
+        CoreTlbs {
+            l1_4k: Tlb::new(cfg.l1_tlb_4k.entries, cfg.l1_tlb_4k.assoc,
+                            cfg.l1_tlb_4k.latency),
+            l1_2m: Tlb::new(cfg.l1_tlb_2m.entries, cfg.l1_tlb_2m.assoc,
+                            cfg.l1_tlb_2m.latency),
+            l2_4k: Tlb::new(cfg.l2_tlb_4k.entries, cfg.l2_tlb_4k.assoc,
+                            cfg.l2_tlb_4k.latency),
+            l2_2m: Tlb::new(cfg.l2_tlb_2m.entries, cfg.l2_tlb_2m.assoc,
+                            cfg.l2_tlb_2m.latency),
+        }
+    }
+
+    fn lookup_sized(l1: &mut Tlb, l2: &mut Tlb, vpn: u64) -> SizedLookup {
+        let mut cycles = l1.latency;
+        if let Some(ppn) = l1.lookup(vpn) {
+            return SizedLookup { level: HitLevel::L1, ppn: Some(ppn), cycles };
+        }
+        cycles += l2.latency;
+        if let Some(ppn) = l2.lookup(vpn) {
+            // Promote into L1 (victim falls back into L2).
+            if let Some((evpn, eppn)) = l1.insert(vpn, ppn) {
+                l2.insert(evpn, eppn);
+            }
+            return SizedLookup { level: HitLevel::L2, ppn: Some(ppn), cycles };
+        }
+        SizedLookup { level: HitLevel::Miss, ppn: None, cycles }
+    }
+
+    /// 4 KB-only lookup (flat systems leave the superpage TLBs idle,
+    /// §II-A).
+    pub fn lookup_4k(&mut self, vaddr: u64) -> SizedLookup {
+        Self::lookup_sized(&mut self.l1_4k, &mut self.l2_4k,
+                           vaddr >> PAGE_SHIFT)
+    }
+
+    /// 2 MB-only lookup (superpage-only systems).
+    pub fn lookup_2m(&mut self, vaddr: u64) -> SizedLookup {
+        Self::lookup_sized(&mut self.l1_2m, &mut self.l2_2m,
+                           vaddr >> SP_SHIFT)
+    }
+
+    /// Parallel split lookup of a virtual address.
+    pub fn lookup(&mut self, vaddr: u64) -> SplitLookup {
+        let small =
+            Self::lookup_sized(&mut self.l1_4k, &mut self.l2_4k,
+                               vaddr >> PAGE_SHIFT);
+        let sp = Self::lookup_sized(&mut self.l1_2m, &mut self.l2_2m,
+                                    vaddr >> SP_SHIFT);
+        SplitLookup { small, sp }
+    }
+
+    /// Install a 4 KB translation (fill both levels, L1 victim demotes).
+    pub fn insert_4k(&mut self, vpn: u64, ppn: u64) {
+        if let Some((evpn, eppn)) = self.l1_4k.insert(vpn, ppn) {
+            self.l2_4k.insert(evpn, eppn);
+        }
+    }
+
+    /// Install a 2 MB translation.
+    pub fn insert_2m(&mut self, vpn: u64, ppn: u64) {
+        if let Some((evpn, eppn)) = self.l1_2m.insert(vpn, ppn) {
+            self.l2_2m.insert(evpn, eppn);
+        }
+    }
+
+    /// Invalidate a 4 KB translation in both levels; true if present.
+    pub fn invalidate_4k(&mut self, vpn: u64) -> bool {
+        let a = self.l1_4k.invalidate(vpn);
+        let b = self.l2_4k.invalidate(vpn);
+        a || b
+    }
+
+    /// Invalidate a 2 MB translation in both levels; true if present.
+    pub fn invalidate_2m(&mut self, vpn: u64) -> bool {
+        let a = self.l1_2m.invalidate(vpn);
+        let b = self.l2_2m.invalidate(vpn);
+        a || b
+    }
+
+    /// Total 4 KB-side misses (L2-level, i.e. true misses needing a walk).
+    pub fn misses_4k(&self) -> u64 {
+        self.l2_4k.stats.misses
+    }
+
+    pub fn misses_2m(&self) -> u64 {
+        self.l2_2m.stats.misses
+    }
+
+    /// Superpage TLB hit rate over both levels (paper §III-E's R_hit).
+    pub fn sp_hit_rate(&self) -> f64 {
+        let l1 = &self.l1_2m.stats;
+        // Hits at either level count; accesses are L1 accesses.
+        let acc = l1.accesses();
+        if acc == 0 {
+            return 0.0;
+        }
+        (l1.hits + self.l2_2m.stats.hits) as f64 / acc as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tlbs() -> CoreTlbs {
+        CoreTlbs::new(&Config::paper())
+    }
+
+    #[test]
+    fn parallel_lookup_takes_max_latency() {
+        let mut t = tlbs();
+        let r = t.lookup(0x12345678);
+        // Both sides miss: each path is L1(1) + L2(8) = 9 cycles, in
+        // parallel -> 9 total.
+        assert_eq!(r.small.level, HitLevel::Miss);
+        assert_eq!(r.sp.level, HitLevel::Miss);
+        assert_eq!(r.cycles(), 9);
+    }
+
+    #[test]
+    fn case3_sp_hit_small_miss() {
+        let mut t = tlbs();
+        let vaddr = 0x4000_0000u64;
+        t.insert_2m(vaddr >> SP_SHIFT, 7);
+        let r = t.lookup(vaddr);
+        assert_eq!(r.small.level, HitLevel::Miss);
+        assert_eq!(r.sp.level, HitLevel::L1);
+        assert_eq!(r.sp.ppn, Some(7));
+        // Small path pays 9, SP path pays 1: parallel max is 9.
+        assert_eq!(r.cycles(), 9);
+    }
+
+    #[test]
+    fn case1_both_hit_uses_small_path() {
+        let mut t = tlbs();
+        let vaddr = 0x4000_0000u64;
+        t.insert_4k(vaddr >> PAGE_SHIFT, 100);
+        t.insert_2m(vaddr >> SP_SHIFT, 7);
+        let r = t.lookup(vaddr);
+        assert_eq!(r.small.ppn, Some(100));
+        assert_eq!(r.sp.ppn, Some(7));
+        assert_eq!(r.cycles(), 1);
+    }
+
+    #[test]
+    fn l2_hit_promotes_to_l1() {
+        let mut t = tlbs();
+        let vpn = 0x999u64;
+        t.l2_4k.insert(vpn, 5);
+        let r = t.lookup(vpn << PAGE_SHIFT);
+        assert_eq!(r.small.level, HitLevel::L2);
+        // Second lookup should now hit L1.
+        let r2 = t.lookup(vpn << PAGE_SHIFT);
+        assert_eq!(r2.small.level, HitLevel::L1);
+    }
+
+    #[test]
+    fn shootdown_clears_both_levels() {
+        let mut t = tlbs();
+        t.insert_4k(3, 30);
+        assert!(t.invalidate_4k(3));
+        let r = t.lookup(3 << PAGE_SHIFT);
+        assert_eq!(r.small.level, HitLevel::Miss);
+    }
+
+    #[test]
+    fn sp_hit_rate_tracks() {
+        let mut t = tlbs();
+        t.insert_2m(0, 0);
+        for _ in 0..99 {
+            t.lookup(0);
+        }
+        t.lookup(1u64 << SP_SHIFT); // one miss
+        assert!(t.sp_hit_rate() > 0.97);
+    }
+}

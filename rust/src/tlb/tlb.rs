@@ -1,0 +1,217 @@
+//! Set-associative TLB, generic over page size.
+//!
+//! Keys are virtual page numbers (already shifted by the page-size shift);
+//! payload is the physical page number. True-LRU within a set, like the
+//! split data TLBs of Table IV (4-way L1, 8-way L2).
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Entry {
+    vpn: u64,
+    ppn: u64,
+    valid: bool,
+    lru: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TlbStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub shootdowns: u64,
+}
+
+impl TlbStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.accesses();
+        if t == 0 { 0.0 } else { self.hits as f64 / t as f64 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Tlb {
+    sets: usize,
+    assoc: usize,
+    entries: Vec<Entry>,
+    tick: u64,
+    pub latency: u64,
+    pub stats: TlbStats,
+}
+
+impl Tlb {
+    pub fn new(n_entries: usize, assoc: usize, latency: u64) -> Tlb {
+        assert!(assoc > 0 && n_entries % assoc == 0,
+                "entries {n_entries} not divisible by assoc {assoc}");
+        let sets = n_entries / assoc;
+        assert!(sets.is_power_of_two(), "TLB sets must be 2^k (got {sets})");
+        Tlb {
+            sets,
+            assoc,
+            entries: vec![Entry::default(); n_entries],
+            tick: 0,
+            latency,
+            stats: TlbStats::default(),
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, vpn: u64) -> usize {
+        (vpn as usize) & (self.sets - 1)
+    }
+
+    /// Translate `vpn`; returns `Some(ppn)` on hit (LRU refreshed).
+    pub fn lookup(&mut self, vpn: u64) -> Option<u64> {
+        self.tick += 1;
+        let base = self.set_of(vpn) * self.assoc;
+        for i in base..base + self.assoc {
+            let e = &mut self.entries[i];
+            if e.valid && e.vpn == vpn {
+                e.lru = self.tick;
+                self.stats.hits += 1;
+                return Some(e.ppn);
+            }
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Probe without statistics/LRU effects.
+    pub fn contains(&self, vpn: u64) -> bool {
+        let base = self.set_of(vpn) * self.assoc;
+        self.entries[base..base + self.assoc]
+            .iter()
+            .any(|e| e.valid && e.vpn == vpn)
+    }
+
+    /// Install (or update) a translation; returns the displaced valid
+    /// entry's (vpn, ppn) if an eviction happened.
+    pub fn insert(&mut self, vpn: u64, ppn: u64) -> Option<(u64, u64)> {
+        self.tick += 1;
+        let base = self.set_of(vpn) * self.assoc;
+        // Update in place if present.
+        for i in base..base + self.assoc {
+            let e = &mut self.entries[i];
+            if e.valid && e.vpn == vpn {
+                e.ppn = ppn;
+                e.lru = self.tick;
+                return None;
+            }
+        }
+        let mut victim = base;
+        let mut best = u64::MAX;
+        for i in base..base + self.assoc {
+            let e = &self.entries[i];
+            if !e.valid {
+                victim = i;
+                best = 0;
+                break;
+            }
+            if e.lru < best {
+                best = e.lru;
+                victim = i;
+            }
+        }
+        let old = self.entries[victim];
+        let evicted = if old.valid {
+            self.stats.evictions += 1;
+            Some((old.vpn, old.ppn))
+        } else {
+            None
+        };
+        self.entries[victim] = Entry { vpn, ppn, valid: true, lru: self.tick };
+        evicted
+    }
+
+    /// Invalidate a translation (shootdown); true if it was present.
+    pub fn invalidate(&mut self, vpn: u64) -> bool {
+        let base = self.set_of(vpn) * self.assoc;
+        for i in base..base + self.assoc {
+            let e = &mut self.entries[i];
+            if e.valid && e.vpn == vpn {
+                e.valid = false;
+                self.stats.shootdowns += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn flush_all(&mut self) {
+        for e in &mut self.entries {
+            e.valid = false;
+        }
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tlb() -> Tlb {
+        Tlb::new(32, 4, 1)
+    }
+
+    #[test]
+    fn miss_insert_hit() {
+        let mut t = tlb();
+        assert_eq!(t.lookup(0x42), None);
+        t.insert(0x42, 0x99);
+        assert_eq!(t.lookup(0x42), Some(0x99));
+        assert_eq!(t.stats.hits, 1);
+        assert_eq!(t.stats.misses, 1);
+    }
+
+    #[test]
+    fn insert_updates_existing() {
+        let mut t = tlb();
+        t.insert(5, 10);
+        assert_eq!(t.insert(5, 20), None);
+        assert_eq!(t.lookup(5), Some(20));
+    }
+
+    #[test]
+    fn lru_eviction_in_set() {
+        let mut t = Tlb::new(8, 2, 1); // 4 sets x 2 ways
+        // vpns 0, 4, 8 all map to set 0.
+        t.insert(0, 100);
+        t.insert(4, 104);
+        t.lookup(0); // refresh 0
+        let ev = t.insert(8, 108);
+        assert_eq!(ev, Some((4, 104)));
+        assert!(t.contains(0) && t.contains(8) && !t.contains(4));
+    }
+
+    #[test]
+    fn invalidate_is_shootdown() {
+        let mut t = tlb();
+        t.insert(7, 70);
+        assert!(t.invalidate(7));
+        assert!(!t.invalidate(7));
+        assert_eq!(t.lookup(7), None);
+        assert_eq!(t.stats.shootdowns, 1);
+    }
+
+    #[test]
+    fn flush_all_empties() {
+        let mut t = tlb();
+        for i in 0..32 {
+            t.insert(i, i);
+        }
+        assert!(t.occupancy() > 0);
+        t.flush_all();
+        assert_eq!(t.occupancy(), 0);
+    }
+
+    #[test]
+    fn paper_geometries_construct() {
+        Tlb::new(32, 4, 1); // L1: 32-entry 4-way
+        Tlb::new(512, 8, 8); // L2: 512-entry 8-way
+    }
+}

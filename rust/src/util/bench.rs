@@ -1,0 +1,144 @@
+//! Criterion-subset benchmark harness (criterion is unavailable offline).
+//!
+//! Each `benches/*.rs` binary is declared with `harness = false` and drives
+//! this module: warmup, fixed-sample measurement, mean/median/stddev
+//! reporting, and (for the experiment benches) pretty table emission via
+//! [`super::tables`].
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        super::stats::mean(&self.samples_ns)
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        super::stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        super::stats::stddev(&self.samples_ns)
+    }
+
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} mean {:>12}  median {:>12}  stddev {:>10}",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.stddev_ns()),
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with warmup + sampling, criterion-style.
+pub struct Bencher {
+    warmup: Duration,
+    samples: usize,
+    min_iters_per_sample: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            samples: 20,
+            min_iters_per_sample: 1,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+
+    /// Measure `f`, auto-scaling iterations per sample to ~10ms.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + estimate cost.
+        let wstart = Instant::now();
+        let mut iters = 0u64;
+        while wstart.elapsed() < self.warmup || iters == 0 {
+            f();
+            iters += 1;
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / iters as f64;
+        let target_ns = 10e6; // 10 ms per sample
+        let iters_per_sample =
+            ((target_ns / per_iter.max(1.0)) as u64).max(self.min_iters_per_sample);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let m = Measurement { name: name.to_string(), samples_ns: samples };
+        m.report();
+        m
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::new()
+            .warmup(Duration::from_millis(5))
+            .samples(3);
+        let m = b.run("spin", || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert_eq!(m.samples_ns.len(), 3);
+        assert!(m.mean_ns() > 0.0);
+        assert!(m.median_ns() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+}

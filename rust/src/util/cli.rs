@@ -1,0 +1,205 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, subcommands, and auto-generated `--help` text.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec used for help text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments: subcommand, `--key value` options, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding argv[0]). `specs` marks which options are
+    /// boolean flags; unknown options are accepted as strings.
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let flag_names: Vec<&str> =
+            specs.iter().filter(|s| s.is_flag).map(|s| s.name).collect();
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        // treat as flag even if undeclared
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.opts.insert(body.to_string(),
+                                        it.next().unwrap().clone());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_u64(v)
+                .ok_or_else(|| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{name}: expected float, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+}
+
+/// Parse integers with optional `k`/`m`/`g` (binary) or `e`-notation
+/// suffixes: "4096", "64k", "2m", "1e8".
+pub fn parse_u64(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Ok(v) = s.parse::<u64>() {
+        return Some(v);
+    }
+    if s.contains('e') || s.contains('E') {
+        let f = s.parse::<f64>().ok()?;
+        if f >= 0.0 && f.fract() == 0.0 {
+            return Some(f as u64);
+        }
+        return None;
+    }
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => return None,
+    };
+    num.trim().parse::<u64>().ok().map(|v| v * mult)
+}
+
+/// Render a help screen from specs.
+pub fn help_text(prog: &str, about: &str, commands: &[(&str, &str)],
+                 specs: &[OptSpec]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{prog} — {about}\n");
+    if !commands.is_empty() {
+        let _ = writeln!(s, "COMMANDS:");
+        for (c, h) in commands {
+            let _ = writeln!(s, "  {c:<18} {h}");
+        }
+        let _ = writeln!(s);
+    }
+    let _ = writeln!(s, "OPTIONS:");
+    for o in specs {
+        let d = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        let _ = writeln!(s, "  --{:<20} {}{}", o.name, o.help, d);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[OptSpec] = &[OptSpec {
+        name: "verbose",
+        help: "",
+        default: None,
+        is_flag: true,
+    }];
+
+    #[test]
+    fn parse_command_opts_flags() {
+        let a = Args::parse(
+            &sv(&["run", "--app", "mcf", "--policy=rainbow", "--verbose",
+                  "extra"]),
+            SPECS,
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("app"), Some("mcf"));
+        assert_eq!(a.get("policy"), Some("rainbow"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(&sv(&["run", "--fast"]), &[]).unwrap();
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn adjacent_flags() {
+        let a = Args::parse(&sv(&["--a", "--b", "val"]), &[]).unwrap();
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+
+    #[test]
+    fn numeric_parsing_with_suffixes() {
+        assert_eq!(parse_u64("4096"), Some(4096));
+        assert_eq!(parse_u64("64k"), Some(64 << 10));
+        assert_eq!(parse_u64("2M"), Some(2 << 20));
+        assert_eq!(parse_u64("1g"), Some(1 << 30));
+        assert_eq!(parse_u64("1e8"), Some(100_000_000));
+        assert_eq!(parse_u64("oops"), None);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = Args::parse(&sv(&["run", "--n", "50"]), &[]).unwrap();
+        assert_eq!(a.get_u64("n", 7).unwrap(), 50);
+        assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
+        assert!(a.get_f64("n", 0.0).unwrap() == 50.0);
+        assert!(Args::parse(&sv(&["run", "--n", "x"]), &[])
+            .unwrap()
+            .get_u64("n", 0)
+            .is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Offline substrates: PRNG, stats, CLI, config parsing, property testing,
+//! bench harness, and table emission. These replace the crates.io
+//! dependencies (rand, clap, toml, proptest, criterion) that are
+//! unavailable in this environment.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tables;
+pub mod tomlite;

@@ -1,0 +1,292 @@
+//! Deterministic PRNG + distributions.
+//!
+//! crates.io is unavailable offline, so the simulator carries its own
+//! xoshiro256** generator (Blackman/Vigna) seeded via SplitMix64, plus the
+//! distributions the workload generators need (uniform, Zipf, shuffle).
+//! Every simulation component owns a seeded `Rng`, which makes whole
+//! experiments bit-reproducible.
+
+/// xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically from a 64-bit value.
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            *v = splitmix64(&mut x);
+        }
+        // Avoid the all-zero state (cannot occur from splitmix64, but be safe).
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-component seeding).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` via Lemire's unbiased multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // For small k relative to n use a set-based pick; else shuffle.
+        if k * 4 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let x = self.below(n as u64) as usize;
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        } else {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all
+        }
+    }
+}
+
+/// Zipf(α) sampler over `[0, n)` by rejection-inversion (Hörmann &
+/// Derflinger; same scheme as Apache Commons' sampler).
+///
+/// Hot-page skew in the workload generators is Zipfian: rank-r page gets
+/// probability ∝ 1/(r+1)^α. Deterministic given the `Rng` stream.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n >= 1, "Zipf needs n >= 1");
+        assert!(alpha > 0.0, "alpha must be > 0");
+        let h_integral_x1 = h_integral(alpha, 1.5) - 1.0;
+        let h_integral_n = h_integral(alpha, n as f64 + 0.5);
+        let s = 2.0
+            - h_integral_inv(alpha,
+                             h_integral(alpha, 2.5) - h(alpha, 2.0));
+        Zipf { n, alpha, h_integral_x1, h_integral_n, s }
+    }
+
+    /// Draw a rank in `[0, n)` (0 = hottest).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        loop {
+            let u = self.h_integral_n
+                + rng.f64() * (self.h_integral_x1 - self.h_integral_n);
+            let x = h_integral_inv(self.alpha, u);
+            let k = x.round().clamp(1.0, self.n as f64);
+            if k - x <= self.s
+                || u >= h_integral(self.alpha, k + 0.5) - h(self.alpha, k)
+            {
+                return (k as u64) - 1;
+            }
+        }
+    }
+}
+
+/// ∫ t^-α dt from 1 to x (log form at α = 1 for numerical stability).
+#[inline]
+fn h_integral(alpha: f64, x: f64) -> f64 {
+    if (alpha - 1.0).abs() < 1e-9 {
+        x.ln()
+    } else {
+        (x.powf(1.0 - alpha) - 1.0) / (1.0 - alpha)
+    }
+}
+
+#[inline]
+fn h(alpha: f64, x: f64) -> f64 {
+    x.powf(-alpha)
+}
+
+#[inline]
+fn h_integral_inv(alpha: f64, v: f64) -> f64 {
+    if (alpha - 1.0).abs() < 1e-9 {
+        v.exp()
+    } else {
+        (1.0 + (1.0 - alpha) * v).powf(1.0 / (1.0 - alpha)).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit in 1000 draws");
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut r = Rng::new(99);
+        let mean: f64 = (0..20_000).map(|_| r.f64()).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} not ~0.5");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(5);
+        for &(n, k) in &[(100usize, 10usize), (100, 90), (16, 16), (1000, 3)] {
+            let idx = r.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn zipf_skew_orders_ranks() {
+        let z = Zipf::new(1000, 0.99);
+        let mut r = Rng::new(11);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // rank 0 clearly hotter than rank 10, which beats rank 100.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[100]);
+        // top-10 ranks carry a large fraction (zipf 0.99 over 1000: ~45%+)
+        let top10: u32 = counts[..10].iter().sum();
+        assert!(top10 as f64 > 0.3 * 100_000.0, "top10={top10}");
+    }
+
+    #[test]
+    fn zipf_in_range() {
+        let z = Zipf::new(7, 1.2);
+        let mut r = Rng::new(13);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 7);
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(1234);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+}

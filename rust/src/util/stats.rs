@@ -1,0 +1,212 @@
+//! Statistics helpers: histograms, CDFs, online means, percentiles.
+//!
+//! Used by the workload analyzers (Fig. 1 CDF, Table II histograms) and by
+//! the bench harness.
+
+/// Fixed-bucket histogram over `u64` samples.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Upper bounds (inclusive) of each bucket; the last bucket is open.
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Bucket upper bounds, e.g. `[32, 64, 128, 256, 384, 512]` = Table II.
+    pub fn with_bounds(bounds: &[u64]) -> Self {
+        assert!(!bounds.is_empty());
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: u64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count(&self, bucket: usize) -> u64 {
+        self.counts[bucket]
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Fraction of samples in each bucket (0.0 if empty).
+    pub fn fractions(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / self.total as f64)
+            .collect()
+    }
+}
+
+/// Empirical CDF: fraction of samples `<= x` at chosen evaluation points.
+pub fn cdf_at(samples: &[u64], points: &[u64]) -> Vec<f64> {
+    if samples.is_empty() {
+        return vec![0.0; points.len()];
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    points
+        .iter()
+        .map(|&p| {
+            let cnt = sorted.partition_point(|&s| s <= p);
+            cnt as f64 / sorted.len() as f64
+        })
+        .collect()
+}
+
+/// Percentile (nearest-rank) of an unsorted slice; p in [0, 100].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+pub fn stddev(samples: &[f64]) -> f64 {
+    if samples.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(samples);
+    (samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (samples.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Geometric mean — used for cross-workload speedup summaries.
+pub fn geomean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = samples.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / samples.len() as f64).exp()
+}
+
+/// Numerically-stable online mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_like_table2() {
+        let mut h = Histogram::with_bounds(&[32, 64, 128, 256, 384, 512]);
+        for x in [1, 32, 33, 64, 100, 200, 300, 400, 512, 600] {
+            h.add(x);
+        }
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.count(0), 2); // 1, 32
+        assert_eq!(h.count(1), 2); // 33, 64
+        assert_eq!(h.count(2), 1); // 100
+        assert_eq!(h.count(3), 1); // 200
+        assert_eq!(h.count(4), 1); // 300
+        assert_eq!(h.count(5), 2); // 400, 512
+        assert_eq!(h.count(6), 1); // 600 (open bucket)
+    }
+
+    #[test]
+    fn histogram_fractions_sum_to_one() {
+        let mut h = Histogram::with_bounds(&[10, 20]);
+        for x in 0..100 {
+            h.add(x);
+        }
+        let s: f64 = h.fractions().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let samples: Vec<u64> = (0..1000).map(|i| i % 97).collect();
+        let pts: Vec<u64> = (0..100).collect();
+        let cdf = cdf_at(&samples, &pts);
+        assert!(cdf.windows(2).all(|w| w[0] <= w[1]));
+        assert!((cdf[99] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_extremes() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64) * 0.37).collect();
+        let mut o = Online::default();
+        for &x in &xs {
+            o.add(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((o.stddev() - stddev(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_of_constants() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-9);
+    }
+}

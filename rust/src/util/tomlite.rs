@@ -1,0 +1,194 @@
+//! TOML-subset config parser (serde/toml unavailable offline).
+//!
+//! Supports: `[section]` headers, `key = value` with integers (incl. `_`
+//! separators and k/m/g suffixes), floats, booleans, quoted strings, and
+//! `#` comments. Flat `section.key` namespacing — enough for the system
+//! config files in `configs/`.
+
+use std::collections::BTreeMap;
+
+use super::cli::parse_u64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(u64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: keys are `section.key` (or bare `key` before any header).
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unclosed [section]", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .ok_or_else(|| format!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
+            map.insert(key, value);
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(Value::as_u64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        return body.strip_suffix('"').map(|b| Value::Str(b.to_string()));
+    }
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Some(v) = parse_u64(&cleaned) {
+        // Distinguish "1e8" style floats written as ints: parse_u64 handles it.
+        return Some(Value::Int(v));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            name = "rainbow"
+            [dram]
+            size = 4g          # with suffix
+            read_ns = 13.5
+            enabled = true
+            rows = 32_768
+            [nvm]
+            size = 32g
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "rainbow");
+        assert_eq!(doc.u64_or("dram.size", 0), 4 << 30);
+        assert_eq!(doc.f64_or("dram.read_ns", 0.0), 13.5);
+        assert!(doc.bool_or("dram.enabled", false));
+        assert_eq!(doc.u64_or("dram.rows", 0), 32768);
+        assert_eq!(doc.u64_or("nvm.size", 0), 32 << 30);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.u64_or("x", 9), 9);
+        assert_eq!(doc.str_or("y", "z"), "z");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Doc::parse("key value-without-equals").is_err());
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Doc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+}

@@ -1,0 +1,178 @@
+//! Workload analytics: regenerates the paper's motivation data —
+//! Fig. 1 (CDF of touched 4 KB pages per superpage), Table I (hot-page
+//! access statistics), Table II (hot-page distribution within superpages)
+//! — from the synthetic streams, at any scale.
+
+use std::collections::HashMap;
+
+use crate::config::{PAGES_PER_SP, PAGE_SIZE};
+use crate::util::stats::Histogram;
+
+use super::profile::{AppProfile, HOT_HIST_BOUNDS};
+use super::synth::Synth;
+
+/// Access statistics gathered over one sampling interval's worth of
+/// memory operations.
+#[derive(Clone, Debug)]
+pub struct IntervalStats {
+    /// page number -> access count.
+    pub page_counts: HashMap<u64, u64>,
+    pub total_accesses: u64,
+}
+
+impl IntervalStats {
+    /// Drive `synth` for `n_accesses` memory ops and tally page counts.
+    pub fn collect(synth: &mut Synth, n_accesses: u64) -> IntervalStats {
+        let mut page_counts: HashMap<u64, u64> = HashMap::new();
+        for _ in 0..n_accesses {
+            let (vaddr, _) = synth.next_mem();
+            *page_counts.entry(vaddr / PAGE_SIZE).or_default() += 1;
+        }
+        IntervalStats { page_counts, total_accesses: n_accesses }
+    }
+
+    /// Touched 4 KB pages per superpage (Fig. 1's underlying samples).
+    pub fn touched_per_sp(&self) -> Vec<u64> {
+        let mut per_sp: HashMap<u64, u64> = HashMap::new();
+        for &page in self.page_counts.keys() {
+            *per_sp.entry(page / PAGES_PER_SP).or_default() += 1;
+        }
+        per_sp.into_values().collect()
+    }
+
+    /// CHOP-style hot-page set: the smallest top-ranked set of pages that
+    /// carries `share` (0.70) of all accesses. Returns (hot page set,
+    /// minimum access count among them).
+    pub fn hot_pages(&self, share: f64) -> (Vec<u64>, u64) {
+        let mut pairs: Vec<(u64, u64)> =
+            self.page_counts.iter().map(|(&p, &c)| (p, c)).collect();
+        pairs.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let target = (self.total_accesses as f64 * share) as u64;
+        let mut acc = 0u64;
+        let mut hot = Vec::new();
+        let mut min_count = u64::MAX;
+        for (p, c) in pairs {
+            if acc >= target {
+                break;
+            }
+            acc += c;
+            min_count = min_count.min(c);
+            hot.push(p);
+        }
+        if hot.is_empty() {
+            min_count = 0;
+        }
+        (hot, min_count)
+    }
+
+    /// Working set in bytes (touched pages x 4 KB).
+    pub fn working_set_bytes(&self) -> u64 {
+        self.page_counts.len() as u64 * PAGE_SIZE
+    }
+
+    /// Table II row: fraction of superpages whose hot-page count lands in
+    /// each bucket.
+    pub fn hot_dist_per_sp(&self, share: f64) -> [f64; 6] {
+        let (hot, _) = self.hot_pages(share);
+        let mut per_sp: HashMap<u64, u64> = HashMap::new();
+        for p in hot {
+            *per_sp.entry(p / PAGES_PER_SP).or_default() += 1;
+        }
+        let mut h = Histogram::with_bounds(&HOT_HIST_BOUNDS);
+        for (_, c) in per_sp {
+            h.add(c);
+        }
+        let f = h.fractions();
+        [f[0], f[1], f[2], f[3], f[4], f[5]]
+    }
+}
+
+/// One row of Table I, as measured from the generator.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub app: String,
+    pub hot_min_access: u64,
+    pub working_set_mb: f64,
+    pub hot_percent: f64,
+    pub footprint_mb: f64,
+}
+
+/// Measure a Table I row for `profile` at `scale`, over `n_accesses`.
+pub fn table1_row(profile: &AppProfile, scale: u64, seed: u64,
+                  n_accesses: u64) -> Table1Row {
+    let p = profile.scaled(scale);
+    let mut s = Synth::new(p.clone(), 0, seed);
+    let st = IntervalStats::collect(&mut s, n_accesses);
+    let (hot, min_access) = st.hot_pages(p.hot_access_share);
+    let ws = st.working_set_bytes();
+    Table1Row {
+        app: p.name.to_string(),
+        hot_min_access: min_access,
+        working_set_mb: ws as f64 / (1 << 20) as f64,
+        hot_percent: hot.len() as f64 * PAGE_SIZE as f64 / ws as f64 * 100.0,
+        footprint_mb: p.footprint as f64 / (1 << 20) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::cdf_at;
+
+    fn stats(name: &str, n: u64) -> (AppProfile, IntervalStats) {
+        let p = AppProfile::by_name(name).unwrap().scaled(8);
+        let mut s = Synth::new(p.clone(), 0, 17);
+        let st = IntervalStats::collect(&mut s, n);
+        (p, st)
+    }
+
+    #[test]
+    fn fig1_cdf_shape_most_sps_sparsely_touched() {
+        // Paper Observation 1: ~80% of superpages have only a few touched
+        // small pages per interval (for most apps).
+        let (_, st) = stats("mcf", 200_000);
+        let touched = st.touched_per_sp();
+        let cdf = cdf_at(&touched, &[128, 512]);
+        assert!(cdf[0] > 0.5,
+                "most superpages should touch <=128 pages, cdf={cdf:?}");
+    }
+
+    #[test]
+    fn hot_pages_carry_the_share() {
+        let (p, st) = stats("soplex", 200_000);
+        let (hot, min_access) = st.hot_pages(p.hot_access_share);
+        assert!(!hot.is_empty());
+        assert!(min_access >= 1);
+        let hot_set: std::collections::HashSet<u64> =
+            hot.iter().copied().collect();
+        let carried: u64 = st
+            .page_counts
+            .iter()
+            .filter(|(pg, _)| hot_set.contains(pg))
+            .map(|(_, c)| c)
+            .sum();
+        let frac = carried as f64 / st.total_accesses as f64;
+        assert!(frac >= 0.69, "hot pages carry {frac}");
+    }
+
+    #[test]
+    fn hot_dist_matches_profile_histogram_roughly() {
+        // Graph500's Table II row is extreme (61% + 38% in the two lowest
+        // buckets) — the measured distribution should reproduce the shape.
+        let (p, st) = stats("Graph500", 400_000);
+        let dist = st.hot_dist_per_sp(p.hot_access_share);
+        assert!(dist[0] + dist[1] > 0.85,
+                "low buckets should dominate: {dist:?}");
+        assert!(dist[4] + dist[5] < 0.05);
+    }
+
+    #[test]
+    fn table1_row_sane() {
+        let p = AppProfile::by_name("DICT").unwrap();
+        let r = table1_row(&p, 8, 3, 150_000);
+        assert_eq!(r.app, "DICT");
+        assert!(r.hot_percent > 1.0 && r.hot_percent < 100.0);
+        assert!(r.working_set_mb > 0.1);
+        assert!(r.footprint_mb > 1.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Multi-core workload assembly: single-app (one stream per core, shared
+//! footprint — the threads of the application) and multi-programmed mixes
+//! (Table V: 4 apps x 2 cores on the 8-core machine, disjoint address
+//! spaces offset in the high virtual bits).
+
+use crate::util::rng::Rng;
+
+use super::profile::{mixes, AppProfile};
+use super::synth::{Op, Synth};
+
+/// Virtual-address stride between apps in a mix (1 TB apart).
+pub const APP_STRIDE: u64 = 1 << 40;
+
+/// A ready-to-run multi-core workload.
+pub struct Workload {
+    pub name: String,
+    /// One stream per core.
+    pub streams: Vec<Synth>,
+}
+
+impl Workload {
+    /// Single application across all `cores` (thread-per-core, shared
+    /// virtual footprint, distinct per-thread access patterns).
+    pub fn single(profile: &AppProfile, cores: usize, scale: u64,
+                  seed: u64) -> Workload {
+        let p = profile.scaled(scale);
+        let mut root = Rng::new(seed);
+        let streams = (0..cores)
+            .map(|c| Synth::new(p.clone(), 0, root.fork(c as u64).next_u64()))
+            .collect();
+        Workload { name: p.name.to_string(), streams }
+    }
+
+    /// Multi-programmed mix: apps round-robin over cores, each app in its
+    /// own address-space slot.
+    pub fn mix_of(name: &str, apps: &[&str], cores: usize, scale: u64,
+                  seed: u64) -> Workload {
+        assert!(!apps.is_empty());
+        let mut root = Rng::new(seed);
+        let profiles: Vec<AppProfile> = apps
+            .iter()
+            .map(|a| {
+                AppProfile::by_name(a)
+                    .unwrap_or_else(|| panic!("unknown app {a}"))
+                    .scaled(scale)
+            })
+            .collect();
+        let streams = (0..cores)
+            .map(|c| {
+                let ai = c % profiles.len();
+                Synth::new(
+                    profiles[ai].clone(),
+                    ai as u64 * APP_STRIDE,
+                    root.fork(c as u64).next_u64(),
+                )
+            })
+            .collect();
+        Workload { name: name.to_string(), streams }
+    }
+
+    /// Look up a workload by name: an application or a mix (Table V).
+    pub fn by_name(name: &str, cores: usize, scale: u64, seed: u64)
+                   -> Option<Workload> {
+        if let Some(p) = AppProfile::by_name(name) {
+            return Some(Workload::single(&p, cores, scale, seed));
+        }
+        mixes()
+            .into_iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(n, apps)| Workload::mix_of(n, &apps, cores, scale, seed))
+    }
+
+    /// All workload names of the evaluation (14 apps + 3 mixes).
+    pub fn all_names() -> Vec<String> {
+        let mut v: Vec<String> =
+            AppProfile::all().iter().map(|p| p.name.to_string()).collect();
+        v.extend(mixes().iter().map(|(n, _)| n.to_string()));
+        v
+    }
+
+    pub fn cores(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn next_op(&mut self, core: usize) -> Op {
+        self.streams[core].next_op()
+    }
+
+    /// Advance every stream's phase (interval boundary).
+    pub fn advance_phase(&mut self) {
+        for s in &mut self.streams {
+            s.advance_phase();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_uses_shared_footprint() {
+        let p = AppProfile::by_name("DICT").unwrap();
+        let mut w = Workload::single(&p, 4, 8, 1);
+        assert_eq!(w.cores(), 4);
+        let fp = w.streams[0].profile.footprint.div_ceil(2 << 20) * (2 << 20);
+        for c in 0..4 {
+            for _ in 0..200 {
+                if let Op::Mem { vaddr, .. } = w.next_op(c) {
+                    assert!(vaddr < fp);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mix_separates_address_spaces() {
+        let mut w =
+            Workload::mix_of("mix1", &["cactusADM", "soplex"], 4, 8, 2);
+        // Cores 0,2 run app 0 (base 0); cores 1,3 run app 1 (base 1TB).
+        let mut saw_base0 = false;
+        let mut saw_base1 = false;
+        for c in 0..4 {
+            for _ in 0..100 {
+                if let Op::Mem { vaddr, .. } = w.next_op(c) {
+                    if vaddr < APP_STRIDE {
+                        saw_base0 = true;
+                    } else {
+                        saw_base1 = true;
+                        assert!(vaddr < 2 * APP_STRIDE);
+                    }
+                }
+            }
+        }
+        assert!(saw_base0 && saw_base1);
+    }
+
+    #[test]
+    fn by_name_finds_apps_and_mixes() {
+        assert!(Workload::by_name("mcf", 2, 8, 1).is_some());
+        assert!(Workload::by_name("mix2", 8, 8, 1).is_some());
+        assert!(Workload::by_name("not-an-app", 2, 8, 1).is_none());
+    }
+
+    #[test]
+    fn seventeen_workloads() {
+        assert_eq!(Workload::all_names().len(), 17);
+    }
+
+    #[test]
+    fn streams_are_decorrelated() {
+        let p = AppProfile::by_name("GUPS").unwrap();
+        let mut w = Workload::single(&p, 2, 8, 3);
+        let a: Vec<u64> = (0..50)
+            .filter_map(|_| match w.next_op(0) {
+                Op::Mem { vaddr, .. } => Some(vaddr),
+                _ => None,
+            })
+            .collect();
+        let b: Vec<u64> = (0..50)
+            .filter_map(|_| match w.next_op(1) {
+                Op::Mem { vaddr, .. } => Some(vaddr),
+                _ => None,
+            })
+            .collect();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload substrate: application profiles from the paper's published
+//! statistics, the synthetic stream generator, trace record/replay,
+//! multi-programmed mixes, and the Fig.-1/Table-I/Table-II analyzers.
+
+pub mod analyze;
+pub mod mix;
+pub mod profile;
+pub mod synth;
+pub mod trace;
+
+pub use analyze::{table1_row, IntervalStats, Table1Row};
+pub use mix::Workload;
+pub use profile::{mixes, AppProfile, HOT_HIST_BOUNDS};
+pub use synth::{Op, Synth};
+pub use trace::{Trace, TraceRec};

@@ -1,0 +1,337 @@
+//! Per-application workload profiles, parameterized from the paper's own
+//! published measurements (Table I footprints / working sets / hot-page
+//! fractions and Table II hot-page-per-superpage histograms).
+//!
+//! The real SPEC/PARSEC/PBBS binaries cannot run here (no Pin, no
+//! licenses); the paper's mechanisms respond to the *access distribution*,
+//! which these profiles reproduce — see DESIGN.md §1.
+
+/// Table II bucket upper bounds: hot 4 KB pages per superpage.
+pub const HOT_HIST_BOUNDS: [u64; 6] = [32, 64, 128, 256, 384, 512];
+
+/// A synthetic application profile.
+#[derive(Clone, Debug)]
+pub struct AppProfile {
+    pub name: &'static str,
+    /// Total memory footprint in bytes (paper scale).
+    pub footprint: u64,
+    /// Working set per 1e8-cycle interval in bytes (Table I).
+    pub working_set: u64,
+    /// Hot pages as a fraction of the working set (Table I "hot page %").
+    pub hot_fraction: f64,
+    /// Table II distribution: fraction of superpages whose hot-page count
+    /// falls in each bucket (1-32, 33-64, 65-128, 129-256, 257-384,
+    /// 385-512).
+    pub hot_sp_hist: [f64; 6],
+    /// Fraction of memory operations that are reads.
+    pub read_ratio: f64,
+    /// Memory operations per instruction.
+    pub memop_per_inst: f64,
+    /// Zipf skew of accesses over the hot-page set.
+    pub zipf_alpha: f64,
+    /// Fraction of accesses going to hot pages (CHOP-style: 0.70).
+    pub hot_access_share: f64,
+    /// P(sequential next line within the page) — spatial locality.
+    pub spatial: f64,
+    /// Fraction of active superpages replaced at each interval (phase
+    /// behaviour / working-set drift).
+    pub phase_drift: f64,
+}
+
+const MB: u64 = 1 << 20;
+const GB: u64 = 1 << 30;
+
+impl AppProfile {
+    /// All 14 single-application workloads of Table I/Table V.
+    pub fn all() -> Vec<AppProfile> {
+        vec![
+            AppProfile {
+                name: "cactusADM",
+                footprint: 776 * MB,
+                working_set: (74.6 * MB as f64) as u64,
+                hot_fraction: 0.0471,
+                hot_sp_hist: [0.2801, 0.341, 0.2932, 0.0065, 0.0745, 0.0047],
+                read_ratio: 0.64,
+                memop_per_inst: 0.32,
+                zipf_alpha: 0.8,
+                hot_access_share: 0.70,
+                spatial: 0.80,
+                phase_drift: 0.05,
+            },
+            AppProfile {
+                name: "mcf",
+                footprint: 1698 * MB,
+                working_set: 1089 * MB,
+                hot_fraction: 0.0236,
+                hot_sp_hist: [0.5756, 0.1648, 0.1084, 0.0995, 0.0478, 0.0039],
+                read_ratio: 0.75,
+                memop_per_inst: 0.38,
+                zipf_alpha: 0.9,
+                hot_access_share: 0.70,
+                spatial: 0.30,
+                phase_drift: 0.10,
+            },
+            AppProfile {
+                name: "soplex",
+                footprint: 1888 * MB,
+                working_set: (70.9 * MB as f64) as u64,
+                hot_fraction: 0.1963,
+                hot_sp_hist: [0.4569, 0.1088, 0.2276, 0.0928, 0.0677, 0.0462],
+                read_ratio: 0.72,
+                memop_per_inst: 0.35,
+                zipf_alpha: 0.9,
+                hot_access_share: 0.70,
+                spatial: 0.55,
+                phase_drift: 0.08,
+            },
+            AppProfile {
+                name: "canneal",
+                footprint: 972 * MB,
+                working_set: (891.6 * MB as f64) as u64,
+                hot_fraction: 0.0852,
+                hot_sp_hist: [0.6218, 0.1586, 0.089, 0.1157, 0.0091, 0.0058],
+                read_ratio: 0.70,
+                memop_per_inst: 0.36,
+                zipf_alpha: 0.6,
+                hot_access_share: 0.70,
+                spatial: 0.20,
+                phase_drift: 0.15,
+            },
+            AppProfile {
+                name: "bodytrack",
+                footprint: 620 * MB,
+                working_set: (16.2 * MB as f64) as u64,
+                hot_fraction: 0.01,
+                hot_sp_hist: [0.8319, 0.0601, 0.0766, 0.0218, 0.0063, 0.0033],
+                read_ratio: 0.68,
+                memop_per_inst: 0.30,
+                zipf_alpha: 1.1,
+                hot_access_share: 0.75,
+                spatial: 0.70,
+                phase_drift: 0.05,
+            },
+            AppProfile {
+                name: "streamcluster",
+                footprint: 150 * MB,
+                working_set: (105.5 * MB as f64) as u64,
+                hot_fraction: 0.276,
+                hot_sp_hist: [0.2377, 0.3055, 0.1438, 0.1371, 0.175, 0.0009],
+                read_ratio: 0.85,
+                memop_per_inst: 0.33,
+                zipf_alpha: 0.7,
+                hot_access_share: 0.70,
+                spatial: 0.85,
+                phase_drift: 0.03,
+            },
+            AppProfile {
+                name: "DICT",
+                footprint: 384 * MB,
+                working_set: (20.3 * MB as f64) as u64,
+                hot_fraction: 0.372,
+                hot_sp_hist: [0.2386, 0.1453, 0.2827, 0.2214, 0.1106, 0.0014],
+                read_ratio: 0.78,
+                memop_per_inst: 0.34,
+                zipf_alpha: 1.0,
+                hot_access_share: 0.72,
+                spatial: 0.40,
+                phase_drift: 0.06,
+            },
+            AppProfile {
+                name: "BFS",
+                footprint: 3718 * MB,
+                working_set: (404.1 * MB as f64) as u64,
+                hot_fraction: 0.2051,
+                hot_sp_hist: [0.0394, 0.1819, 0.5742, 0.0635, 0.056, 0.085],
+                read_ratio: 0.80,
+                memop_per_inst: 0.40,
+                zipf_alpha: 0.75,
+                hot_access_share: 0.70,
+                spatial: 0.35,
+                phase_drift: 0.20,
+            },
+            AppProfile {
+                name: "setCover",
+                footprint: 2520 * MB,
+                working_set: (49.8 * MB as f64) as u64,
+                hot_fraction: 0.3753,
+                hot_sp_hist: [0.1626, 0.2428, 0.2758, 0.1736, 0.075, 0.0702],
+                read_ratio: 0.74,
+                memop_per_inst: 0.37,
+                zipf_alpha: 0.85,
+                hot_access_share: 0.70,
+                spatial: 0.45,
+                phase_drift: 0.08,
+            },
+            AppProfile {
+                name: "MST",
+                footprint: 6660 * MB,
+                working_set: (121.2 * MB as f64) as u64,
+                hot_fraction: 0.3242,
+                hot_sp_hist: [0.1344, 0.2128, 0.2177, 0.258, 0.1631, 0.014],
+                read_ratio: 0.76,
+                memop_per_inst: 0.38,
+                zipf_alpha: 0.8,
+                hot_access_share: 0.70,
+                spatial: 0.40,
+                phase_drift: 0.12,
+            },
+            AppProfile {
+                name: "Graph500",
+                footprint: (27.4 * GB as f64) as u64,
+                working_set: (7.2 * MB as f64) as u64,
+                hot_fraction: 0.0635,
+                hot_sp_hist: [0.6148, 0.3846, 0.0006, 0.0, 0.0, 0.0],
+                read_ratio: 0.82,
+                memop_per_inst: 0.42,
+                zipf_alpha: 1.05,
+                hot_access_share: 0.70,
+                spatial: 0.25,
+                phase_drift: 0.30,
+            },
+            AppProfile {
+                name: "Linpack",
+                footprint: (23.9 * GB as f64) as u64,
+                working_set: 40 * MB,
+                hot_fraction: 0.2119,
+                hot_sp_hist: [0.2221, 0.1471, 0.2918, 0.163, 0.0964, 0.0796],
+                read_ratio: 0.66,
+                memop_per_inst: 0.30,
+                zipf_alpha: 0.7,
+                hot_access_share: 0.70,
+                spatial: 0.90,
+                phase_drift: 0.25,
+            },
+            AppProfile {
+                name: "NPB-CG",
+                footprint: (22.9 * GB as f64) as u64,
+                working_set: (40.9 * MB as f64) as u64,
+                hot_fraction: 0.247,
+                hot_sp_hist: [0.0005, 0.9629, 0.0266, 0.01, 0.0, 0.0],
+                read_ratio: 0.79,
+                memop_per_inst: 0.39,
+                zipf_alpha: 0.75,
+                hot_access_share: 0.70,
+                spatial: 0.50,
+                phase_drift: 0.10,
+            },
+            AppProfile {
+                name: "GUPS",
+                footprint: (8.06 * GB as f64) as u64,
+                working_set: (7.6 * GB as f64) as u64,
+                hot_fraction: 0.058,
+                hot_sp_hist: [0.955, 0.045, 0.0, 0.0, 0.0, 0.0],
+                read_ratio: 0.50, // read-modify-write updates
+                memop_per_inst: 0.45,
+                zipf_alpha: 0.5, // near-uniform random
+                hot_access_share: 0.40,
+                spatial: 0.05,
+                phase_drift: 0.40,
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<AppProfile> {
+        Self::all().into_iter().find(|p| p.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Scale footprint + working set down by `factor` (capacities in the
+    /// scaled config shrink by the same factor, preserving pressure).
+    pub fn scaled(&self, factor: u64) -> AppProfile {
+        let mut p = self.clone();
+        p.footprint = (p.footprint / factor).max(8 << 20);
+        p.working_set = (p.working_set / factor).max(1 << 20);
+        p
+    }
+
+    /// Sample a hot-page count for one superpage from the Table II
+    /// histogram (uniform within the chosen bucket).
+    pub fn sample_hot_count(&self, rng: &mut crate::util::rng::Rng) -> u64 {
+        let x = rng.f64();
+        let mut acc = 0.0;
+        for (i, &frac) in self.hot_sp_hist.iter().enumerate() {
+            acc += frac;
+            if x < acc {
+                let lo = if i == 0 { 1 } else { HOT_HIST_BOUNDS[i - 1] + 1 };
+                let hi = HOT_HIST_BOUNDS[i];
+                return rng.range(lo, hi + 1);
+            }
+        }
+        1
+    }
+}
+
+/// Multi-programmed mixes (Table V).
+pub fn mixes() -> Vec<(&'static str, Vec<&'static str>)> {
+    vec![
+        ("mix1", vec!["cactusADM", "soplex", "setCover", "MST"]),
+        ("mix2", vec!["setCover", "BFS", "DICT", "mcf"]),
+        ("mix3", vec!["canneal", "DICT", "MST", "soplex"]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fourteen_apps() {
+        let all = AppProfile::all();
+        assert_eq!(all.len(), 14);
+        let names: Vec<&str> = all.iter().map(|p| p.name).collect();
+        assert!(names.contains(&"GUPS") && names.contains(&"mcf"));
+    }
+
+    #[test]
+    fn histograms_normalized() {
+        for p in AppProfile::all() {
+            let s: f64 = p.hot_sp_hist.iter().sum();
+            assert!((s - 1.0).abs() < 0.02, "{}: hist sums to {s}", p.name);
+        }
+    }
+
+    #[test]
+    fn table1_spotchecks() {
+        let mcf = AppProfile::by_name("mcf").unwrap();
+        assert_eq!(mcf.footprint, 1698 << 20);
+        assert_eq!(mcf.working_set, 1089 << 20);
+        let gups = AppProfile::by_name("gups").unwrap(); // case-insensitive
+        assert!(gups.footprint > 8 * (1 << 30));
+    }
+
+    #[test]
+    fn hot_count_respects_histogram() {
+        let g = AppProfile::by_name("Graph500").unwrap();
+        let mut rng = Rng::new(1);
+        let mut low = 0;
+        let n = 10_000;
+        for _ in 0..n {
+            let c = g.sample_hot_count(&mut rng);
+            assert!((1..=512).contains(&c));
+            if c <= 32 {
+                low += 1;
+            }
+        }
+        // Graph500: 61.48% of superpages have 1-32 hot pages.
+        let frac = low as f64 / n as f64;
+        assert!((frac - 0.6148).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn scaling_floors() {
+        let sc = AppProfile::by_name("streamcluster").unwrap().scaled(8);
+        assert_eq!(sc.footprint, (150 << 20) / 8);
+        let tiny = AppProfile::by_name("bodytrack").unwrap().scaled(1 << 30);
+        assert!(tiny.footprint >= 8 << 20);
+    }
+
+    #[test]
+    fn mixes_reference_real_apps() {
+        for (_, apps) in mixes() {
+            assert_eq!(apps.len(), 4);
+            for a in apps {
+                assert!(AppProfile::by_name(a).is_some(), "unknown app {a}");
+            }
+        }
+    }
+}

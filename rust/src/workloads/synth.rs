@@ -1,0 +1,342 @@
+//! Synthetic access-stream generator driven by an [`AppProfile`].
+//!
+//! The generative model (DESIGN.md §1): the application's footprint is a
+//! range of virtual superpages; at any time a subset is *active* (the
+//! working set). Each active superpage owns a set of hot 4 KB pages whose
+//! count is drawn from the app's Table II histogram. Accesses split
+//! `hot_access_share` : rest between a Zipf draw over the hot set and a
+//! uniform draw over the touched set; line selection within a page follows
+//! the spatial-locality knob. At interval boundaries the active set drifts.
+
+use crate::config::{PAGES_PER_SP, PAGE_SIZE, SP_SIZE};
+use crate::util::rng::{Rng, Zipf};
+
+use super::profile::AppProfile;
+
+/// One generated operation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Non-memory instructions (batched).
+    Think(u32),
+    /// A memory access.
+    Mem { vaddr: u64, is_write: bool },
+}
+
+/// Per-superpage generator state.
+#[derive(Clone, Debug)]
+struct ActiveSp {
+    /// Virtual superpage index within the app's footprint.
+    sp: u64,
+    /// Hot 4 KB page indices within the superpage (0..512).
+    hot_pages: Vec<u16>,
+    /// Touched-but-cold page indices.
+    cold_pages: Vec<u16>,
+}
+
+/// The stream generator.
+#[derive(Clone, Debug)]
+pub struct Synth {
+    pub profile: AppProfile,
+    /// Virtual base address of this app's region (mixes offset each app).
+    pub base: u64,
+    rng: Rng,
+    active: Vec<ActiveSp>,
+    /// Flattened (active index, page) list of hot pages + zipf over it.
+    hot_flat: Vec<(u32, u16)>,
+    zipf: Option<Zipf>,
+    n_sps: u64,
+    /// Sequential-access cursor (line index) for spatial locality.
+    cursor_page: u64,
+    cursor_line: u64,
+    /// Think-batch accumulator.
+    think_per_mem: f64,
+    think_credit: f64,
+    /// A Think batch was just emitted; the next op must be the Mem.
+    mem_due: bool,
+}
+
+impl Synth {
+    pub fn new(profile: AppProfile, base: u64, seed: u64) -> Synth {
+        let mut rng = Rng::new(seed ^ 0x5717C0DE);
+        let n_sps = profile.footprint.div_ceil(SP_SIZE).max(1);
+        let think_per_mem = (1.0 / profile.memop_per_inst - 1.0).max(0.0);
+        let mut s = Synth {
+            profile,
+            base,
+            rng: rng.fork(1),
+            active: Vec::new(),
+            hot_flat: Vec::new(),
+            zipf: None,
+            n_sps,
+            cursor_page: 0,
+            cursor_line: 0,
+            think_per_mem,
+            think_credit: 0.0,
+            mem_due: false,
+        };
+        s.rebuild_active(&mut rng, 1.0);
+        s
+    }
+
+    /// Number of active superpages targeted by the working set.
+    fn target_active(&self) -> usize {
+        // Average touched pages per superpage: hot count (Table II mean)
+        // times a touched/hot expansion factor; working_set / that.
+        let mean_hot = self.mean_hot_per_sp();
+        let touched_per_sp = (mean_hot * 1.5).min(PAGES_PER_SP as f64);
+        let ws_pages = (self.profile.working_set / PAGE_SIZE).max(1) as f64;
+        ((ws_pages / touched_per_sp).ceil() as usize)
+            .clamp(1, self.n_sps as usize)
+    }
+
+    fn mean_hot_per_sp(&self) -> f64 {
+        // Expected value of the Table II histogram (bucket midpoints).
+        let mids = [16.5, 48.5, 96.5, 192.5, 320.5, 448.5];
+        self.profile
+            .hot_sp_hist
+            .iter()
+            .zip(mids.iter())
+            .map(|(f, m)| f * m)
+            .sum()
+    }
+
+    /// (Re)build the active set; `frac` = fraction of slots replaced.
+    fn rebuild_active(&mut self, rng: &mut Rng, frac: f64) {
+        let target = self.target_active();
+        let n_replace = ((target as f64 * frac).ceil() as usize).min(target);
+        // Shrink or grow to target.
+        self.active.truncate(target.saturating_sub(n_replace));
+        while self.active.len() < target {
+            let sp = rng.below(self.n_sps);
+            let hot_n = self
+                .profile
+                .sample_hot_count(rng)
+                .min(PAGES_PER_SP) as usize;
+            let touched_n =
+                ((hot_n as f64 * 1.5) as usize).clamp(hot_n, PAGES_PER_SP as usize);
+            let pages = rng.sample_indices(PAGES_PER_SP as usize, touched_n);
+            let hot_pages: Vec<u16> =
+                pages[..hot_n].iter().map(|&p| p as u16).collect();
+            let cold_pages: Vec<u16> =
+                pages[hot_n..].iter().map(|&p| p as u16).collect();
+            self.active.push(ActiveSp { sp, hot_pages, cold_pages });
+        }
+        // Rebuild the flat hot list + zipf.
+        self.hot_flat.clear();
+        for (i, a) in self.active.iter().enumerate() {
+            for &p in &a.hot_pages {
+                self.hot_flat.push((i as u32, p));
+            }
+        }
+        // Shuffle so zipf rank 0 isn't always superpage 0.
+        rng.shuffle(&mut self.hot_flat);
+        self.zipf = if self.hot_flat.is_empty() {
+            None
+        } else {
+            Some(Zipf::new(self.hot_flat.len() as u64,
+                           self.profile.zipf_alpha.max(0.05)))
+        };
+    }
+
+    /// Advance the phase (call at sampling-interval boundaries).
+    pub fn advance_phase(&mut self) {
+        let drift = self.profile.phase_drift;
+        let mut rng = self.rng.fork(0x9A5E_5A17);
+        self.rebuild_active(&mut rng, drift);
+    }
+
+    /// Generate the next operation: a Think batch (the non-memory
+    /// instructions preceding an access) alternating with the Mem op it
+    /// precedes, at the profile's memop ratio.
+    pub fn next_op(&mut self) -> Op {
+        if !self.mem_due {
+            // Accrue the think budget for exactly one upcoming memory op.
+            self.think_credit += self.think_per_mem;
+            let n = self.think_credit as u32;
+            self.think_credit -= n as f64;
+            if n > 0 {
+                self.mem_due = true;
+                return Op::Think(n);
+            }
+        }
+        self.mem_due = false;
+        Op::Mem {
+            vaddr: self.gen_vaddr(),
+            is_write: !self.rng.chance(self.profile.read_ratio),
+        }
+    }
+
+    /// Generate only a memory access (used by analyzers).
+    pub fn next_mem(&mut self) -> (u64, bool) {
+        let vaddr = self.gen_vaddr();
+        let is_write = !self.rng.chance(self.profile.read_ratio);
+        (vaddr, is_write)
+    }
+
+    fn gen_vaddr(&mut self) -> u64 {
+        // Spatial locality: continue the sequential cursor.
+        if self.cursor_line > 0 && self.rng.chance(self.profile.spatial) {
+            self.cursor_line = (self.cursor_line + 1) % (PAGE_SIZE / 64);
+            return self.base
+                + self.cursor_page * PAGE_SIZE
+                + self.cursor_line * 64;
+        }
+        let (sp, page) = if !self.hot_flat.is_empty()
+            && self.rng.chance(self.profile.hot_access_share)
+        {
+            let rank = self.zipf.as_ref().unwrap().sample(&mut self.rng);
+            let (ai, p) = self.hot_flat[rank as usize];
+            (self.active[ai as usize].sp, p as u64)
+        } else {
+            // Uniform over the touched working set.
+            let ai = self.rng.below(self.active.len() as u64) as usize;
+            let a = &self.active[ai];
+            let total = a.hot_pages.len() + a.cold_pages.len();
+            let k = self.rng.below(total as u64) as usize;
+            let p = if k < a.hot_pages.len() {
+                a.hot_pages[k]
+            } else {
+                a.cold_pages[k - a.hot_pages.len()]
+            };
+            (a.sp, p as u64)
+        };
+        let page_global = sp * PAGES_PER_SP + page;
+        self.cursor_page = page_global;
+        self.cursor_line = self.rng.below(PAGE_SIZE / 64);
+        self.base + page_global * PAGE_SIZE + self.cursor_line * 64
+    }
+
+    /// Footprint in virtual superpages.
+    pub fn n_superpages(&self) -> u64 {
+        self.n_sps
+    }
+
+    pub fn active_superpages(&self) -> usize {
+        self.active.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn synth(name: &str) -> Synth {
+        let p = AppProfile::by_name(name).unwrap().scaled(8);
+        Synth::new(p, 0, 42)
+    }
+
+    #[test]
+    fn addresses_stay_in_footprint() {
+        let mut s = synth("mcf");
+        let fp = s.profile.footprint.div_ceil(SP_SIZE) * SP_SIZE;
+        for _ in 0..50_000 {
+            let (v, _) = s.next_mem();
+            assert!(v < fp, "vaddr {v:#x} outside footprint {fp:#x}");
+        }
+    }
+
+    #[test]
+    fn base_offsets_all_addresses() {
+        let p = AppProfile::by_name("DICT").unwrap().scaled(8);
+        let mut s = Synth::new(p, 1 << 40, 7);
+        for _ in 0..1000 {
+            let (v, _) = s.next_mem();
+            assert!(v >= 1 << 40);
+        }
+    }
+
+    #[test]
+    fn read_ratio_approximated() {
+        let mut s = synth("streamcluster"); // 85% reads
+        let n = 20_000;
+        let reads = (0..n).filter(|_| !s.next_mem().1).count();
+        let ratio = reads as f64 / n as f64;
+        assert!((ratio - 0.85).abs() < 0.03, "ratio={ratio}");
+    }
+
+    #[test]
+    fn hot_pages_dominate_accesses() {
+        // CHOP-style check: the top pages by access count should carry
+        // ~hot_access_share of all accesses.
+        let mut s = synth("soplex");
+        let mut counts: HashMap<u64, u64> = HashMap::new();
+        let n = 200_000u64;
+        for _ in 0..n {
+            let (v, _) = s.next_mem();
+            *counts.entry(v / PAGE_SIZE).or_default() += 1;
+        }
+        let mut by_count: Vec<u64> = counts.values().copied().collect();
+        by_count.sort_unstable_by(|a, b| b.cmp(a));
+        let hot_n = (counts.len() as f64 * 0.5) as usize; // generous cut
+        let hot_sum: u64 = by_count[..hot_n].iter().sum();
+        assert!(hot_sum as f64 / n as f64 > 0.65,
+                "hot pages carry {:.2}", hot_sum as f64 / n as f64);
+    }
+
+    #[test]
+    fn working_set_size_in_range() {
+        let mut s = synth("soplex"); // ws 70.9MB/8 ≈ 8.9MB ≈ 2269 pages
+        let mut touched = std::collections::HashSet::new();
+        for _ in 0..300_000 {
+            let (v, _) = s.next_mem();
+            touched.insert(v / PAGE_SIZE);
+        }
+        let ws_pages = (s.profile.working_set / PAGE_SIZE) as f64;
+        let got = touched.len() as f64;
+        assert!(got > ws_pages * 0.2 && got < ws_pages * 3.0,
+                "touched {got} vs target {ws_pages}");
+    }
+
+    #[test]
+    fn think_ops_interleave() {
+        let mut s = synth("bodytrack"); // 0.30 memops/inst -> thinks exist
+        let mut thinks = 0u64;
+        let mut mems = 0u64;
+        for _ in 0..10_000 {
+            match s.next_op() {
+                Op::Think(n) => thinks += n as u64,
+                Op::Mem { .. } => mems += 1,
+            }
+        }
+        let ratio = mems as f64 / (mems + thinks) as f64;
+        assert!((ratio - 0.30).abs() < 0.05, "memop ratio {ratio}");
+    }
+
+    #[test]
+    fn phase_drift_changes_active_set() {
+        let mut s = synth("BFS");
+        let before: Vec<u64> = s.active.iter().map(|a| a.sp).collect();
+        s.advance_phase();
+        let after: Vec<u64> = s.active.iter().map(|a| a.sp).collect();
+        assert_ne!(before, after, "drift must replace some superpages");
+        // But not everything (drift = 0.20).
+        let kept = before.iter().filter(|sp| after.contains(sp)).count();
+        assert!(kept > 0, "some superpages must persist");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = AppProfile::by_name("mcf").unwrap().scaled(8);
+        let mut a = Synth::new(p.clone(), 0, 9);
+        let mut b = Synth::new(p, 0, 9);
+        for _ in 0..1000 {
+            assert_eq!(a.next_mem(), b.next_mem());
+        }
+    }
+
+    #[test]
+    fn gups_is_low_locality() {
+        let mut g = synth("GUPS");
+        let mut s = synth("streamcluster");
+        let uniq = |x: &mut Synth| {
+            let mut set = std::collections::HashSet::new();
+            for _ in 0..20_000 {
+                set.insert(x.next_mem().0 / PAGE_SIZE);
+            }
+            set.len()
+        };
+        assert!(uniq(&mut g) > 2 * uniq(&mut s),
+                "GUPS must touch far more distinct pages");
+    }
+}

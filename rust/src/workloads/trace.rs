@@ -1,0 +1,175 @@
+//! Compact binary trace format: record a generated stream once, replay it
+//! identically across policies (and across runs — the e2e driver uses this
+//! to guarantee every system sees byte-identical input).
+//!
+//! Record layout (little-endian u64 per op):
+//!   bit 63      = is_write
+//!   bits 62..32 = think instructions preceding this access (31 bits)
+//!   bits 31..0  = vaddr / 64 truncated? -- no: vaddr stored separately.
+//! We use a simple two-word record: [meta, vaddr]. Header: magic, version,
+//! record count.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::synth::Op;
+
+const MAGIC: u64 = 0x5241_494E_424F_5754; // "RAINBOWT"
+const VERSION: u64 = 1;
+
+/// One replayable record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRec {
+    pub think_before: u32,
+    pub vaddr: u64,
+    pub is_write: bool,
+}
+
+/// In-memory trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub recs: Vec<TraceRec>,
+}
+
+impl Trace {
+    /// Capture `n_mem` memory operations from an op stream.
+    pub fn record<F: FnMut() -> Op>(mut next: F, n_mem: usize) -> Trace {
+        let mut recs = Vec::with_capacity(n_mem);
+        let mut think: u64 = 0;
+        while recs.len() < n_mem {
+            match next() {
+                Op::Think(n) => think += n as u64,
+                Op::Mem { vaddr, is_write } => {
+                    recs.push(TraceRec {
+                        think_before: think.min(u32::MAX as u64) as u32,
+                        vaddr,
+                        is_write,
+                    });
+                    think = 0;
+                }
+            }
+        }
+        Trace { recs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.recs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recs.is_empty()
+    }
+
+    /// Total instructions represented (memory ops + think).
+    pub fn instructions(&self) -> u64 {
+        self.recs
+            .iter()
+            .map(|r| 1 + r.think_before as u64)
+            .sum()
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.recs.len() as u64).to_le_bytes())?;
+        for r in &self.recs {
+            let meta = ((r.is_write as u64) << 63) | ((r.think_before as u64) << 32);
+            w.write_all(&meta.to_le_bytes())?;
+            w.write_all(&r.vaddr.to_le_bytes())?;
+        }
+        w.flush()
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Trace> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut buf = [0u8; 8];
+        let mut read_u64 = |r: &mut BufReader<File>| -> std::io::Result<u64> {
+            r.read_exact(&mut buf)?;
+            Ok(u64::from_le_bytes(buf))
+        };
+        let magic = read_u64(&mut r)?;
+        if magic != MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData, "bad trace magic"));
+        }
+        let version = read_u64(&mut r)?;
+        if version != VERSION {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unsupported trace version {version}")));
+        }
+        let n = read_u64(&mut r)? as usize;
+        let mut recs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let meta = read_u64(&mut r)?;
+            let vaddr = read_u64(&mut r)?;
+            recs.push(TraceRec {
+                think_before: ((meta >> 32) & 0x7FFF_FFFF) as u32,
+                vaddr,
+                is_write: meta >> 63 == 1,
+            });
+        }
+        Ok(Trace { recs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::profile::AppProfile;
+    use crate::workloads::synth::Synth;
+
+    #[test]
+    fn record_from_synth() {
+        let p = AppProfile::by_name("DICT").unwrap().scaled(64);
+        let mut s = Synth::new(p, 0, 3);
+        let t = Trace::record(|| s.next_op(), 1000);
+        assert_eq!(t.len(), 1000);
+        assert!(t.instructions() >= 1000);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = AppProfile::by_name("mcf").unwrap().scaled(64);
+        let mut s = Synth::new(p, 0, 5);
+        let t = Trace::record(|| s.next_op(), 500);
+        let dir = std::env::temp_dir().join("rainbow_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        t.save(&path).unwrap();
+        let u = Trace::load(&path).unwrap();
+        assert_eq!(t.recs, u.recs);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("rainbow_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.trace");
+        std::fs::write(&path, b"not a trace file, definitely").unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_bit_and_think_preserved() {
+        let t = Trace {
+            recs: vec![
+                TraceRec { think_before: 7, vaddr: 0xABCDE000, is_write: true },
+                TraceRec { think_before: 0, vaddr: 0x1000, is_write: false },
+            ],
+        };
+        let dir = std::env::temp_dir().join("rainbow_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.trace");
+        t.save(&path).unwrap();
+        let u = Trace::load(&path).unwrap();
+        assert_eq!(u.recs[0].is_write, true);
+        assert_eq!(u.recs[0].think_before, 7);
+        assert_eq!(u.recs[1].is_write, false);
+        std::fs::remove_file(&path).ok();
+    }
+}

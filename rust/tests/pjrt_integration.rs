@@ -1,0 +1,123 @@
+//! PJRT integration: load the real AOT artifacts (built by
+//! `make artifacts`) and verify the accelerated pipeline is bit-exact with
+//! the native fallback — the contract `runtime::native` documents.
+//!
+//! These tests are skipped (not failed) when artifacts are absent so
+//! `cargo test` works on a fresh checkout; `make test` always builds the
+//! artifacts first.
+
+use rainbow::config::Config;
+use rainbow::rainbow::counters::TwoStageCounters;
+use rainbow::rainbow::migration::UtilityParams;
+use rainbow::runtime::{native, HotPageIdentifier, PjrtRuntime};
+use rainbow::util::rng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = PjrtRuntime::default_dir();
+    match PjrtRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT test (artifacts not built?): {e:#}");
+            None
+        }
+    }
+}
+
+const PARAMS: [f32; 8] = [62.0, 547.0, 43.0, 91.0, 4096.0, 4096.0, 64.0, 3.0];
+
+#[test]
+fn stage1_pjrt_matches_native_exactly() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(0xA0A0);
+    for trial in 0..5 {
+        let n = [256usize, 2048, 16384, 1000, 7][trial];
+        let reads: Vec<i32> =
+            (0..n).map(|_| rng.below(0x8000) as i32).collect();
+        let writes: Vec<i32> =
+            (0..n).map(|_| rng.below(0x8000) as i32).collect();
+        let (score_p, idx_p) = rt.stage1(&reads, &writes, &PARAMS).unwrap();
+        // Native over the same *padded* input for index agreement.
+        let mut rp = reads.clone();
+        rp.resize(rainbow::runtime::pjrt::N_SP, 0);
+        let mut wp = writes.clone();
+        wp.resize(rainbow::runtime::pjrt::N_SP, 0);
+        let (score_n, idx_n) =
+            native::stage1(&rp, &wp, &PARAMS, rainbow::runtime::pjrt::TOP_N);
+        assert_eq!(&score_p[..n], &score_n[..n], "trial {trial} scores");
+        assert_eq!(idx_p, idx_n, "trial {trial} top-k indices");
+    }
+}
+
+#[test]
+fn stage2_pjrt_matches_native_exactly() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(0xB1B1);
+    for &slots in &[1usize, 16, 100, 128] {
+        let n = slots * 512;
+        let reads: Vec<i32> =
+            (0..n).map(|_| rng.below(0x8000) as i32).collect();
+        let writes: Vec<i32> =
+            (0..n).map(|_| rng.below(0x8000) as i32).collect();
+        let (b_p, h_p) = rt.stage2(&reads, &writes, &PARAMS).unwrap();
+        let (b_n, h_n) = native::stage2(&reads, &writes, &PARAMS);
+        assert_eq!(b_p, b_n, "slots={slots} benefit");
+        assert_eq!(h_p, h_n, "slots={slots} hot mask");
+    }
+}
+
+#[test]
+fn identifier_backend_agreement_end_to_end() {
+    let dir = PjrtRuntime::default_dir();
+    let Ok(accel) = HotPageIdentifier::pjrt(&dir) else {
+        eprintln!("skipping identifier agreement test (no artifacts)");
+        return;
+    };
+    let native_id = HotPageIdentifier::native();
+    assert_eq!(accel.backend_name(), "pjrt");
+
+    let params = UtilityParams::from_config(&Config::paper());
+    let mut counters = TwoStageCounters::new(2048, 64);
+    let mut rng = Rng::new(0xC2C2);
+    // Build a realistic counting state: skewed superpage traffic.
+    for _ in 0..200_000 {
+        let sp = (rng.below(64) * rng.below(32) / 31) as u32; // skewed
+        counters.record(sp, rng.below(512) as u16, rng.chance(0.3));
+    }
+    let top_a = accel.select_top(&counters, &params);
+    let top_n = native_id.select_top(&counters, &params);
+    assert_eq!(top_a, top_n, "stage-1 selection must agree");
+
+    counters.rotate(&top_a);
+    for _ in 0..100_000 {
+        let sp = top_a[rng.below(top_a.len() as u64) as usize];
+        counters.record(sp, rng.below(64) as u16, rng.chance(0.5));
+    }
+    let v_a = accel.classify(&counters, &params);
+    let v_n = native_id.classify(&counters, &params);
+    assert_eq!(v_a.len(), v_n.len());
+    for (a, n) in v_a.iter().zip(v_n.iter()) {
+        assert_eq!(a.sp, n.sp);
+        assert_eq!(a.hot_pages, n.hot_pages);
+    }
+}
+
+#[test]
+fn rainbow_policy_runs_with_accel_backend() {
+    if runtime().is_none() {
+        return;
+    }
+    // Full simulation with the PJRT identifier on a small workload.
+    let mut spec = rainbow::report::RunSpec::new("DICT", "rainbow");
+    spec.scale = 64;
+    spec.instructions = 80_000;
+    spec.interval_cycles = 100_000;
+    spec.top_n = 16;
+    spec.accel = true;
+    let accel = rainbow::report::run_uncached(&spec);
+    spec.accel = false;
+    let native = rainbow::report::run_uncached(&spec);
+    // Identical identification decisions => identical simulations.
+    assert_eq!(accel.cycles, native.cycles,
+               "accel and native runs must be cycle-identical");
+    assert_eq!(accel.migrations, native.migrations);
+}

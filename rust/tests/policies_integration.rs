@@ -1,0 +1,131 @@
+//! Cross-policy integration tests: the paper's qualitative claims, each
+//! checked on real (small) simulations. These encode the *shape* contract
+//! of the reproduction (DESIGN.md §4).
+
+use rainbow::report::{run_uncached, RunSpec};
+
+fn spec(workload: &str, policy: &str) -> RunSpec {
+    let mut s = RunSpec::new(workload, policy);
+    s.scale = 32;
+    s.instructions = 600_000;
+    s.seed = 42;
+    s
+}
+
+#[test]
+fn superpages_slash_mpki_by_orders_of_magnitude() {
+    // Fig. 7: flat 4 KB MPKI vs Rainbow MPKI differs by >= 100x.
+    let flat = run_uncached(&spec("mcf", "flat"));
+    let rb = run_uncached(&spec("mcf", "rainbow"));
+    assert!(flat.mpki() > 1.0, "flat MPKI {:.3} too low", flat.mpki());
+    assert!(rb.mpki() < flat.mpki() / 100.0,
+            "rainbow {:.4} vs flat {:.2}", rb.mpki(), flat.mpki());
+}
+
+#[test]
+fn tlb_miss_cycles_shrink_with_superpages() {
+    // Fig. 8: 4 KB systems spend a large fraction on TLB misses;
+    // superpage systems spend a tiny one.
+    let flat = run_uncached(&spec("soplex", "flat"));
+    let rb = run_uncached(&spec("soplex", "rainbow"));
+    assert!(flat.tlb_miss_cycle_frac() > 0.01);
+    assert!(rb.tlb_miss_cycle_frac() < flat.tlb_miss_cycle_frac() / 5.0);
+}
+
+#[test]
+fn dram_only_is_the_upper_bound() {
+    // Fig. 10: DRAM-only beats every hybrid policy.
+    for w in ["DICT", "GUPS"] {
+        let dram = run_uncached(&spec(w, "dram")).ipc();
+        for p in ["flat", "hscc4k", "hscc2m", "rainbow"] {
+            let ipc = run_uncached(&spec(w, p)).ipc();
+            assert!(dram > ipc, "{w}: dram {dram:.4} <= {p} {ipc:.4}");
+        }
+    }
+}
+
+#[test]
+fn rainbow_beats_flat_static() {
+    // Headline direction (Fig. 10): Rainbow > Flat-static on hot-heavy
+    // workloads. Needs the standard 1/8-scale regime and enough
+    // instructions to amortize migration warm-up.
+    for w in ["DICT", "soplex"] {
+        let mut sf = RunSpec::new(w, "flat");
+        sf.scale = 8;
+        sf.instructions = 1_500_000;
+        sf.seed = 42;
+        let mut sr = sf.clone();
+        sr.policy = "rainbow".to_string();
+        let flat = run_uncached(&sf).ipc();
+        let rb = run_uncached(&sr).ipc();
+        assert!(rb > flat, "{w}: rainbow {rb:.4} <= flat {flat:.4}");
+    }
+}
+
+#[test]
+fn superpage_migration_traffic_exceeds_rainbow_when_it_migrates() {
+    // Fig. 11: per migrated unit, HSCC-2MB moves 512x more than needed;
+    // Rainbow's traffic per migration is always 4 KB.
+    let rb = run_uncached(&spec("DICT", "rainbow"));
+    let h2 = run_uncached(&spec("DICT", "hscc2m"));
+    if h2.migrations > 0 && rb.migrations > 0 {
+        let per_mig_2m = h2.migrated_bytes / h2.migrations;
+        let per_mig_rb = rb.migrated_bytes / rb.migrations;
+        assert_eq!(per_mig_2m, 512 * per_mig_rb);
+    }
+    // And Rainbow must actually migrate on a hot-heavy app.
+    assert!(rb.migrations > 0);
+}
+
+#[test]
+fn rainbow_never_shoots_down_on_migrate_in() {
+    // §III-F: NVM->DRAM migration requires no TLB shootdown; shootdowns
+    // only come from DRAM evictions. With DRAM far larger than the
+    // footprint at this scale, there must be zero.
+    let rb = run_uncached(&spec("streamcluster", "rainbow"));
+    assert!(rb.migrations > 0);
+    assert_eq!(rb.shootdowns, 0);
+    // HSCC-4KB by contrast shoots down once per migration.
+    let h4 = run_uncached(&spec("streamcluster", "hscc4k"));
+    assert!(h4.shootdowns >= h4.migrations.min(1));
+}
+
+#[test]
+fn superpage_tlb_hit_rate_is_high() {
+    // §III-E: the mechanism relies on R_hit being high (>99% in the
+    // paper); check Rainbow sustains it on a large-footprint app.
+    let rb = run_uncached(&spec("Graph500", "rainbow"));
+    assert!(rb.sp_hit_rate > 0.90, "R_hit = {:.4}", rb.sp_hit_rate);
+}
+
+#[test]
+fn energy_hybrids_beat_dram_only_on_background() {
+    // Fig. 12 direction: Rainbow consumes less energy than Flat-static
+    // (hot pages served by DRAM instead of expensive PCM writes).
+    let flat = run_uncached(&spec("DICT", "flat"));
+    let rb = run_uncached(&spec("DICT", "rainbow"));
+    // At 1/32 scale with short runs the background term is small; the
+    // robust direction is "not meaningfully worse" (full-scale runs in
+    // EXPERIMENTS.md show the paper's 45% advantage regime).
+    assert!(rb.energy_pj < flat.energy_pj * 1.15,
+            "rainbow {:.2e} vs flat {:.2e}", rb.energy_pj, flat.energy_pj);
+}
+
+#[test]
+fn deterministic_replay_across_policies() {
+    // The same spec twice yields identical metrics (whole-suite guarantee).
+    let a = run_uncached(&spec("mix2", "rainbow"));
+    let b = run_uncached(&spec("mix2", "rainbow"));
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.tlb_miss_2m, b.tlb_miss_2m);
+}
+
+#[test]
+fn mixes_run_all_policies() {
+    for p in ["flat", "hscc4k", "hscc2m", "rainbow", "dram"] {
+        let m = run_uncached(&spec("mix1", p));
+        assert_eq!(m.instructions, 600_000, "policy {p}");
+        assert!(m.ipc() > 0.0);
+    }
+}
