@@ -1,8 +1,9 @@
 //! END-TO-END driver (DESIGN.md deliverable): record a real workload
-//! trace once, persist it, replay the identically-seeded stream through
-//! all five systems, and report the paper's headline metric (normalized
-//! IPC, Fig. 10) plus MPKI, migration traffic, and energy — proving
-//! workload generation, trace record/replay, every policy, the engine,
+//! trace once, persist it, run the identically-seeded stream through all
+//! five systems — concurrently, on the sweep orchestrator's scoped
+//! workers — and report the paper's headline metric (normalized IPC,
+//! Fig. 10) plus MPKI, migration traffic, and energy, proving workload
+//! generation, trace record/replay, every policy, the parallel harness,
 //! and the metrics stack compose.
 //!
 //! ```sh
@@ -10,8 +11,9 @@
 //! ```
 
 use rainbow::config::Config;
-use rainbow::policies::{self, Policy};
-use rainbow::sim::{engine, EngineConfig};
+use rainbow::policies;
+use rainbow::report::sweep::{self, SweepConfig};
+use rainbow::report::RunSpec;
 use rainbow::util::tables::Table;
 use rainbow::workloads::{Trace, Workload};
 
@@ -43,33 +45,30 @@ fn main() {
     println!("traces saved to {} ({} memory records)\n",
              trace_dir.display(), total_recs);
 
-    // 2. Run every policy over the identically-seeded stream.
-    let mut rows = Vec::new();
-    let mut flat_ipc = 0.0;
-    for name in policies::all_names() {
-        let mut w = Workload::by_name(&app, cfg.cores, 8, 0xE2E).unwrap();
-        let mut p: Box<dyn Policy> =
-            policies::by_name(name, &cfg, false).unwrap();
-        let t0 = std::time::Instant::now();
-        let out = engine::run(p.as_mut(), &mut w,
-                              &EngineConfig::new(instructions,
-                                                 cfg.interval_cycles));
-        let m = out.metrics;
-        if name == "flat" {
-            flat_ipc = m.ipc();
-        }
-        println!("{:<22} {:>9.1} ms wall, IPC {:.4}",
-                 out.policy, t0.elapsed().as_secs_f64() * 1e3, m.ipc());
-        rows.push((out.policy.to_string(), m));
-    }
+    // 2. All five policies over the identically-seeded stream, as one
+    //    parallel sweep matrix (each cell re-derives the same workload
+    //    stream from the shared seed).
+    let mut base = RunSpec::new(&app, "flat");
+    base.scale = 8;
+    base.instructions = instructions;
+    base.seed = 0xE2E;
+    let policy_names: Vec<String> =
+        policies::all_names().iter().map(|s| s.to_string()).collect();
+    let specs = sweep::matrix(&base, &[app.clone()], &policy_names);
+    let t0 = std::time::Instant::now();
+    let out = sweep::run(&specs, &SweepConfig::default());
+    println!("{} systems simulated concurrently on {} workers in {:.1} ms",
+             specs.len(), out.workers_used,
+             t0.elapsed().as_secs_f64() * 1e3);
+    let flat_ipc = out.metrics[0].ipc(); // all_names()[0] == "flat"
 
     // 3. Report (Fig. 10-style).
     let mut t = Table::new(
         &format!("End-to-end: {app} x 5 systems ({instructions} instr)"),
         &["system", "IPC", "norm IPC", "MPKI", "mig traffic MB",
           "shootdowns", "energy mJ"]);
-    for (name, m) in &rows {
-        t.row(&[name.clone(),
+    for (s, m) in specs.iter().zip(&out.metrics) {
+        t.row(&[s.policy.clone(),
                 format!("{:.4}", m.ipc()),
                 format!("{:.2}", m.ipc() / flat_ipc.max(1e-12)),
                 format!("{:.3}", m.mpki()),
@@ -81,8 +80,11 @@ fn main() {
     }
     t.emit(Some("target/figures/e2e_policy_compare.csv"));
 
-    let rb = rows.iter().find(|(n, _)| n == "Rainbow").unwrap();
+    let rb_at = policies::all_names()
+        .iter()
+        .position(|&n| n == "rainbow")
+        .unwrap();
     println!("Rainbow/Flat-static speedup: {:.2}x \
               (paper: up to 2.9x, 1.727x average)",
-             rb.1.ipc() / flat_ipc.max(1e-12));
+             out.metrics[rb_at].ipc() / flat_ipc.max(1e-12));
 }

@@ -1,23 +1,27 @@
 //! Quickstart: simulate one workload under Rainbow and the Flat-static
-//! baseline, print the headline comparison.
+//! baseline — both runs in parallel on the sweep orchestrator — and
+//! print the headline comparison.
 //!
 //! ```sh
 //! cargo run --release --example quickstart [app]
 //! ```
 
-use rainbow::report::{run_uncached, RunSpec};
+use rainbow::report::sweep::{self, SweepConfig};
+use rainbow::report::RunSpec;
 use rainbow::util::tables::Table;
 
 fn main() {
     let app = std::env::args().nth(1).unwrap_or_else(|| "DICT".to_string());
     println!("simulating {app} under Flat-static and Rainbow \
-              (1/8-scale Table IV machine)...\n");
+              (1/8-scale Table IV machine, parallel workers)...\n");
 
     let mut spec = RunSpec::new(&app, "flat");
     spec.instructions = 3_000_000;
-    let flat = run_uncached(&spec);
-    spec.policy = "rainbow".to_string();
-    let rb = run_uncached(&spec);
+    let mut rb_spec = spec.clone();
+    rb_spec.policy = "rainbow".to_string();
+    let metrics =
+        sweep::run_parallel(&[spec, rb_spec], &SweepConfig::default());
+    let (flat, rb) = (&metrics[0], &metrics[1]);
 
     let mut t = Table::new(
         &format!("{app}: Rainbow vs Flat-static"),

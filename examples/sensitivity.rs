@@ -1,12 +1,16 @@
 //! Sensitivity study driver (Figs. 13/14 + threshold/NVM-latency studies
-//! from §IV-F): sweeps sampling interval, top-N, migration threshold, and
-//! NVM latency scaling for Rainbow on chosen apps.
+//! from §IV-F): sweeps sampling interval, top-N, and migration threshold
+//! for Rainbow on a chosen app. The interval and top-N sweeps run as
+//! parallel spec matrices on the sweep orchestrator; the threshold sweep
+//! patches a `Config` knob `RunSpec` cannot express, so it stays a local
+//! serial loop.
 //!
 //! ```sh
 //! cargo run --release --example sensitivity [app]
 //! ```
 
-use rainbow::report::{run_uncached, RunSpec};
+use rainbow::report::sweep::{self, SweepConfig};
+use rainbow::report::RunSpec;
 use rainbow::util::tables::Table;
 
 fn base_spec(app: &str) -> RunSpec {
@@ -20,13 +24,21 @@ fn main() {
 
     // Fig. 13: sampling interval sweep (paper: 1e5..1e9 full-scale).
     let base_interval = base_spec(&app).config().interval_cycles;
+    let interval_specs: Vec<RunSpec> = [0.01, 0.1, 1.0, 10.0]
+        .iter()
+        .map(|f| {
+            let mut s = base_spec(&app);
+            s.interval_cycles =
+                ((base_interval as f64 * f) as u64).max(10_000);
+            s
+        })
+        .collect();
+    let metrics =
+        sweep::run_parallel(&interval_specs, &SweepConfig::default());
     let mut t = Table::new(
         &format!("Fig 13 (sensitivity): {app}, interval sweep"),
         &["interval", "migrations", "traffic MB", "IPC"]);
-    for f in [0.01, 0.1, 1.0, 10.0] {
-        let mut s = base_spec(&app);
-        s.interval_cycles = ((base_interval as f64 * f) as u64).max(10_000);
-        let m = run_uncached(&s);
+    for (s, m) in interval_specs.iter().zip(&metrics) {
         t.row(&[format!("{:.0e}", s.interval_cycles as f64),
                 m.migrations.to_string(),
                 format!("{:.1}", (m.migrated_bytes + m.writeback_bytes)
@@ -36,14 +48,20 @@ fn main() {
     t.emit(None);
 
     // Fig. 14: top-N sweep.
+    let topn_specs: Vec<RunSpec> = [4usize, 10, 25, 50, 100]
+        .iter()
+        .map(|&n| {
+            let mut s = base_spec(&app);
+            s.top_n = n;
+            s
+        })
+        .collect();
+    let metrics = sweep::run_parallel(&topn_specs, &SweepConfig::default());
     let mut t = Table::new(
         &format!("Fig 14 (sensitivity): {app}, top-N sweep"),
         &["top-N", "migrations", "traffic MB", "IPC"]);
-    for n in [4usize, 10, 25, 50, 100] {
-        let mut s = base_spec(&app);
-        s.top_n = n;
-        let m = run_uncached(&s);
-        t.row(&[n.to_string(), m.migrations.to_string(),
+    for (s, m) in topn_specs.iter().zip(&metrics) {
+        t.row(&[s.top_n.to_string(), m.migrations.to_string(),
                 format!("{:.1}", (m.migrated_bytes + m.writeback_bytes)
                         as f64 / (1 << 20) as f64),
                 format!("{:.4}", m.ipc())]);
@@ -56,15 +74,10 @@ fn main() {
         &format!("§IV-F: {app}, migration-threshold sweep"),
         &["threshold", "migrations", "IPC"]);
     for mult in [0.25, 1.0, 4.0, 16.0] {
-        let mut s = base_spec(&app);
-        let mut cfg = s.config();
-        cfg.migration_threshold *= mult;
-        // Route through the seed field? No — thresholds need a dedicated
-        // spec knob; reuse interval_cycles trick is wrong. We instead run
-        // uncached with a locally-patched config.
-        s.seed ^= (mult * 1000.0) as u64; // distinct cache keys
-        let m = run_with_threshold(&s, cfg.migration_threshold);
-        t.row(&[format!("{:.0}", cfg.migration_threshold),
+        let s = base_spec(&app);
+        let threshold = s.config().migration_threshold * mult;
+        let m = run_with_threshold(&s, threshold);
+        t.row(&[format!("{threshold:.0}"),
                 m.migrations.to_string(), format!("{:.4}", m.ipc())]);
     }
     t.emit(None);

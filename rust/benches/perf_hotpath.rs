@@ -9,6 +9,7 @@ use rainbow::config::Config;
 use rainbow::policies::{self, Policy};
 use rainbow::rainbow::counters::TwoStageCounters;
 use rainbow::rainbow::migration::UtilityParams;
+use rainbow::rainbow::RemapTable;
 use rainbow::runtime::{native, HotPageIdentifier, PjrtRuntime};
 use rainbow::util::bench::{black_box, Bencher};
 use rainbow::util::rng::Rng;
@@ -37,6 +38,25 @@ fn main() {
             black_box(now);
         });
     }
+
+    // Flat remap table: the per-access structure behind every
+    // superpage-TLB hit with a set bitmap bit (lookup-dominated mix).
+    let n_pages = 1usize << 20;
+    let n_frames = 1usize << 17;
+    let mut remap = RemapTable::with_capacity(n_pages, n_frames);
+    for f in 0..(n_frames as u64 / 2) {
+        remap.insert(f * 8, f); // every 8th page migrated
+    }
+    let mut rrng = Rng::new(0x51EE9);
+    b.run("remap::lookup(1Mi pages, 1/16 mapped)", || {
+        black_box(remap.lookup(rrng.below(n_pages as u64)));
+    });
+    b.run("remap::insert+remove", || {
+        let page = n_pages as u64 - 1;
+        let frame = n_frames as u64 - 1;
+        remap.insert(page, frame);
+        black_box(remap.remove(page));
+    });
 
     // Interval analytics: native stage1+stage2 at artifact shapes.
     let mut rng = Rng::new(3);

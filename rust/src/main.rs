@@ -5,6 +5,7 @@ use std::time::Instant;
 
 use rainbow::config::Config;
 use rainbow::report::figures::{self, FigureCtx};
+use rainbow::report::sweep::{self, SweepConfig};
 use rainbow::report::{self, RunSpec};
 use rainbow::util::cli::{help_text, Args, OptSpec};
 use rainbow::util::tables::Table;
@@ -41,10 +42,23 @@ const OPTS: &[OptSpec] = &[
               default: None, is_flag: true },
     OptSpec { name: "no-cache", help: "ignore the results cache",
               default: None, is_flag: true },
+    OptSpec { name: "apps",
+              help: "sweep: comma-separated workloads (or 'all')",
+              default: None, is_flag: false },
+    OptSpec { name: "policies",
+              help: "sweep: comma-separated policies",
+              default: None, is_flag: false },
+    OptSpec { name: "workers",
+              help: "sweep: worker threads (0 = one per core)",
+              default: Some("0"), is_flag: false },
+    OptSpec { name: "check",
+              help: "sweep: verify results against a serial replay",
+              default: None, is_flag: true },
 ];
 
 const COMMANDS: &[(&str, &str)] = &[
     ("run", "simulate one (workload, policy) pair and print metrics"),
+    ("sweep", "run a workload x policy matrix on parallel workers"),
     ("figure", "regenerate one paper table/figure (--fig N)"),
     ("suite", "regenerate every table and figure"),
     ("analyze", "workload analytics (Fig 1 / Tables I-II) for --app"),
@@ -106,6 +120,7 @@ fn csv_path(args: &Args, name: &str) -> Option<String> {
 fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
     match cmd {
         "run" => cmd_run(args),
+        "sweep" => cmd_sweep(args),
         "figure" => cmd_figure(args),
         "suite" => cmd_suite(args),
         "analyze" => cmd_analyze(args),
@@ -174,6 +189,96 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     t.row(&["DRAM/NVM writes".into(),
             format!("{}/{}", m.dram_writes, m.nvm_writes)]);
     t.emit(None);
+    Ok(())
+}
+
+/// Split a comma-separated CLI list, dropping empty segments.
+fn comma_list(raw: &str) -> Vec<String> {
+    raw.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// `sweep`: execute a workload x policy matrix on scoped worker threads
+/// (report::sweep), print one row per cell, and optionally verify the
+/// parallel results byte-for-byte against a serial `run_uncached` replay.
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let base = spec_from_args(args)?;
+    let workloads: Vec<String> = match args.get("apps") {
+        Some(list) if list.eq_ignore_ascii_case("all") => {
+            report::all_workloads()
+        }
+        Some(list) => comma_list(list),
+        None if args.flag("all") => report::all_workloads(),
+        None => report::default_workloads()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    let policies: Vec<String> = match args.get("policies") {
+        Some(list) => comma_list(list),
+        None => report::policy_names().iter().map(|s| s.to_string()).collect(),
+    };
+    if workloads.is_empty() || policies.is_empty() {
+        return Err("sweep: empty workload or policy list".into());
+    }
+    // Validate names up front: an unknown name inside a worker thread
+    // would panic the scope instead of taking the CLI's error path.
+    // Workload::all_names covers exactly what Workload::by_name accepts
+    // (apps and mixes, case-insensitive).
+    let known = rainbow::workloads::Workload::all_names();
+    for w in &workloads {
+        if !known.iter().any(|n| n.eq_ignore_ascii_case(w)) {
+            return Err(format!(
+                "unknown workload {w:?}; `rainbow list` shows them"));
+        }
+    }
+    for p in &policies {
+        if !rainbow::policies::is_valid_name(p) {
+            return Err(format!(
+                "unknown policy {p:?}; `rainbow list` shows them"));
+        }
+    }
+    let specs = sweep::matrix(&base, &workloads, &policies);
+    let cfg = SweepConfig {
+        workers: args.get_usize("workers", 0)?,
+        // --check wants fresh simulations on both sides; stale disk
+        // entries would hide a divergence.
+        disk_cache: !args.flag("no-cache") && !args.flag("check"),
+    };
+    let t0 = Instant::now();
+    let out = sweep::run(&specs, &cfg);
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!("sweep: {} runs ({} unique) on {} workers in {:.1}s",
+                 specs.len(), out.unique_runs, out.workers_used, dt),
+        &["workload", "policy", "IPC", "MPKI", "migrations", "energy mJ",
+          "cycles"]);
+    for (s, m) in specs.iter().zip(&out.metrics) {
+        t.row(&[s.workload.clone(), s.policy.clone(),
+                format!("{:.4}", m.ipc()),
+                format!("{:.3}", m.mpki()),
+                m.migrations.to_string(),
+                format!("{:.3}", m.energy_mj()),
+                m.cycles.to_string()]);
+    }
+    t.emit(csv_path(args, "sweep").as_deref());
+
+    if args.flag("check") {
+        use rainbow::report::serde_kv::metrics_to_kv;
+        for (s, pm) in specs.iter().zip(&out.metrics) {
+            let serial = report::run_uncached(s);
+            if metrics_to_kv(&serial) != metrics_to_kv(pm) {
+                return Err(format!(
+                    "sweep check FAILED: parallel and serial metrics \
+                     diverge for {} x {}", s.workload, s.policy));
+            }
+        }
+        println!("sweep check: parallel metrics byte-identical to serial \
+                  run_uncached for all {} runs", specs.len());
+    }
     Ok(())
 }
 

@@ -38,19 +38,39 @@ pub trait Policy {
     }
 }
 
+/// Canonical short name for any accepted policy alias (None = unknown).
+/// Single source of truth for [`by_name`] and [`is_valid_name`].
+fn canonical_name(name: &str) -> Option<&'static str> {
+    Some(match name.to_ascii_lowercase().as_str() {
+        "flat" | "flat-static" => "flat",
+        "hscc4k" | "hscc-4kb-mig" => "hscc4k",
+        "hscc2m" | "hscc-2mb-mig" => "hscc2m",
+        "dram" | "dram-only" => "dram",
+        "rainbow" => "rainbow",
+        _ => return None,
+    })
+}
+
 /// Construct a policy by name ("flat", "hscc4k", "hscc2m", "dram",
 /// "rainbow"), with `accel` choosing the Rainbow identification backend.
 pub fn by_name(name: &str, cfg: &crate::config::Config, accel: bool)
                -> Option<Box<dyn Policy>> {
-    let p: Box<dyn Policy> = match name.to_ascii_lowercase().as_str() {
-        "flat" | "flat-static" => Box::new(FlatStatic::new(cfg)),
-        "hscc4k" | "hscc-4kb-mig" => Box::new(Hscc4K::new(cfg)),
-        "hscc2m" | "hscc-2mb-mig" => Box::new(Hscc2M::new(cfg)),
-        "dram" | "dram-only" => Box::new(DramOnly::new(cfg)),
+    let p: Box<dyn Policy> = match canonical_name(name)? {
+        "flat" => Box::new(FlatStatic::new(cfg)),
+        "hscc4k" => Box::new(Hscc4K::new(cfg)),
+        "hscc2m" => Box::new(Hscc2M::new(cfg)),
+        "dram" => Box::new(DramOnly::new(cfg)),
         "rainbow" => Box::new(crate::rainbow::policy::Rainbow::new(cfg, accel)),
-        _ => return None,
+        _ => unreachable!("canonical_name returned a non-canonical name"),
     };
     Some(p)
+}
+
+/// Whether `name` resolves to a policy — the same aliases [`by_name`]
+/// accepts — without constructing the policy's machine (used for CLI
+/// validation before a sweep fans out to worker threads).
+pub fn is_valid_name(name: &str) -> bool {
+    canonical_name(name).is_some()
 }
 
 /// Canonical evaluation order of Figs. 7-12.

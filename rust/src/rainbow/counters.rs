@@ -97,7 +97,9 @@ impl TwoStageCounters {
 
     /// Interval boundary: adopt the new top-N monitored set and clear all
     /// counters (history-based policy — the new set is monitored at fine
-    /// grain during the *next* interval).
+    /// grain during the *next* interval). Duplicate superpage numbers in
+    /// `new_top` occupy a single slot: each slot must own a distinct PSN
+    /// or `record` would split one superpage's traffic across slots.
     pub fn rotate(&mut self, new_top: &[u32]) {
         self.sp_reads.fill(0);
         self.sp_writes.fill(0);
@@ -105,9 +107,17 @@ impl TwoStageCounters {
         self.pg_writes.fill(0);
         self.slots.clear();
         self.slot_owner.fill(u32::MAX);
-        for (slot, &sp) in new_top.iter().take(self.top_n).enumerate() {
+        let mut slot = 0usize;
+        for &sp in new_top {
+            if slot >= self.top_n {
+                break;
+            }
+            if self.slots.contains_key(&sp) {
+                continue;
+            }
             self.slots.insert(sp, slot as u32);
             self.slot_owner[slot] = sp;
+            slot += 1;
         }
     }
 
@@ -207,5 +217,75 @@ mod tests {
         let mut c = TwoStageCounters::new(16, 2);
         c.rotate(&[3, 5, 7, 9]); // only 2 slots exist
         assert_eq!(c.monitored().count(), 2);
+    }
+
+    #[test]
+    fn rotate_dedupes_duplicate_superpages() {
+        let mut c = TwoStageCounters::new(16, 2);
+        // A duplicated PSN must not burn a second slot (or leave a slot
+        // whose owner is shadowed in the sp->slot map).
+        c.rotate(&[5, 5, 7]);
+        assert_eq!(c.slot_owner(0), Some(5));
+        assert_eq!(c.slot_owner(1), Some(7));
+        assert_eq!(c.monitored().count(), 2);
+        c.record(5, 3, false);
+        assert_eq!(c.slot_counts(0).0[3], 1, "traffic lands in sp 5's slot");
+        assert_eq!(c.slot_counts(1).0[3], 0);
+    }
+
+    #[test]
+    fn rotate_empty_clears_ownership() {
+        let mut c = TwoStageCounters::new(8, 2);
+        c.rotate(&[1, 2]);
+        c.record(1, 0, false);
+        c.rotate(&[]);
+        assert_eq!(c.monitored().count(), 0);
+        assert_eq!(c.slot_owner(0), None);
+        assert_eq!(c.slot_owner(1), None);
+        // Records to a previously-monitored superpage now stay stage-1.
+        c.record(1, 0, false);
+        assert_eq!(c.sp_counts().0[1], 1);
+        assert_eq!(c.slot_counts(0).0[0], 0);
+    }
+
+    #[test]
+    fn stage2_counters_saturate_like_stage1() {
+        let mut c = TwoStageCounters::new(4, 1);
+        c.rotate(&[2]);
+        for _ in 0..40_000 {
+            c.record(2, 511, true); // last page of the superpage
+        }
+        let w = c.slot_counts(0).1[511];
+        assert!(overflowed(w), "stage-2 overflow flag must be set");
+        assert_eq!(count_value(w), COUNTER_MAX);
+        // Stage-1 saturated in lockstep.
+        let sw = c.sp_counts().1[2];
+        assert!(overflowed(sw));
+        assert_eq!(count_value(sw), COUNTER_MAX);
+    }
+
+    #[test]
+    fn record_boundary_indices() {
+        // Last superpage and both extreme page indices must hit their own
+        // slots (off-by-one in the slot*512+page math would alias).
+        let mut c = TwoStageCounters::new(8, 2);
+        c.rotate(&[7, 0]);
+        c.record(7, 0, false);
+        c.record(7, 511, false);
+        c.record(0, 511, true);
+        assert_eq!(c.slot_counts(0).0[0], 1);
+        assert_eq!(c.slot_counts(0).0[511], 1);
+        assert_eq!(c.slot_counts(1).1[511], 1);
+        assert_eq!(c.slot_counts(1).0[511], 0);
+        assert_eq!(c.sp_counts().0[7], 2);
+    }
+
+    #[test]
+    fn zero_top_n_monitors_nothing() {
+        let mut c = TwoStageCounters::new(8, 0);
+        c.rotate(&[1, 2, 3]);
+        assert_eq!(c.monitored().count(), 0);
+        c.record(1, 0, false); // must not index an empty stage-2 table
+        assert_eq!(c.sp_counts().0[1], 1);
     }
 }

@@ -58,6 +58,7 @@ impl Rainbow {
         let m = Machine::new(cfg, TableHome::Dram, TableHome::Nvm);
         let nvm_base = m.mem.nvm_base();
         let n_sp = ((cfg.nvm.size - TABLE_RESERVE) / SP_SIZE) as usize;
+        let n_frames = ((cfg.dram.size - TABLE_RESERVE) / PAGE_SIZE) as usize;
         let params = UtilityParams::from_config(cfg);
         let identifier = if accel {
             HotPageIdentifier::auto(&PathBuf::from(
@@ -75,7 +76,10 @@ impl Rainbow {
             bitmap_cache: BitmapCache::new(cfg.bitmap_cache_entries,
                                            cfg.bitmap_cache_assoc,
                                            cfg.bitmap_cache_latency),
-            remap: RemapTable::new(),
+            // Pre-sized flat arrays: the lookup sits on every
+            // superpage-TLB hit with a set bitmap bit (hot path).
+            remap: RemapTable::with_capacity(n_sp * PAGES_PER_SP as usize,
+                                             n_frames),
             identifier,
             threshold: ThresholdCtl::new(params.threshold),
             params,

@@ -11,15 +11,30 @@
 //! The functional side (which DRAM frame holds which NVM page) is a map;
 //! the timing side (the 8-byte NVM read / 8-byte pointer write) is charged
 //! against the memory devices by the policy.
+//!
+//! Because the table is consulted on every superpage-TLB hit whose bitmap
+//! bit is set, it sits on the simulator's per-access hot path. It is
+//! therefore stored as two flat sentinel-encoded arrays — forward indexed
+//! by NVM page number, reverse indexed by DRAM frame number — instead of
+//! hash maps: a lookup is one bounds check plus one load, which is what
+//! makes wide parallel sweeps (`report::sweep`) affordable. Policies
+//! pre-size the arrays via [`RemapTable::with_capacity`]; `new()` starts
+//! empty and grows on demand (unit tests, ad-hoc use).
 
-use std::collections::HashMap;
+/// Sentinel marking an unmapped slot in the flat arrays. Page and frame
+/// numbers are far below this at every supported scale (paper scale:
+/// 8 Mi NVM pages, 1 Mi DRAM frames).
+const NO_MAPPING: u32 = u32::MAX;
 
 /// Remap table: NVM 4 KB page number -> DRAM frame number.
 #[derive(Clone, Debug, Default)]
 pub struct RemapTable {
-    fwd: HashMap<u64, u64>,
+    /// NVM page -> DRAM frame (`NO_MAPPING` = not migrated).
+    fwd: Vec<u32>,
     /// Reverse map for eviction: DRAM frame -> NVM page.
-    rev: HashMap<u64, u64>,
+    rev: Vec<u32>,
+    /// Live mappings (kept explicitly; the arrays are sparse).
+    live: usize,
 }
 
 impl RemapTable {
@@ -27,39 +42,89 @@ impl RemapTable {
         RemapTable::default()
     }
 
+    /// Pre-sized table covering `n_nvm_pages` forward slots and
+    /// `n_dram_frames` reverse slots (no growth on the hot path).
+    pub fn with_capacity(n_nvm_pages: usize, n_dram_frames: usize)
+                         -> RemapTable {
+        RemapTable {
+            fwd: vec![NO_MAPPING; n_nvm_pages],
+            rev: vec![NO_MAPPING; n_dram_frames],
+            live: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(v: &[u32], idx: u64) -> u32 {
+        v.get(idx as usize).copied().unwrap_or(NO_MAPPING)
+    }
+
+    #[inline]
+    fn grow_to(v: &mut Vec<u32>, idx: usize) {
+        if idx >= v.len() {
+            v.resize(idx + 1, NO_MAPPING);
+        }
+    }
+
     /// Install a remap (page migrated). Panics on double-migrate — the
     /// bitmap must prevent that.
     pub fn insert(&mut self, nvm_page: u64, dram_frame: u64) {
-        let old = self.fwd.insert(nvm_page, dram_frame);
-        assert!(old.is_none(), "page {nvm_page:#x} already migrated");
-        let old = self.rev.insert(dram_frame, nvm_page);
-        assert!(old.is_none(), "frame {dram_frame:#x} already in use");
+        // Hard asserts: beyond the u32 sentinel domain (>= 16 TB of 4 KB
+        // pages) the flat encoding would silently alias; insert is off
+        // the per-access hot path, so the checks cost nothing.
+        assert!(nvm_page < NO_MAPPING as u64,
+                "page {nvm_page:#x} outside the flat remap domain");
+        assert!(dram_frame < NO_MAPPING as u64,
+                "frame {dram_frame:#x} outside the flat remap domain");
+        // Check both invariants before writing either side, so a panic
+        // leaves the table untouched (fwd/rev stay consistent).
+        assert!(Self::slot(&self.fwd, nvm_page) == NO_MAPPING,
+                "page {nvm_page:#x} already migrated");
+        assert!(Self::slot(&self.rev, dram_frame) == NO_MAPPING,
+                "frame {dram_frame:#x} already in use");
+        Self::grow_to(&mut self.fwd, nvm_page as usize);
+        Self::grow_to(&mut self.rev, dram_frame as usize);
+        self.fwd[nvm_page as usize] = dram_frame as u32;
+        self.rev[dram_frame as usize] = nvm_page as u32;
+        self.live += 1;
     }
 
     /// Follow the pointer stored in the NVM page (the 8-byte read).
+    #[inline]
     pub fn lookup(&self, nvm_page: u64) -> Option<u64> {
-        self.fwd.get(&nvm_page).copied()
+        match Self::slot(&self.fwd, nvm_page) {
+            NO_MAPPING => None,
+            f => Some(f as u64),
+        }
     }
 
     /// Which NVM page a DRAM frame caches (eviction path).
+    #[inline]
     pub fn owner_of_frame(&self, dram_frame: u64) -> Option<u64> {
-        self.rev.get(&dram_frame).copied()
+        match Self::slot(&self.rev, dram_frame) {
+            NO_MAPPING => None,
+            p => Some(p as u64),
+        }
     }
 
     /// Remove on eviction/writeback; returns the DRAM frame it occupied.
     pub fn remove(&mut self, nvm_page: u64) -> Option<u64> {
-        let frame = self.fwd.remove(&nvm_page)?;
-        let back = self.rev.remove(&frame);
-        debug_assert_eq!(back, Some(nvm_page));
-        Some(frame)
+        let frame = match Self::slot(&self.fwd, nvm_page) {
+            NO_MAPPING => return None,
+            f => f as usize,
+        };
+        self.fwd[nvm_page as usize] = NO_MAPPING;
+        debug_assert_eq!(self.rev[frame], nvm_page as u32);
+        self.rev[frame] = NO_MAPPING;
+        self.live -= 1;
+        Some(frame as u64)
     }
 
     pub fn len(&self) -> usize {
-        self.fwd.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.fwd.is_empty()
+        self.live == 0
     }
 }
 
@@ -84,6 +149,8 @@ pub fn crossover_r_hit(t_nr: f64, t_dr: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{forall_shrink, shrink_vec};
+    use std::collections::HashMap;
 
     #[test]
     fn insert_lookup_remove() {
@@ -95,6 +162,22 @@ mod tests {
         assert_eq!(r.lookup(100), None);
         assert_eq!(r.owner_of_frame(5), None);
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn presized_table_behaves_like_grown() {
+        let mut r = RemapTable::with_capacity(256, 64);
+        assert_eq!(r.lookup(255), None);
+        r.insert(255, 63);
+        assert_eq!(r.lookup(255), Some(63));
+        assert_eq!(r.owner_of_frame(63), Some(255));
+        // Out-of-capacity probes are misses, not panics.
+        assert_eq!(r.lookup(10_000), None);
+        assert_eq!(r.owner_of_frame(10_000), None);
+        // Inserting past the pre-size grows transparently.
+        r.insert(10_000, 10_001);
+        assert_eq!(r.lookup(10_000), Some(10_001));
+        assert_eq!(r.len(), 2);
     }
 
     #[test]
@@ -111,6 +194,129 @@ mod tests {
         let mut r = RemapTable::new();
         r.insert(1, 2);
         r.insert(9, 2);
+    }
+
+    #[test]
+    fn failed_insert_leaves_table_consistent() {
+        // The no-double-migrate panic must fire before any mutation, so
+        // fwd/rev never diverge even if a caller catches the unwind.
+        let mut r = RemapTable::new();
+        r.insert(7, 3);
+        for (p, f) in [(7u64, 9u64), (8, 3)] {
+            let res = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| r.insert(p, f)));
+            assert!(res.is_err(), "insert({p},{f}) must panic");
+        }
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.lookup(7), Some(3));
+        assert_eq!(r.owner_of_frame(3), Some(7));
+        assert_eq!(r.lookup(8), None);
+        assert_eq!(r.owner_of_frame(9), None);
+    }
+
+    /// One random op: 0 = insert, 1 = remove, 2 = probe.
+    type Op = (u8, u64, u64);
+
+    fn apply_checked(t: &mut RemapTable, model: &mut HashMap<u64, u64>,
+                     &(op, page, frame): &Op) -> Result<(), String> {
+        match op {
+            0 => {
+                let page_mapped = model.contains_key(&page);
+                let frame_used = model.values().any(|&f| f == frame);
+                if page_mapped || frame_used {
+                    // No-double-migrate invariant: the insert must refuse
+                    // (panic) and leave the table untouched.
+                    let res = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| t.insert(page, frame)));
+                    if res.is_ok() {
+                        return Err(format!(
+                            "insert({page},{frame}) accepted a \
+                             double-migrate (mapped={page_mapped}, \
+                             frame_used={frame_used})"));
+                    }
+                } else {
+                    t.insert(page, frame);
+                    model.insert(page, frame);
+                }
+            }
+            1 => {
+                let got = t.remove(page);
+                let want = model.remove(&page);
+                if got != want {
+                    return Err(format!(
+                        "remove({page}) = {got:?}, model says {want:?}"));
+                }
+            }
+            _ => {
+                if t.lookup(page) != model.get(&page).copied() {
+                    return Err(format!("lookup({page}) diverged"));
+                }
+                let owner =
+                    model.iter().find(|(_, &f)| f == frame).map(|(&p, _)| p);
+                if t.owner_of_frame(frame) != owner {
+                    return Err(format!("owner_of_frame({frame}) diverged"));
+                }
+            }
+        }
+        if t.len() != model.len() {
+            return Err(format!("len {} != model {}", t.len(), model.len()));
+        }
+        Ok(())
+    }
+
+    /// Full fwd/rev agreement against the model after a whole op sequence.
+    fn check_consistent(t: &RemapTable, model: &HashMap<u64, u64>)
+                        -> Result<(), String> {
+        for (&p, &f) in model {
+            if t.lookup(p) != Some(f) {
+                return Err(format!("fwd lost {p} -> {f}"));
+            }
+            if t.owner_of_frame(f) != Some(p) {
+                return Err(format!("rev lost {f} -> {p}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_matches_hashmap_model() {
+        let mut gen = |r: &mut crate::util::rng::Rng| -> Vec<Op> {
+            let n = r.below(120);
+            (0..n)
+                .map(|_| (r.below(3) as u8, r.below(48), r.below(24)))
+                .collect()
+        };
+        let mut prop = |ops: &Vec<Op>| -> Result<(), String> {
+            let mut t = RemapTable::new();
+            let mut model = HashMap::new();
+            for op in ops {
+                apply_checked(&mut t, &mut model, op)?;
+            }
+            check_consistent(&t, &model)
+        };
+        forall_shrink("remap-model", 0x2E3A9, 80, &mut gen, shrink_vec,
+                      &mut prop);
+    }
+
+    #[test]
+    fn prop_presized_matches_hashmap_model() {
+        // Same property on a pre-sized table (the policy configuration).
+        let mut gen = |r: &mut crate::util::rng::Rng| -> Vec<Op> {
+            let n = r.below(120);
+            (0..n)
+                .map(|_| (r.below(3) as u8, r.below(48), r.below(24)))
+                .collect()
+        };
+        let mut prop = |ops: &Vec<Op>| -> Result<(), String> {
+            let mut t = RemapTable::with_capacity(48, 24);
+            let mut model = HashMap::new();
+            for op in ops {
+                apply_checked(&mut t, &mut model, op)?;
+            }
+            check_consistent(&t, &model)
+        };
+        forall_shrink("remap-model-presized", 0x51AB, 80, &mut gen,
+                      shrink_vec, &mut prop);
     }
 
     #[test]

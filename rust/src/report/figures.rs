@@ -9,7 +9,7 @@ use crate::util::stats::{cdf_at, geomean};
 use crate::util::tables::{f2, f3, pct, Table};
 use crate::workloads::{analyze, AppProfile, Synth, HOT_HIST_BOUNDS};
 
-use super::{run_cached, RunSpec};
+use super::{sweep, RunSpec};
 
 /// Shared context for the figure suite.
 #[derive(Clone, Debug)]
@@ -113,12 +113,14 @@ pub fn fig08_tlbcycles(ctx: &FigureCtx) -> Table {
 
 /// Fig. 9: Rainbow's address-translation overhead breakdown.
 pub fn fig09_breakdown(ctx: &FigureCtx) -> Table {
+    let specs = sweep::matrix(&ctx.base, &ctx.workloads,
+                              &["rainbow".to_string()]);
+    let metrics = sweep::run_many_cached(&specs);
     let mut t = Table::new(
         "Fig 9: Rainbow address translation breakdown (% of xlat cycles)",
         &["app", "split TLBs", "bitmap cache", "SPTW", "remap",
           "xlat % of cycles", "SP hit rate"]);
-    for w in &ctx.workloads {
-        let m = run_cached(&ctx.spec(w, "rainbow"));
+    for (w, m) in ctx.workloads.iter().zip(&metrics) {
         let x = &m.xlat;
         let tot = x.total().max(1) as f64;
         t.row(&[w.to_string(),
@@ -134,27 +136,27 @@ pub fn fig09_breakdown(ctx: &FigureCtx) -> Table {
 
 /// Fig. 10: IPC normalized to Flat-static — the headline figure.
 pub fn fig10_ipc(ctx: &FigureCtx) -> Table {
+    // all_names() order is the column order: flat, hscc4k, hscc2m,
+    // rainbow, dram.
+    let pols: Vec<String> =
+        crate::policies::all_names().iter().map(|s| s.to_string()).collect();
+    let specs = sweep::matrix(&ctx.base, &ctx.workloads, &pols);
+    let metrics = sweep::run_many_cached(&specs);
     let mut t = Table::new(
         "Fig 10: Normalized IPC (relative to Flat-static)",
         &["app", "Flat-static", "HSCC-4KB", "HSCC-2MB", "Rainbow",
           "DRAM-only"]);
     let mut vs_flat = Vec::new();
     let mut vs_hscc4k = Vec::new();
-    for w in &ctx.workloads {
-        let base = run_cached(&ctx.spec(w, "flat")).ipc();
+    for (wi, w) in ctx.workloads.iter().enumerate() {
+        let row_m = &metrics[wi * pols.len()..(wi + 1) * pols.len()];
+        let base = row_m[0].ipc();
         let mut row = vec![w.to_string(), "1.00".to_string()];
-        let mut rainbow_ipc = 0.0;
-        let mut hscc4k_ipc = 0.0;
-        for pol in ["hscc4k", "hscc2m", "rainbow", "dram"] {
-            let ipc = run_cached(&ctx.spec(w, pol)).ipc();
-            row.push(f2(ipc / base.max(1e-12)));
-            if pol == "rainbow" {
-                rainbow_ipc = ipc;
-            }
-            if pol == "hscc4k" {
-                hscc4k_ipc = ipc;
-            }
+        for m in &row_m[1..] {
+            row.push(f2(m.ipc() / base.max(1e-12)));
         }
+        let hscc4k_ipc = row_m[1].ipc();
+        let rainbow_ipc = row_m[3].ipc();
         vs_flat.push(rainbow_ipc / base.max(1e-12));
         vs_hscc4k.push(rainbow_ipc / hscc4k_ipc.max(1e-12));
         t.row(&row);
@@ -168,14 +170,17 @@ pub fn fig10_ipc(ctx: &FigureCtx) -> Table {
 
 /// Fig. 11: migration traffic normalized to footprint.
 pub fn fig11_traffic(ctx: &FigureCtx) -> Table {
+    let pols: Vec<String> =
+        ["hscc4k", "hscc2m", "rainbow"].iter().map(|s| s.to_string()).collect();
+    let specs = sweep::matrix(&ctx.base, &ctx.workloads, &pols);
+    let metrics = sweep::run_many_cached(&specs);
     let mut t = Table::new(
         "Fig 11: Page migration traffic / total memory footprint",
         &["app", "HSCC-4KB", "HSCC-2MB", "Rainbow"]);
-    for w in &ctx.workloads {
+    for (wi, w) in ctx.workloads.iter().enumerate() {
         let fp = ctx.spec(w, "flat").footprint_bytes();
         let mut row = vec![w.to_string()];
-        for pol in ["hscc4k", "hscc2m", "rainbow"] {
-            let m = run_cached(&ctx.spec(w, pol));
+        for m in &metrics[wi * pols.len()..(wi + 1) * pols.len()] {
             row.push(f3(m.migration_traffic_ratio(fp)));
         }
         t.row(&row);
@@ -198,18 +203,25 @@ pub fn fig13_interval(ctx: &FigureCtx, apps: &[&str]) -> Table {
     // Paper sweeps 1e5..1e9 at full scale; we sweep the same factors
     // around the scaled default.
     let base_interval = ctx.base.config().interval_cycles;
+    let cfg_top = ctx.base.config().top_n;
     let factors = [0.01, 0.1, 1.0, 10.0];
+    let mut specs = Vec::with_capacity(apps.len() * factors.len());
     for app in apps {
-        let mut base_traffic = 0.0;
-        let mut base_ipc = 0.0;
-        for (i, f) in factors.iter().enumerate() {
+        for f in factors.iter() {
             let mut s = ctx.spec(app, "rainbow");
             s.interval_cycles =
                 ((base_interval as f64 * f) as u64).max(10_000);
             // Paper: top-N grows with the interval by the same factor.
-            let cfg_top = ctx.base.config().top_n;
             s.top_n = ((cfg_top as f64 * f).ceil() as usize).clamp(4, 128);
-            let m = run_cached(&s);
+            specs.push(s);
+        }
+    }
+    let metrics = sweep::run_many_cached(&specs);
+    for (ai, app) in apps.iter().enumerate() {
+        let mut base_traffic = 0.0;
+        let mut base_ipc = 0.0;
+        for (i, f) in factors.iter().enumerate() {
+            let m = &metrics[ai * factors.len() + i];
             let traffic = (m.migrated_bytes + m.writeback_bytes) as f64;
             let ipc = m.ipc();
             if i == 0 {
@@ -231,13 +243,20 @@ pub fn fig14_topn(ctx: &FigureCtx, apps: &[&str]) -> Table {
         "Fig 14: migration traffic + IPC vs top-N hot superpages (Rainbow)",
         &["app", "N", "traffic (norm)", "IPC (norm)"]);
     let ns = [4usize, 10, 25, 50, 100];
+    let mut specs = Vec::with_capacity(apps.len() * ns.len());
     for app in apps {
+        for &n in ns.iter() {
+            let mut s = ctx.spec(app, "rainbow");
+            s.top_n = n;
+            specs.push(s);
+        }
+    }
+    let metrics = sweep::run_many_cached(&specs);
+    for (ai, app) in apps.iter().enumerate() {
         let mut base_traffic = 0.0;
         let mut base_ipc = 0.0;
         for (i, &n) in ns.iter().enumerate() {
-            let mut s = ctx.spec(app, "rainbow");
-            s.top_n = n;
-            let m = run_cached(&s);
+            let m = &metrics[ai * ns.len() + i];
             let traffic = (m.migrated_bytes + m.writeback_bytes) as f64;
             let ipc = m.ipc();
             if i == 0 {
@@ -253,12 +272,14 @@ pub fn fig14_topn(ctx: &FigureCtx, apps: &[&str]) -> Table {
 
 /// Fig. 15: runtime overhead breakdown in Rainbow.
 pub fn fig15_runtime(ctx: &FigureCtx) -> Table {
+    let specs = sweep::matrix(&ctx.base, &ctx.workloads,
+                              &["rainbow".to_string()]);
+    let metrics = sweep::run_many_cached(&specs);
     let mut t = Table::new(
         "Fig 15: Rainbow runtime overhead breakdown (% of total cycles)",
         &["app", "remap", "bitmap", "migration", "shootdown", "clflush",
           "identify", "total %"]);
-    for w in &ctx.workloads {
-        let m = run_cached(&ctx.spec(w, "rainbow"));
+    for (w, m) in ctx.workloads.iter().zip(&metrics) {
         let c = m.cycles.max(1) as f64;
         let total = (m.rt.total() + m.xlat.remap_cycles
                      + m.xlat.bitmap_cycles) as f64;
@@ -333,19 +354,22 @@ fn per_policy_table_base<F>(ctx: &FigureCtx, title: &str, cell: F) -> Table
 where
     F: Fn(&crate::sim::RunMetrics, &crate::sim::RunMetrics) -> String,
 {
+    // The whole workload x policy matrix runs on parallel sweep workers;
+    // the row loop below only renders. all_names() order matches the
+    // column order, with flat (index 0) doubling as the baseline.
+    let pols: Vec<String> =
+        crate::policies::all_names().iter().map(|s| s.to_string()).collect();
+    let specs = sweep::matrix(&ctx.base, &ctx.workloads, &pols);
+    let metrics = sweep::run_many_cached(&specs);
     let mut t = Table::new(title,
         &["app", "Flat-static", "HSCC-4KB", "HSCC-2MB", "Rainbow",
           "DRAM-only"]);
-    for w in &ctx.workloads {
-        let base = run_cached(&ctx.spec(w, "flat"));
+    for (wi, w) in ctx.workloads.iter().enumerate() {
+        let row_m = &metrics[wi * pols.len()..(wi + 1) * pols.len()];
+        let base = &row_m[0];
         let mut row = vec![w.to_string()];
-        for pol in ["flat", "hscc4k", "hscc2m", "rainbow", "dram"] {
-            let m = if pol == "flat" {
-                base.clone()
-            } else {
-                run_cached(&ctx.spec(w, pol))
-            };
-            row.push(cell(&m, &base));
+        for m in row_m {
+            row.push(cell(m, base));
         }
         t.row(&row);
     }

@@ -13,6 +13,7 @@ use crate::workloads::{AppProfile, Workload};
 
 pub mod figures;
 pub mod serde_kv;
+pub mod sweep;
 
 /// Parameters that identify an experiment run (cache key).
 #[derive(Clone, Debug)]
@@ -54,7 +55,10 @@ impl RunSpec {
         cfg
     }
 
-    fn cache_key(&self) -> String {
+    /// Stable identity of this run: every knob that can change the
+    /// simulation's outcome. Keys both the on-disk results cache and the
+    /// in-memory result sharing of the parallel sweep orchestrator.
+    pub fn fingerprint(&self) -> String {
         format!(
             "{}_{}_s{}_i{}_v{}_n{}_r{}{}",
             self.workload, self.policy, self.scale, self.instructions,
@@ -97,7 +101,7 @@ fn cache_dir() -> PathBuf {
 /// Run the simulation described by `spec` (or load the cached result).
 pub fn run_cached(spec: &RunSpec) -> RunMetrics {
     let dir = cache_dir();
-    let path = dir.join(format!("{}.kv", spec.cache_key()));
+    let path = dir.join(format!("{}.kv", spec.fingerprint()));
     if let Ok(text) = fs::read_to_string(&path) {
         if let Some(m) = serde_kv::metrics_from_kv(&text) {
             return m;

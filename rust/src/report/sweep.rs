@@ -1,0 +1,179 @@
+//! Parallel experiment-sweep orchestrator — the scaling layer the figure
+//! emitters, the `sweep` CLI subcommand, and the bench/example drivers
+//! all ride on.
+//!
+//! A sweep is a matrix of [`RunSpec`]s (workload × policy × scale/seed).
+//! [`run`] executes the *unique* specs concurrently on
+//! `std::thread::scope` workers: a bounded worker count pulls indices off
+//! a shared atomic cursor, and each finished result lands in a
+//! mutex-protected map keyed by the spec's stable
+//! [`RunSpec::fingerprint`], so duplicate specs are simulated exactly
+//! once. Every simulation is bit-deterministic given its spec (each run
+//! owns its seeded RNGs and machine state; nothing is shared), which
+//! makes the parallel path byte-identical to serial `run_uncached`
+//! calls — `tests/sweep_determinism.rs` locks that contract in.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::RunMetrics;
+
+use super::{run_cached, run_uncached, RunSpec};
+
+/// Execution knobs for a sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepConfig {
+    /// Worker threads; 0 = one per available core.
+    pub workers: usize,
+    /// Route runs through the persistent on-disk results cache
+    /// (`run_cached`) instead of always simulating (`run_uncached`).
+    pub disk_cache: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig { workers: 0, disk_cache: false }
+    }
+}
+
+/// Worker count used when `SweepConfig::workers == 0`.
+pub fn auto_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Cross product: every workload × policy, carrying `base`'s scale,
+/// instruction budget, interval, top-N, seed, and backend knobs.
+pub fn matrix(base: &RunSpec, workloads: &[String], policies: &[String])
+              -> Vec<RunSpec> {
+    let mut out = Vec::with_capacity(workloads.len() * policies.len());
+    for w in workloads {
+        for p in policies {
+            let mut s = base.clone();
+            s.workload = w.clone();
+            s.policy = p.clone();
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// Result of a sweep: metrics in input order plus execution stats.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub metrics: Vec<RunMetrics>,
+    /// Simulations actually executed (after fingerprint dedup).
+    pub unique_runs: usize,
+    pub workers_used: usize,
+}
+
+/// Run every spec concurrently; metrics come back in input order.
+/// Duplicate fingerprints share one simulation through the mutexed
+/// result cache.
+pub fn run(specs: &[RunSpec], cfg: &SweepConfig) -> SweepOutcome {
+    let keys: Vec<String> = specs.iter().map(|s| s.fingerprint()).collect();
+    let mut seen = HashSet::new();
+    let uniq: Vec<usize> =
+        (0..specs.len()).filter(|&i| seen.insert(keys[i].as_str())).collect();
+    let workers = (if cfg.workers == 0 { auto_workers() } else { cfg.workers })
+        .clamp(1, uniq.len().max(1));
+    let results: Mutex<HashMap<&str, RunMetrics>> =
+        Mutex::new(HashMap::with_capacity(uniq.len()));
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let u = cursor.fetch_add(1, Ordering::Relaxed);
+                let Some(&i) = uniq.get(u) else { break };
+                let m = if cfg.disk_cache {
+                    run_cached(&specs[i])
+                } else {
+                    run_uncached(&specs[i])
+                };
+                results.lock().unwrap().insert(keys[i].as_str(), m);
+            });
+        }
+    });
+    let results = results.into_inner().unwrap();
+    let metrics = keys
+        .iter()
+        .map(|k| {
+            results
+                .get(k.as_str())
+                .expect("sweep worker lost a result")
+                .clone()
+        })
+        .collect();
+    SweepOutcome { metrics, unique_runs: uniq.len(), workers_used: workers }
+}
+
+/// [`run`] without the stats — just the metrics, in input order.
+pub fn run_parallel(specs: &[RunSpec], cfg: &SweepConfig) -> Vec<RunMetrics> {
+    run(specs, cfg).metrics
+}
+
+/// Parallel, disk-cached run — the figure emitters' entry point. Consumes
+/// the persistent results cache where populated (so a `suite` run shares
+/// each (workload, policy) simulation across every figure that needs it)
+/// and returns the metrics in input order for direct row rendering.
+pub fn run_many_cached(specs: &[RunSpec]) -> Vec<RunMetrics> {
+    run(specs, &SweepConfig { workers: 0, disk_cache: true }).metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::serde_kv::metrics_to_kv;
+
+    fn tiny(w: &str, p: &str) -> RunSpec {
+        let mut s = RunSpec::new(w, p);
+        s.scale = 64;
+        s.instructions = 20_000;
+        s.interval_cycles = 100_000;
+        s.top_n = 8;
+        s.seed = 7;
+        s
+    }
+
+    #[test]
+    fn matrix_builds_cross_product_in_order() {
+        let ws: Vec<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
+        let ps: Vec<String> =
+            ["x", "y", "z"].iter().map(|s| s.to_string()).collect();
+        let mut base = RunSpec::new("", "");
+        base.seed = 123;
+        let m = matrix(&base, &ws, &ps);
+        assert_eq!(m.len(), 6);
+        assert_eq!((m[0].workload.as_str(), m[0].policy.as_str()), ("a", "x"));
+        assert_eq!((m[4].workload.as_str(), m[4].policy.as_str()), ("b", "y"));
+        assert!(m.iter().all(|s| s.seed == 123));
+    }
+
+    #[test]
+    fn empty_matrix_is_fine() {
+        let out = run(&[], &SweepConfig::default());
+        assert!(out.metrics.is_empty());
+        assert_eq!(out.unique_runs, 0);
+    }
+
+    #[test]
+    fn duplicates_simulated_once_and_identical() {
+        let specs = vec![tiny("DICT", "flat"), tiny("DICT", "flat"),
+                         tiny("DICT", "rainbow")];
+        let out = run(&specs, &SweepConfig { workers: 2, disk_cache: false });
+        assert_eq!(out.unique_runs, 2);
+        assert_eq!(out.metrics.len(), 3);
+        assert_eq!(metrics_to_kv(&out.metrics[0]),
+                   metrics_to_kv(&out.metrics[1]));
+        assert_ne!(metrics_to_kv(&out.metrics[0]),
+                   metrics_to_kv(&out.metrics[2]));
+    }
+
+    #[test]
+    fn worker_count_respects_request_and_bounds() {
+        let specs = vec![tiny("DICT", "flat")];
+        let out = run(&specs, &SweepConfig { workers: 16, disk_cache: false });
+        assert_eq!(out.workers_used, 1, "never more workers than work");
+        assert!(auto_workers() >= 1);
+    }
+}

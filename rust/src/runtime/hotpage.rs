@@ -58,7 +58,7 @@ impl HotPageIdentifier {
         }
     }
 
-    pub fn pjrt(dir: &Path) -> anyhow::Result<HotPageIdentifier> {
+    pub fn pjrt(dir: &Path) -> super::pjrt::Result<HotPageIdentifier> {
         Ok(HotPageIdentifier {
             backend: Backend::Pjrt(Box::new(PjrtRuntime::load(dir)?)),
         })

@@ -1,53 +1,76 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them on the CPU PJRT client via the
-//! `xla` crate. Python never runs here — the artifacts are self-contained.
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` for execution on a PJRT client.
 //!
 //! Artifact shapes are fixed at lowering time (ref.py): stage 1 takes
 //! i32[N_SP] x2 + f32[8] and returns (f32[N_SP], i32[TOP_N]); stage 2
 //! takes i32[TOP_N,512] x2 + f32[8] and returns (f32[...], i32[...]).
 //! The simulator pads its (smaller, scaled) counter arrays to these
 //! shapes.
+//!
+//! The execution engine itself comes from the `xla` PJRT bindings, which
+//! cannot be vendored in this offline environment (the same crates.io
+//! constraint that substitutes `util::{rng, cli, proptest, bench}` for
+//! rand/clap/proptest/criterion). The engine is therefore *gated*: this
+//! module keeps the artifact contract — shapes, padding, validation, and
+//! the error surface — compiled and tested, while [`PjrtRuntime::load`]
+//! reports the backend as unavailable. Every caller already treats that
+//! as "fall back to the bit-exact native pipeline" (`HotPageIdentifier::
+//! auto`, the Rainbow policy) or "skip" (the PJRT integration tests, the
+//! perf benches), so builds and tier-1 stay green with or without
+//! artifacts present.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
-
-use anyhow::{bail, Context, Result};
 
 /// Artifact shape constants — must match python/compile/kernels/ref.py.
 pub const N_SP: usize = 16384;
 pub const TOP_N: usize = 128;
 pub const SP_PAGES: usize = 512;
 
-/// A compiled pair of stage executables.
+/// Error surface of the PJRT backend (anyhow is unavailable offline;
+/// callers format errors with `{e:#}`, which Display satisfies).
+#[derive(Clone, Debug)]
+pub struct PjrtError(String);
+
+impl fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+pub type Result<T> = std::result::Result<T, PjrtError>;
+
+fn err<T>(msg: String) -> Result<T> {
+    Err(PjrtError(msg))
+}
+
+/// A compiled pair of stage executables. With the `xla` bindings gated
+/// the struct is unconstructible — [`PjrtRuntime::load`] always reports
+/// the engine unavailable — but its API (shape validation included)
+/// stays the contract the accelerated path compiles against.
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    stage1: xla::PjRtLoadedExecutable,
-    stage2: xla::PjRtLoadedExecutable,
+    _engine: (),
 }
 
 impl PjrtRuntime {
     /// Load `hotpage_stage1.hlo.txt` / `hotpage_stage2.hlo.txt` from
-    /// `artifacts_dir` and compile them on the CPU PJRT client.
+    /// `artifacts_dir` and compile them on the PJRT client.
     pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu()
-            .context("creating PJRT CPU client")?;
-        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+        for name in ["hotpage_stage1.hlo.txt", "hotpage_stage2.hlo.txt"] {
             let path: PathBuf = artifacts_dir.join(name);
             if !path.exists() {
-                bail!("artifact {} missing — run `make artifacts`",
-                      path.display());
+                return err(format!(
+                    "artifact {} missing — run `make artifacts`",
+                    path.display()));
             }
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        };
-        Ok(PjrtRuntime {
-            stage1: load("hotpage_stage1.hlo.txt")?,
-            stage2: load("hotpage_stage2.hlo.txt")?,
-            client,
-        })
+        }
+        err(format!(
+            "PJRT execution engine unavailable in this build (the `xla` \
+             PJRT bindings cannot be vendored offline); artifacts present \
+             under {} — using the bit-exact native pipeline instead",
+            artifacts_dir.display()))
     }
 
     /// Default artifacts location: `$RAINBOW_ARTIFACTS` or `./artifacts`.
@@ -58,7 +81,7 @@ impl PjrtRuntime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "gated".to_string()
     }
 
     /// Execute stage 1. Inputs may be shorter than N_SP (padded with
@@ -67,18 +90,12 @@ impl PjrtRuntime {
     pub fn stage1(&self, sp_reads: &[i32], sp_writes: &[i32],
                   params: &[f32; 8]) -> Result<(Vec<f32>, Vec<i32>)> {
         if sp_reads.len() > N_SP {
-            bail!("n_sp {} exceeds artifact shape {N_SP}", sp_reads.len());
+            return err(format!(
+                "n_sp {} exceeds artifact shape {N_SP}", sp_reads.len()));
         }
-        let r = pad_i32(sp_reads, N_SP);
-        let w = pad_i32(sp_writes, N_SP);
-        let lr = xla::Literal::vec1(&r);
-        let lw = xla::Literal::vec1(&w);
-        let lp = xla::Literal::vec1(&params[..]);
-        let result = self.stage1.execute::<xla::Literal>(&[lr, lw, lp])?
-            [0][0]
-            .to_literal_sync()?;
-        let (score, idx) = result.to_tuple2()?;
-        Ok((score.to_vec::<f32>()?, idx.to_vec::<i32>()?))
+        let _padded = (pad_i32(sp_reads, N_SP), pad_i32(sp_writes, N_SP),
+                       *params);
+        err("PJRT execution engine gated (xla bindings unavailable)".into())
     }
 
     /// Execute stage 2 over flattened (n_slots x 512) counters
@@ -87,28 +104,16 @@ impl PjrtRuntime {
                   params: &[f32; 8]) -> Result<(Vec<f32>, Vec<i32>)> {
         let n = TOP_N * SP_PAGES;
         if pg_reads.len() > n {
-            bail!("stage2 input {} exceeds artifact shape {n}",
-                  pg_reads.len());
+            return err(format!(
+                "stage2 input {} exceeds artifact shape {n}",
+                pg_reads.len()));
         }
         if pg_reads.len() % SP_PAGES != 0 {
-            bail!("stage2 input must be a multiple of {SP_PAGES}");
+            return err(format!(
+                "stage2 input must be a multiple of {SP_PAGES}"));
         }
-        let r = pad_i32(pg_reads, n);
-        let w = pad_i32(pg_writes, n);
-        let lr = xla::Literal::vec1(&r)
-            .reshape(&[TOP_N as i64, SP_PAGES as i64])?;
-        let lw = xla::Literal::vec1(&w)
-            .reshape(&[TOP_N as i64, SP_PAGES as i64])?;
-        let lp = xla::Literal::vec1(&params[..]);
-        let result = self.stage2.execute::<xla::Literal>(&[lr, lw, lp])?
-            [0][0]
-            .to_literal_sync()?;
-        let (benefit, hot) = result.to_tuple2()?;
-        let mut b = benefit.to_vec::<f32>()?;
-        let mut h = hot.to_vec::<i32>()?;
-        b.truncate(pg_reads.len());
-        h.truncate(pg_reads.len());
-        Ok((b, h))
+        let _padded = (pad_i32(pg_reads, n), pad_i32(pg_writes, n), *params);
+        err("PJRT execution engine gated (xla bindings unavailable)".into())
     }
 }
 
@@ -129,6 +134,30 @@ mod tests {
         assert_eq!(pad_i32(&[1, 2], 2), vec![1, 2]);
     }
 
+    #[test]
+    fn load_reports_missing_artifacts_first() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_no_artifacts_{}", std::process::id()));
+        let e = PjrtRuntime::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("missing"), "{e}");
+        // `{:#}` (what callers print) must also format.
+        assert!(!format!("{e:#}").is_empty());
+    }
+
+    #[test]
+    fn load_reports_gated_engine_when_artifacts_exist() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_fake_artifacts_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["hotpage_stage1.hlo.txt", "hotpage_stage2.hlo.txt"] {
+            std::fs::write(dir.join(name), "HloModule stub").unwrap();
+        }
+        let e = PjrtRuntime::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("unavailable"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // Execution tests against the real artifacts live in
-    // rust/tests/pjrt_integration.rs (they need `make artifacts`).
+    // rust/tests/pjrt_integration.rs (they skip while the engine is
+    // gated, exactly as they skip when artifacts are absent).
 }

@@ -1,0 +1,80 @@
+//! Determinism contract of the parallel sweep orchestrator: a fixed-seed
+//! workload x policy matrix executed on scoped worker threads must yield
+//! metrics BYTE-identical (via the kv serialization) to the serial
+//! `run_uncached` path, and repeated parallel runs must agree with each
+//! other — any cross-worker state sharing or ordering race would surface
+//! as drift between rounds.
+
+use rainbow::report::serde_kv::metrics_to_kv;
+use rainbow::report::sweep::{self, SweepConfig};
+use rainbow::report::{run_uncached, RunSpec};
+
+fn tiny(workload: &str, policy: &str) -> RunSpec {
+    let mut s = RunSpec::new(workload, policy);
+    s.scale = 64;
+    s.instructions = 60_000;
+    s.interval_cycles = 100_000;
+    s.top_n = 16;
+    s.seed = 42;
+    s
+}
+
+fn matrix() -> Vec<RunSpec> {
+    let mut specs = Vec::new();
+    for w in ["DICT", "streamcluster"] {
+        for p in ["flat", "rainbow", "hscc4k"] {
+            specs.push(tiny(w, p));
+        }
+    }
+    specs
+}
+
+#[test]
+fn parallel_sweep_matches_serial_byte_identical_twice() {
+    let specs = matrix();
+    let serial: Vec<String> =
+        specs.iter().map(|s| metrics_to_kv(&run_uncached(s))).collect();
+    // Two rounds: catches both serial/parallel divergence and
+    // run-to-run ordering races in the worker pool.
+    for round in 0..2 {
+        let parallel = sweep::run_parallel(
+            &specs, &SweepConfig { workers: 4, disk_cache: false });
+        assert_eq!(parallel.len(), specs.len());
+        for ((spec, want), got) in
+            specs.iter().zip(&serial).zip(&parallel)
+        {
+            assert_eq!(*want, metrics_to_kv(got),
+                       "round {round}: {} x {} diverged from serial",
+                       spec.workload, spec.policy);
+        }
+    }
+}
+
+#[test]
+fn duplicate_specs_share_one_simulation() {
+    let mut specs = matrix();
+    specs.extend(matrix()); // every fingerprint appears twice
+    let out =
+        sweep::run(&specs, &SweepConfig { workers: 3, disk_cache: false });
+    assert_eq!(out.unique_runs, specs.len() / 2,
+               "dedup must collapse repeated fingerprints");
+    let half = specs.len() / 2;
+    for i in 0..half {
+        assert_eq!(metrics_to_kv(&out.metrics[i]),
+                   metrics_to_kv(&out.metrics[i + half]),
+                   "duplicate {i} must reuse the cached result");
+    }
+}
+
+#[test]
+fn single_worker_equals_many_workers() {
+    let specs = matrix();
+    let one = sweep::run_parallel(
+        &specs, &SweepConfig { workers: 1, disk_cache: false });
+    let many = sweep::run_parallel(
+        &specs, &SweepConfig { workers: 8, disk_cache: false });
+    for (i, (a, b)) in one.iter().zip(&many).enumerate() {
+        assert_eq!(metrics_to_kv(a), metrics_to_kv(b),
+                   "spec {i}: worker count changed the metrics");
+    }
+}
