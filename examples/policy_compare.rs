@@ -48,10 +48,10 @@ fn main() {
     // 2. All five policies over the identically-seeded stream, as one
     //    parallel sweep matrix (each cell re-derives the same workload
     //    stream from the shared seed).
-    let mut base = RunSpec::new(&app, "flat");
-    base.scale = 8;
-    base.instructions = instructions;
-    base.seed = 0xE2E;
+    let base = RunSpec::new(&app, "flat")
+        .with_scale(8)
+        .with_instructions(instructions)
+        .with_seed(0xE2E);
     let policy_names: Vec<String> =
         policies::all_names().iter().map(|s| s.to_string()).collect();
     let specs = sweep::matrix(&base, &[app.clone()], &policy_names);

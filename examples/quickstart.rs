@@ -15,10 +15,8 @@ fn main() {
     println!("simulating {app} under Flat-static and Rainbow \
               (1/8-scale Table IV machine, parallel workers)...\n");
 
-    let mut spec = RunSpec::new(&app, "flat");
-    spec.instructions = 3_000_000;
-    let mut rb_spec = spec.clone();
-    rb_spec.policy = "rainbow".to_string();
+    let spec = RunSpec::new(&app, "flat").with_instructions(3_000_000);
+    let rb_spec = spec.clone().with_policy("rainbow");
     let metrics =
         sweep::run_parallel(&[spec, rb_spec], &SweepConfig::default());
     let (flat, rb) = (&metrics[0], &metrics[1]);

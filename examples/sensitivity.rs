@@ -1,9 +1,9 @@
-//! Sensitivity study driver (Figs. 13/14 + threshold/NVM-latency studies
-//! from §IV-F): sweeps sampling interval, top-N, and migration threshold
-//! for Rainbow on a chosen app. The interval and top-N sweeps run as
-//! parallel spec matrices on the sweep orchestrator; the threshold sweep
-//! patches a `Config` knob `RunSpec` cannot express, so it stays a local
-//! serial loop.
+//! Sensitivity study driver (Figs. 13/14 + the §IV-F threshold and
+//! NVM-latency studies): sweeps sampling interval, top-N, migration
+//! threshold, and NVM read/write latency for Rainbow on a chosen app.
+//! Every sweep — including the config-level knobs `RunSpec` historically
+//! could not express — is an override-bearing spec matrix, and ALL of
+//! them run as ONE batch on the parallel sweep orchestrator.
 //!
 //! ```sh
 //! cargo run --release --example sensitivity [app]
@@ -11,60 +11,80 @@
 
 use rainbow::report::sweep::{self, SweepConfig};
 use rainbow::report::RunSpec;
+use rainbow::sim::RunMetrics;
 use rainbow::util::tables::Table;
 
 fn base_spec(app: &str) -> RunSpec {
-    let mut s = RunSpec::new(app, "rainbow");
-    s.instructions = 800_000;
-    s
+    RunSpec::new(app, "rainbow").with_instructions(800_000)
+}
+
+fn traffic_mb(m: &RunMetrics) -> String {
+    format!("{:.1}",
+            (m.migrated_bytes + m.writeback_bytes) as f64 / (1 << 20) as f64)
 }
 
 fn main() {
     let app = std::env::args().nth(1).unwrap_or_else(|| "soplex".into());
+    let base_cfg = base_spec(&app).config();
 
-    // Fig. 13: sampling interval sweep (paper: 1e5..1e9 full-scale).
-    let base_interval = base_spec(&app).config().interval_cycles;
+    // Build each §IV-F sweep as its own override-bearing spec chunk...
     let interval_specs: Vec<RunSpec> = [0.01, 0.1, 1.0, 10.0]
         .iter()
-        .map(|f| {
-            let mut s = base_spec(&app);
-            s.interval_cycles =
-                ((base_interval as f64 * f) as u64).max(10_000);
-            s
-        })
+        .map(|f| base_spec(&app).with(
+            "rainbow.interval_cycles",
+            ((base_cfg.interval_cycles as f64 * f) as u64).max(10_000)))
         .collect();
-    let metrics =
-        sweep::run_parallel(&interval_specs, &SweepConfig::default());
+    let topn_specs: Vec<RunSpec> = [4usize, 10, 25, 50, 100]
+        .iter()
+        .map(|&n| base_spec(&app).with("rainbow.top_n", n))
+        .collect();
+    let threshold_specs: Vec<RunSpec> = [0.25, 1.0, 4.0, 16.0]
+        .iter()
+        .map(|m| base_spec(&app).with(
+            "rainbow.migration_threshold",
+            base_cfg.migration_threshold * m))
+        .collect();
+    let nvm_specs: Vec<RunSpec> = [0.5, 1.0, 2.0, 4.0]
+        .iter()
+        .map(|m| base_spec(&app)
+            .with("nvm.read_cycles",
+                  ((base_cfg.nvm.read_cycles as f64 * m) as u64).max(1))
+            .with("nvm.write_cycles",
+                  ((base_cfg.nvm.write_cycles as f64 * m) as u64).max(1)))
+        .collect();
+
+    // ...run them all concurrently as one batch (any specs sharing a
+    // fingerprint would be simulated once), then split the metrics back
+    // into the same chunks for rendering.
+    let all: Vec<RunSpec> = interval_specs.iter()
+        .chain(&topn_specs)
+        .chain(&threshold_specs)
+        .chain(&nvm_specs)
+        .cloned()
+        .collect();
+    let metrics = sweep::run_parallel(&all, &SweepConfig::default());
+    let (m_interval, rest) = metrics.split_at(interval_specs.len());
+    let (m_topn, rest) = rest.split_at(topn_specs.len());
+    let (m_threshold, m_nvm) = rest.split_at(threshold_specs.len());
+
+    // Fig. 13: sampling interval sweep (paper: 1e5..1e9 full-scale).
     let mut t = Table::new(
         &format!("Fig 13 (sensitivity): {app}, interval sweep"),
         &["interval", "migrations", "traffic MB", "IPC"]);
-    for (s, m) in interval_specs.iter().zip(&metrics) {
-        t.row(&[format!("{:.0e}", s.interval_cycles as f64),
-                m.migrations.to_string(),
-                format!("{:.1}", (m.migrated_bytes + m.writeback_bytes)
-                        as f64 / (1 << 20) as f64),
+    for (s, m) in interval_specs.iter().zip(m_interval) {
+        t.row(&[format!("{:.0e}", s.config().interval_cycles as f64),
+                m.migrations.to_string(), traffic_mb(m),
                 format!("{:.4}", m.ipc())]);
     }
     t.emit(None);
 
     // Fig. 14: top-N sweep.
-    let topn_specs: Vec<RunSpec> = [4usize, 10, 25, 50, 100]
-        .iter()
-        .map(|&n| {
-            let mut s = base_spec(&app);
-            s.top_n = n;
-            s
-        })
-        .collect();
-    let metrics = sweep::run_parallel(&topn_specs, &SweepConfig::default());
     let mut t = Table::new(
         &format!("Fig 14 (sensitivity): {app}, top-N sweep"),
         &["top-N", "migrations", "traffic MB", "IPC"]);
-    for (s, m) in topn_specs.iter().zip(&metrics) {
-        t.row(&[s.top_n.to_string(), m.migrations.to_string(),
-                format!("{:.1}", (m.migrated_bytes + m.writeback_bytes)
-                        as f64 / (1 << 20) as f64),
-                format!("{:.4}", m.ipc())]);
+    for (s, m) in topn_specs.iter().zip(m_topn) {
+        t.row(&[s.config().top_n.to_string(), m.migrations.to_string(),
+                traffic_mb(m), format!("{:.4}", m.ipc())]);
     }
     t.emit(None);
 
@@ -73,30 +93,22 @@ fn main() {
     let mut t = Table::new(
         &format!("§IV-F: {app}, migration-threshold sweep"),
         &["threshold", "migrations", "IPC"]);
-    for mult in [0.25, 1.0, 4.0, 16.0] {
-        let s = base_spec(&app);
-        let threshold = s.config().migration_threshold * mult;
-        let m = run_with_threshold(&s, threshold);
-        t.row(&[format!("{threshold:.0}"),
+    for (s, m) in threshold_specs.iter().zip(m_threshold) {
+        t.row(&[format!("{:.0}", s.config().migration_threshold),
                 m.migrations.to_string(), format!("{:.4}", m.ipc())]);
     }
     t.emit(None);
-}
 
-/// Run a spec with an overridden migration threshold (bypasses the cache).
-fn run_with_threshold(spec: &RunSpec, threshold: f64)
-                      -> rainbow::sim::RunMetrics {
-    use rainbow::policies::{self, Policy};
-    use rainbow::sim::{engine, EngineConfig};
-    use rainbow::workloads::Workload;
-
-    let mut cfg = spec.config();
-    cfg.migration_threshold = threshold;
-    let mut w = Workload::by_name(&spec.workload, cfg.cores, spec.scale,
-                                  spec.seed).unwrap();
-    let mut p: Box<dyn Policy> =
-        policies::by_name(&spec.policy, &cfg, false).unwrap();
-    engine::run(p.as_mut(), &mut w,
-                &EngineConfig::new(spec.instructions, cfg.interval_cycles))
-        .metrics
+    // §IV-F NVM-latency study: slower NVM widens Rainbow's benefit from
+    // serving hot pages out of DRAM.
+    let mut t = Table::new(
+        &format!("§IV-F: {app}, NVM latency sweep"),
+        &["NVM rd/wr cycles", "migrations", "traffic MB", "IPC"]);
+    for (s, m) in nvm_specs.iter().zip(m_nvm) {
+        let cfg = s.config();
+        t.row(&[format!("{}/{}", cfg.nvm.read_cycles, cfg.nvm.write_cycles),
+                m.migrations.to_string(), traffic_mb(m),
+                format!("{:.4}", m.ipc())]);
+    }
+    t.emit(None);
 }

@@ -1,88 +1,95 @@
 //! Ablations beyond the paper (DESIGN.md §6): bitmap-cache geometry,
-//! write-weighting of superpage counters, and dynamic-vs-static
-//! migration threshold.
+//! write-weighting of superpage counters, and the migration threshold —
+//! each expressed as config-knob overrides on `RunSpec`s and executed as
+//! one override-bearing spec matrix on the parallel sweep orchestrator
+//! (the same path the figures and the `sweep` CLI use).
 mod common;
 
-use rainbow::rainbow::bitmap::BitmapCache;
-use rainbow::rainbow::counters::TwoStageCounters;
-use rainbow::rainbow::migration::{ThresholdCtl, UtilityParams};
-use rainbow::runtime::HotPageIdentifier;
-use rainbow::util::rng::{Rng, Zipf};
+use rainbow::report::sweep::{self, SweepConfig};
+use rainbow::report::RunSpec;
 use rainbow::util::tables::Table;
 
-fn main() {
-    bitmap_cache_sweep();
-    write_weighting();
-    dynamic_threshold();
+const APP: &str = "DICT";
+
+fn base_spec() -> RunSpec {
+    RunSpec::new(APP, "rainbow")
+        .with_instructions(common::bench_instructions().min(800_000))
 }
 
-/// Bitmap-cache size/associativity vs hit rate under a zipfian superpage
-/// reference stream (the regime behind Fig. 9's "trivial misses" claim).
-fn bitmap_cache_sweep() {
+fn main() {
+    let t0 = std::time::Instant::now();
+    let base_cfg = base_spec().config();
+
+    // Build each ablation as its own override-bearing spec chunk...
+    let geometry_specs: Vec<RunSpec> =
+        [(256u64, 8u64), (1000, 8), (4000, 8), (4000, 2), (4000, 16)]
+            .iter()
+            .map(|&(entries, assoc)| base_spec()
+                .with("rainbow.bitmap_cache_entries", entries)
+                .with("rainbow.bitmap_cache_assoc", assoc))
+            .collect();
+    let weight_specs: Vec<RunSpec> = [0.0f64, 1.0, 3.0, 8.0]
+        .iter()
+        .map(|&w| base_spec().with("rainbow.write_weight", w))
+        .collect();
+    let threshold_specs: Vec<RunSpec> = [0.25f64, 1.0, 4.0, 16.0]
+        .iter()
+        .map(|m| base_spec().with("rainbow.migration_threshold",
+                                  base_cfg.migration_threshold * m))
+        .collect();
+
+    // ...simulate them all concurrently, then split the metrics back
+    // into the same chunks for rendering.
+    let all: Vec<RunSpec> = geometry_specs.iter()
+        .chain(&weight_specs)
+        .chain(&threshold_specs)
+        .cloned()
+        .collect();
+    let metrics = sweep::run_parallel(&all, &SweepConfig::default());
+    let (m_geometry, rest) = metrics.split_at(geometry_specs.len());
+    let (m_weight, m_threshold) = rest.split_at(weight_specs.len());
+
+    // Bitmap-cache size/associativity vs hit rate (the regime behind
+    // Fig. 9's "trivial misses" claim), measured on full simulations.
     let mut t = Table::new(
-        "Ablation: bitmap cache geometry vs hit rate (zipf over 16Ki superpages)",
-        &["entries", "assoc", "SRAM KB", "hit rate"]);
-    let z = Zipf::new(16384, 0.9);
-    for &(entries, assoc) in &[(256usize, 8usize), (1000, 8), (4000, 8),
-                               (4000, 2), (4000, 16), (16384, 8)] {
-        let mut c = BitmapCache::new(entries, assoc, 9);
-        let mut rng = Rng::new(7);
-        for _ in 0..300_000 {
-            c.touch(z.sample(&mut rng) as u32);
-        }
-        t.row(&[entries.to_string(), assoc.to_string(),
-                format!("{:.0}", c.sram_bytes() as f64 / 1000.0),
-                format!("{:.4}", c.stats.hit_rate())]);
+        &format!("Ablation: bitmap cache geometry ({APP}, full sim)"),
+        &["entries", "assoc", "bitmap hit rate", "IPC"]);
+    for (s, m) in geometry_specs.iter().zip(m_geometry) {
+        let cfg = s.config();
+        t.row(&[cfg.bitmap_cache_entries.to_string(),
+                cfg.bitmap_cache_assoc.to_string(),
+                format!("{:.4}", m.bitmap_hit_rate()),
+                format!("{:.4}", m.ipc())]);
     }
     t.emit(Some("target/figures/ablation_bitmap.csv"));
-}
 
-/// Write weighting in stage-1 scoring: with weighting, a write-hot
-/// superpage outranks a read-hot one of equal traffic (the paper's
-/// §III-B design choice — PCM writes are the expensive resource).
-fn write_weighting() {
+    // Write weighting in stage-1 scoring: PCM writes are the expensive
+    // resource (§III-B), so up-weighting write-hot superpages shifts
+    // which pages migrate and what traffic results.
     let mut t = Table::new(
-        "Ablation: write weighting in superpage selection",
-        &["write_weight", "write-hot sp rank", "read-hot sp rank"]);
-    for weight in [0.0f64, 1.0, 3.0, 8.0] {
-        let mut c = TwoStageCounters::new(256, 8);
-        // sp 10: 600 reads. sp 20: 300 writes (less total traffic).
-        for _ in 0..600 {
-            c.record(10, 0, false);
-        }
-        for _ in 0..300 {
-            c.record(20, 0, true);
-        }
-        let mut p =
-            UtilityParams::from_config(&rainbow::config::Config::paper());
-        p.write_weight = weight;
-        let top = HotPageIdentifier::native().select_top(&c, &p);
-        let rank = |sp: u32| {
-            top.iter().position(|&x| x == sp)
-                .map(|i| i.to_string()).unwrap_or("-".into())
-        };
-        t.row(&[format!("{weight}"), rank(20), rank(10)]);
+        &format!("Ablation: write weighting in superpage selection ({APP})"),
+        &["write_weight", "migrations", "NVM writes", "IPC"]);
+    for (s, m) in weight_specs.iter().zip(m_weight) {
+        t.row(&[format!("{}", s.config().write_weight),
+                m.migrations.to_string(),
+                m.nvm_writes.to_string(),
+                format!("{:.4}", m.ipc())]);
     }
     t.emit(Some("target/figures/ablation_wweight.csv"));
-}
 
-/// Dynamic threshold controller vs a static threshold under a thrashing
-/// traffic pattern: the controller must rise under bidirectional traffic
-/// and decay when it stops (bounding migration churn).
-fn dynamic_threshold() {
+    // Static migration-threshold sweep (Eq. 1): higher thresholds
+    // suppress marginal migrations, bounding churn at some IPC cost.
     let mut t = Table::new(
-        "Ablation: dynamic migration threshold under thrash",
-        &["phase", "interval", "threshold"]);
-    let mut ctl = ThresholdCtl::new(2000.0);
-    for i in 0..4 {
-        ctl.update(1 << 20, 900 << 10); // heavy writeback: thrash
-        t.row(&["thrash".into(), i.to_string(),
-                format!("{:.0}", ctl.threshold())]);
-    }
-    for i in 4..8 {
-        ctl.update(1 << 20, 0); // calm
-        t.row(&["calm".into(), i.to_string(),
-                format!("{:.0}", ctl.threshold())]);
+        &format!("Ablation: migration threshold ({APP})"),
+        &["threshold", "migrations", "migrated MB", "IPC"]);
+    for (s, m) in threshold_specs.iter().zip(m_threshold) {
+        t.row(&[format!("{:.0}", s.config().migration_threshold),
+                m.migrations.to_string(),
+                format!("{:.1}", m.migrated_bytes as f64 / (1 << 20) as f64),
+                format!("{:.4}", m.ipc())]);
     }
     t.emit(Some("target/figures/ablation_threshold.csv"));
+
+    println!("bench ablations: generated in {:.2}s\n",
+             t0.elapsed().as_secs_f64());
 }

@@ -10,9 +10,9 @@ use rainbow::report::{self, RunSpec};
 
 /// Standard bench context: the default workload subset at 1/8 scale.
 pub fn ctx() -> FigureCtx {
-    let mut base = RunSpec::new("", "");
-    base.scale = 8;
-    base.instructions = bench_instructions();
+    let base = RunSpec::new("", "")
+        .with_scale(8)
+        .with_instructions(bench_instructions());
     FigureCtx::new(
         report::default_workloads().iter().map(|s| s.to_string()).collect(),
         base,

@@ -1,0 +1,492 @@
+//! The experiment-knob registry: every `Config` field an experiment may
+//! override, each with a stable dotted key (`rainbow.migration_threshold`,
+//! `nvm.read_cycles`, ...), a declared type, and an apply function. This
+//! is the SINGLE validated apply path shared by the tomlite config
+//! loader (`Config::apply_doc`), the CLI `--set key=value` surface, the
+//! on-disk spec-file format, and `RunSpec` overrides — so every consumer
+//! rejects unknown keys and ill-typed values identically, before any
+//! sweep fans out to worker threads.
+//!
+//! [`Overrides`] is the ordered (BTreeMap-canonical) collection of set
+//! knobs a [`crate::report::RunSpec`] carries; its [`Overrides::canonical`]
+//! serialization is order-independent, which keeps spec fingerprints
+//! stable however call sites build their specs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::Config;
+use crate::util::cli::parse_u64;
+use crate::util::tomlite::{Doc, Value};
+
+/// Declared type of a knob's value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnobKind {
+    U64,
+    F64,
+}
+
+impl KnobKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KnobKind::U64 => "u64",
+            KnobKind::F64 => "f64",
+        }
+    }
+}
+
+/// A typed override value in canonical form (always matches the knob's
+/// [`KnobKind`] once it has passed [`Knob::coerce`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KnobValue {
+    U64(u64),
+    F64(f64),
+}
+
+impl KnobValue {
+    pub fn as_u64(self) -> u64 {
+        match self {
+            KnobValue::U64(v) => v,
+            KnobValue::F64(v) => v as u64,
+        }
+    }
+
+    pub fn as_f64(self) -> f64 {
+        match self {
+            KnobValue::U64(v) => v as f64,
+            KnobValue::F64(v) => v,
+        }
+    }
+}
+
+impl fmt::Display for KnobValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KnobValue::U64(v) => write!(f, "{v}"),
+            KnobValue::F64(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+impl From<u64> for KnobValue {
+    fn from(v: u64) -> KnobValue {
+        KnobValue::U64(v)
+    }
+}
+
+impl From<usize> for KnobValue {
+    fn from(v: usize) -> KnobValue {
+        KnobValue::U64(v as u64)
+    }
+}
+
+impl From<f64> for KnobValue {
+    fn from(v: f64) -> KnobValue {
+        KnobValue::F64(v)
+    }
+}
+
+/// One overridable config field.
+pub struct Knob {
+    pub key: &'static str,
+    pub kind: KnobKind,
+    pub help: &'static str,
+    apply: fn(&mut Config, KnobValue),
+}
+
+/// Knobs where a zero (or non-positive) value is degenerate — a divisor,
+/// an empty hardware structure, or the sampling interval whose zero
+/// would hang the engine's interval loop. Rejected at parse/coerce time
+/// so bad values fail CLI/spec validation, not a worker thread.
+const POSITIVE_KEYS: &[&str] = &[
+    "cpu.cores", "cpu.ghz", "tlb.l1_4k_entries", "tlb.l1_2m_entries",
+    "tlb.l2_4k_entries", "tlb.l2_2m_entries", "cache.l1_size",
+    "cache.l2_size", "cache.l3_size", "dram.size", "nvm.size",
+    "rainbow.interval_cycles", "rainbow.top_n",
+    "rainbow.bitmap_cache_entries", "rainbow.bitmap_cache_assoc",
+    "mem.dram_ratio",
+];
+
+impl Knob {
+    /// Parse a textual value (CLI `--set`, spec file) into this knob's
+    /// type. u64 knobs accept `_` separators and k/m/g/e suffixes, same
+    /// as the tomlite loader.
+    pub fn parse(&self, raw: &str) -> Result<KnobValue, String> {
+        let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
+        let v = match self.kind {
+            KnobKind::U64 => parse_u64(&cleaned)
+                .map(KnobValue::U64)
+                .ok_or_else(|| {
+                    format!("knob {}: expected integer, got {raw:?}", self.key)
+                })?,
+            KnobKind::F64 => cleaned
+                .parse::<f64>()
+                .map(KnobValue::F64)
+                .map_err(|_| {
+                    format!("knob {}: expected number, got {raw:?}", self.key)
+                })?,
+        };
+        self.validate(v)
+    }
+
+    /// Coerce a typed value to this knob's kind (lossless only).
+    pub fn coerce(&self, v: KnobValue) -> Result<KnobValue, String> {
+        let v = match (self.kind, v) {
+            (KnobKind::U64, KnobValue::U64(_)) => v,
+            (KnobKind::U64, KnobValue::F64(f)) => {
+                if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
+                    KnobValue::U64(f as u64)
+                } else {
+                    return Err(format!(
+                        "knob {}: expected integer, got {f}", self.key));
+                }
+            }
+            (KnobKind::F64, KnobValue::F64(_)) => v,
+            (KnobKind::F64, KnobValue::U64(u)) => KnobValue::F64(u as f64),
+        };
+        self.validate(v)
+    }
+
+    /// Range checks shared by both input paths: f64 values must be
+    /// finite (NaN would silently disable every threshold comparison),
+    /// and [`POSITIVE_KEYS`] must be > 0.
+    fn validate(&self, v: KnobValue) -> Result<KnobValue, String> {
+        if let KnobValue::F64(f) = v {
+            if !f.is_finite() {
+                return Err(format!(
+                    "knob {}: value must be finite, got {f}", self.key));
+            }
+        }
+        if POSITIVE_KEYS.contains(&self.key) {
+            let bad = match v {
+                KnobValue::U64(u) => u == 0,
+                KnobValue::F64(f) => f <= 0.0,
+            };
+            if bad {
+                return Err(format!(
+                    "knob {}: value must be positive, got {v}", self.key));
+            }
+        }
+        Ok(v)
+    }
+}
+
+/// The registry. Declaration order is APPLY order (deterministic and
+/// independent of how an `Overrides` map was built); derived knobs like
+/// `mem.dram_ratio` are declared last so they see the final base values.
+static KNOBS: &[Knob] = &[
+    Knob { key: "cpu.cores", kind: KnobKind::U64,
+           help: "simulated cores",
+           apply: |c, v| c.cores = v.as_u64() as usize },
+    Knob { key: "cpu.ghz", kind: KnobKind::F64,
+           help: "core clock (GHz)",
+           apply: |c, v| c.cpu_ghz = v.as_f64() },
+    Knob { key: "tlb.l1_4k_entries", kind: KnobKind::U64,
+           help: "L1 4KB TLB entries",
+           apply: |c, v| c.l1_tlb_4k.entries = v.as_u64() as usize },
+    Knob { key: "tlb.l1_2m_entries", kind: KnobKind::U64,
+           help: "L1 2MB TLB entries",
+           apply: |c, v| c.l1_tlb_2m.entries = v.as_u64() as usize },
+    Knob { key: "tlb.l2_4k_entries", kind: KnobKind::U64,
+           help: "L2 4KB TLB entries",
+           apply: |c, v| c.l2_tlb_4k.entries = v.as_u64() as usize },
+    Knob { key: "tlb.l2_2m_entries", kind: KnobKind::U64,
+           help: "L2 2MB TLB entries",
+           apply: |c, v| c.l2_tlb_2m.entries = v.as_u64() as usize },
+    Knob { key: "cache.l1_size", kind: KnobKind::U64,
+           help: "L1 cache bytes",
+           apply: |c, v| c.l1_cache.size = v.as_u64() },
+    Knob { key: "cache.l2_size", kind: KnobKind::U64,
+           help: "L2 cache bytes",
+           apply: |c, v| c.l2_cache.size = v.as_u64() },
+    Knob { key: "cache.l3_size", kind: KnobKind::U64,
+           help: "LLC bytes",
+           apply: |c, v| c.l3_cache.size = v.as_u64() },
+    Knob { key: "dram.size", kind: KnobKind::U64,
+           help: "DRAM capacity bytes",
+           apply: |c, v| c.dram.size = v.as_u64() },
+    Knob { key: "dram.read_cycles", kind: KnobKind::U64,
+           help: "DRAM array read latency (cycles)",
+           apply: |c, v| c.dram.read_cycles = v.as_u64() },
+    Knob { key: "dram.write_cycles", kind: KnobKind::U64,
+           help: "DRAM array write latency (cycles)",
+           apply: |c, v| c.dram.write_cycles = v.as_u64() },
+    Knob { key: "dram.t_cas", kind: KnobKind::U64,
+           help: "DRAM tCAS (controller cycles)",
+           apply: |c, v| c.dram.t_cas = v.as_u64() },
+    Knob { key: "dram.t_rcd", kind: KnobKind::U64,
+           help: "DRAM tRCD",
+           apply: |c, v| c.dram.t_rcd = v.as_u64() },
+    Knob { key: "dram.t_rp", kind: KnobKind::U64,
+           help: "DRAM tRP",
+           apply: |c, v| c.dram.t_rp = v.as_u64() },
+    Knob { key: "dram.t_ras", kind: KnobKind::U64,
+           help: "DRAM tRAS",
+           apply: |c, v| c.dram.t_ras = v.as_u64() },
+    Knob { key: "nvm.size", kind: KnobKind::U64,
+           help: "NVM capacity bytes",
+           apply: |c, v| c.nvm.size = v.as_u64() },
+    Knob { key: "nvm.read_cycles", kind: KnobKind::U64,
+           help: "NVM array read latency (cycles)",
+           apply: |c, v| c.nvm.read_cycles = v.as_u64() },
+    Knob { key: "nvm.write_cycles", kind: KnobKind::U64,
+           help: "NVM array write latency (cycles)",
+           apply: |c, v| c.nvm.write_cycles = v.as_u64() },
+    Knob { key: "nvm.t_cas", kind: KnobKind::U64,
+           help: "NVM tCAS",
+           apply: |c, v| c.nvm.t_cas = v.as_u64() },
+    Knob { key: "nvm.t_rcd", kind: KnobKind::U64,
+           help: "NVM tRCD",
+           apply: |c, v| c.nvm.t_rcd = v.as_u64() },
+    Knob { key: "nvm.t_rp", kind: KnobKind::U64,
+           help: "NVM tRP",
+           apply: |c, v| c.nvm.t_rp = v.as_u64() },
+    Knob { key: "nvm.t_ras", kind: KnobKind::U64,
+           help: "NVM tRAS",
+           apply: |c, v| c.nvm.t_ras = v.as_u64() },
+    Knob { key: "rainbow.interval_cycles", kind: KnobKind::U64,
+           help: "hot-page sampling interval (cycles)",
+           apply: |c, v| c.interval_cycles = v.as_u64() },
+    Knob { key: "rainbow.top_n", kind: KnobKind::U64,
+           help: "top-N monitored hot superpages",
+           apply: |c, v| c.top_n = v.as_u64() as usize },
+    Knob { key: "rainbow.write_weight", kind: KnobKind::F64,
+           help: "write weighting in superpage scoring",
+           apply: |c, v| c.write_weight = v.as_f64() },
+    Knob { key: "rainbow.migration_threshold", kind: KnobKind::F64,
+           help: "base migration-benefit threshold (cycles, Eq. 1)",
+           apply: |c, v| c.migration_threshold = v.as_f64() },
+    Knob { key: "rainbow.bitmap_cache_entries", kind: KnobKind::U64,
+           help: "migration-bitmap cache entries",
+           apply: |c, v| c.bitmap_cache_entries = v.as_u64() as usize },
+    Knob { key: "rainbow.bitmap_cache_assoc", kind: KnobKind::U64,
+           help: "migration-bitmap cache associativity",
+           apply: |c, v| c.bitmap_cache_assoc = v.as_u64() as usize },
+    Knob { key: "rainbow.bitmap_cache_latency", kind: KnobKind::U64,
+           help: "migration-bitmap cache latency (cycles)",
+           apply: |c, v| c.bitmap_cache_latency = v.as_u64() },
+    Knob { key: "cost.t_mig_4k", kind: KnobKind::U64,
+           help: "4KB migration cost (cycles)",
+           apply: |c, v| c.t_mig_4k = v.as_u64() },
+    Knob { key: "cost.t_mig_2m", kind: KnobKind::U64,
+           help: "2MB migration cost (cycles)",
+           apply: |c, v| c.t_mig_2m = v.as_u64() },
+    Knob { key: "cost.t_writeback_4k", kind: KnobKind::U64,
+           help: "4KB writeback cost (cycles)",
+           apply: |c, v| c.t_writeback_4k = v.as_u64() },
+    Knob { key: "cost.t_shootdown", kind: KnobKind::U64,
+           help: "TLB shootdown cost (cycles)",
+           apply: |c, v| c.t_shootdown = v.as_u64() },
+    Knob { key: "cost.t_clflush_line", kind: KnobKind::U64,
+           help: "clflush cost per line (cycles)",
+           apply: |c, v| c.t_clflush_line = v.as_u64() },
+    // Derived knob, declared LAST so it sees the final nvm.size.
+    Knob { key: "mem.dram_ratio", kind: KnobKind::U64,
+           help: "NVM:DRAM capacity ratio (sets dram.size = nvm.size / r)",
+           apply: |c, v| c.dram.size = c.nvm.size / v.as_u64().max(1) },
+];
+
+/// Every registered knob, in apply order.
+pub fn all() -> &'static [Knob] {
+    KNOBS
+}
+
+/// Look a knob up by its dotted key.
+pub fn by_key(key: &str) -> Option<&'static Knob> {
+    KNOBS.iter().find(|k| k.key == key)
+}
+
+/// An ordered (canonically sorted) map of knob overrides. The map keys
+/// are the registry's `&'static str`s, so an `Overrides` can only ever
+/// hold registered knobs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Overrides {
+    map: BTreeMap<&'static str, KnobValue>,
+}
+
+impl Overrides {
+    pub fn new() -> Overrides {
+        Overrides::default()
+    }
+
+    /// Set a knob from a typed value. Rejects unknown keys and values
+    /// that don't (losslessly) fit the knob's declared type.
+    pub fn set(&mut self, key: &str, value: KnobValue) -> Result<(), String> {
+        let knob = by_key(key)
+            .ok_or_else(|| format!(
+                "unknown config knob {key:?}; `rainbow list` shows them"))?;
+        self.map.insert(knob.key, knob.coerce(value)?);
+        Ok(())
+    }
+
+    /// Set a knob from its textual form (CLI `--set`, spec files).
+    pub fn set_raw(&mut self, key: &str, raw: &str) -> Result<(), String> {
+        let knob = by_key(key)
+            .ok_or_else(|| format!(
+                "unknown config knob {key:?}; `rainbow list` shows them"))?;
+        self.map.insert(knob.key, knob.parse(raw)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<KnobValue> {
+        self.map.get(key).copied()
+    }
+
+    /// Drop a knob (no-op if unset), restoring the config's base value.
+    pub fn remove(&mut self, key: &str) {
+        self.map.remove(key);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Knobs in canonical (key-sorted) order.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, KnobValue)> + '_ {
+        self.map.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Apply every set knob onto `cfg`, in registry order (NOT map
+    /// order), so derived knobs are deterministic.
+    pub fn apply_to(&self, cfg: &mut Config) {
+        for knob in KNOBS {
+            if let Some(v) = self.map.get(knob.key) {
+                (knob.apply)(cfg, *v);
+            }
+        }
+    }
+
+    /// Canonical `key=value\n` serialization: sorted by key, values in
+    /// canonical textual form — identical however the map was built.
+    pub fn canonical(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.map {
+            s.push_str(k);
+            s.push('=');
+            s.push_str(&v.to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Build from a tomlite document, rejecting unknown keys and
+    /// non-numeric values (the validated half of `Config::apply_doc`).
+    pub fn from_doc(doc: &Doc) -> Result<Overrides, String> {
+        let mut ov = Overrides::new();
+        for key in doc.keys() {
+            let knob = by_key(key).ok_or_else(|| {
+                format!("unknown config knob {key:?} in config file")
+            })?;
+            let v = match doc.get(key) {
+                Some(Value::Int(u)) => KnobValue::U64(*u),
+                Some(Value::Float(f)) => KnobValue::F64(*f),
+                _ => return Err(format!(
+                    "knob {key}: expected a number")),
+            };
+            ov.map.insert(knob.key, knob.coerce(v)?);
+        }
+        Ok(ov)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_keys_are_unique_and_resolvable() {
+        for (i, k) in KNOBS.iter().enumerate() {
+            assert!(by_key(k.key).is_some());
+            for other in &KNOBS[i + 1..] {
+                assert_ne!(k.key, other.key, "duplicate knob key");
+            }
+        }
+    }
+
+    #[test]
+    fn set_rejects_unknown_and_ill_typed() {
+        let mut ov = Overrides::new();
+        assert!(ov.set("rainbow.nope", KnobValue::U64(1)).is_err());
+        assert!(ov.set_raw("nvm.read_cycles", "fast").is_err());
+        assert!(ov
+            .set("rainbow.top_n", KnobValue::F64(1.5))
+            .is_err(), "fractional value must not fit a u64 knob");
+        assert!(ov.set("rainbow.top_n", KnobValue::F64(32.0)).is_ok());
+        assert_eq!(ov.get("rainbow.top_n"), Some(KnobValue::U64(32)));
+    }
+
+    #[test]
+    fn apply_changes_config() {
+        let mut ov = Overrides::new();
+        ov.set("rainbow.migration_threshold", KnobValue::F64(123.5))
+            .unwrap();
+        ov.set_raw("nvm.read_cycles", "124").unwrap();
+        ov.set_raw("tlb.l2_4k_entries", "64").unwrap();
+        let mut c = Config::scaled(8);
+        ov.apply_to(&mut c);
+        assert_eq!(c.migration_threshold, 123.5);
+        assert_eq!(c.nvm.read_cycles, 124);
+        assert_eq!(c.l2_tlb_4k.entries, 64);
+    }
+
+    #[test]
+    fn dram_ratio_applies_after_nvm_size() {
+        let mut ov = Overrides::new();
+        // Insertion order is the OPPOSITE of the dependency order; the
+        // registry-ordered apply must still see the final nvm.size.
+        ov.set_raw("mem.dram_ratio", "4").unwrap();
+        ov.set_raw("nvm.size", "1g").unwrap();
+        let mut c = Config::scaled(8);
+        ov.apply_to(&mut c);
+        assert_eq!(c.nvm.size, 1 << 30);
+        assert_eq!(c.dram.size, (1 << 30) / 4);
+    }
+
+    #[test]
+    fn canonical_is_insertion_order_independent() {
+        let mut a = Overrides::new();
+        a.set_raw("rainbow.top_n", "32").unwrap();
+        a.set_raw("dram.read_cycles", "50").unwrap();
+        let mut b = Overrides::new();
+        b.set_raw("dram.read_cycles", "50").unwrap();
+        b.set_raw("rainbow.top_n", "32").unwrap();
+        assert_eq!(a.canonical(), b.canonical());
+        assert_eq!(a, b);
+        assert_eq!(a.canonical(), "dram.read_cycles=50\nrainbow.top_n=32\n");
+    }
+
+    #[test]
+    fn u64_knob_accepts_suffixes() {
+        let mut ov = Overrides::new();
+        ov.set_raw("dram.size", "256m").unwrap();
+        assert_eq!(ov.get("dram.size"), Some(KnobValue::U64(256 << 20)));
+    }
+
+    #[test]
+    fn positive_keys_are_all_registered() {
+        for k in POSITIVE_KEYS {
+            assert!(by_key(k).is_some(), "POSITIVE_KEYS has stale key {k}");
+        }
+    }
+
+    #[test]
+    fn degenerate_values_rejected_before_any_fanout() {
+        let mut ov = Overrides::new();
+        // Zero divisors / empty structures / hang-inducing interval.
+        assert!(ov.set_raw("cpu.cores", "0").is_err());
+        assert!(ov.set_raw("rainbow.interval_cycles", "0").is_err());
+        assert!(ov.set_raw("dram.size", "0").is_err());
+        assert!(ov.set("rainbow.top_n", KnobValue::U64(0)).is_err());
+        assert!(ov.set_raw("cpu.ghz", "-3.2").is_err());
+        // Non-finite floats (NaN disables threshold comparisons).
+        assert!(ov.set_raw("rainbow.migration_threshold", "nan").is_err());
+        assert!(ov.set_raw("rainbow.migration_threshold", "inf").is_err());
+        // Zero stays legal where it is meaningful.
+        assert!(ov.set_raw("rainbow.write_weight", "0").is_ok());
+        assert!(ov.set_raw("cost.t_shootdown", "0").is_ok());
+    }
+}

@@ -8,6 +8,8 @@
 
 use crate::util::tomlite::Doc;
 
+pub mod knobs;
+
 pub const PAGE_SHIFT: u32 = 12;
 pub const PAGE_SIZE: u64 = 1 << PAGE_SHIFT; // 4 KB
 pub const SP_SHIFT: u32 = 21;
@@ -232,26 +234,13 @@ impl Config {
         self.dram.size / PAGE_SIZE
     }
 
-    /// Load overrides from a tomlite document (flat `section.key` keys).
-    pub fn apply_doc(&mut self, doc: &Doc) {
-        self.cores = doc.u64_or("cpu.cores", self.cores as u64) as usize;
-        self.cpu_ghz = doc.f64_or("cpu.ghz", self.cpu_ghz);
-        self.dram.size = doc.u64_or("dram.size", self.dram.size);
-        self.nvm.size = doc.u64_or("nvm.size", self.nvm.size);
-        self.dram.read_cycles = doc.u64_or("dram.read_cycles", self.dram.read_cycles);
-        self.dram.write_cycles =
-            doc.u64_or("dram.write_cycles", self.dram.write_cycles);
-        self.nvm.read_cycles = doc.u64_or("nvm.read_cycles", self.nvm.read_cycles);
-        self.nvm.write_cycles = doc.u64_or("nvm.write_cycles", self.nvm.write_cycles);
-        self.interval_cycles =
-            doc.u64_or("rainbow.interval_cycles", self.interval_cycles);
-        self.top_n = doc.u64_or("rainbow.top_n", self.top_n as u64) as usize;
-        self.write_weight = doc.f64_or("rainbow.write_weight", self.write_weight);
-        self.migration_threshold =
-            doc.f64_or("rainbow.migration_threshold", self.migration_threshold);
-        self.bitmap_cache_entries = doc
-            .u64_or("rainbow.bitmap_cache_entries", self.bitmap_cache_entries as u64)
-            as usize;
+    /// Load overrides from a tomlite document (flat `section.key` keys)
+    /// through the knob registry: unknown keys and ill-typed values are
+    /// rejected, the same as CLI `--set` and spec files.
+    pub fn apply_doc(&mut self, doc: &Doc) -> Result<(), String> {
+        let ov = knobs::Overrides::from_doc(doc)?;
+        ov.apply_to(self);
+        Ok(())
     }
 }
 
@@ -309,9 +298,16 @@ mod tests {
         )
         .unwrap();
         let mut c = Config::paper();
-        c.apply_doc(&doc);
+        c.apply_doc(&doc).unwrap();
         assert_eq!(c.top_n, 50);
         assert_eq!(c.interval_cycles, 1_000_000);
         assert_eq!(c.dram.size, 256 << 20);
+    }
+
+    #[test]
+    fn doc_with_unknown_knob_rejected() {
+        let doc = Doc::parse("[rainbow]\nnot_a_knob = 1\n").unwrap();
+        let mut c = Config::paper();
+        assert!(c.apply_doc(&doc).is_err());
     }
 }

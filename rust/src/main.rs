@@ -1,12 +1,14 @@
 //! `rainbow` — the leader binary: run single simulations, regenerate any
 //! paper table/figure, or run the whole evaluation suite.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
-use rainbow::config::Config;
+use rainbow::config::{knobs, Config};
 use rainbow::report::figures::{self, FigureCtx};
+use rainbow::report::spec_cli;
 use rainbow::report::sweep::{self, SweepConfig};
-use rainbow::report::{self, RunSpec};
+use rainbow::report::{self, serde_kv, RunSpec};
 use rainbow::util::cli::{help_text, Args, OptSpec};
 use rainbow::util::tables::Table;
 
@@ -27,6 +29,19 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "seed", help: "workload RNG seed",
               default: Some("0xEA7BEEF as decimal 246202095"),
               is_flag: false },
+    OptSpec { name: "set",
+              help: "config-knob override knob=value (repeatable; \
+                     `rainbow list` shows knobs)",
+              default: None, is_flag: false },
+    OptSpec { name: "spec", help: "load a RunSpec from a spec (.kv) file",
+              default: None, is_flag: false },
+    OptSpec { name: "save-spec",
+              help: "write the resolved RunSpec to a spec (.kv) file",
+              default: None, is_flag: false },
+    OptSpec { name: "cache-dir",
+              help: "results-cache directory (default: RAINBOW_CACHE or \
+                     target/rainbow_results)",
+              default: None, is_flag: false },
     OptSpec { name: "fig",
               help: "figure/table id: 1,7,8,9,10,11,12,13,14,15,t1,t2,t6,remap",
               default: None, is_flag: false },
@@ -36,6 +51,10 @@ const OPTS: &[OptSpec] = &[
               default: None, is_flag: true },
     OptSpec { name: "accel",
               help: "use PJRT AOT artifacts for Rainbow identification",
+              default: None, is_flag: true },
+    OptSpec { name: "no-accel",
+              help: "force the native identification backend (e.g. to \
+                     negate a spec file's accel=1)",
               default: None, is_flag: true },
     OptSpec { name: "paper-scale",
               help: "full Table IV capacities (scale=1, slow)",
@@ -88,20 +107,22 @@ fn main() {
     }
 }
 
+/// Resolve the spec from `--spec`/options/`--set` (see
+/// `report::spec_cli`), honoring `--save-spec` as a side effect.
 fn spec_from_args(args: &Args) -> Result<RunSpec, String> {
-    let mut s = RunSpec::new(args.get_or("app", "mcf"),
-                             args.get_or("policy", "rainbow"));
-    s.scale = if args.flag("paper-scale") {
-        1
-    } else {
-        args.get_u64("scale", 8)?
-    };
-    s.instructions = args.get_u64("instructions", 4_000_000)?;
-    s.interval_cycles = args.get_u64("interval", 0)?;
-    s.top_n = args.get_usize("top-n", 0)?;
-    s.seed = args.get_u64("seed", 0xEA7_BEEF)?;
-    s.accel = args.flag("accel");
+    let s = spec_cli::spec_from_args(args)?;
+    if let Some(path) = args.get("save-spec") {
+        std::fs::write(path, serde_kv::spec_to_kv(&s))
+            .map_err(|e| format!("--save-spec {path}: {e}"))?;
+        println!("spec written to {path}");
+    }
     Ok(s)
+}
+
+fn cache_dir_from_args(args: &Args) -> PathBuf {
+    args.get("cache-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(report::default_cache_dir)
 }
 
 fn ctx_from_args(args: &Args) -> Result<FigureCtx, String> {
@@ -110,7 +131,10 @@ fn ctx_from_args(args: &Args) -> Result<FigureCtx, String> {
     } else {
         report::default_workloads().iter().map(|s| s.to_string()).collect()
     };
-    Ok(FigureCtx::new(workloads, spec_from_args(args)?))
+    let mut ctx = FigureCtx::new(workloads, spec_from_args(args)?);
+    ctx.sweep.disk_cache = !args.flag("no-cache");
+    ctx.sweep.cache_dir = Some(cache_dir_from_args(args));
+    Ok(ctx)
 }
 
 fn csv_path(args: &Args, name: &str) -> Option<String> {
@@ -131,6 +155,10 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
         "list" => {
             println!("workloads: {}", report::all_workloads().join(", "));
             println!("policies : {}", report::policy_names().join(", "));
+            println!("knobs (for --set key=value / spec files):");
+            for k in knobs::all() {
+                println!("  {:<32} {:<4} {}", k.key, k.kind.name(), k.help);
+            }
             Ok(())
         }
         other => Err(format!("unknown command {other:?}; try --help")),
@@ -143,7 +171,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let m = if args.flag("no-cache") {
         report::run_uncached(&spec)
     } else {
-        report::run_cached(&spec)
+        report::run_cached_in(&cache_dir_from_args(args), &spec)
     };
     let dt = t0.elapsed();
     let mut t = Table::new(
@@ -192,60 +220,23 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Split a comma-separated CLI list, dropping empty segments.
-fn comma_list(raw: &str) -> Vec<String> {
-    raw.split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect()
-}
-
 /// `sweep`: execute a workload x policy matrix on scoped worker threads
 /// (report::sweep), print one row per cell, and optionally verify the
 /// parallel results byte-for-byte against a serial `run_uncached` replay.
+/// Specs, names, and every `--set` override are validated up front (in
+/// `report::spec_cli`): an unknown name or knob inside a worker thread
+/// would panic the scope instead of taking the CLI's error path.
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     let base = spec_from_args(args)?;
-    let workloads: Vec<String> = match args.get("apps") {
-        Some(list) if list.eq_ignore_ascii_case("all") => {
-            report::all_workloads()
-        }
-        Some(list) => comma_list(list),
-        None if args.flag("all") => report::all_workloads(),
-        None => report::default_workloads()
-            .iter()
-            .map(|s| s.to_string())
-            .collect(),
-    };
-    let policies: Vec<String> = match args.get("policies") {
-        Some(list) => comma_list(list),
-        None => report::policy_names().iter().map(|s| s.to_string()).collect(),
-    };
-    if workloads.is_empty() || policies.is_empty() {
-        return Err("sweep: empty workload or policy list".into());
-    }
-    // Validate names up front: an unknown name inside a worker thread
-    // would panic the scope instead of taking the CLI's error path.
-    // Workload::all_names covers exactly what Workload::by_name accepts
-    // (apps and mixes, case-insensitive).
-    let known = rainbow::workloads::Workload::all_names();
-    for w in &workloads {
-        if !known.iter().any(|n| n.eq_ignore_ascii_case(w)) {
-            return Err(format!(
-                "unknown workload {w:?}; `rainbow list` shows them"));
-        }
-    }
-    for p in &policies {
-        if !rainbow::policies::is_valid_name(p) {
-            return Err(format!(
-                "unknown policy {p:?}; `rainbow list` shows them"));
-        }
-    }
+    let workloads = spec_cli::sweep_workloads(args)?;
+    let policies = spec_cli::sweep_policies(args)?;
     let specs = sweep::matrix(&base, &workloads, &policies);
     let cfg = SweepConfig {
         workers: args.get_usize("workers", 0)?,
         // --check wants fresh simulations on both sides; stale disk
         // entries would hide a divergence.
         disk_cache: !args.flag("no-cache") && !args.flag("check"),
+        cache_dir: Some(cache_dir_from_args(args)),
     };
     let t0 = Instant::now();
     let out = sweep::run(&specs, &cfg);

@@ -9,25 +9,35 @@ use crate::util::stats::{cdf_at, geomean};
 use crate::util::tables::{f2, f3, pct, Table};
 use crate::workloads::{analyze, AppProfile, Synth, HOT_HIST_BOUNDS};
 
-use super::{sweep, RunSpec};
+use super::sweep::{self, SweepConfig};
+use super::RunSpec;
+use crate::sim::RunMetrics;
 
 /// Shared context for the figure suite.
 #[derive(Clone, Debug)]
 pub struct FigureCtx {
     pub workloads: Vec<String>,
     pub base: RunSpec,
+    /// Sweep execution knobs for every simulating figure: disk-cached by
+    /// default so a `suite` run shares each simulation across figures;
+    /// tests point `cache_dir` at a temp dir instead of mutating env.
+    pub sweep: SweepConfig,
 }
 
 impl FigureCtx {
     pub fn new(workloads: Vec<String>, base: RunSpec) -> FigureCtx {
-        FigureCtx { workloads, base }
+        let sweep = SweepConfig { disk_cache: true, ..SweepConfig::default() };
+        FigureCtx { workloads, base, sweep }
     }
 
     fn spec(&self, workload: &str, policy: &str) -> RunSpec {
-        let mut s = self.base.clone();
-        s.workload = workload.to_string();
-        s.policy = policy.to_string();
-        s
+        self.base.clone().with_workload(workload).with_policy(policy)
+    }
+
+    /// Run a spec matrix on the sweep orchestrator with this context's
+    /// execution knobs; metrics come back in input order.
+    fn run(&self, specs: &[RunSpec]) -> Vec<RunMetrics> {
+        sweep::run(specs, &self.sweep).metrics
     }
 }
 
@@ -115,7 +125,7 @@ pub fn fig08_tlbcycles(ctx: &FigureCtx) -> Table {
 pub fn fig09_breakdown(ctx: &FigureCtx) -> Table {
     let specs = sweep::matrix(&ctx.base, &ctx.workloads,
                               &["rainbow".to_string()]);
-    let metrics = sweep::run_many_cached(&specs);
+    let metrics = ctx.run(&specs);
     let mut t = Table::new(
         "Fig 9: Rainbow address translation breakdown (% of xlat cycles)",
         &["app", "split TLBs", "bitmap cache", "SPTW", "remap",
@@ -141,7 +151,7 @@ pub fn fig10_ipc(ctx: &FigureCtx) -> Table {
     let pols: Vec<String> =
         crate::policies::all_names().iter().map(|s| s.to_string()).collect();
     let specs = sweep::matrix(&ctx.base, &ctx.workloads, &pols);
-    let metrics = sweep::run_many_cached(&specs);
+    let metrics = ctx.run(&specs);
     let mut t = Table::new(
         "Fig 10: Normalized IPC (relative to Flat-static)",
         &["app", "Flat-static", "HSCC-4KB", "HSCC-2MB", "Rainbow",
@@ -173,7 +183,7 @@ pub fn fig11_traffic(ctx: &FigureCtx) -> Table {
     let pols: Vec<String> =
         ["hscc4k", "hscc2m", "rainbow"].iter().map(|s| s.to_string()).collect();
     let specs = sweep::matrix(&ctx.base, &ctx.workloads, &pols);
-    let metrics = sweep::run_many_cached(&specs);
+    let metrics = ctx.run(&specs);
     let mut t = Table::new(
         "Fig 11: Page migration traffic / total memory footprint",
         &["app", "HSCC-4KB", "HSCC-2MB", "Rainbow"]);
@@ -202,21 +212,21 @@ pub fn fig13_interval(ctx: &FigureCtx, apps: &[&str]) -> Table {
         &["app", "interval", "traffic (norm)", "IPC (norm)"]);
     // Paper sweeps 1e5..1e9 at full scale; we sweep the same factors
     // around the scaled default.
-    let base_interval = ctx.base.config().interval_cycles;
-    let cfg_top = ctx.base.config().top_n;
+    let base_cfg = ctx.base.config();
+    let (base_interval, cfg_top) = (base_cfg.interval_cycles, base_cfg.top_n);
     let factors = [0.01, 0.1, 1.0, 10.0];
     let mut specs = Vec::with_capacity(apps.len() * factors.len());
     for app in apps {
         for f in factors.iter() {
-            let mut s = ctx.spec(app, "rainbow");
-            s.interval_cycles =
-                ((base_interval as f64 * f) as u64).max(10_000);
             // Paper: top-N grows with the interval by the same factor.
-            s.top_n = ((cfg_top as f64 * f).ceil() as usize).clamp(4, 128);
-            specs.push(s);
+            specs.push(ctx.spec(app, "rainbow")
+                .with("rainbow.interval_cycles",
+                      ((base_interval as f64 * f) as u64).max(10_000))
+                .with("rainbow.top_n",
+                      ((cfg_top as f64 * f).ceil() as usize).clamp(4, 128)));
         }
     }
-    let metrics = sweep::run_many_cached(&specs);
+    let metrics = ctx.run(&specs);
     for (ai, app) in apps.iter().enumerate() {
         let mut base_traffic = 0.0;
         let mut base_ipc = 0.0;
@@ -246,12 +256,10 @@ pub fn fig14_topn(ctx: &FigureCtx, apps: &[&str]) -> Table {
     let mut specs = Vec::with_capacity(apps.len() * ns.len());
     for app in apps {
         for &n in ns.iter() {
-            let mut s = ctx.spec(app, "rainbow");
-            s.top_n = n;
-            specs.push(s);
+            specs.push(ctx.spec(app, "rainbow").with("rainbow.top_n", n));
         }
     }
-    let metrics = sweep::run_many_cached(&specs);
+    let metrics = ctx.run(&specs);
     for (ai, app) in apps.iter().enumerate() {
         let mut base_traffic = 0.0;
         let mut base_ipc = 0.0;
@@ -274,7 +282,7 @@ pub fn fig14_topn(ctx: &FigureCtx, apps: &[&str]) -> Table {
 pub fn fig15_runtime(ctx: &FigureCtx) -> Table {
     let specs = sweep::matrix(&ctx.base, &ctx.workloads,
                               &["rainbow".to_string()]);
-    let metrics = sweep::run_many_cached(&specs);
+    let metrics = ctx.run(&specs);
     let mut t = Table::new(
         "Fig 15: Rainbow runtime overhead breakdown (% of total cycles)",
         &["app", "remap", "bitmap", "migration", "shootdown", "clflush",
@@ -360,7 +368,7 @@ where
     let pols: Vec<String> =
         crate::policies::all_names().iter().map(|s| s.to_string()).collect();
     let specs = sweep::matrix(&ctx.base, &ctx.workloads, &pols);
-    let metrics = sweep::run_many_cached(&specs);
+    let metrics = ctx.run(&specs);
     let mut t = Table::new(title,
         &["app", "Flat-static", "HSCC-4KB", "HSCC-2MB", "Rainbow",
           "DRAM-only"]);
@@ -381,11 +389,11 @@ mod tests {
     use super::*;
 
     fn tiny_ctx(workloads: &[&str]) -> FigureCtx {
-        let mut base = RunSpec::new("", "");
-        base.scale = 64;
-        base.instructions = 50_000;
-        base.interval_cycles = 100_000;
-        base.top_n = 8;
+        let base = RunSpec::new("", "")
+            .with_scale(64)
+            .with_instructions(50_000)
+            .with("rainbow.interval_cycles", 100_000u64)
+            .with("rainbow.top_n", 8u64);
         FigureCtx::new(workloads.iter().map(|s| s.to_string()).collect(),
                        base)
     }
@@ -415,14 +423,13 @@ mod tests {
 
     #[test]
     fn fig10_includes_geomeans() {
-        let _guard = crate::report::ENV_LOCK.lock().unwrap();
         let dir = std::env::temp_dir().join(format!(
             "rainbow_fig_test_{}", std::process::id()));
-        std::env::set_var("RAINBOW_CACHE", &dir);
-        let ctx = tiny_ctx(&["streamcluster"]);
+        let mut ctx = tiny_ctx(&["streamcluster"]);
+        // Isolated cache dir, passed explicitly (no env mutation).
+        ctx.sweep.cache_dir = Some(dir.clone());
         let t = fig10_ipc(&ctx);
         assert_eq!(t.n_rows(), 3); // 1 app + 2 geomean rows
-        std::env::remove_var("RAINBOW_CACHE");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

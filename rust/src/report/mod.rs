@@ -4,103 +4,40 @@
 //! paper table/figure from the cached metrics.
 
 use std::fs;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use crate::config::Config;
 use crate::policies::{self, Policy};
 use crate::sim::{engine, EngineConfig, RunMetrics};
-use crate::workloads::{AppProfile, Workload};
+use crate::workloads::Workload;
 
 pub mod figures;
 pub mod serde_kv;
+pub mod spec;
+pub mod spec_cli;
 pub mod sweep;
 
-/// Parameters that identify an experiment run (cache key).
-#[derive(Clone, Debug)]
-pub struct RunSpec {
-    pub workload: String,
-    pub policy: String,
-    /// Memory-capacity scale divisor vs the paper's Table IV.
-    pub scale: u64,
-    pub instructions: u64,
-    pub interval_cycles: u64,
-    pub top_n: usize,
-    pub seed: u64,
-    /// Use the PJRT artifacts for Rainbow identification.
-    pub accel: bool,
-}
+pub use spec::RunSpec;
 
-impl RunSpec {
-    pub fn new(workload: &str, policy: &str) -> RunSpec {
-        RunSpec {
-            workload: workload.to_string(),
-            policy: policy.to_string(),
-            scale: 8,
-            instructions: 4_000_000,
-            interval_cycles: 0, // 0 = take from scaled config
-            top_n: 0,           // 0 = take from scaled config
-            seed: 0xEA7_BEEF,
-            accel: false,
-        }
-    }
-
-    pub fn config(&self) -> Config {
-        let mut cfg = Config::scaled(self.scale);
-        if self.interval_cycles > 0 {
-            cfg.interval_cycles = self.interval_cycles;
-        }
-        if self.top_n > 0 {
-            cfg.top_n = self.top_n;
-        }
-        cfg
-    }
-
-    /// Stable identity of this run: every knob that can change the
-    /// simulation's outcome. Keys both the on-disk results cache and the
-    /// in-memory result sharing of the parallel sweep orchestrator.
-    pub fn fingerprint(&self) -> String {
-        format!(
-            "{}_{}_s{}_i{}_v{}_n{}_r{}{}",
-            self.workload, self.policy, self.scale, self.instructions,
-            self.interval_cycles, self.top_n, self.seed,
-            if self.accel { "_accel" } else { "" }
-        )
-    }
-
-    /// Scaled footprint of the workload (for Fig. 11 normalization).
-    pub fn footprint_bytes(&self) -> u64 {
-        match AppProfile::by_name(&self.workload) {
-            Some(p) => p.scaled(self.scale).footprint,
-            None => {
-                // A mix: sum of its apps.
-                crate::workloads::mixes()
-                    .into_iter()
-                    .find(|(n, _)| n.eq_ignore_ascii_case(&self.workload))
-                    .map(|(_, apps)| {
-                        apps.iter()
-                            .map(|a| {
-                                AppProfile::by_name(a)
-                                    .unwrap()
-                                    .scaled(self.scale)
-                                    .footprint
-                            })
-                            .sum()
-                    })
-                    .unwrap_or(0)
-            }
-        }
-    }
-}
-
-fn cache_dir() -> PathBuf {
+/// Default on-disk results-cache directory: the `RAINBOW_CACHE` env var
+/// if set (read-only — nothing in the crate mutates it), else
+/// `target/rainbow_results`. Callers that need isolation pass an
+/// explicit directory to [`run_cached_in`] / `SweepConfig::cache_dir`.
+pub fn default_cache_dir() -> PathBuf {
     std::env::var_os("RAINBOW_CACHE")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("target/rainbow_results"))
 }
 
-/// Run the simulation described by `spec` (or load the cached result).
+/// Run the simulation described by `spec` (or load the cached result)
+/// against the default cache directory.
 pub fn run_cached(spec: &RunSpec) -> RunMetrics {
-    let dir = cache_dir();
+    run_cached_in(&default_cache_dir(), spec)
+}
+
+/// [`run_cached`] with an explicit cache directory, threaded through
+/// `SweepConfig` by the sweep orchestrator and set directly by tests
+/// (no process-global env-var mutation).
+pub fn run_cached_in(dir: &Path, spec: &RunSpec) -> RunMetrics {
     let path = dir.join(format!("{}.kv", spec.fingerprint()));
     if let Ok(text) = fs::read_to_string(&path) {
         if let Some(m) = serde_kv::metrics_from_kv(&text) {
@@ -108,7 +45,7 @@ pub fn run_cached(spec: &RunSpec) -> RunMetrics {
         }
     }
     let m = run_uncached(spec);
-    let _ = fs::create_dir_all(&dir);
+    let _ = fs::create_dir_all(dir);
     let _ = fs::write(&path, serde_kv::metrics_to_kv(&m));
     m
 }
@@ -142,43 +79,29 @@ pub fn all_workloads() -> Vec<String> {
     Workload::all_names()
 }
 
-/// Serializes tests that mutate the RAINBOW_CACHE env var.
-#[cfg(test)]
-pub(crate) static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn tiny_spec(w: &str, p: &str) -> RunSpec {
-        let mut s = RunSpec::new(w, p);
-        s.scale = 64;
-        s.instructions = 60_000;
-        s.interval_cycles = 100_000;
-        s.top_n = 16;
-        s
+        RunSpec::new(w, p)
+            .with_scale(64)
+            .with_instructions(60_000)
+            .with("rainbow.interval_cycles", 100_000u64)
+            .with("rainbow.top_n", 16u64)
     }
 
     #[test]
     fn cache_roundtrip_is_identical() {
-        let _guard = ENV_LOCK.lock().unwrap();
         let dir = std::env::temp_dir().join(format!(
             "rainbow_cache_test_{}", std::process::id()));
-        std::env::set_var("RAINBOW_CACHE", &dir);
         let spec = tiny_spec("DICT", "flat");
-        let a = run_cached(&spec);
-        let b = run_cached(&spec); // from cache
+        let a = run_cached_in(&dir, &spec);
+        let b = run_cached_in(&dir, &spec); // from cache
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.instructions, b.instructions);
         assert!((a.energy_pj - b.energy_pj).abs() < 1.0);
-        std::env::remove_var("RAINBOW_CACHE");
         let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn footprints_resolve_for_apps_and_mixes() {
-        assert!(tiny_spec("mcf", "flat").footprint_bytes() > 0);
-        assert!(tiny_spec("mix1", "flat").footprint_bytes() > 0);
     }
 
     #[test]

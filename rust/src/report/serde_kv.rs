@@ -1,10 +1,105 @@
-//! Key=value (de)serialization for RunMetrics — the on-disk results cache
-//! format (serde is unavailable offline; this is deliberately dumb and
-//! versioned).
+//! Key=value (de)serialization for RunMetrics (the on-disk results-cache
+//! format) and RunSpec (the canonical spec-file format behind the CLI's
+//! `--spec`). serde is unavailable offline; this is deliberately dumb
+//! and versioned.
 
+use crate::report::RunSpec;
 use crate::sim::metrics::{RunMetrics, RuntimeBreakdown, XlatBreakdown};
 
 const VERSION: u64 = 3;
+
+/// Version of the spec-file serialization (bump on incompatible change).
+pub const SPEC_VERSION: u64 = 1;
+
+/// Canonical, order-independent serialization of a [`RunSpec`]: one
+/// `key=value` per line, fixed field order, overrides as sorted
+/// `set.<knob>` lines. Triple duty: on-disk spec-file format, `--spec`
+/// CLI surface, and the content the fingerprint's override hash covers.
+pub fn spec_to_kv(s: &RunSpec) -> String {
+    let mut out = String::with_capacity(256);
+    let mut put = |k: &str, v: String| {
+        out.push_str(k);
+        out.push('=');
+        out.push_str(&v);
+        out.push('\n');
+    };
+    put("specversion", SPEC_VERSION.to_string());
+    put("workload", s.workload.clone());
+    put("policy", s.policy.clone());
+    put("scale", s.scale.to_string());
+    put("instructions", s.instructions.to_string());
+    put("seed", s.seed.to_string());
+    put("accel", if s.accel { "1" } else { "0" }.to_string());
+    for (k, v) in s.overrides.iter() {
+        put(&format!("set.{k}"), v.to_string());
+    }
+    out
+}
+
+/// Parse a spec file. Strict by design: the version must match, every
+/// key must be known (unknown `set.` knobs are rejected through the
+/// registry, same as CLI `--set`), and workload/policy are required —
+/// a bad spec file fails here, before any sweep fan-out.
+pub fn spec_from_kv(text: &str) -> Result<RunSpec, String> {
+    let mut s = RunSpec::new("", "");
+    let mut version = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            format!("spec line {}: expected key=value, got {line:?}",
+                    lineno + 1)
+        })?;
+        let (k, v) = (k.trim(), v.trim());
+        let err = |what: &str| {
+            format!("spec line {}: {k}: expected {what}, got {v:?}",
+                    lineno + 1)
+        };
+        match k {
+            "specversion" => {
+                version = Some(v.parse::<u64>().map_err(|_| err("integer"))?)
+            }
+            "workload" => s.workload = v.to_string(),
+            "policy" => s.policy = v.to_string(),
+            "scale" => s.scale = v.parse().map_err(|_| err("integer"))?,
+            "instructions" => {
+                s.instructions = v.parse().map_err(|_| err("integer"))?
+            }
+            "seed" => s.seed = v.parse().map_err(|_| err("integer"))?,
+            "accel" => {
+                s.accel = match v {
+                    "1" | "true" => true,
+                    "0" | "false" => false,
+                    _ => return Err(err("0/1")),
+                }
+            }
+            _ => match k.strip_prefix("set.") {
+                Some(knob) => s
+                    .overrides
+                    .set_raw(knob, v)
+                    .map_err(|e| format!("spec line {}: {e}", lineno + 1))?,
+                None => {
+                    return Err(format!(
+                        "spec line {}: unknown spec key {k:?}", lineno + 1))
+                }
+            },
+        }
+    }
+    match version {
+        Some(SPEC_VERSION) => {}
+        Some(v) => {
+            return Err(format!(
+                "spec version {v} unsupported (expected {SPEC_VERSION})"))
+        }
+        None => return Err("spec file missing specversion".to_string()),
+    }
+    if s.workload.is_empty() || s.policy.is_empty() {
+        return Err("spec file must set workload and policy".to_string());
+    }
+    Ok(s)
+}
 
 pub fn metrics_to_kv(m: &RunMetrics) -> String {
     let mut s = String::with_capacity(1024);
@@ -155,5 +250,57 @@ mod tests {
     #[test]
     fn garbage_rejected() {
         assert!(metrics_from_kv("not a kv file").is_none());
+    }
+
+    fn sample_spec() -> RunSpec {
+        RunSpec::new("mix2", "rainbow")
+            .with_scale(16)
+            .with_instructions(123_456)
+            .with_seed(99)
+            .with("rainbow.migration_threshold", 512.5)
+            .with("nvm.read_cycles", 124u64)
+    }
+
+    #[test]
+    fn spec_roundtrip_preserves_identity() {
+        let s = sample_spec();
+        let kv = spec_to_kv(&s);
+        let t = spec_from_kv(&kv).unwrap();
+        assert_eq!(s, t);
+        assert_eq!(s.fingerprint(), t.fingerprint());
+    }
+
+    #[test]
+    fn spec_kv_is_canonical_under_override_order() {
+        let a = RunSpec::new("mcf", "flat")
+            .with("rainbow.top_n", 8u64)
+            .with("dram.read_cycles", 50u64);
+        let b = RunSpec::new("mcf", "flat")
+            .with("dram.read_cycles", 50u64)
+            .with("rainbow.top_n", 8u64);
+        assert_eq!(spec_to_kv(&a), spec_to_kv(&b));
+    }
+
+    #[test]
+    fn spec_comments_and_blanks_allowed() {
+        let kv = format!("# a comment\n\n{}", spec_to_kv(&sample_spec()));
+        assert!(spec_from_kv(&kv).is_ok());
+    }
+
+    #[test]
+    fn spec_rejects_bad_input() {
+        // Unknown top-level key.
+        assert!(spec_from_kv("specversion=1\nworkload=a\npolicy=b\nnope=1")
+            .is_err());
+        // Unknown override knob.
+        assert!(spec_from_kv(
+            "specversion=1\nworkload=a\npolicy=b\nset.no.such=1")
+            .is_err());
+        // Wrong version / missing version / missing identity.
+        assert!(spec_from_kv("specversion=99\nworkload=a\npolicy=b").is_err());
+        assert!(spec_from_kv("workload=a\npolicy=b").is_err());
+        assert!(spec_from_kv("specversion=1\npolicy=b").is_err());
+        // Malformed line.
+        assert!(spec_from_kv("specversion=1\nworkload a").is_err());
     }
 }

@@ -1,0 +1,286 @@
+//! Typed experiment specification. A [`RunSpec`] names everything that
+//! can change a simulation's outcome: the workload/policy pair, the
+//! capacity scale, the instruction budget, the RNG seed, the Rainbow
+//! identification backend, and an ordered [`Overrides`] map of config
+//! knobs (`rainbow.migration_threshold`, `nvm.read_cycles`, ...) applied
+//! onto `Config::scaled` through the registry in [`crate::config::knobs`]
+//! — the same validated path the tomlite loader uses.
+//!
+//! Specs have a canonical, order-independent, versioned serialization
+//! (`report::serde_kv::{spec_to_kv, spec_from_kv}`) that serves as the
+//! on-disk spec-file format and the CLI `--spec` surface, and an escaped
+//! [`RunSpec::fingerprint`] that keys the results cache and the sweep
+//! orchestrator's dedup.
+
+use crate::config::knobs::{KnobValue, Overrides};
+use crate::config::Config;
+use crate::workloads::AppProfile;
+
+/// Parameters that identify an experiment run (cache key).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    pub workload: String,
+    pub policy: String,
+    /// Memory-capacity scale divisor vs the paper's Table IV.
+    pub scale: u64,
+    pub instructions: u64,
+    pub seed: u64,
+    /// Use the PJRT artifacts for Rainbow identification.
+    pub accel: bool,
+    /// Config-knob overrides applied onto `Config::scaled(scale)`.
+    pub overrides: Overrides,
+}
+
+impl RunSpec {
+    pub fn new(workload: &str, policy: &str) -> RunSpec {
+        RunSpec {
+            workload: workload.to_string(),
+            policy: policy.to_string(),
+            scale: 8,
+            instructions: 4_000_000,
+            seed: 0xEA7_BEEF,
+            accel: false,
+            overrides: Overrides::new(),
+        }
+    }
+
+    // ------------------------------------------------------- builders
+
+    pub fn with_workload(mut self, workload: &str) -> RunSpec {
+        self.workload = workload.to_string();
+        self
+    }
+
+    pub fn with_policy(mut self, policy: &str) -> RunSpec {
+        self.policy = policy.to_string();
+        self
+    }
+
+    pub fn with_scale(mut self, scale: u64) -> RunSpec {
+        self.scale = scale;
+        self
+    }
+
+    pub fn with_instructions(mut self, instructions: u64) -> RunSpec {
+        self.instructions = instructions;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> RunSpec {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_accel(mut self, accel: bool) -> RunSpec {
+        self.accel = accel;
+        self
+    }
+
+    /// Set a config-knob override. Panicking sugar for statically known
+    /// keys (examples, benches, figure emitters); CLI/spec-file input
+    /// goes through [`RunSpec::try_with`] / [`RunSpec::try_set_arg`].
+    pub fn with(mut self, key: &str, value: impl Into<KnobValue>) -> RunSpec {
+        self.overrides
+            .set(key, value.into())
+            .unwrap_or_else(|e| panic!("RunSpec::with: {e}"));
+        self
+    }
+
+    /// Fallible [`RunSpec::with`] — unknown keys and ill-typed values
+    /// come back as `Err` instead of panicking.
+    pub fn try_with(
+        mut self, key: &str, value: KnobValue,
+    ) -> Result<RunSpec, String> {
+        self.overrides.set(key, value)?;
+        Ok(self)
+    }
+
+    /// Parse one `key=value` argument (the CLI `--set` form) into the
+    /// overrides map, validating the key against the knob registry.
+    pub fn try_set_arg(mut self, arg: &str) -> Result<RunSpec, String> {
+        let (k, v) = arg
+            .split_once('=')
+            .ok_or_else(|| format!("expected key=value, got {arg:?}"))?;
+        self.overrides.set_raw(k.trim(), v.trim())?;
+        Ok(self)
+    }
+
+    // ------------------------------------------------------- identity
+
+    /// The scaled config with this spec's overrides applied.
+    pub fn config(&self) -> Config {
+        let mut cfg = Config::scaled(self.scale);
+        self.overrides.apply_to(&mut cfg);
+        cfg
+    }
+
+    /// Stable identity of this run: every knob that can change the
+    /// simulation's outcome. Keys both the on-disk results cache and the
+    /// in-memory result sharing of the parallel sweep orchestrator.
+    ///
+    /// Fields are joined with `_` but individually %-escaped (workload
+    /// and policy names may themselves contain `_`), so the scalar
+    /// fields are encoded exactly and cannot alias one another.
+    /// Overrides contribute their count plus a 64-bit FNV-1a hash of
+    /// their canonical serialization — collision-resistant (~2^-64 per
+    /// pair), not collision-proof; the exact override map lives in the
+    /// spec's kv serialization. The `v2` prefix versions the scheme.
+    pub fn fingerprint(&self) -> String {
+        let mut f = format!(
+            "v2_{}_{}_s{}_i{}_r{}",
+            escape_field(&self.workload), escape_field(&self.policy),
+            self.scale, self.instructions, self.seed,
+        );
+        if self.accel {
+            f.push_str("_accel");
+        }
+        if !self.overrides.is_empty() {
+            f.push_str(&format!(
+                "_o{}x{:016x}",
+                self.overrides.len(),
+                fnv1a(self.overrides.canonical().as_bytes()),
+            ));
+        }
+        f
+    }
+
+    /// Scaled footprint of the workload (for Fig. 11 normalization).
+    pub fn footprint_bytes(&self) -> u64 {
+        match AppProfile::by_name(&self.workload) {
+            Some(p) => p.scaled(self.scale).footprint,
+            None => {
+                // A mix: sum of its apps.
+                crate::workloads::mixes()
+                    .into_iter()
+                    .find(|(n, _)| n.eq_ignore_ascii_case(&self.workload))
+                    .map(|(_, apps)| {
+                        apps.iter()
+                            .map(|a| {
+                                AppProfile::by_name(a)
+                                    .unwrap()
+                                    .scaled(self.scale)
+                                    .footprint
+                            })
+                            .sum()
+                    })
+                    .unwrap_or(0)
+            }
+        }
+    }
+}
+
+/// Escape a fingerprint field so the `_` join is unambiguous and the
+/// result is filesystem-safe: alphanumerics plus `.`/`-` pass through,
+/// everything else (including `_` and `%`) becomes `%XX`.
+fn escape_field(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'.' | b'-' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// FNV-1a 64-bit (dependency-free stable hash for override maps).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose() {
+        let s = RunSpec::new("mcf", "rainbow")
+            .with_scale(64)
+            .with_instructions(60_000)
+            .with_seed(7)
+            .with("rainbow.interval_cycles", 100_000u64)
+            .with("rainbow.top_n", 16u64);
+        assert_eq!(s.scale, 64);
+        let cfg = s.config();
+        assert_eq!(cfg.interval_cycles, 100_000);
+        assert_eq!(cfg.top_n, 16);
+    }
+
+    #[test]
+    fn overrides_flow_into_config() {
+        let base = RunSpec::new("mcf", "rainbow").config();
+        let s = RunSpec::new("mcf", "rainbow")
+            .with("rainbow.migration_threshold", base.migration_threshold * 4.0)
+            .with("nvm.read_cycles", base.nvm.read_cycles * 2);
+        let cfg = s.config();
+        assert_eq!(cfg.migration_threshold, base.migration_threshold * 4.0);
+        assert_eq!(cfg.nvm.read_cycles, base.nvm.read_cycles * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown config knob")]
+    fn with_unknown_knob_panics() {
+        let _ = RunSpec::new("mcf", "rainbow").with("no.such_knob", 1u64);
+    }
+
+    #[test]
+    fn try_set_arg_validates() {
+        let s = RunSpec::new("mcf", "rainbow");
+        assert!(s.clone().try_set_arg("rainbow.top_n=32").is_ok());
+        assert!(s.clone().try_set_arg("rainbow.top_n").is_err());
+        assert!(s.clone().try_set_arg("bogus.key=1").is_err());
+        assert!(s.clone().try_set_arg("rainbow.top_n=abc").is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_every_field() {
+        let s = RunSpec::new("mcf", "rainbow");
+        let fp = s.fingerprint();
+        assert_ne!(fp, s.clone().with_workload("soplex").fingerprint());
+        assert_ne!(fp, s.clone().with_policy("flat").fingerprint());
+        assert_ne!(fp, s.clone().with_scale(16).fingerprint());
+        assert_ne!(fp, s.clone().with_instructions(1).fingerprint());
+        assert_ne!(fp, s.clone().with_seed(1).fingerprint());
+        assert_ne!(fp, s.clone().with_accel(true).fingerprint());
+        assert_ne!(fp,
+                   s.clone().with("rainbow.top_n", 32u64).fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_underscore_fields_cannot_collide() {
+        // Regression: the old format!-joined fingerprint collided when
+        // the `_` field delimiter also appeared inside names — e.g.
+        // ("a_b", "c") and ("a", "b_c") serialized identically.
+        let a = RunSpec::new("a_b", "c").fingerprint();
+        let b = RunSpec::new("a", "b_c").fingerprint();
+        assert_ne!(a, b);
+        // And fingerprints stay filesystem-safe.
+        assert!(a.bytes().all(|c| c.is_ascii_alphanumeric()
+            || c == b'_' || c == b'.' || c == b'-' || c == b'%'));
+    }
+
+    #[test]
+    fn fingerprint_stable_under_override_insertion_order() {
+        let a = RunSpec::new("mcf", "rainbow")
+            .with("rainbow.top_n", 32u64)
+            .with("nvm.read_cycles", 124u64);
+        let b = RunSpec::new("mcf", "rainbow")
+            .with("nvm.read_cycles", 124u64)
+            .with("rainbow.top_n", 32u64);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn footprints_resolve_for_apps_and_mixes() {
+        assert!(RunSpec::new("mcf", "flat").footprint_bytes() > 0);
+        assert!(RunSpec::new("mix1", "flat").footprint_bytes() > 0);
+    }
+}

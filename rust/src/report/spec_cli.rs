@@ -1,0 +1,147 @@
+//! CLI → [`RunSpec`] plumbing: builds specs from parsed arguments,
+//! loads `--spec` files, applies `--set key=value` overrides, and
+//! validates workload/policy names — all BEFORE any sweep fans out to
+//! worker threads, so every bad input takes the CLI's error path
+//! instead of panicking a thread scope. Lives in the library (not
+//! `main.rs`) so the argument surface is integration-testable.
+
+use crate::config::knobs::KnobValue;
+use crate::report::{self, serde_kv, RunSpec};
+use crate::util::cli::Args;
+
+/// Build the base spec: start from `--spec file.kv` when given (else
+/// defaults), then layer explicitly passed CLI options on top, then
+/// `--set` overrides (highest precedence).
+pub fn spec_from_args(args: &Args) -> Result<RunSpec, String> {
+    let mut s = match args.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("--spec {path}: {e}"))?;
+            serde_kv::spec_from_kv(&text)
+                .map_err(|e| format!("--spec {path}: {e}"))?
+        }
+        None => RunSpec::new("mcf", "rainbow"),
+    };
+    if let Some(app) = args.get("app") {
+        s = s.with_workload(app);
+    }
+    if let Some(policy) = args.get("policy") {
+        s = s.with_policy(policy);
+    }
+    if args.flag("paper-scale") {
+        s = s.with_scale(1);
+    } else if args.get("scale").is_some() {
+        s = s.with_scale(args.get_u64("scale", 8)?);
+    }
+    if args.get("instructions").is_some() {
+        s = s.with_instructions(args.get_u64("instructions", 0)?);
+    }
+    if args.get("seed").is_some() {
+        s = s.with_seed(args.get_u64("seed", 0)?);
+    }
+    if args.flag("accel") {
+        s = s.with_accel(true);
+    }
+    if args.flag("no-accel") {
+        s = s.with_accel(false); // e.g. to negate a spec file's accel=1
+    }
+    // --interval / --top-n are sugar for the corresponding knobs; 0 is
+    // the historical sentinel for "use the scaled config's default",
+    // so it REMOVES the override (a spec file's included).
+    if let Some(interval) = explicit_u64(args, "interval")? {
+        match interval {
+            0 => s.overrides.remove("rainbow.interval_cycles"),
+            v => {
+                s = s.try_with("rainbow.interval_cycles", KnobValue::U64(v))?
+            }
+        }
+    }
+    if let Some(top_n) = explicit_u64(args, "top-n")? {
+        match top_n {
+            0 => s.overrides.remove("rainbow.top_n"),
+            v => s = s.try_with("rainbow.top_n", KnobValue::U64(v))?,
+        }
+    }
+    for set in args.get_all("set") {
+        s = s.try_set_arg(set).map_err(|e| format!("--set: {e}"))?;
+    }
+    // Validate the non-knob fields too: an unknown workload/policy would
+    // panic run_uncached — possibly inside a sweep worker thread — and
+    // Config::scaled asserts on a bad scale.
+    if !s.scale.is_power_of_two() {
+        return Err(format!(
+            "scale must be a power of two, got {}", s.scale));
+    }
+    let known = crate::workloads::Workload::all_names();
+    if !known.iter().any(|n| n.eq_ignore_ascii_case(&s.workload)) {
+        return Err(format!(
+            "unknown workload {:?}; `rainbow list` shows them", s.workload));
+    }
+    if !crate::policies::is_valid_name(&s.policy) {
+        return Err(format!(
+            "unknown policy {:?}; `rainbow list` shows them", s.policy));
+    }
+    Ok(s)
+}
+
+/// The value of `--name` when explicitly passed, `None` otherwise.
+fn explicit_u64(args: &Args, name: &str) -> Result<Option<u64>, String> {
+    match args.get(name) {
+        None => Ok(None),
+        Some(_) => args.get_u64(name, 0).map(Some),
+    }
+}
+
+/// Split a comma-separated CLI list, dropping empty segments.
+pub fn comma_list(raw: &str) -> Vec<String> {
+    raw.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Resolve the sweep's workload list from `--apps`/`--all` and validate
+/// every name. `Workload::all_names` covers exactly what
+/// `Workload::by_name` accepts (apps and mixes, case-insensitive).
+pub fn sweep_workloads(args: &Args) -> Result<Vec<String>, String> {
+    let workloads: Vec<String> = match args.get("apps") {
+        Some(list) if list.eq_ignore_ascii_case("all") => {
+            report::all_workloads()
+        }
+        Some(list) => comma_list(list),
+        None if args.flag("all") => report::all_workloads(),
+        None => report::default_workloads()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    if workloads.is_empty() {
+        return Err("sweep: empty workload list".into());
+    }
+    let known = crate::workloads::Workload::all_names();
+    for w in &workloads {
+        if !known.iter().any(|n| n.eq_ignore_ascii_case(w)) {
+            return Err(format!(
+                "unknown workload {w:?}; `rainbow list` shows them"));
+        }
+    }
+    Ok(workloads)
+}
+
+/// Resolve the sweep's policy list from `--policies` and validate it.
+pub fn sweep_policies(args: &Args) -> Result<Vec<String>, String> {
+    let policies: Vec<String> = match args.get("policies") {
+        Some(list) => comma_list(list),
+        None => report::policy_names().iter().map(|s| s.to_string()).collect(),
+    };
+    if policies.is_empty() {
+        return Err("sweep: empty policy list".into());
+    }
+    for p in &policies {
+        if !crate::policies::is_valid_name(p) {
+            return Err(format!(
+                "unknown policy {p:?}; `rainbow list` shows them"));
+        }
+    }
+    Ok(policies)
+}

@@ -14,27 +14,26 @@
 //! calls — `tests/sweep_determinism.rs` locks that contract in.
 
 use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::sim::RunMetrics;
 
-use super::{run_cached, run_uncached, RunSpec};
+use super::{default_cache_dir, run_cached_in, run_uncached, RunSpec};
 
 /// Execution knobs for a sweep.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SweepConfig {
     /// Worker threads; 0 = one per available core.
     pub workers: usize,
     /// Route runs through the persistent on-disk results cache
-    /// (`run_cached`) instead of always simulating (`run_uncached`).
+    /// (`run_cached_in`) instead of always simulating (`run_uncached`).
     pub disk_cache: bool,
-}
-
-impl Default for SweepConfig {
-    fn default() -> SweepConfig {
-        SweepConfig { workers: 0, disk_cache: false }
-    }
+    /// Results-cache directory when `disk_cache` is set; `None` uses
+    /// [`default_cache_dir`]. Threaded explicitly so tests and parallel
+    /// callers never have to mutate the process-global env var.
+    pub cache_dir: Option<PathBuf>,
 }
 
 /// Worker count used when `SweepConfig::workers == 0`.
@@ -49,10 +48,7 @@ pub fn matrix(base: &RunSpec, workloads: &[String], policies: &[String])
     let mut out = Vec::with_capacity(workloads.len() * policies.len());
     for w in workloads {
         for p in policies {
-            let mut s = base.clone();
-            s.workload = w.clone();
-            s.policy = p.clone();
-            out.push(s);
+            out.push(base.clone().with_workload(w).with_policy(p));
         }
     }
     out
@@ -77,6 +73,10 @@ pub fn run(specs: &[RunSpec], cfg: &SweepConfig) -> SweepOutcome {
         (0..specs.len()).filter(|&i| seen.insert(keys[i].as_str())).collect();
     let workers = (if cfg.workers == 0 { auto_workers() } else { cfg.workers })
         .clamp(1, uniq.len().max(1));
+    let cache_dir = cfg
+        .cache_dir
+        .clone()
+        .unwrap_or_else(default_cache_dir);
     let results: Mutex<HashMap<&str, RunMetrics>> =
         Mutex::new(HashMap::with_capacity(uniq.len()));
     let cursor = AtomicUsize::new(0);
@@ -86,7 +86,7 @@ pub fn run(specs: &[RunSpec], cfg: &SweepConfig) -> SweepOutcome {
                 let u = cursor.fetch_add(1, Ordering::Relaxed);
                 let Some(&i) = uniq.get(u) else { break };
                 let m = if cfg.disk_cache {
-                    run_cached(&specs[i])
+                    run_cached_in(&cache_dir, &specs[i])
                 } else {
                     run_uncached(&specs[i])
                 };
@@ -112,27 +112,18 @@ pub fn run_parallel(specs: &[RunSpec], cfg: &SweepConfig) -> Vec<RunMetrics> {
     run(specs, cfg).metrics
 }
 
-/// Parallel, disk-cached run — the figure emitters' entry point. Consumes
-/// the persistent results cache where populated (so a `suite` run shares
-/// each (workload, policy) simulation across every figure that needs it)
-/// and returns the metrics in input order for direct row rendering.
-pub fn run_many_cached(specs: &[RunSpec]) -> Vec<RunMetrics> {
-    run(specs, &SweepConfig { workers: 0, disk_cache: true }).metrics
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::report::serde_kv::metrics_to_kv;
 
     fn tiny(w: &str, p: &str) -> RunSpec {
-        let mut s = RunSpec::new(w, p);
-        s.scale = 64;
-        s.instructions = 20_000;
-        s.interval_cycles = 100_000;
-        s.top_n = 8;
-        s.seed = 7;
-        s
+        RunSpec::new(w, p)
+            .with_scale(64)
+            .with_instructions(20_000)
+            .with_seed(7)
+            .with("rainbow.interval_cycles", 100_000u64)
+            .with("rainbow.top_n", 8u64)
     }
 
     #[test]
@@ -140,8 +131,7 @@ mod tests {
         let ws: Vec<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
         let ps: Vec<String> =
             ["x", "y", "z"].iter().map(|s| s.to_string()).collect();
-        let mut base = RunSpec::new("", "");
-        base.seed = 123;
+        let base = RunSpec::new("", "").with_seed(123);
         let m = matrix(&base, &ws, &ps);
         assert_eq!(m.len(), 6);
         assert_eq!((m[0].workload.as_str(), m[0].policy.as_str()), ("a", "x"));
@@ -160,7 +150,8 @@ mod tests {
     fn duplicates_simulated_once_and_identical() {
         let specs = vec![tiny("DICT", "flat"), tiny("DICT", "flat"),
                          tiny("DICT", "rainbow")];
-        let out = run(&specs, &SweepConfig { workers: 2, disk_cache: false });
+        let cfg = SweepConfig { workers: 2, ..SweepConfig::default() };
+        let out = run(&specs, &cfg);
         assert_eq!(out.unique_runs, 2);
         assert_eq!(out.metrics.len(), 3);
         assert_eq!(metrics_to_kv(&out.metrics[0]),
@@ -172,8 +163,28 @@ mod tests {
     #[test]
     fn worker_count_respects_request_and_bounds() {
         let specs = vec![tiny("DICT", "flat")];
-        let out = run(&specs, &SweepConfig { workers: 16, disk_cache: false });
+        let cfg = SweepConfig { workers: 16, ..SweepConfig::default() };
+        let out = run(&specs, &cfg);
         assert_eq!(out.workers_used, 1, "never more workers than work");
         assert!(auto_workers() >= 1);
+    }
+
+    #[test]
+    fn explicit_cache_dir_is_used_and_hit() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_sweep_cache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let specs = vec![tiny("DICT", "flat")];
+        let cfg = SweepConfig {
+            workers: 1,
+            disk_cache: true,
+            cache_dir: Some(dir.clone()),
+        };
+        let a = run(&specs, &cfg);
+        let entry = dir.join(format!("{}.kv", specs[0].fingerprint()));
+        assert!(entry.is_file(), "cache entry must land in the explicit dir");
+        let b = run(&specs, &cfg); // served from the cache
+        assert_eq!(metrics_to_kv(&a.metrics[0]), metrics_to_kv(&b.metrics[0]));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

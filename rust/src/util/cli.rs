@@ -15,11 +15,13 @@ pub struct OptSpec {
     pub is_flag: bool,
 }
 
-/// Parsed arguments: subcommand, `--key value` options, positionals.
+/// Parsed arguments: subcommand, `--key value` options (repeatable —
+/// `get` returns the last occurrence, `get_all` every one, so options
+/// like `--set knob=value` can stack), positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: Option<String>,
-    opts: HashMap<String, String>,
+    opts: HashMap<String, Vec<String>>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -35,7 +37,10 @@ impl Args {
         while let Some(tok) = it.next() {
             if let Some(body) = tok.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
-                    out.opts.insert(k.to_string(), v.to_string());
+                    out.opts
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v.to_string());
                 } else if flag_names.contains(&body) {
                     out.flags.push(body.to_string());
                 } else if let Some(next) = it.peek() {
@@ -43,8 +48,10 @@ impl Args {
                         // treat as flag even if undeclared
                         out.flags.push(body.to_string());
                     } else {
-                        out.opts.insert(body.to_string(),
-                                        it.next().unwrap().clone());
+                        out.opts
+                            .entry(body.to_string())
+                            .or_default()
+                            .push(it.next().unwrap().clone());
                     }
                 } else {
                     out.flags.push(body.to_string());
@@ -63,7 +70,15 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.opts.get(name).map(|s| s.as_str())
+        self.opts
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable option, in argv order.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.opts.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -179,6 +194,18 @@ mod tests {
         let a = Args::parse(&sv(&["--a", "--b", "val"]), &[]).unwrap();
         assert!(a.flag("a"));
         assert_eq!(a.get("b"), Some("val"));
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = Args::parse(
+            &sv(&["sweep", "--set", "a=1", "--set=b=2", "--set", "c=3"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get_all("set"), &["a=1", "b=2", "c=3"]);
+        assert_eq!(a.get("set"), Some("c=3"), "get returns the last");
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

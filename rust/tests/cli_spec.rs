@@ -1,0 +1,213 @@
+//! CLI argument-parsing contract for the `sweep`/`run` spec surface:
+//! invalid `--set` keys/values, malformed `--spec` files, and bad
+//! policy/workload names must all be rejected with a clear error BEFORE
+//! any worker thread spawns (`report::spec_cli` is the library half of
+//! `main.rs`'s argument handling).
+
+use rainbow::config::knobs::KnobValue;
+use rainbow::report::serde_kv::{spec_from_kv, spec_to_kv};
+use rainbow::report::{spec_cli, RunSpec};
+use rainbow::util::cli::Args;
+
+fn parse(raw: &[&str]) -> Args {
+    let raw: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
+    Args::parse(&raw, &[]).unwrap()
+}
+
+#[test]
+fn defaults_and_options_build_a_spec() {
+    let s = spec_cli::spec_from_args(&parse(&["run"])).unwrap();
+    assert_eq!((s.workload.as_str(), s.policy.as_str()), ("mcf", "rainbow"));
+    assert_eq!((s.scale, s.instructions), (8, 4_000_000));
+    let s = spec_cli::spec_from_args(&parse(&[
+        "run", "--app", "GUPS", "--policy", "flat", "--scale", "16",
+        "--instructions", "5000", "--seed", "9", "--interval", "200000",
+        "--top-n", "32",
+    ]))
+    .unwrap();
+    assert_eq!((s.workload.as_str(), s.policy.as_str()), ("GUPS", "flat"));
+    assert_eq!((s.scale, s.instructions, s.seed), (16, 5000, 9));
+    assert_eq!(s.overrides.get("rainbow.interval_cycles"),
+               Some(KnobValue::U64(200_000)));
+    assert_eq!(s.overrides.get("rainbow.top_n"), Some(KnobValue::U64(32)));
+}
+
+#[test]
+fn set_overrides_are_validated_before_any_fanout() {
+    // Good sets stack.
+    let s = spec_cli::spec_from_args(&parse(&[
+        "sweep", "--set", "rainbow.migration_threshold=4000",
+        "--set", "nvm.read_cycles=124",
+    ]))
+    .unwrap();
+    assert_eq!(s.overrides.get("rainbow.migration_threshold"),
+               Some(KnobValue::F64(4000.0)));
+    assert_eq!(s.overrides.get("nvm.read_cycles"),
+               Some(KnobValue::U64(124)));
+    // Unknown knob key.
+    let e = spec_cli::spec_from_args(&parse(&[
+        "sweep", "--set", "rainbow.bogus_knob=1",
+    ]))
+    .unwrap_err();
+    assert!(e.contains("unknown config knob"), "got: {e}");
+    // Ill-typed value.
+    let e = spec_cli::spec_from_args(&parse(&[
+        "sweep", "--set", "nvm.read_cycles=slow",
+    ]))
+    .unwrap_err();
+    assert!(e.contains("expected integer"), "got: {e}");
+    // Missing '='.
+    let e = spec_cli::spec_from_args(&parse(&[
+        "sweep", "--set", "nvm.read_cycles",
+    ]))
+    .unwrap_err();
+    assert!(e.contains("key=value"), "got: {e}");
+}
+
+#[test]
+fn spec_file_loads_and_cli_overrides_layer_on_top() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("rainbow_spec_ok_{}.kv", std::process::id()));
+    let spec = RunSpec::new("soplex", "rainbow")
+        .with_scale(16)
+        .with("rainbow.top_n", 25u64);
+    std::fs::write(&path, spec_to_kv(&spec)).unwrap();
+    let p = path.to_str().unwrap();
+    let s = spec_cli::spec_from_args(&parse(&["run", "--spec", p])).unwrap();
+    assert_eq!(s, spec);
+    // Explicit CLI options beat the file; file fields otherwise stick.
+    let s = spec_cli::spec_from_args(&parse(&[
+        "run", "--spec", p, "--app", "mcf",
+        "--set", "rainbow.top_n=50",
+    ]))
+    .unwrap();
+    assert_eq!(s.workload, "mcf");
+    assert_eq!(s.scale, 16);
+    assert_eq!(s.overrides.get("rainbow.top_n"), Some(KnobValue::U64(50)));
+    // The 0 sentinel resets the file's override back to the config
+    // default instead of silently sticking with the file's value.
+    let s = spec_cli::spec_from_args(&parse(&[
+        "run", "--spec", p, "--top-n", "0",
+    ]))
+    .unwrap();
+    assert_eq!(s.overrides.get("rainbow.top_n"), None);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn malformed_spec_files_are_rejected() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("rainbow_spec_bad_{}.kv", std::process::id()));
+    for (body, why) in [
+        ("workload=a\npolicy=flat\n", "missing specversion"),
+        ("specversion=99\nworkload=a\npolicy=flat\n", "version"),
+        ("specversion=1\nworkload=a\npolicy=flat\nset.bad.knob=1\n",
+         "unknown config knob"),
+        ("specversion=1\nworkload=a\npolicy=flat\ngarbage line\n",
+         "key=value"),
+        ("specversion=1\npolicy=flat\n", "workload"),
+    ] {
+        std::fs::write(&path, body).unwrap();
+        let e = spec_cli::spec_from_args(
+            &parse(&["run", "--spec", path.to_str().unwrap()]))
+            .unwrap_err();
+        assert!(e.contains("--spec"), "{why}: error should name the flag: {e}");
+    }
+    let _ = std::fs::remove_file(&path);
+    // Nonexistent file.
+    assert!(spec_cli::spec_from_args(
+        &parse(&["run", "--spec", "/no/such/spec.kv"]))
+        .is_err());
+}
+
+#[test]
+fn zero_interval_and_topn_keep_config_defaults() {
+    // Historical CLI sentinel: 0 means "use the scaled config's value";
+    // it must NOT become a (hang-inducing) interval_cycles=0 override.
+    let s = spec_cli::spec_from_args(&parse(&[
+        "run", "--interval", "0", "--top-n", "0",
+    ]))
+    .unwrap();
+    assert!(s.overrides.is_empty());
+    assert!(s.config().interval_cycles > 0);
+}
+
+#[test]
+fn degenerate_knob_values_rejected_at_the_cli() {
+    for bad in ["cpu.cores=0", "rainbow.interval_cycles=0", "dram.size=0",
+                "rainbow.migration_threshold=nan"] {
+        assert!(
+            spec_cli::spec_from_args(&parse(&["sweep", "--set", bad]))
+                .is_err(),
+            "--set {bad} must be rejected before any worker spawns");
+    }
+}
+
+#[test]
+fn bad_scale_rejected_before_config_scaled_asserts() {
+    // Config::scaled(0) divides by zero and non-powers-of-two assert;
+    // both must take the CLI error path instead.
+    for bad in ["0", "3"] {
+        let e = spec_cli::spec_from_args(&parse(&["run", "--scale", bad]))
+            .unwrap_err();
+        assert!(e.contains("power of two"), "scale {bad}: got {e}");
+    }
+    assert!(spec_cli::spec_from_args(&parse(&["run", "--scale", "16"]))
+        .is_ok());
+}
+
+#[test]
+fn run_spec_names_validated_before_simulation() {
+    // `run` takes spec_from_args straight to run_uncached; unknown
+    // names must take the error path, not a panic.
+    let e = spec_cli::spec_from_args(&parse(&["run", "--app", "notanapp"]))
+        .unwrap_err();
+    assert!(e.contains("unknown workload"), "got: {e}");
+    let e = spec_cli::spec_from_args(
+        &parse(&["run", "--policy", "notapolicy"])).unwrap_err();
+    assert!(e.contains("unknown policy"), "got: {e}");
+    // ...including names that arrive via a --spec file.
+    let path = std::env::temp_dir()
+        .join(format!("rainbow_spec_name_{}.kv", std::process::id()));
+    std::fs::write(&path,
+                   "specversion=1\nworkload=notanapp\npolicy=rainbow\n")
+        .unwrap();
+    let e = spec_cli::spec_from_args(
+        &parse(&["run", "--spec", path.to_str().unwrap()])).unwrap_err();
+    assert!(e.contains("unknown workload"), "got: {e}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn bad_workload_and_policy_names_rejected() {
+    let e = spec_cli::sweep_workloads(
+        &parse(&["sweep", "--apps", "mcf,notanapp"])).unwrap_err();
+    assert!(e.contains("unknown workload"), "got: {e}");
+    let e = spec_cli::sweep_policies(
+        &parse(&["sweep", "--policies", "rainbow,notapolicy"])).unwrap_err();
+    assert!(e.contains("unknown policy"), "got: {e}");
+    // Empty lists are an error, not an empty sweep.
+    assert!(spec_cli::sweep_workloads(
+        &parse(&["sweep", "--apps", ","])).is_err());
+    assert!(spec_cli::sweep_policies(
+        &parse(&["sweep", "--policies", ","])).is_err());
+    // Valid lists resolve (case-insensitive workloads, policy aliases).
+    let ws = spec_cli::sweep_workloads(
+        &parse(&["sweep", "--apps", "MCF,mix1"])).unwrap();
+    assert_eq!(ws.len(), 2);
+    let ps = spec_cli::sweep_policies(
+        &parse(&["sweep", "--policies", "flat-static,rainbow"])).unwrap();
+    assert_eq!(ps.len(), 2);
+}
+
+#[test]
+fn spec_kv_roundtrip_through_files() {
+    let spec = RunSpec::new("mix2", "hscc4k")
+        .with_seed(7)
+        .with("mem.dram_ratio", 4u64)
+        .with("rainbow.write_weight", 1.5);
+    let text = spec_to_kv(&spec);
+    let back = spec_from_kv(&text).unwrap();
+    assert_eq!(spec, back);
+    assert_eq!(spec.fingerprint(), back.fingerprint());
+}

@@ -107,14 +107,12 @@ fn rainbow_policy_runs_with_accel_backend() {
         return;
     }
     // Full simulation with the PJRT identifier on a small workload.
-    let mut spec = rainbow::report::RunSpec::new("DICT", "rainbow");
-    spec.scale = 64;
-    spec.instructions = 80_000;
-    spec.interval_cycles = 100_000;
-    spec.top_n = 16;
-    spec.accel = true;
-    let accel = rainbow::report::run_uncached(&spec);
-    spec.accel = false;
+    let spec = rainbow::report::RunSpec::new("DICT", "rainbow")
+        .with_scale(64)
+        .with_instructions(80_000)
+        .with("rainbow.interval_cycles", 100_000u64)
+        .with("rainbow.top_n", 16u64);
+    let accel = rainbow::report::run_uncached(&spec.clone().with_accel(true));
     let native = rainbow::report::run_uncached(&spec);
     // Identical identification decisions => identical simulations.
     assert_eq!(accel.cycles, native.cycles,

@@ -5,11 +5,10 @@
 use rainbow::report::{run_uncached, RunSpec};
 
 fn spec(workload: &str, policy: &str) -> RunSpec {
-    let mut s = RunSpec::new(workload, policy);
-    s.scale = 32;
-    s.instructions = 600_000;
-    s.seed = 42;
-    s
+    RunSpec::new(workload, policy)
+        .with_scale(32)
+        .with_instructions(600_000)
+        .with_seed(42)
 }
 
 #[test]
@@ -50,12 +49,11 @@ fn rainbow_beats_flat_static() {
     // workloads. Needs the standard 1/8-scale regime and enough
     // instructions to amortize migration warm-up.
     for w in ["DICT", "soplex"] {
-        let mut sf = RunSpec::new(w, "flat");
-        sf.scale = 8;
-        sf.instructions = 1_500_000;
-        sf.seed = 42;
-        let mut sr = sf.clone();
-        sr.policy = "rainbow".to_string();
+        let sf = RunSpec::new(w, "flat")
+            .with_scale(8)
+            .with_instructions(1_500_000)
+            .with_seed(42);
+        let sr = sf.clone().with_policy("rainbow");
         let flat = run_uncached(&sf).ipc();
         let rb = run_uncached(&sr).ipc();
         assert!(rb > flat, "{w}: rainbow {rb:.4} <= flat {flat:.4}");

@@ -1,24 +1,26 @@
 //! Determinism contract of the parallel sweep orchestrator: a fixed-seed
-//! workload x policy matrix executed on scoped worker threads must yield
-//! metrics BYTE-identical (via the kv serialization) to the serial
-//! `run_uncached` path, and repeated parallel runs must agree with each
-//! other — any cross-worker state sharing or ordering race would surface
-//! as drift between rounds.
+//! workload x policy matrix — including override-bearing specs — executed
+//! on scoped worker threads must yield metrics BYTE-identical (via the kv
+//! serialization) to the serial `run_uncached` path, and repeated
+//! parallel runs must agree with each other — any cross-worker state
+//! sharing or ordering race would surface as drift between rounds.
 
-use rainbow::report::serde_kv::metrics_to_kv;
+use rainbow::report::serde_kv::{metrics_to_kv, spec_from_kv, spec_to_kv};
 use rainbow::report::sweep::{self, SweepConfig};
-use rainbow::report::{run_uncached, RunSpec};
+use rainbow::report::{run_cached_in, run_uncached, RunSpec};
 
 fn tiny(workload: &str, policy: &str) -> RunSpec {
-    let mut s = RunSpec::new(workload, policy);
-    s.scale = 64;
-    s.instructions = 60_000;
-    s.interval_cycles = 100_000;
-    s.top_n = 16;
-    s.seed = 42;
-    s
+    RunSpec::new(workload, policy)
+        .with_scale(64)
+        .with_instructions(60_000)
+        .with_seed(42)
+        .with("rainbow.interval_cycles", 100_000u64)
+        .with("rainbow.top_n", 16u64)
 }
 
+/// Workload x policy cross product plus override-bearing variants: the
+/// §IV-F-style config knobs (migration threshold, NVM latency) that only
+/// overrides can express must ride the same parallel path.
 fn matrix() -> Vec<RunSpec> {
     let mut specs = Vec::new();
     for w in ["DICT", "streamcluster"] {
@@ -26,6 +28,9 @@ fn matrix() -> Vec<RunSpec> {
             specs.push(tiny(w, p));
         }
     }
+    specs.push(tiny("DICT", "rainbow")
+        .with("rainbow.migration_threshold", 250.0));
+    specs.push(tiny("DICT", "flat").with("nvm.read_cycles", 248u64));
     specs
 }
 
@@ -37,8 +42,8 @@ fn parallel_sweep_matches_serial_byte_identical_twice() {
     // Two rounds: catches both serial/parallel divergence and
     // run-to-run ordering races in the worker pool.
     for round in 0..2 {
-        let parallel = sweep::run_parallel(
-            &specs, &SweepConfig { workers: 4, disk_cache: false });
+        let cfg = SweepConfig { workers: 4, ..SweepConfig::default() };
+        let parallel = sweep::run_parallel(&specs, &cfg);
         assert_eq!(parallel.len(), specs.len());
         for ((spec, want), got) in
             specs.iter().zip(&serial).zip(&parallel)
@@ -54,8 +59,8 @@ fn parallel_sweep_matches_serial_byte_identical_twice() {
 fn duplicate_specs_share_one_simulation() {
     let mut specs = matrix();
     specs.extend(matrix()); // every fingerprint appears twice
-    let out =
-        sweep::run(&specs, &SweepConfig { workers: 3, disk_cache: false });
+    let cfg = SweepConfig { workers: 3, ..SweepConfig::default() };
+    let out = sweep::run(&specs, &cfg);
     assert_eq!(out.unique_runs, specs.len() / 2,
                "dedup must collapse repeated fingerprints");
     let half = specs.len() / 2;
@@ -70,11 +75,59 @@ fn duplicate_specs_share_one_simulation() {
 fn single_worker_equals_many_workers() {
     let specs = matrix();
     let one = sweep::run_parallel(
-        &specs, &SweepConfig { workers: 1, disk_cache: false });
+        &specs, &SweepConfig { workers: 1, ..SweepConfig::default() });
     let many = sweep::run_parallel(
-        &specs, &SweepConfig { workers: 8, disk_cache: false });
+        &specs, &SweepConfig { workers: 8, ..SweepConfig::default() });
     for (i, (a, b)) in one.iter().zip(&many).enumerate() {
         assert_eq!(metrics_to_kv(a), metrics_to_kv(b),
                    "spec {i}: worker count changed the metrics");
     }
+}
+
+#[test]
+fn overrides_change_identity_and_outcome() {
+    // The override-bearing spec must not collide with its base spec in
+    // the cache/dedup layer, and the knob must actually reach the
+    // simulation: flat serves everything from NVM, so quadrupling the
+    // NVM read latency must slow it down.
+    let base = tiny("DICT", "flat");
+    let slow = base.clone().with("nvm.read_cycles",
+                                 base.config().nvm.read_cycles * 4);
+    assert_ne!(base.fingerprint(), slow.fingerprint());
+    let m_base = run_uncached(&base);
+    let m_slow = run_uncached(&slow);
+    assert!(m_slow.cycles > m_base.cycles,
+            "4x NVM read latency must cost cycles ({} vs {})",
+            m_slow.cycles, m_base.cycles);
+}
+
+#[test]
+fn override_spec_cache_roundtrip_identical() {
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_ov_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = tiny("DICT", "rainbow")
+        .with("rainbow.migration_threshold", 250.0)
+        .with("nvm.write_cycles", 1000u64);
+    let fresh = run_cached_in(&dir, &spec); // simulates + writes
+    let cached = run_cached_in(&dir, &spec); // must load the entry
+    assert_eq!(metrics_to_kv(&fresh), metrics_to_kv(&cached),
+               "cache round-trip must be byte-identical");
+    assert!(dir.join(format!("{}.kv", spec.fingerprint())).is_file());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn override_fingerprint_stable_under_insertion_order_and_spec_kv() {
+    let a = tiny("DICT", "rainbow")
+        .with("rainbow.migration_threshold", 250.0)
+        .with("nvm.read_cycles", 124u64);
+    let b = tiny("DICT", "rainbow")
+        .with("nvm.read_cycles", 124u64)
+        .with("rainbow.migration_threshold", 250.0);
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    // And the canonical spec serialization round-trips the identity.
+    let c = spec_from_kv(&spec_to_kv(&a)).unwrap();
+    assert_eq!(a, c);
+    assert_eq!(a.fingerprint(), c.fingerprint());
 }
