@@ -1,0 +1,23 @@
+//! Regenerates the Fig. 16 backend matrix (policies × NVM device
+//! profiles) through the cached experiment harness — a three-app subset
+//! keeps the profile × policy × workload cube bench-sized.
+mod common;
+
+use rainbow::config::profiles;
+use rainbow::report::figures::{self, FigureCtx};
+use rainbow::report::RunSpec;
+
+fn main() {
+    let base = RunSpec::new("", "")
+        .with_scale(8)
+        .with_instructions(common::bench_instructions().min(800_000));
+    let ctx = FigureCtx::new(
+        ["mcf", "DICT", "GUPS"].iter().map(|s| s.to_string()).collect(),
+        base);
+    let profs: Vec<String> = profiles::slow_tier_names()
+        .iter().map(|s| s.to_string()).collect();
+    let pols: Vec<String> = figures::BACKEND_POLICIES
+        .iter().map(|s| s.to_string()).collect();
+    common::figure_bench("fig16_backends",
+                         || figures::fig16_backends(&ctx, &profs, &pols));
+}

@@ -15,7 +15,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use super::Config;
+use super::{profiles, Config, MemConfig};
 use crate::util::cli::parse_u64;
 use crate::util::tomlite::{Doc, Value};
 
@@ -24,6 +24,9 @@ use crate::util::tomlite::{Doc, Value};
 pub enum KnobKind {
     U64,
     F64,
+    /// A device-profile name from [`crate::config::profiles`]; the value
+    /// is interned to the catalog's canonical `&'static str`.
+    Profile,
 }
 
 impl KnobKind {
@@ -31,6 +34,7 @@ impl KnobKind {
         match self {
             KnobKind::U64 => "u64",
             KnobKind::F64 => "f64",
+            KnobKind::Profile => "prof",
         }
     }
 }
@@ -41,6 +45,9 @@ impl KnobKind {
 pub enum KnobValue {
     U64(u64),
     F64(f64),
+    /// A validated device-profile name (the catalog's canonical str, so
+    /// the value stays `Copy` and serializes as itself).
+    Str(&'static str),
 }
 
 impl KnobValue {
@@ -48,6 +55,7 @@ impl KnobValue {
         match self {
             KnobValue::U64(v) => v,
             KnobValue::F64(v) => v as u64,
+            KnobValue::Str(_) => panic!("string knob value has no u64 form"),
         }
     }
 
@@ -55,6 +63,14 @@ impl KnobValue {
         match self {
             KnobValue::U64(v) => v as f64,
             KnobValue::F64(v) => v,
+            KnobValue::Str(_) => panic!("string knob value has no f64 form"),
+        }
+    }
+
+    pub fn as_str(self) -> Option<&'static str> {
+        match self {
+            KnobValue::Str(s) => Some(s),
+            _ => None,
         }
     }
 }
@@ -64,6 +80,7 @@ impl fmt::Display for KnobValue {
         match self {
             KnobValue::U64(v) => write!(f, "{v}"),
             KnobValue::F64(v) => write!(f, "{v}"),
+            KnobValue::Str(v) => write!(f, "{v}"),
         }
     }
 }
@@ -86,6 +103,15 @@ impl From<f64> for KnobValue {
     }
 }
 
+/// Sugar for statically-named profiles (`.with("nvm.profile",
+/// "optane-dcpmm")`); [`Knob::coerce`] still validates the name against
+/// the catalog.
+impl From<&'static str> for KnobValue {
+    fn from(v: &'static str) -> KnobValue {
+        KnobValue::Str(v)
+    }
+}
+
 /// One overridable config field.
 pub struct Knob {
     pub key: &'static str,
@@ -102,15 +128,33 @@ const POSITIVE_KEYS: &[&str] = &[
     "cpu.cores", "cpu.ghz", "tlb.l1_4k_entries", "tlb.l1_2m_entries",
     "tlb.l2_4k_entries", "tlb.l2_2m_entries", "cache.l1_size",
     "cache.l2_size", "cache.l3_size", "dram.size", "nvm.size",
+    "dram.channels", "dram.ranks_per_channel", "dram.banks_per_rank",
+    "dram.rows_per_bank", "nvm.channels", "nvm.ranks_per_channel",
+    "nvm.banks_per_rank", "nvm.rows_per_bank",
     "rainbow.interval_cycles", "rainbow.top_n",
     "rainbow.bitmap_cache_entries", "rainbow.bitmap_cache_assoc",
     "mem.dram_ratio",
 ];
 
+/// Energy/power knobs: zero is meaningful (PCM's standby draw), negative
+/// values would silently corrupt every Fig. 12 rollup.
+const NONNEGATIVE_KEYS: &[&str] = &[
+    "dram.e_read_hit_pj_bit", "dram.e_write_hit_pj_bit",
+    "dram.e_read_miss_pj_bit", "dram.e_write_miss_pj_bit",
+    "dram.background_w_per_gb",
+    "nvm.e_read_hit_pj_bit", "nvm.e_write_hit_pj_bit",
+    "nvm.e_read_miss_pj_bit", "nvm.e_write_miss_pj_bit",
+    "nvm.background_w_per_gb",
+];
+
+/// Row-buffer sizes below one 64 B line make the column count in
+/// `bank::decode` zero — another divide-by-zero, rejected up front.
+const ROW_SIZE_KEYS: &[&str] = &["dram.row_size", "nvm.row_size"];
+
 impl Knob {
     /// Parse a textual value (CLI `--set`, spec file) into this knob's
     /// type. u64 knobs accept `_` separators and k/m/g/e suffixes, same
-    /// as the tomlite loader.
+    /// as the tomlite loader; profile knobs resolve catalog names.
     pub fn parse(&self, raw: &str) -> Result<KnobValue, String> {
         let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
         let v = match self.kind {
@@ -125,6 +169,8 @@ impl Knob {
                 .map_err(|_| {
                     format!("knob {}: expected number, got {raw:?}", self.key)
                 })?,
+            KnobKind::Profile => KnobValue::Str(intern_profile(
+                self.key, raw.trim())?),
         };
         self.validate(v)
     }
@@ -143,38 +189,90 @@ impl Knob {
             }
             (KnobKind::F64, KnobValue::F64(_)) => v,
             (KnobKind::F64, KnobValue::U64(u)) => KnobValue::F64(u as f64),
+            (KnobKind::Profile, KnobValue::Str(s)) => {
+                KnobValue::Str(intern_profile(self.key, s)?)
+            }
+            (KnobKind::Profile, other) => {
+                return Err(format!(
+                    "knob {}: expected a device profile name, got {other}",
+                    self.key))
+            }
+            (_, KnobValue::Str(s)) => {
+                return Err(format!(
+                    "knob {}: expected {}, got string {s:?}",
+                    self.key, self.kind.name()))
+            }
         };
         self.validate(v)
     }
 
     /// Range checks shared by both input paths: f64 values must be
     /// finite (NaN would silently disable every threshold comparison),
-    /// and [`POSITIVE_KEYS`] must be > 0.
+    /// [`POSITIVE_KEYS`] must be > 0, [`NONNEGATIVE_KEYS`] must be ≥ 0,
+    /// and [`ROW_SIZE_KEYS`] must hold at least one cache line.
     fn validate(&self, v: KnobValue) -> Result<KnobValue, String> {
         if let KnobValue::F64(f) = v {
             if !f.is_finite() {
                 return Err(format!(
                     "knob {}: value must be finite, got {f}", self.key));
             }
+            if f < 0.0 && NONNEGATIVE_KEYS.contains(&self.key) {
+                return Err(format!(
+                    "knob {}: value must be non-negative, got {f}", self.key));
+            }
         }
         if POSITIVE_KEYS.contains(&self.key) {
             let bad = match v {
                 KnobValue::U64(u) => u == 0,
                 KnobValue::F64(f) => f <= 0.0,
+                KnobValue::Str(_) => false,
             };
             if bad {
                 return Err(format!(
                     "knob {}: value must be positive, got {v}", self.key));
             }
         }
+        if ROW_SIZE_KEYS.contains(&self.key) && v.as_u64() < 64 {
+            return Err(format!(
+                "knob {}: row size must be at least one 64 B line, got {v}",
+                self.key));
+        }
         Ok(v)
     }
 }
 
+/// Resolve a profile name to its canonical catalog str.
+fn intern_profile(key: &str, name: &str) -> Result<&'static str, String> {
+    profiles::by_name(name).map(|p| p.name).ok_or_else(|| {
+        format!("knob {key}: unknown device profile {name:?} (available: {})",
+                profiles::names().join(", "))
+    })
+}
+
+/// Expand a (coerce-validated) profile name into the scaled device
+/// bundle for one controller slot — the apply half of the profile knobs.
+fn expand_profile(v: KnobValue, scale_factor: u64) -> MemConfig {
+    let name = v.as_str().expect("profile knob holds a name");
+    profiles::by_name(name)
+        .expect("coerce validated the profile name")
+        .mem_scaled(scale_factor.max(1))
+}
+
 /// The registry. Declaration order is APPLY order (deterministic and
-/// independent of how an `Overrides` map was built); derived knobs like
-/// `mem.dram_ratio` are declared last so they see the final base values.
+/// independent of how an `Overrides` map was built): the device-profile
+/// knobs come FIRST so a profile expands its whole `MemConfig` slot
+/// before any explicit `dram.*`/`nvm.*` field override lands on top,
+/// and derived knobs like `mem.dram_ratio` are declared last so they
+/// see the final base values.
 static KNOBS: &[Knob] = &[
+    Knob { key: "dram.profile", kind: KnobKind::Profile,
+           help: "named DRAM-slot device profile (expands first; \
+                  dram.* overrides layer on top)",
+           apply: |c, v| c.dram = expand_profile(v, c.scale_factor) },
+    Knob { key: "nvm.profile", kind: KnobKind::Profile,
+           help: "named NVM-slot device profile (expands first; \
+                  nvm.* overrides layer on top)",
+           apply: |c, v| c.nvm = expand_profile(v, c.scale_factor) },
     Knob { key: "cpu.cores", kind: KnobKind::U64,
            help: "simulated cores",
            apply: |c, v| c.cores = v.as_u64() as usize },
@@ -205,6 +303,21 @@ static KNOBS: &[Knob] = &[
     Knob { key: "dram.size", kind: KnobKind::U64,
            help: "DRAM capacity bytes",
            apply: |c, v| c.dram.size = v.as_u64() },
+    Knob { key: "dram.channels", kind: KnobKind::U64,
+           help: "DRAM channels",
+           apply: |c, v| c.dram.channels = v.as_u64() as usize },
+    Knob { key: "dram.ranks_per_channel", kind: KnobKind::U64,
+           help: "DRAM ranks per channel",
+           apply: |c, v| c.dram.ranks_per_channel = v.as_u64() as usize },
+    Knob { key: "dram.banks_per_rank", kind: KnobKind::U64,
+           help: "DRAM banks per rank",
+           apply: |c, v| c.dram.banks_per_rank = v.as_u64() as usize },
+    Knob { key: "dram.rows_per_bank", kind: KnobKind::U64,
+           help: "DRAM rows per bank",
+           apply: |c, v| c.dram.rows_per_bank = v.as_u64() },
+    Knob { key: "dram.row_size", kind: KnobKind::U64,
+           help: "DRAM row-buffer bytes per bank",
+           apply: |c, v| c.dram.row_size = v.as_u64() },
     Knob { key: "dram.read_cycles", kind: KnobKind::U64,
            help: "DRAM array read latency (cycles)",
            apply: |c, v| c.dram.read_cycles = v.as_u64() },
@@ -223,9 +336,39 @@ static KNOBS: &[Knob] = &[
     Knob { key: "dram.t_ras", kind: KnobKind::U64,
            help: "DRAM tRAS",
            apply: |c, v| c.dram.t_ras = v.as_u64() },
+    Knob { key: "dram.e_read_hit_pj_bit", kind: KnobKind::F64,
+           help: "DRAM read energy, row-buffer hit (pJ/bit)",
+           apply: |c, v| c.dram.e_read_hit_pj_bit = v.as_f64() },
+    Knob { key: "dram.e_write_hit_pj_bit", kind: KnobKind::F64,
+           help: "DRAM write energy, row-buffer hit (pJ/bit)",
+           apply: |c, v| c.dram.e_write_hit_pj_bit = v.as_f64() },
+    Knob { key: "dram.e_read_miss_pj_bit", kind: KnobKind::F64,
+           help: "DRAM read energy, row-buffer miss (pJ/bit)",
+           apply: |c, v| c.dram.e_read_miss_pj_bit = v.as_f64() },
+    Knob { key: "dram.e_write_miss_pj_bit", kind: KnobKind::F64,
+           help: "DRAM write energy, row-buffer miss (pJ/bit)",
+           apply: |c, v| c.dram.e_write_miss_pj_bit = v.as_f64() },
+    Knob { key: "dram.background_w_per_gb", kind: KnobKind::F64,
+           help: "DRAM standby+refresh power (W per GB)",
+           apply: |c, v| c.dram.background_w_per_gb = v.as_f64() },
     Knob { key: "nvm.size", kind: KnobKind::U64,
            help: "NVM capacity bytes",
            apply: |c, v| c.nvm.size = v.as_u64() },
+    Knob { key: "nvm.channels", kind: KnobKind::U64,
+           help: "NVM channels",
+           apply: |c, v| c.nvm.channels = v.as_u64() as usize },
+    Knob { key: "nvm.ranks_per_channel", kind: KnobKind::U64,
+           help: "NVM ranks per channel",
+           apply: |c, v| c.nvm.ranks_per_channel = v.as_u64() as usize },
+    Knob { key: "nvm.banks_per_rank", kind: KnobKind::U64,
+           help: "NVM banks per rank",
+           apply: |c, v| c.nvm.banks_per_rank = v.as_u64() as usize },
+    Knob { key: "nvm.rows_per_bank", kind: KnobKind::U64,
+           help: "NVM rows per bank",
+           apply: |c, v| c.nvm.rows_per_bank = v.as_u64() },
+    Knob { key: "nvm.row_size", kind: KnobKind::U64,
+           help: "NVM row-buffer bytes per bank",
+           apply: |c, v| c.nvm.row_size = v.as_u64() },
     Knob { key: "nvm.read_cycles", kind: KnobKind::U64,
            help: "NVM array read latency (cycles)",
            apply: |c, v| c.nvm.read_cycles = v.as_u64() },
@@ -244,6 +387,21 @@ static KNOBS: &[Knob] = &[
     Knob { key: "nvm.t_ras", kind: KnobKind::U64,
            help: "NVM tRAS",
            apply: |c, v| c.nvm.t_ras = v.as_u64() },
+    Knob { key: "nvm.e_read_hit_pj_bit", kind: KnobKind::F64,
+           help: "NVM read energy, row-buffer hit (pJ/bit)",
+           apply: |c, v| c.nvm.e_read_hit_pj_bit = v.as_f64() },
+    Knob { key: "nvm.e_write_hit_pj_bit", kind: KnobKind::F64,
+           help: "NVM write energy, row-buffer hit (pJ/bit)",
+           apply: |c, v| c.nvm.e_write_hit_pj_bit = v.as_f64() },
+    Knob { key: "nvm.e_read_miss_pj_bit", kind: KnobKind::F64,
+           help: "NVM read energy, row-buffer miss (pJ/bit)",
+           apply: |c, v| c.nvm.e_read_miss_pj_bit = v.as_f64() },
+    Knob { key: "nvm.e_write_miss_pj_bit", kind: KnobKind::F64,
+           help: "NVM write energy, row-buffer miss (pJ/bit)",
+           apply: |c, v| c.nvm.e_write_miss_pj_bit = v.as_f64() },
+    Knob { key: "nvm.background_w_per_gb", kind: KnobKind::F64,
+           help: "NVM standby power (W per GB; 0 for PCM)",
+           apply: |c, v| c.nvm.background_w_per_gb = v.as_f64() },
     Knob { key: "rainbow.interval_cycles", kind: KnobKind::U64,
            help: "hot-page sampling interval (cycles)",
            apply: |c, v| c.interval_cycles = v.as_u64() },
@@ -374,7 +532,9 @@ impl Overrides {
     }
 
     /// Build from a tomlite document, rejecting unknown keys and
-    /// non-numeric values (the validated half of `Config::apply_doc`).
+    /// ill-typed values (the validated half of `Config::apply_doc`).
+    /// Quoted strings route through [`Knob::parse`], so profile knobs
+    /// work from config files too (`profile = "optane-dcpmm"`).
     pub fn from_doc(doc: &Doc) -> Result<Overrides, String> {
         let mut ov = Overrides::new();
         for key in doc.keys() {
@@ -382,12 +542,13 @@ impl Overrides {
                 format!("unknown config knob {key:?} in config file")
             })?;
             let v = match doc.get(key) {
-                Some(Value::Int(u)) => KnobValue::U64(*u),
-                Some(Value::Float(f)) => KnobValue::F64(*f),
+                Some(Value::Int(u)) => knob.coerce(KnobValue::U64(*u))?,
+                Some(Value::Float(f)) => knob.coerce(KnobValue::F64(*f))?,
+                Some(Value::Str(s)) => knob.parse(s)?,
                 _ => return Err(format!(
-                    "knob {key}: expected a number")),
+                    "knob {key}: expected a number or string")),
             };
-            ov.map.insert(knob.key, knob.coerce(v)?);
+            ov.map.insert(knob.key, v);
         }
         Ok(ov)
     }
@@ -468,9 +629,127 @@ mod tests {
 
     #[test]
     fn positive_keys_are_all_registered() {
-        for k in POSITIVE_KEYS {
-            assert!(by_key(k).is_some(), "POSITIVE_KEYS has stale key {k}");
+        for k in POSITIVE_KEYS.iter().chain(NONNEGATIVE_KEYS)
+            .chain(ROW_SIZE_KEYS)
+        {
+            assert!(by_key(k).is_some(), "validation list has stale key {k}");
         }
+    }
+
+    /// Registry-completeness guard: every public `MemConfig` field must
+    /// be reachable through some knob. The exhaustive destructure makes
+    /// this test FAIL TO COMPILE when `MemConfig` gains a field, forcing
+    /// the registry (and this list) to keep up.
+    #[test]
+    fn every_mem_config_field_is_knob_reachable() {
+        use crate::config::{MemConfig, MemTech};
+
+        let field_values: &[(&str, &str)] = &[
+            ("size", "128m"), ("channels", "3"),
+            ("ranks_per_channel", "5"), ("banks_per_rank", "6"),
+            ("rows_per_bank", "1234"), ("row_size", "512"),
+            ("read_cycles", "111"), ("write_cycles", "222"),
+            ("t_cas", "21"), ("t_rcd", "22"), ("t_rp", "23"),
+            ("t_ras", "24"),
+            ("e_read_hit_pj_bit", "0.5"), ("e_write_hit_pj_bit", "0.625"),
+            ("e_read_miss_pj_bit", "0.75"), ("e_write_miss_pj_bit", "0.875"),
+            ("background_w_per_gb", "0.125"),
+        ];
+        for prefix in ["dram", "nvm"] {
+            let mut ov = Overrides::new();
+            for (field, value) in field_values {
+                ov.set_raw(&format!("{prefix}.{field}"), value)
+                    .unwrap_or_else(|e| panic!("{prefix}.{field}: {e}"));
+            }
+            // `tech` is reachable through the bundle-expanding profile
+            // knob (it has no standalone field knob by design).
+            ov.set_raw(&format!("{prefix}.profile"), "stt-ram").unwrap();
+            let mut c = Config::paper();
+            ov.apply_to(&mut c);
+            let dev = if prefix == "dram" { c.dram } else { c.nvm };
+            let MemConfig {
+                tech, size, channels, ranks_per_channel, banks_per_rank,
+                rows_per_bank, row_size, read_cycles, write_cycles,
+                t_cas, t_rcd, t_rp, t_ras, e_read_hit_pj_bit,
+                e_write_hit_pj_bit, e_read_miss_pj_bit,
+                e_write_miss_pj_bit, background_w_per_gb,
+            } = dev;
+            assert_eq!(tech, MemTech::SttRam, "{prefix}.profile");
+            assert_eq!(size, 128 << 20, "{prefix}.size");
+            assert_eq!(channels, 3, "{prefix}.channels");
+            assert_eq!(ranks_per_channel, 5, "{prefix}.ranks_per_channel");
+            assert_eq!(banks_per_rank, 6, "{prefix}.banks_per_rank");
+            assert_eq!(rows_per_bank, 1234, "{prefix}.rows_per_bank");
+            assert_eq!(row_size, 512, "{prefix}.row_size");
+            assert_eq!(read_cycles, 111, "{prefix}.read_cycles");
+            assert_eq!(write_cycles, 222, "{prefix}.write_cycles");
+            assert_eq!(t_cas, 21, "{prefix}.t_cas");
+            assert_eq!(t_rcd, 22, "{prefix}.t_rcd");
+            assert_eq!(t_rp, 23, "{prefix}.t_rp");
+            assert_eq!(t_ras, 24, "{prefix}.t_ras");
+            assert_eq!(e_read_hit_pj_bit, 0.5, "{prefix}.e_read_hit");
+            assert_eq!(e_write_hit_pj_bit, 0.625, "{prefix}.e_write_hit");
+            assert_eq!(e_read_miss_pj_bit, 0.75, "{prefix}.e_read_miss");
+            assert_eq!(e_write_miss_pj_bit, 0.875, "{prefix}.e_write_miss");
+            assert_eq!(background_w_per_gb, 0.125, "{prefix}.background");
+        }
+    }
+
+    #[test]
+    fn profile_expands_before_field_overrides() {
+        // Whatever order the map was built in, the profile knob applies
+        // first (registry order), so the explicit field override wins.
+        let mut ov = Overrides::new();
+        ov.set_raw("nvm.read_cycles", "9999").unwrap();
+        ov.set_raw("nvm.profile", "optane-dcpmm").unwrap();
+        let mut c = Config::paper();
+        ov.apply_to(&mut c);
+        assert_eq!(c.nvm.tech, crate::config::MemTech::Optane);
+        assert_eq!(c.nvm.read_cycles, 9999, "field override must win");
+        let optane = profiles::by_name("optane-dcpmm").unwrap().mem();
+        assert_eq!(c.nvm.write_cycles, optane.write_cycles);
+    }
+
+    #[test]
+    fn profile_expansion_tracks_scale_factor() {
+        let mut ov = Overrides::new();
+        ov.set_raw("nvm.profile", "pcm-paper").unwrap();
+        let mut c = Config::scaled(8);
+        let expect = c.nvm; // pcm-paper IS the scaled baseline NVM
+        ov.apply_to(&mut c);
+        assert_eq!(c.nvm, expect);
+    }
+
+    #[test]
+    fn profile_knob_rejects_bad_input() {
+        let mut ov = Overrides::new();
+        let e = ov.set_raw("nvm.profile", "sdram-9000").unwrap_err();
+        assert!(e.contains("unknown device profile"), "got: {e}");
+        assert!(e.contains("pcm-paper"), "error must list the catalog: {e}");
+        // Numbers don't fit a profile knob; names don't fit numeric ones.
+        assert!(ov.set("nvm.profile", KnobValue::U64(3)).is_err());
+        assert!(ov.set("nvm.read_cycles", KnobValue::Str("pcm-paper"))
+            .is_err());
+        // Case-insensitive lookup interns the canonical name.
+        ov.set_raw("nvm.profile", "PCM-Paper").unwrap();
+        assert_eq!(ov.get("nvm.profile"), Some(KnobValue::Str("pcm-paper")));
+        assert_eq!(ov.canonical(), "nvm.profile=pcm-paper\n");
+    }
+
+    #[test]
+    fn degenerate_device_geometry_rejected() {
+        let mut ov = Overrides::new();
+        // Zero channels/ranks/banks/rows are bank-decode divide-by-zero.
+        for key in ["dram.channels", "dram.rows_per_bank", "nvm.channels",
+                    "nvm.banks_per_rank", "nvm.ranks_per_channel"] {
+            assert!(ov.set_raw(key, "0").is_err(), "{key}=0 must fail");
+        }
+        // Sub-line row buffers zero the column count.
+        assert!(ov.set_raw("nvm.row_size", "32").is_err());
+        assert!(ov.set_raw("nvm.row_size", "64").is_ok());
+        // Negative energy corrupts the Fig. 12 rollup; zero is fine.
+        assert!(ov.set_raw("nvm.e_write_miss_pj_bit", "-1.0").is_err());
+        assert!(ov.set_raw("dram.background_w_per_gb", "0").is_ok());
     }
 
     #[test]

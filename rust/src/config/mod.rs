@@ -9,6 +9,7 @@
 use crate::util::tomlite::Doc;
 
 pub mod knobs;
+pub mod profiles;
 
 pub const PAGE_SHIFT: u32 = 12;
 pub const PAGE_SIZE: u64 = 1 << PAGE_SHIFT; // 4 KB
@@ -33,9 +34,53 @@ pub struct CacheConfig {
     pub latency: u64,
 }
 
-/// Memory-device timing/energy (one technology: DRAM or PCM).
+/// Memory technology behind a device — the identity a [`MemConfig`]
+/// bundle (and hence a [`profiles::DeviceProfile`]) carries, so nothing
+/// downstream has to infer "DRAM-ness" from which controller slot a
+/// device sits in. The *slots* stay `dram`/`nvm` (fast tier / slow
+/// tier); the *technology* in each slot is whatever the profile says.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemTech {
+    /// Conventional DDR-class DRAM.
+    Dram,
+    /// High-bandwidth, many-channel DRAM (HBM-class).
+    Hbm,
+    /// Spin-transfer-torque MRAM.
+    SttRam,
+    /// Phase-change memory (the paper's NVM).
+    Pcm,
+    /// 3D-XPoint-class persistent memory (Optane DCPMM).
+    Optane,
+    /// DRAM reached over a CXL-style link (volatile but far).
+    CxlDram,
+}
+
+impl MemTech {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemTech::Dram => "dram",
+            MemTech::Hbm => "hbm",
+            MemTech::SttRam => "stt-ram",
+            MemTech::Pcm => "pcm",
+            MemTech::Optane => "optane",
+            MemTech::CxlDram => "cxl-dram",
+        }
+    }
+
+    /// Whether writes survive power loss (drives the paper's clflush
+    /// persistence reasoning; CXL-attached DRAM is far but volatile).
+    pub fn is_nonvolatile(self) -> bool {
+        matches!(self, MemTech::SttRam | MemTech::Pcm | MemTech::Optane)
+    }
+}
+
+/// Memory-device timing/energy (one technology bundle; see
+/// [`profiles`] for the named catalog).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MemConfig {
+    /// Technology identity of this bundle (reporting + persistence
+    /// semantics); set by `Config::paper()` or a device profile.
+    pub tech: MemTech,
     pub size: u64,
     pub channels: usize,
     pub ranks_per_channel: usize,
@@ -107,6 +152,7 @@ impl Config {
     /// Exact Table IV configuration (4 GB DRAM + 32 GB PCM).
     pub fn paper() -> Config {
         let dram = MemConfig {
+            tech: MemTech::Dram,
             size: 4 << 30,
             channels: 1,
             ranks_per_channel: 4,
@@ -130,6 +176,7 @@ impl Config {
             background_w_per_gb: 0.225,
         };
         let nvm = MemConfig {
+            tech: MemTech::Pcm,
             size: 32 << 30,
             channels: 4,
             ranks_per_channel: 8,
@@ -181,14 +228,37 @@ impl Config {
 
     /// Scaled-down config: capacities / `factor`, identical ratios and
     /// latencies. Default experiments use `factor = 8` (512 MB DRAM,
-    /// 4 GB NVM) with a 1e7-cycle interval.
+    /// 4 GB NVM) with a 1e7-cycle interval. Panics on an invalid
+    /// factor; validated input paths (CLI, spec files) go through
+    /// [`Config::try_scaled`] first.
     pub fn scaled(factor: u64) -> Config {
-        assert!(factor.is_power_of_two(), "scale factor must be 2^k");
+        Config::try_scaled(factor)
+            .unwrap_or_else(|e| panic!("Config::scaled: {e}"))
+    }
+
+    /// [`Config::scaled`] with the degenerate factors as errors instead
+    /// of panics: zero / non-power-of-two factors, and factors so large
+    /// the DRAM tier would shrink below 32 MB (the machine parks a
+    /// 16 MB page-table region at the top of DRAM, and rows-per-bank
+    /// would degenerate toward the `.max(1)` clamp).
+    pub fn try_scaled(factor: u64) -> Result<Config, String> {
+        if factor == 0 || !factor.is_power_of_two() {
+            return Err(format!(
+                "scale factor must be a power of two, got {factor}"));
+        }
         let mut c = Config::paper();
+        if c.dram.size / factor < 32 << 20 {
+            return Err(format!(
+                "scale factor {factor} too large: DRAM would shrink to \
+                 {} bytes (< 32 MB)", c.dram.size / factor));
+        }
         c.dram.size /= factor;
         c.nvm.size /= factor;
-        c.dram.rows_per_bank /= factor;
-        c.nvm.rows_per_bank /= factor;
+        // Clamped so absurd factors (or sparse profile bundles) can
+        // never drive the row count to 0 — a zero modulus in
+        // `bank::decode` is a divide-by-zero panic.
+        c.dram.rows_per_bank = (c.dram.rows_per_bank / factor).max(1);
+        c.nvm.rows_per_bank = (c.nvm.rows_per_bank / factor).max(1);
         // Shrink caches/TLBs less aggressively (sqrt-ish) so hit rates keep
         // the paper's regime relative to the shrunk footprints.
         // Scale the *coverage* structures (TLBs, caches) by the same
@@ -216,9 +286,13 @@ impl Config {
         // Dynamic energy per access is scale-invariant but capacity (and
         // hence refresh/standby power) shrank by `factor`; keep the
         // paper's background:dynamic energy balance by scaling the
-        // per-GB draw back up (Fig. 12 depends on this balance).
+        // per-GB draw back up (Fig. 12 depends on this balance). Applied
+        // to BOTH slots — a no-op for the baseline PCM (0 W/GB) but it
+        // keeps `DeviceProfile::mem_scaled` an exact per-device mirror
+        // for NVM-slot profiles with real standby draw (Optane, CXL).
         c.dram.background_w_per_gb *= factor as f64;
-        c
+        c.nvm.background_w_per_gb *= factor as f64;
+        Ok(c)
     }
 
     /// Total physical space (DRAM then NVM in the flat layouts).
@@ -309,5 +383,28 @@ mod tests {
         let doc = Doc::parse("[rainbow]\nnot_a_knob = 1\n").unwrap();
         let mut c = Config::paper();
         assert!(c.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn doc_profile_strings_expand() {
+        let doc =
+            Doc::parse("[nvm]\nprofile = \"optane-dcpmm\"\n").unwrap();
+        let mut c = Config::paper();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.nvm.tech, MemTech::Optane);
+        let bad = Doc::parse("[nvm]\nprofile = \"sdram-9000\"\n").unwrap();
+        assert!(Config::paper().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn try_scaled_rejects_degenerate_factors() {
+        assert!(Config::try_scaled(0).unwrap_err().contains("power of two"));
+        assert!(Config::try_scaled(3).unwrap_err().contains("power of two"));
+        // 4 GB / 512 = 8 MB DRAM: smaller than the page-table region.
+        assert!(Config::try_scaled(512).unwrap_err().contains("too large"));
+        assert!(Config::try_scaled(128).is_ok());
+        // Rows-per-bank never reaches the bank-decode divide-by-zero.
+        let c = Config::try_scaled(128).unwrap();
+        assert!(c.dram.rows_per_bank >= 1 && c.nvm.rows_per_bank >= 1);
     }
 }

@@ -1,0 +1,282 @@
+//! The device-profile catalog: named, complete timing/energy/geometry
+//! bundles ([`MemConfig`]) for the memory technologies the suite can put
+//! in either controller slot, selected through the `dram.profile` /
+//! `nvm.profile` knobs (DESIGN.md §8).
+//!
+//! A profile is authored at *paper scale* (`scale_factor = 1`);
+//! [`DeviceProfile::mem_scaled`] applies exactly the per-device
+//! transformations `Config::try_scaled` applies to the built-in pair, so
+//! `dram.profile=ddr3-paper` + `nvm.profile=pcm-paper` reproduces the
+//! baseline config bit-exactly at every scale (regression-tested in
+//! `rust/tests/backend_profiles.rs`).
+//!
+//! Precedence contract: the profile knobs are declared FIRST in the knob
+//! registry, so a profile expands into the whole `MemConfig` slot before
+//! any explicit `dram.*`/`nvm.*` field override is applied — "profile
+//! first, field overrides layered on top" holds regardless of the order
+//! a spec/CLI set its knobs in.
+
+use std::sync::OnceLock;
+
+use super::{ns_to_cycles, Config, MemConfig, MemTech};
+
+/// One named memory backend: a complete device bundle plus its
+/// technology identity and a one-line description for `rainbow list`.
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub tech: MemTech,
+    pub summary: &'static str,
+    mem: MemConfig,
+}
+
+impl DeviceProfile {
+    /// The full-scale (Table IV-equivalent) device bundle.
+    pub fn mem(&self) -> MemConfig {
+        self.mem
+    }
+
+    /// The bundle scaled to `Config::scaled(factor)`'s capacity regime,
+    /// mirroring its per-device transformations exactly: capacity and
+    /// rows shrink by `factor` (rows clamped to ≥ 1), and the per-GB
+    /// background draw scales back up so the background:dynamic energy
+    /// balance survives the shrink (Fig. 12 depends on it).
+    pub fn mem_scaled(&self, factor: u64) -> MemConfig {
+        let mut m = self.mem;
+        m.size /= factor;
+        m.rows_per_bank = (m.rows_per_bank / factor).max(1);
+        m.background_w_per_gb *= factor as f64;
+        m
+    }
+}
+
+/// Every registered profile, in catalog order.
+pub fn all() -> &'static [DeviceProfile] {
+    static CATALOG: OnceLock<Vec<DeviceProfile>> = OnceLock::new();
+    CATALOG.get_or_init(build_catalog)
+}
+
+/// Look a profile up by name (case-insensitive).
+pub fn by_name(name: &str) -> Option<&'static DeviceProfile> {
+    all().iter().find(|p| p.name.eq_ignore_ascii_case(name))
+}
+
+/// Catalog names, for error messages and `rainbow list`.
+pub fn names() -> Vec<&'static str> {
+    all().iter().map(|p| p.name).collect()
+}
+
+/// The slow-tier (NVM-slot) profiles the `rainbow backends` matrix
+/// sweeps by default: the design space the paper's claim must survive.
+pub fn slow_tier_names() -> Vec<&'static str> {
+    vec!["pcm-paper", "stt-ram", "optane-dcpmm", "cxl-remote"]
+}
+
+fn build_catalog() -> Vec<DeviceProfile> {
+    let paper = Config::paper();
+    let ghz = paper.cpu_ghz;
+    vec![
+        // The two Table IV devices, bit-exact with `Config::paper()` by
+        // construction — the acceptance baseline for the profile API.
+        DeviceProfile {
+            name: "ddr3-paper",
+            tech: MemTech::Dram,
+            summary: "DDR3-1600 DRAM, Table IV (the baseline fast tier)",
+            mem: paper.dram,
+        },
+        DeviceProfile {
+            name: "pcm-paper",
+            tech: MemTech::Pcm,
+            summary: "PCM, Table IV (the baseline slow tier)",
+            mem: paper.nvm,
+        },
+        // A fast, wide fast-tier alternative: many short rows across 8
+        // channels, lower per-bit energy, slightly higher refresh draw.
+        DeviceProfile {
+            name: "hbm-like",
+            tech: MemTech::Hbm,
+            summary: "HBM-class stacked DRAM: 8 channels, 2 KB rows, fast",
+            mem: MemConfig {
+                tech: MemTech::Hbm,
+                size: 4 << 30,
+                channels: 8,
+                ranks_per_channel: 1,
+                banks_per_rank: 16,
+                rows_per_bank: 16384,
+                row_size: 32 * 64, // 2 KB rows (shorter than DDR3)
+                read_cycles: ns_to_cycles(10.0, ghz),
+                write_cycles: ns_to_cycles(18.0, ghz),
+                t_cas: 7,
+                t_rcd: 7,
+                t_rp: 7,
+                t_ras: 17,
+                e_read_hit_pj_bit: 0.8,
+                e_write_hit_pj_bit: 0.9,
+                e_read_miss_pj_bit: 1.6,
+                e_write_miss_pj_bit: 1.7,
+                background_w_per_gb: 0.3,
+            },
+        },
+        // Slow-tier alternatives spanning the NVM design space (Song et
+        // al. asymmetries; Nomad's CXL-attached far tier).
+        DeviceProfile {
+            name: "stt-ram",
+            tech: MemTech::SttRam,
+            summary: "STT-MRAM: near-DRAM reads, ~1.6x writes, no standby",
+            mem: MemConfig {
+                tech: MemTech::SttRam,
+                size: 32 << 30,
+                channels: 4,
+                ranks_per_channel: 8,
+                banks_per_rank: 8,
+                rows_per_bank: 65536,
+                row_size: 32 * 64,
+                read_cycles: ns_to_cycles(12.0, ghz),
+                write_cycles: ns_to_cycles(45.0, ghz),
+                t_cas: 9,
+                t_rcd: 14,
+                t_rp: 14,
+                t_ras: 25,
+                e_read_hit_pj_bit: 1.2,
+                e_write_hit_pj_bit: 3.5,
+                e_read_miss_pj_bit: 2.5,
+                e_write_miss_pj_bit: 7.0,
+                background_w_per_gb: 0.0,
+            },
+        },
+        DeviceProfile {
+            name: "optane-dcpmm",
+            tech: MemTech::Optane,
+            summary: "Optane-DCPMM-class: ~170 ns reads, 256 B lines, \
+                      buffered writes",
+            mem: MemConfig {
+                tech: MemTech::Optane,
+                size: 32 << 30,
+                channels: 4,
+                ranks_per_channel: 4,
+                banks_per_rank: 16,
+                rows_per_bank: 65536,
+                row_size: 4 * 64, // 256 B internal access granularity
+                read_cycles: ns_to_cycles(169.0, ghz),
+                write_cycles: ns_to_cycles(94.0, ghz), // ADR write buffer
+                t_cas: 9,
+                t_rcd: 60,
+                t_rp: 120,
+                t_ras: 60,
+                e_read_hit_pj_bit: 2.0,
+                e_write_hit_pj_bit: 8.0,
+                e_read_miss_pj_bit: 20.0,
+                e_write_miss_pj_bit: 60.0,
+                background_w_per_gb: 0.03, // ~4 W idle per 128 GB DIMM
+            },
+        },
+        DeviceProfile {
+            name: "cxl-remote",
+            tech: MemTech::CxlDram,
+            summary: "CXL-attached DRAM: DDR timing + ~170 ns link round \
+                      trip, volatile",
+            mem: MemConfig {
+                tech: MemTech::CxlDram,
+                size: 32 << 30,
+                channels: 2,
+                ranks_per_channel: 4,
+                banks_per_rank: 8,
+                rows_per_bank: 65536,
+                row_size: 64 * 64,
+                read_cycles: ns_to_cycles(13.5 + 170.0, ghz),
+                write_cycles: ns_to_cycles(28.5 + 170.0, ghz),
+                t_cas: 7,
+                t_rcd: 7,
+                t_rp: 7,
+                t_ras: 18,
+                e_read_hit_pj_bit: 2.1, // DRAM array + link SerDes
+                e_write_hit_pj_bit: 2.2,
+                e_read_miss_pj_bit: 3.2,
+                e_write_miss_pj_bit: 3.3,
+                background_w_per_gb: 0.225, // it is still DRAM
+            },
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_resolves_and_names_are_unique() {
+        let ps = all();
+        assert!(ps.len() >= 6);
+        for (i, p) in ps.iter().enumerate() {
+            assert!(by_name(p.name).is_some());
+            assert!(by_name(&p.name.to_uppercase()).is_some(),
+                    "lookup must be case-insensitive");
+            for other in &ps[i + 1..] {
+                assert_ne!(p.name, other.name, "duplicate profile name");
+            }
+        }
+        assert!(by_name("sdram-9000").is_none());
+        for n in slow_tier_names() {
+            assert!(by_name(n).is_some(), "stale slow-tier name {n}");
+        }
+    }
+
+    #[test]
+    fn paper_profiles_match_config_paper_bit_exactly() {
+        let paper = Config::paper();
+        assert_eq!(by_name("ddr3-paper").unwrap().mem(), paper.dram);
+        assert_eq!(by_name("pcm-paper").unwrap().mem(), paper.nvm);
+    }
+
+    #[test]
+    fn mem_scaled_mirrors_config_scaled() {
+        for factor in [1u64, 8, 64] {
+            let scaled = Config::scaled(factor);
+            assert_eq!(by_name("ddr3-paper").unwrap().mem_scaled(factor),
+                       scaled.dram, "dram at factor {factor}");
+            assert_eq!(by_name("pcm-paper").unwrap().mem_scaled(factor),
+                       scaled.nvm, "nvm at factor {factor}");
+        }
+    }
+
+    #[test]
+    fn background_power_scales_per_device_like_try_scaled() {
+        // try_scaled compensates the per-GB background draw on BOTH
+        // slots (a no-op for the 0 W/GB paper PCM); profiles with real
+        // standby draw must follow the same rule, so a profile-built
+        // slow tier and the scaled baseline keep one semantics.
+        let cxl = by_name("cxl-remote").unwrap();
+        assert_eq!(cxl.mem_scaled(8).background_w_per_gb,
+                   cxl.mem().background_w_per_gb * 8.0);
+        let scaled = Config::scaled(8);
+        assert_eq!(scaled.dram.background_w_per_gb,
+                   Config::paper().dram.background_w_per_gb * 8.0);
+        assert_eq!(scaled.nvm.background_w_per_gb, 0.0);
+    }
+
+    #[test]
+    fn every_profile_is_decode_safe_when_scaled() {
+        for p in all() {
+            let m = p.mem_scaled(64);
+            assert!(m.channels > 0 && m.ranks_per_channel > 0
+                        && m.banks_per_rank > 0, "{}", p.name);
+            assert!(m.rows_per_bank >= 1, "{}", p.name);
+            assert!(m.row_size >= 64, "{}", p.name);
+            assert_eq!(m.tech, p.tech, "{}", p.name);
+            // Extreme factors hit the rows clamp, never zero.
+            assert!(p.mem_scaled(1 << 30).rows_per_bank >= 1);
+        }
+    }
+
+    #[test]
+    fn slow_tier_asymmetries_are_plausible() {
+        let dram = by_name("ddr3-paper").unwrap().mem();
+        for n in ["pcm-paper", "stt-ram", "optane-dcpmm", "cxl-remote"] {
+            let m = by_name(n).unwrap().mem();
+            assert!(m.read_cycles > dram.read_cycles, "{n} reads");
+            assert!(m.write_cycles > dram.write_cycles, "{n} writes");
+        }
+        // Persistence identity drives the clflush reasoning.
+        assert!(by_name("optane-dcpmm").unwrap().tech.is_nonvolatile());
+        assert!(!by_name("cxl-remote").unwrap().tech.is_nonvolatile());
+    }
+}

@@ -4,7 +4,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use rainbow::config::{knobs, Config};
+use rainbow::config::{knobs, profiles, Config};
 use rainbow::report::figures::{self, FigureCtx};
 use rainbow::report::spec_cli;
 use rainbow::report::sweep::{self, SweepConfig};
@@ -43,7 +43,8 @@ const OPTS: &[OptSpec] = &[
                      target/rainbow_results)",
               default: None, is_flag: false },
     OptSpec { name: "fig",
-              help: "figure/table id: 1,7,8,9,10,11,12,13,14,15,t1,t2,t6,remap",
+              help: "figure/table id: \
+                     1,7,8,9,10,11,12,13,14,15,16,t1,t2,t6,remap",
               default: None, is_flag: false },
     OptSpec { name: "csv", help: "also write CSV next to target/figures/",
               default: None, is_flag: true },
@@ -62,10 +63,14 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "no-cache", help: "ignore the results cache",
               default: None, is_flag: true },
     OptSpec { name: "apps",
-              help: "sweep: comma-separated workloads (or 'all')",
+              help: "sweep/backends: comma-separated workloads (or 'all')",
               default: None, is_flag: false },
     OptSpec { name: "policies",
-              help: "sweep: comma-separated policies",
+              help: "sweep/backends: comma-separated policies",
+              default: None, is_flag: false },
+    OptSpec { name: "profiles",
+              help: "backends: comma-separated NVM device profiles, or \
+                     'all' (default: the slow-tier catalog)",
               default: None, is_flag: false },
     OptSpec { name: "workers",
               help: "sweep: worker threads (0 = one per core)",
@@ -78,8 +83,10 @@ const OPTS: &[OptSpec] = &[
 const COMMANDS: &[(&str, &str)] = &[
     ("run", "simulate one (workload, policy) pair and print metrics"),
     ("sweep", "run a workload x policy matrix on parallel workers"),
+    ("backends", "policy x NVM-backend matrix across device profiles"),
     ("figure", "regenerate one paper table/figure (--fig N)"),
-    ("suite", "regenerate every table and figure"),
+    ("suite", "regenerate every paper table/figure (fig 16 backend \
+               matrix runs separately: `backends` / --fig 16)"),
     ("analyze", "workload analytics (Fig 1 / Tables I-II) for --app"),
     ("storage", "Table VI storage-overhead model"),
     ("list", "list workloads and policies"),
@@ -145,6 +152,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
     match cmd {
         "run" => cmd_run(args),
         "sweep" => cmd_sweep(args),
+        "backends" => cmd_backends(args),
         "figure" => cmd_figure(args),
         "suite" => cmd_suite(args),
         "analyze" => cmd_analyze(args),
@@ -158,6 +166,12 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
             println!("knobs (for --set key=value / spec files):");
             for k in knobs::all() {
                 println!("  {:<32} {:<4} {}", k.key, k.kind.name(), k.help);
+            }
+            println!("device profiles (for --set dram.profile= / \
+                      nvm.profile= and `backends --profiles`):");
+            for p in profiles::all() {
+                println!("  {:<16} {:<8} {}", p.name, p.tech.name(),
+                         p.summary);
             }
             Ok(())
         }
@@ -242,17 +256,21 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let out = sweep::run(&specs, &cfg);
     let dt = t0.elapsed().as_secs_f64();
 
+    // Raw pJ + per-tier row-hit rates so backend comparisons are
+    // scriptable straight off `--csv` (no figure-text parsing).
     let mut t = Table::new(
         &format!("sweep: {} runs ({} unique) on {} workers in {:.1}s",
                  specs.len(), out.unique_runs, out.workers_used, dt),
-        &["workload", "policy", "IPC", "MPKI", "migrations", "energy mJ",
-          "cycles"]);
+        &["workload", "policy", "IPC", "MPKI", "migrations", "energy_pj",
+          "dram_row_hit", "nvm_row_hit", "cycles"]);
     for (s, m) in specs.iter().zip(&out.metrics) {
         t.row(&[s.workload.clone(), s.policy.clone(),
                 format!("{:.4}", m.ipc()),
                 format!("{:.3}", m.mpki()),
                 m.migrations.to_string(),
-                format!("{:.3}", m.energy_mj()),
+                format!("{:.0}", m.energy_pj),
+                format!("{:.4}", m.dram_row_hit_rate()),
+                format!("{:.4}", m.nvm_row_hit_rate()),
                 m.cycles.to_string()]);
     }
     t.emit(csv_path(args, "sweep").as_deref());
@@ -270,6 +288,45 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         println!("sweep check: parallel metrics byte-identical to serial \
                   run_uncached for all {} runs", specs.len());
     }
+    Ok(())
+}
+
+/// `backends`: the policy × NVM-device-profile matrix (Fig. 16) —
+/// profile names are validated against the catalog here, before the
+/// figure's sweep fans out.
+fn cmd_backends(args: &Args) -> Result<(), String> {
+    let mut ctx = ctx_from_args(args)?;
+    // Same workload surface as `sweep`: --apps list, --all, or default.
+    ctx.workloads = spec_cli::sweep_workloads(args)?;
+    let profs: Vec<String> = match args.get("profiles") {
+        Some(list) if list.eq_ignore_ascii_case("all") => {
+            profiles::names().iter().map(|s| s.to_string()).collect()
+        }
+        Some(list) => spec_cli::comma_list(list),
+        None => profiles::slow_tier_names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    if profs.is_empty() {
+        return Err("backends: empty profile list".into());
+    }
+    for p in &profs {
+        if profiles::by_name(p).is_none() {
+            return Err(format!(
+                "unknown device profile {p:?}; `rainbow list` shows the \
+                 catalog"));
+        }
+    }
+    let pols: Vec<String> = match args.get("policies") {
+        Some(_) => spec_cli::sweep_policies(args)?,
+        None => figures::BACKEND_POLICIES
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    figures::fig16_backends(&ctx, &profs, &pols)
+        .emit(csv_path(args, "fig16_backends").as_deref());
     Ok(())
 }
 
@@ -295,6 +352,15 @@ fn emit_figure(fig: &str, ctx: &FigureCtx, args: &Args)
         "13" => figures::fig13_interval(ctx, &sens_apps),
         "14" => figures::fig14_topn(ctx, &sens_apps),
         "15" => figures::fig15_runtime(ctx),
+        "16" => {
+            // The default backend matrix; `rainbow backends` offers the
+            // full --profiles/--policies surface.
+            let profs: Vec<String> = profiles::slow_tier_names()
+                .iter().map(|s| s.to_string()).collect();
+            let pols: Vec<String> = figures::BACKEND_POLICIES
+                .iter().map(|s| s.to_string()).collect();
+            figures::fig16_backends(ctx, &profs, &pols)
+        }
         "t6" | "tab6" => figures::tab06_storage(),
         "remap" => figures::ana_remap_cost(&Config::paper()),
         other => return Err(format!("unknown figure {other:?}")),

@@ -1,5 +1,7 @@
-//! Hybrid memory controller: routes physical addresses to DRAM or NVM
-//! devices and owns the energy rollup.
+//! Hybrid memory controller: routes physical addresses to the fast
+//! (DRAM-slot) or slow (NVM-slot) device and owns the energy rollup.
+//! The slots are positional — which *technology* sits in each comes
+//! from the config/profile bundle ([`HybridMemory::tier_techs`]).
 //!
 //! Physical address map (all policies):
 //!   [0, dram.size)                  -> DRAM
@@ -33,6 +35,12 @@ impl HybridMemory {
 
     pub fn dram_size(&self) -> u64 {
         self.dram_size
+    }
+
+    /// Technology identity of the (fast, slow) tiers.
+    pub fn tier_techs(&self) -> (crate::config::MemTech,
+                                 crate::config::MemTech) {
+        (self.dram.tech(), self.nvm.tech())
     }
 
     /// NVM addresses start here in the flat physical map.
@@ -142,6 +150,16 @@ mod tests {
 
     fn mem() -> HybridMemory {
         HybridMemory::new(&Config::paper())
+    }
+
+    #[test]
+    fn tier_techs_follow_the_profile_bundles() {
+        use crate::config::{profiles, MemTech};
+        let mut cfg = Config::paper();
+        assert_eq!(mem().tier_techs(), (MemTech::Dram, MemTech::Pcm));
+        cfg.nvm = profiles::by_name("cxl-remote").unwrap().mem();
+        let m = HybridMemory::new(&cfg);
+        assert_eq!(m.tier_techs(), (MemTech::Dram, MemTech::CxlDram));
     }
 
     #[test]

@@ -1,4 +1,11 @@
-//! Memory device timing + energy model (one per technology).
+//! Memory device timing + energy model (one per controller slot).
+//!
+//! A `Device` is technology-agnostic: all timing, energy, geometry, and
+//! the [`MemTech`] identity come from its `MemConfig` bundle — either
+//! `Config::paper()`'s Table IV pair or a named catalog entry from
+//! `config::profiles` (selected via the `dram.profile`/`nvm.profile`
+//! knobs), so nothing here assumes "the fast slot is DDR3" or "the slow
+//! slot is PCM".
 //!
 //! Approximation contract (DESIGN.md §5): a blocking demand request
 //! arriving at CPU-cycle `now` waits for its bank and channel to free,
@@ -7,7 +14,7 @@
 //! requests occupy the same banks/channels, so migration traffic contends
 //! with demand traffic exactly as the paper's Fig. 11 discussion assumes.
 
-use crate::config::MemConfig;
+use crate::config::{MemConfig, MemTech};
 
 use super::bank::{decode, total_banks, BankState};
 use super::req::{MemReq, MemResult};
@@ -63,6 +70,11 @@ impl Device {
             cfg,
             stats: DevStats::default(),
         }
+    }
+
+    /// The memory technology behind this device (profile identity).
+    pub fn tech(&self) -> MemTech {
+        self.cfg.tech
     }
 
     /// Service a request arriving at CPU-cycle `now`; returns latency from
@@ -250,6 +262,16 @@ mod tests {
         assert!(e2 > 1.9 * e1);
         // NVM has no background draw.
         assert_eq!(nvm().background_energy_pj(1_000_000, 3.2), 0.0);
+    }
+
+    #[test]
+    fn tech_identity_comes_from_the_bundle() {
+        use crate::config::profiles;
+        assert_eq!(dram().tech(), MemTech::Dram);
+        assert_eq!(nvm().tech(), MemTech::Pcm);
+        let d = Device::new(profiles::by_name("optane-dcpmm").unwrap().mem());
+        assert_eq!(d.tech(), MemTech::Optane);
+        assert!(d.tech().is_nonvolatile());
     }
 
     #[test]

@@ -109,6 +109,77 @@ mod tests {
     }
 
     #[test]
+    fn copy_interleaves_reads_and_writes() {
+        let lines = 64u64; // one 4 KB page
+        let (mut nvm, mut dram) = pair();
+        let r = copy_page(&mut nvm, &mut dram, 0, 0, lines * 64, 0);
+        // Every line is one source read + one destination write.
+        assert_eq!(nvm.stats.reads, lines);
+        assert_eq!(nvm.stats.writes, 0);
+        assert_eq!(dram.stats.writes, lines);
+        assert_eq!(dram.stats.reads, 0);
+        // The interleave pipelines: line i+1's read overlaps line i's
+        // write, so the copy beats a fully serialized read→write→read…
+        // chain, while each write still waits for its own read.
+        let (mut nvm2, mut dram2) = pair();
+        let mut serial = 0;
+        for i in 0..lines {
+            let rr = nvm2.access(serial, &MemReq::bulk(i * 64, false, 64));
+            serial += rr.latency;
+            let ww = dram2.access(serial, &MemReq::bulk(i * 64, true, 64));
+            serial += ww.latency;
+        }
+        assert!(r.done_at < serial,
+                "pipelined copy {} must beat serialized {}",
+                r.done_at, serial);
+        let first_read = {
+            let (mut n3, _) = pair();
+            n3.access(0, &MemReq::bulk(0, false, 64)).latency
+        };
+        assert!(r.done_at > first_read,
+                "the first write cannot land before its read completes");
+    }
+
+    #[test]
+    fn copy_energy_attributed_to_both_devices() {
+        let (mut nvm, mut dram) = pair();
+        let r = copy_page(&mut nvm, &mut dram, 0, 0, 4096, 0);
+        assert!(nvm.stats.energy_pj > 0.0, "source reads draw energy");
+        assert!(dram.stats.energy_pj > 0.0, "destination writes draw energy");
+        let total = nvm.stats.energy_pj + dram.stats.energy_pj;
+        assert!((total - r.energy_pj).abs() <= 1e-6 * total,
+                "copy energy {} must equal the two devices' rollup {total}",
+                r.energy_pj);
+        // ...and the traffic is accounted as bulk on both sides.
+        assert_eq!(nvm.stats.bulk_bytes, 4096);
+        assert_eq!(dram.stats.bulk_bytes, 4096);
+    }
+
+    #[test]
+    fn copy_contends_with_in_flight_demand_traffic() {
+        // The Fig. 11 assumption stated in device.rs: bulk migration
+        // occupies the same banks/channels as demand traffic, in both
+        // directions.
+        // (a) A demand read in flight on the source bank delays the copy.
+        let (mut nvm, mut dram) = pair();
+        let free = copy_page(&mut nvm, &mut dram, 0, 0, 4096, 0).done_at;
+        let (mut nvm2, mut dram2) = pair();
+        nvm2.access(0, &MemReq::line_read(0)); // occupies bank 0 at t=0
+        let w0 = nvm2.stats.wait_cycles;
+        let busy = copy_page(&mut nvm2, &mut dram2, 0, 0, 4096, 0).done_at;
+        assert!(nvm2.stats.wait_cycles > w0,
+                "the copy's reads must queue behind the demand read");
+        assert!(busy > free, "contended copy {busy} vs uncontended {free}");
+        // (b) A demand read issued during the copy queues behind it.
+        let (mut nvm3, mut dram3) = pair();
+        copy_page(&mut nvm3, &mut dram3, 0, 0, 4096, 0);
+        let w1 = nvm3.stats.wait_cycles;
+        nvm3.access(0, &MemReq::line_read(0));
+        assert!(nvm3.stats.wait_cycles > w1,
+                "demand traffic must queue behind bulk migration");
+    }
+
+    #[test]
     fn copy_monotone_in_time() {
         let (mut nvm, mut dram) = pair();
         let a = copy_page(&mut nvm, &mut dram, 0, 0, 4096, 1000);

@@ -2,7 +2,7 @@
 //! of the paper's evaluation from cached simulation runs, emitting the
 //! same rows/series the paper reports (shape comparison, DESIGN.md §4).
 
-use crate::config::{Config, PAGE_SIZE};
+use crate::config::{profiles, Config, PAGE_SIZE};
 use crate::rainbow::counters::TwoStageCounters;
 use crate::rainbow::remap;
 use crate::util::stats::{cdf_at, geomean};
@@ -303,6 +303,78 @@ pub fn fig15_runtime(ctx: &FigureCtx) -> Table {
     t
 }
 
+/// Default policy columns for the Fig. 16 backend matrix (one list for
+/// the `backends` CLI, `--fig 16`, and the bench driver): the four
+/// migrating-vs-static systems — DRAM-only ignores the NVM backend
+/// entirely, so it tells the matrix nothing (opt in with --policies).
+pub const BACKEND_POLICIES: [&str; 4] = ["flat", "hscc4k", "hscc2m",
+                                         "rainbow"];
+
+/// Fig. 16 (beyond the paper): the policy × NVM-backend matrix. Every
+/// (profile, policy, workload) cell is one spec carrying an
+/// `nvm.profile` override, all executed as one batch on the parallel
+/// sweep; rows aggregate over the context's workloads. Answers whether
+/// Rainbow's win over the HSCC baselines survives when the slow tier is
+/// STT-RAM-, Optane-, or CXL-class instead of the paper's PCM.
+pub fn fig16_backends(ctx: &FigureCtx, nvm_profiles: &[String],
+                      policies: &[String]) -> Table {
+    let (nw, np) = (ctx.workloads.len(), policies.len());
+    let mut specs = Vec::with_capacity(nvm_profiles.len() * nw * np);
+    for prof in nvm_profiles {
+        for w in &ctx.workloads {
+            for p in policies {
+                specs.push(ctx.spec(w, p).with_raw("nvm.profile", prof));
+            }
+        }
+    }
+    let metrics = ctx.run(&specs);
+
+    let base_pol = policies.first().map(|s| s.as_str()).unwrap_or("-");
+    let header: Vec<String> = vec![
+        "NVM profile".into(), "tech".into(), "policy".into(),
+        "IPC (geomean)".into(), format!("vs {base_pol}"),
+        "energy mJ".into(), "DRAM row-hit".into(), "NVM row-hit".into(),
+        "migrations".into(),
+    ];
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Fig 16: policy x NVM backend matrix (aggregated over workloads)",
+        &hdr);
+    let rate = crate::sim::metrics::hit_rate;
+    for (pi, prof) in nvm_profiles.iter().enumerate() {
+        let tech = profiles::by_name(prof)
+            .map(|p| p.tech.name())
+            .unwrap_or("?");
+        let cell = |poli: usize, wi: usize| -> &RunMetrics {
+            &metrics[(pi * nw + wi) * np + poli]
+        };
+        for (poli, pol) in policies.iter().enumerate() {
+            let mut ipcs = Vec::with_capacity(nw);
+            let mut rel = Vec::with_capacity(nw);
+            let (mut energy, mut migrations) = (0.0, 0u64);
+            let (mut dh, mut dm, mut nh, mut nm) = (0u64, 0u64, 0u64, 0u64);
+            for wi in 0..nw {
+                let m = cell(poli, wi);
+                let base = cell(0, wi);
+                ipcs.push(m.ipc().max(1e-12));
+                rel.push(m.ipc().max(1e-12) / base.ipc().max(1e-12));
+                energy += m.energy_pj;
+                migrations += m.migrations;
+                dh += m.dram_row_hits;
+                dm += m.dram_row_misses;
+                nh += m.nvm_row_hits;
+                nm += m.nvm_row_misses;
+            }
+            t.row(&[prof.clone(), tech.to_string(), pol.clone(),
+                    f3(geomean(&ipcs)), f2(geomean(&rel)),
+                    f2(energy / 1e9),
+                    pct(rate(dh, dm)), pct(rate(nh, nm)),
+                    migrations.to_string()]);
+        }
+    }
+    t
+}
+
 /// Table VI: storage overhead at 1 TB PCM.
 pub fn tab06_storage() -> Table {
     let mut t = Table::new(
@@ -419,6 +491,23 @@ mod tests {
         assert_eq!(fig01_cdf(&ctx).n_rows(), 1);
         assert_eq!(tab01_hotstats(&ctx).n_rows(), 1);
         assert_eq!(tab02_hotdist(&ctx).n_rows(), 1);
+    }
+
+    #[test]
+    fn fig16_backends_renders_profile_x_policy_matrix() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_fig16_test_{}", std::process::id()));
+        let mut ctx = tiny_ctx(&["DICT"]);
+        ctx.sweep.cache_dir = Some(dir.clone());
+        let profs: Vec<String> = ["pcm-paper", "cxl-remote"]
+            .iter().map(|s| s.to_string()).collect();
+        let pols: Vec<String> = ["flat", "rainbow"]
+            .iter().map(|s| s.to_string()).collect();
+        let t = fig16_backends(&ctx, &profs, &pols);
+        assert_eq!(t.n_rows(), 4); // 2 profiles x 2 policies
+        let r = t.render();
+        assert!(r.contains("cxl-dram"), "tech column missing:\n{r}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 use crate::report::RunSpec;
 use crate::sim::metrics::{RunMetrics, RuntimeBreakdown, XlatBreakdown};
 
-const VERSION: u64 = 3;
+// v4: per-tier row-buffer hit/miss counters (backend comparisons).
+const VERSION: u64 = 4;
 
 /// Version of the spec-file serialization (bump on incompatible change).
 pub const SPEC_VERSION: u64 = 1;
@@ -139,6 +140,10 @@ pub fn metrics_to_kv(m: &RunMetrics) -> String {
     put("dram_writes", m.dram_writes.to_string());
     put("nvm_reads", m.nvm_reads.to_string());
     put("nvm_writes", m.nvm_writes.to_string());
+    put("dram_row_hits", m.dram_row_hits.to_string());
+    put("dram_row_misses", m.dram_row_misses.to_string());
+    put("nvm_row_hits", m.nvm_row_hits.to_string());
+    put("nvm_row_misses", m.nvm_row_misses.to_string());
     put("energy_pj", format!("{:.3}", m.energy_pj));
     put("mem_stall_cycles", m.mem_stall_cycles.to_string());
     put("llc_misses", m.llc_misses.to_string());
@@ -183,6 +188,10 @@ pub fn metrics_from_kv(text: &str) -> Option<RunMetrics> {
             "dram_writes" => m.dram_writes = u()?,
             "nvm_reads" => m.nvm_reads = u()?,
             "nvm_writes" => m.nvm_writes = u()?,
+            "dram_row_hits" => m.dram_row_hits = u()?,
+            "dram_row_misses" => m.dram_row_misses = u()?,
+            "nvm_row_hits" => m.nvm_row_hits = u()?,
+            "nvm_row_misses" => m.nvm_row_misses = u()?,
             "energy_pj" => m.energy_pj = f()?,
             "mem_stall_cycles" => m.mem_stall_cycles = u()?,
             "llc_misses" => m.llc_misses = u()?,
@@ -226,6 +235,10 @@ mod tests {
             dram_writes: 21,
             nvm_reads: 22,
             nvm_writes: 23,
+            dram_row_hits: 30,
+            dram_row_misses: 31,
+            nvm_row_hits: 32,
+            nvm_row_misses: 33,
             energy_pj: 1234.5,
             mem_stall_cycles: 999,
             llc_misses: 55,
@@ -279,6 +292,22 @@ mod tests {
             .with("dram.read_cycles", 50u64)
             .with("rainbow.top_n", 8u64);
         assert_eq!(spec_to_kv(&a), spec_to_kv(&b));
+    }
+
+    #[test]
+    fn spec_profile_overrides_round_trip() {
+        let s = RunSpec::new("mcf", "rainbow")
+            .with("nvm.profile", "optane-dcpmm")
+            .with("dram.profile", "hbm-like");
+        let kv = spec_to_kv(&s);
+        assert!(kv.contains("set.nvm.profile=optane-dcpmm"), "{kv}");
+        let t = spec_from_kv(&kv).unwrap();
+        assert_eq!(s, t);
+        assert_eq!(s.fingerprint(), t.fingerprint());
+        // Unknown profile names are rejected at parse time.
+        assert!(spec_from_kv(
+            "specversion=1\nworkload=a\npolicy=b\nset.nvm.profile=zzz")
+            .is_err());
     }
 
     #[test]

@@ -86,6 +86,17 @@ impl RunSpec {
         self
     }
 
+    /// [`RunSpec::with`] from a value's textual form — the panicking
+    /// sugar for knob values that arrive as runtime strings from an
+    /// already-validated surface (e.g. profile names the `backends`
+    /// CLI/figure checked against the catalog).
+    pub fn with_raw(mut self, key: &str, raw: &str) -> RunSpec {
+        self.overrides
+            .set_raw(key, raw)
+            .unwrap_or_else(|e| panic!("RunSpec::with_raw: {e}"));
+        self
+    }
+
     /// Fallible [`RunSpec::with`] — unknown keys and ill-typed values
     /// come back as `Err` instead of panicking.
     pub fn try_with(
@@ -251,6 +262,20 @@ mod tests {
         assert_ne!(fp, s.clone().with_accel(true).fingerprint());
         assert_ne!(fp,
                    s.clone().with("rainbow.top_n", 32u64).fingerprint());
+    }
+
+    #[test]
+    fn backend_profiles_ride_the_override_surface() {
+        let s = RunSpec::new("mcf", "rainbow")
+            .with("nvm.profile", "optane-dcpmm")
+            .with_raw("dram.profile", "hbm-like");
+        let cfg = s.config();
+        assert_eq!(cfg.nvm.tech, crate::config::MemTech::Optane);
+        assert_eq!(cfg.dram.tech, crate::config::MemTech::Hbm);
+        // Two specs differing only in the backend must never share a
+        // cache entry.
+        let other = s.clone().with("nvm.profile", "cxl-remote");
+        assert_ne!(s.fingerprint(), other.fingerprint());
     }
 
     #[test]

@@ -67,11 +67,10 @@ pub fn spec_from_args(args: &Args) -> Result<RunSpec, String> {
     }
     // Validate the non-knob fields too: an unknown workload/policy would
     // panic run_uncached — possibly inside a sweep worker thread — and
-    // Config::scaled asserts on a bad scale.
-    if !s.scale.is_power_of_two() {
-        return Err(format!(
-            "scale must be a power of two, got {}", s.scale));
-    }
+    // Config::scaled panics on a bad scale (non-power-of-two, or so
+    // large the DRAM tier degenerates).
+    crate::config::Config::try_scaled(s.scale)
+        .map_err(|e| format!("scale: {e}"))?;
     let known = crate::workloads::Workload::all_names();
     if !known.iter().any(|n| n.eq_ignore_ascii_case(&s.workload)) {
         return Err(format!(

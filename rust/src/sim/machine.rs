@@ -103,6 +103,10 @@ impl Machine {
         m.dram_writes = self.mem.dram.stats.writes;
         m.nvm_reads = self.mem.nvm.stats.reads;
         m.nvm_writes = self.mem.nvm.stats.writes;
+        m.dram_row_hits = self.mem.dram.stats.row_hits;
+        m.dram_row_misses = self.mem.dram.stats.row_misses;
+        m.nvm_row_hits = self.mem.nvm.stats.row_hits;
+        m.nvm_row_misses = self.mem.nvm.stats.row_misses;
         m.energy_pj = self.mem.total_energy_pj(elapsed_cycles);
         m.llc_misses = self.caches.llc_misses();
         m.tlb_miss_4k = self.tlbs.iter().map(|t| t.misses_4k()).sum();

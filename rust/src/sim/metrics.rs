@@ -83,6 +83,12 @@ pub struct RunMetrics {
     pub dram_writes: u64,
     pub nvm_reads: u64,
     pub nvm_writes: u64,
+    /// Row-buffer locality per tier (backend comparisons: Fig. 16 and
+    /// `sweep --csv`).
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+    pub nvm_row_hits: u64,
+    pub nvm_row_misses: u64,
     pub energy_pj: f64,
     /// Cycles cores spent stalled on memory (cache miss path).
     pub mem_stall_cycles: u64,
@@ -158,10 +164,28 @@ impl RunMetrics {
         if t == 0 { 0.0 } else { self.bitmap_hits as f64 / t as f64 }
     }
 
+    /// DRAM-tier row-buffer hit rate (0 when the tier saw no traffic).
+    pub fn dram_row_hit_rate(&self) -> f64 {
+        hit_rate(self.dram_row_hits, self.dram_row_misses)
+    }
+
+    /// NVM-tier row-buffer hit rate (0 when the tier saw no traffic).
+    pub fn nvm_row_hit_rate(&self) -> f64 {
+        hit_rate(self.nvm_row_hits, self.nvm_row_misses)
+    }
+
     /// Energy in millijoules.
     pub fn energy_mj(&self) -> f64 {
         self.energy_pj / 1e9
     }
+}
+
+/// `hits / (hits + misses)`, 0 when there was no traffic — the one
+/// rate convention shared by the per-run helpers above and the
+/// cross-run aggregations in `report::figures` / the examples.
+pub fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let t = hits + misses;
+    if t == 0 { 0.0 } else { hits as f64 / t as f64 }
 }
 
 #[cfg(test)]
@@ -196,6 +220,21 @@ mod tests {
         assert_eq!(m.tlb_miss_cycle_frac(), 0.0);
         assert_eq!(m.bitmap_hit_rate(), 0.0);
         assert_eq!(m.migration_traffic_ratio(0), 0.0);
+        assert_eq!(m.dram_row_hit_rate(), 0.0);
+        assert_eq!(m.nvm_row_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn row_hit_rates_per_tier() {
+        let m = RunMetrics {
+            dram_row_hits: 3,
+            dram_row_misses: 1,
+            nvm_row_hits: 1,
+            nvm_row_misses: 3,
+            ..Default::default()
+        };
+        assert!((m.dram_row_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.nvm_row_hit_rate() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! Acceptance contract of the device-profile API (DESIGN.md §8):
+//! the paper profiles reproduce the baseline `Config::paper()`-derived
+//! configuration and metrics byte-identically, profile names travel
+//! through spec files and fingerprints, and specs differing only in a
+//! backend never share a cache entry.
+
+use rainbow::config::{profiles, Config, MemTech};
+use rainbow::report::serde_kv::{metrics_to_kv, spec_from_kv, spec_to_kv};
+use rainbow::report::sweep::{self, SweepConfig};
+use rainbow::report::{run_uncached, RunSpec};
+
+fn tiny(w: &str, p: &str) -> RunSpec {
+    RunSpec::new(w, p)
+        .with_scale(64)
+        .with_instructions(40_000)
+        .with_seed(7)
+        .with("rainbow.interval_cycles", 100_000u64)
+        .with("rainbow.top_n", 8u64)
+}
+
+fn with_paper_profiles(s: RunSpec) -> RunSpec {
+    s.with("dram.profile", "ddr3-paper").with("nvm.profile", "pcm-paper")
+}
+
+#[test]
+fn paper_profiles_reproduce_the_baseline_config_bit_exactly() {
+    for scale in [1u64, 8, 64] {
+        let base = RunSpec::new("mcf", "rainbow").with_scale(scale);
+        let prof = with_paper_profiles(base.clone());
+        assert_eq!(prof.config(), base.config(), "scale 1/{scale}");
+    }
+    // ...and the catalog entries themselves are Table IV verbatim.
+    let paper = Config::paper();
+    assert_eq!(profiles::by_name("ddr3-paper").unwrap().mem(), paper.dram);
+    assert_eq!(profiles::by_name("pcm-paper").unwrap().mem(), paper.nvm);
+}
+
+#[test]
+fn paper_profiles_reproduce_baseline_metrics_byte_identically() {
+    let base = tiny("DICT", "rainbow");
+    let a = run_uncached(&base);
+    let b = run_uncached(&with_paper_profiles(base));
+    assert_eq!(metrics_to_kv(&a), metrics_to_kv(&b));
+}
+
+#[test]
+fn specs_differing_only_in_backend_get_distinct_cache_entries() {
+    let pcm = tiny("DICT", "flat").with("nvm.profile", "pcm-paper");
+    let opt = pcm.clone().with("nvm.profile", "optane-dcpmm");
+    assert_ne!(pcm.fingerprint(), opt.fingerprint());
+
+    // Run both through the disk-cached sweep: two distinct entries land,
+    // and each replay hits its own.
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_backend_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = SweepConfig {
+        workers: 2,
+        disk_cache: true,
+        cache_dir: Some(dir.clone()),
+    };
+    let specs = vec![pcm.clone(), opt.clone()];
+    let out = sweep::run(&specs, &cfg);
+    assert_eq!(out.unique_runs, 2, "backends must not dedup together");
+    for s in &specs {
+        assert!(dir.join(format!("{}.kv", s.fingerprint())).is_file(),
+                "missing cache entry for {}", s.fingerprint());
+    }
+    let again = sweep::run(&specs, &cfg);
+    assert_eq!(metrics_to_kv(&out.metrics[0]), metrics_to_kv(&again.metrics[0]));
+    assert_eq!(metrics_to_kv(&out.metrics[1]), metrics_to_kv(&again.metrics[1]));
+    // The slow-tier swap must actually change the simulated outcome.
+    assert_ne!(metrics_to_kv(&out.metrics[0]), metrics_to_kv(&out.metrics[1]));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn profile_names_survive_the_spec_file_round_trip() {
+    let s = tiny("mcf", "rainbow")
+        .with("nvm.profile", "stt-ram")
+        .with("dram.profile", "hbm-like")
+        .with("nvm.read_cycles", 9999u64);
+    let kv = spec_to_kv(&s);
+    let t = spec_from_kv(&kv).unwrap();
+    assert_eq!(s, t);
+    assert_eq!(s.fingerprint(), t.fingerprint());
+    // Precedence survives the round trip too: profile expands first,
+    // the explicit field override stays on top.
+    let cfg = t.config();
+    assert_eq!(cfg.nvm.tech, MemTech::SttRam);
+    assert_eq!(cfg.dram.tech, MemTech::Hbm);
+    assert_eq!(cfg.nvm.read_cycles, 9999);
+}
+
+#[test]
+fn every_catalog_profile_simulates_in_either_slot() {
+    // Smoke the whole catalog end-to-end: each profile must produce a
+    // runnable config (no bank-decode or allocator panics) as the slow
+    // tier, on a real (small) simulation.
+    for p in profiles::all() {
+        let spec = tiny("DICT", "rainbow")
+            .with_instructions(20_000)
+            .with_raw("nvm.profile", p.name);
+        let m = run_uncached(&spec);
+        assert!(m.cycles > 0, "{} produced no cycles", p.name);
+    }
+}

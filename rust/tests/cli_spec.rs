@@ -121,6 +121,39 @@ fn malformed_spec_files_are_rejected() {
 }
 
 #[test]
+fn profile_knobs_ride_the_set_surface() {
+    let s = spec_cli::spec_from_args(&parse(&[
+        "run", "--set", "nvm.profile=optane-dcpmm",
+        "--set", "dram.profile=hbm-like",
+    ]))
+    .unwrap();
+    assert_eq!(s.overrides.get("nvm.profile"),
+               Some(KnobValue::Str("optane-dcpmm")));
+    assert_eq!(s.overrides.get("dram.profile"),
+               Some(KnobValue::Str("hbm-like")));
+    // Unknown profile names fail before any fan-out, naming the catalog.
+    let e = spec_cli::spec_from_args(&parse(&[
+        "sweep", "--set", "nvm.profile=sdram-9000",
+    ]))
+    .unwrap_err();
+    assert!(e.contains("unknown device profile"), "got: {e}");
+    // A number is not a profile name.
+    assert!(spec_cli::spec_from_args(&parse(&[
+        "run", "--set", "nvm.profile=3",
+    ]))
+    .is_err());
+}
+
+#[test]
+fn absurd_scale_rejected_with_a_clear_error() {
+    // 4 GB DRAM / 4096 is far below the 16 MB page-table region; the
+    // CLI must say so instead of letting Config::scaled panic later.
+    let e = spec_cli::spec_from_args(&parse(&["run", "--scale", "4096"]))
+        .unwrap_err();
+    assert!(e.contains("too large"), "got: {e}");
+}
+
+#[test]
 fn zero_interval_and_topn_keep_config_defaults() {
     // Historical CLI sentinel: 0 means "use the scaled config's value";
     // it must NOT become a (hang-inducing) interval_cycles=0 override.
