@@ -5,9 +5,16 @@
 //! ```sh
 //! cargo run --release --example quickstart [app]
 //! ```
+//!
+//! Results are cached on disk so a re-run is instant: the cache
+//! directory is threaded explicitly through `SweepConfig::cache_dir`
+//! (the same mechanism the CLI's `--cache-dir` and the shard
+//! orchestrator use — nothing mutates the environment;
+//! `default_cache_dir()` only *reads* `RAINBOW_CACHE` as a fallback
+//! default). See docs/MANUAL.md §1.
 
 use rainbow::report::sweep::{self, SweepConfig};
-use rainbow::report::RunSpec;
+use rainbow::report::{default_cache_dir, RunSpec};
 use rainbow::util::tables::Table;
 
 fn main() {
@@ -17,9 +24,16 @@ fn main() {
 
     let spec = RunSpec::new(&app, "flat").with_instructions(3_000_000);
     let rb_spec = spec.clone().with_policy("rainbow");
-    let metrics =
-        sweep::run_parallel(&[spec, rb_spec], &SweepConfig::default());
+    let cache_dir = default_cache_dir();
+    let cfg = SweepConfig {
+        disk_cache: true,
+        cache_dir: Some(cache_dir.clone()),
+        ..SweepConfig::default()
+    };
+    let metrics = sweep::run_parallel(&[spec, rb_spec], &cfg);
     let (flat, rb) = (&metrics[0], &metrics[1]);
+    println!("(results cached in {}; re-runs load from there)\n",
+             cache_dir.display());
 
     let mut t = Table::new(
         &format!("{app}: Rainbow vs Flat-static"),

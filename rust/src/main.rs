@@ -1,11 +1,12 @@
 //! `rainbow` — the leader binary: run single simulations, regenerate any
 //! paper table/figure, or run the whole evaluation suite.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use rainbow::config::{knobs, profiles, Config};
 use rainbow::report::figures::{self, FigureCtx};
+use rainbow::report::shard;
 use rainbow::report::spec_cli;
 use rainbow::report::sweep::{self, SweepConfig};
 use rainbow::report::{self, serde_kv, RunSpec};
@@ -73,16 +74,37 @@ const OPTS: &[OptSpec] = &[
                      'all' (default: the slow-tier catalog)",
               default: None, is_flag: false },
     OptSpec { name: "workers",
-              help: "sweep: worker threads (0 = one per core)",
+              help: "sweep: worker threads; with --shards, max \
+                     concurrent shard processes (0 = one per core)",
               default: Some("0"), is_flag: false },
     OptSpec { name: "check",
               help: "sweep: verify results against a serial replay",
               default: None, is_flag: true },
+    OptSpec { name: "shards",
+              help: "sweep/suite: split the matrix across N child \
+                     shard-worker processes (0 = in-process sweep)",
+              default: Some("0"), is_flag: false },
+    OptSpec { name: "shard-cmd",
+              help: "sweep: worker command prefix, split on whitespace \
+                     (no quoting — paths with spaces are unsupported; \
+                     wrap them in a script). Default: this binary's \
+                     shard-worker; --specs/--cache-dir are appended",
+              default: None, is_flag: false },
+    OptSpec { name: "shard-dir",
+              help: "sweep: directory for shard spec lists + manifest \
+                     (default: <cache-dir>/shards)",
+              default: None, is_flag: false },
+    OptSpec { name: "specs",
+              help: "shard-worker: spec-list (.kv) file to execute",
+              default: None, is_flag: false },
 ];
 
 const COMMANDS: &[(&str, &str)] = &[
     ("run", "simulate one (workload, policy) pair and print metrics"),
-    ("sweep", "run a workload x policy matrix on parallel workers"),
+    ("sweep", "run a workload x policy matrix on parallel workers \
+               (--shards N spreads it across child processes)"),
+    ("shard-worker", "execute one shard's spec-list file against a \
+                      shared cache (spawned by sweep --shards)"),
     ("backends", "policy x NVM-backend matrix across device profiles"),
     ("figure", "regenerate one paper table/figure (--fig N)"),
     ("suite", "regenerate every paper table/figure (fig 16 backend \
@@ -152,6 +174,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
     match cmd {
         "run" => cmd_run(args),
         "sweep" => cmd_sweep(args),
+        "shard-worker" => cmd_shard_worker(args),
         "backends" => cmd_backends(args),
         "figure" => cmd_figure(args),
         "suite" => cmd_suite(args),
@@ -234,9 +257,47 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `sweep`: execute a workload x policy matrix on scoped worker threads
-/// (report::sweep), print one row per cell, and optionally verify the
-/// parallel results byte-for-byte against a serial `run_uncached` replay.
+/// Build the shard-orchestrator config from the CLI surface
+/// (`--shards`, `--workers`, `--cache-dir`, `--shard-dir`,
+/// `--shard-cmd`).
+fn shard_config_from_args(args: &Args, shards: usize)
+                          -> Result<shard::ShardConfig, String> {
+    let cache_dir = cache_dir_from_args(args);
+    let mut cfg = shard::ShardConfig::new(shards, cache_dir);
+    cfg.parallel = args.get_usize("workers", 0)?;
+    if let Some(dir) = args.get("shard-dir") {
+        cfg.work_dir = PathBuf::from(dir);
+    }
+    if let Some(cmd) = args.get("shard-cmd") {
+        let argv: Vec<String> =
+            cmd.split_whitespace().map(str::to_string).collect();
+        if argv.is_empty() {
+            return Err("--shard-cmd: empty command".into());
+        }
+        cfg.cmd = Some(argv);
+    }
+    Ok(cfg)
+}
+
+/// `shard-worker`: the child half of `sweep --shards` — execute a
+/// spec-list file against the shared cache. Also usable standalone
+/// (e.g. on another host against a shared directory).
+fn cmd_shard_worker(args: &Args) -> Result<(), String> {
+    let specs = args
+        .get("specs")
+        .ok_or("shard-worker: --specs FILE required")?;
+    let cache_dir = cache_dir_from_args(args);
+    let n = shard::worker_run(Path::new(specs), &cache_dir)?;
+    println!("shard-worker: {n} unique specs cached in {}",
+             cache_dir.display());
+    Ok(())
+}
+
+/// `sweep`: execute a workload x policy matrix — on scoped worker
+/// threads (report::sweep), or with `--shards N` across child
+/// `shard-worker` processes merged through the shared cache
+/// (report::shard) — print one row per cell, and optionally verify the
+/// results byte-for-byte against a serial `run_uncached` replay.
 /// Specs, names, and every `--set` override are validated up front (in
 /// `report::spec_cli`): an unknown name or knob inside a worker thread
 /// would panic the scope instead of taking the CLI's error path.
@@ -245,25 +306,65 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let workloads = spec_cli::sweep_workloads(args)?;
     let policies = spec_cli::sweep_policies(args)?;
     let specs = sweep::matrix(&base, &workloads, &policies);
-    let cfg = SweepConfig {
-        workers: args.get_usize("workers", 0)?,
-        // --check wants fresh simulations on both sides; stale disk
-        // entries would hide a divergence.
-        disk_cache: !args.flag("no-cache") && !args.flag("check"),
-        cache_dir: Some(cache_dir_from_args(args)),
-    };
+    let shards = args.get_usize("shards", 0)?;
     let t0 = Instant::now();
-    let out = sweep::run(&specs, &cfg);
+    let (metrics, unique_runs, exec_label) = if shards > 0 {
+        // The cache IS the shard transport: silently serving (possibly
+        // stale) entries against an explicit --no-cache would be a lie.
+        if args.flag("no-cache") {
+            return Err("sweep --shards uses the results cache as its \
+                        merge transport; --no-cache is incompatible \
+                        (point --cache-dir at a fresh directory \
+                        instead)".into());
+        }
+        let cfg = shard_config_from_args(args, shards)?;
+        // Pre-existing entries are legitimate (the cache is shared by
+        // design) but under --check they make a divergence ambiguous:
+        // call them out so a stale-entry failure isn't chased as a
+        // cross-process determinism bug.
+        if args.flag("check") {
+            let pre = specs
+                .iter()
+                .filter(|s| cfg.cache_dir
+                    .join(format!("{}.kv", s.fingerprint()))
+                    .is_file())
+                .count();
+            if pre > 0 {
+                println!(
+                    "sweep --shards --check: {pre} of {} cells already \
+                     cached in {} — a divergence may be a stale entry \
+                     from an older build, not nondeterminism (use a \
+                     fresh --cache-dir to rule that out)",
+                    specs.len(), cfg.cache_dir.display());
+            }
+        }
+        let out = shard::run_sharded(&specs, &cfg)
+            .map_err(|e| format!("sweep --shards: {e}"))?;
+        let label = format!("{} shard processes", out.shards_run);
+        (out.metrics, out.unique_runs, label)
+    } else {
+        let cfg = SweepConfig {
+            workers: args.get_usize("workers", 0)?,
+            // --check wants fresh simulations on both sides; stale disk
+            // entries would hide a divergence. (Under --shards the cache
+            // IS the transport, so --check verifies it instead.)
+            disk_cache: !args.flag("no-cache") && !args.flag("check"),
+            cache_dir: Some(cache_dir_from_args(args)),
+        };
+        let out = sweep::run(&specs, &cfg);
+        (out.metrics, out.unique_runs,
+         format!("{} workers", out.workers_used))
+    };
     let dt = t0.elapsed().as_secs_f64();
 
     // Raw pJ + per-tier row-hit rates so backend comparisons are
     // scriptable straight off `--csv` (no figure-text parsing).
     let mut t = Table::new(
-        &format!("sweep: {} runs ({} unique) on {} workers in {:.1}s",
-                 specs.len(), out.unique_runs, out.workers_used, dt),
+        &format!("sweep: {} runs ({} unique) on {} in {:.1}s",
+                 specs.len(), unique_runs, exec_label, dt),
         &["workload", "policy", "IPC", "MPKI", "migrations", "energy_pj",
           "dram_row_hit", "nvm_row_hit", "cycles"]);
-    for (s, m) in specs.iter().zip(&out.metrics) {
+    for (s, m) in specs.iter().zip(&metrics) {
         t.row(&[s.workload.clone(), s.policy.clone(),
                 format!("{:.4}", m.ipc()),
                 format!("{:.3}", m.mpki()),
@@ -277,15 +378,22 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 
     if args.flag("check") {
         use rainbow::report::serde_kv::metrics_to_kv;
-        for (s, pm) in specs.iter().zip(&out.metrics) {
+        let side = if shards > 0 { "shard-merged" } else { "parallel" };
+        let hint = if shards > 0 {
+            " (a stale cache entry from an older build also looks like \
+             this; retry with a fresh --cache-dir)"
+        } else {
+            ""
+        };
+        for (s, pm) in specs.iter().zip(&metrics) {
             let serial = report::run_uncached(s);
             if metrics_to_kv(&serial) != metrics_to_kv(pm) {
                 return Err(format!(
-                    "sweep check FAILED: parallel and serial metrics \
-                     diverge for {} x {}", s.workload, s.policy));
+                    "sweep check FAILED: {side} and serial metrics \
+                     diverge for {} x {}{hint}", s.workload, s.policy));
             }
         }
-        println!("sweep check: parallel metrics byte-identical to serial \
+        println!("sweep check: {side} metrics byte-identical to serial \
                   run_uncached for all {} runs", specs.len());
     }
     Ok(())
@@ -372,6 +480,26 @@ fn emit_figure(fig: &str, ctx: &FigureCtx, args: &Args)
 fn cmd_suite(args: &Args) -> Result<(), String> {
     let ctx = ctx_from_args(args)?;
     let t0 = Instant::now();
+    let shards = args.get_usize("shards", 0)?;
+    if shards > 0 {
+        // Pre-warm the whole headline matrix across shard processes;
+        // the figure emitters below then render from the merged cache
+        // (same --cache-dir) instead of simulating in-process. With
+        // --no-cache the emitters would ignore that cache and simulate
+        // everything a second time — reject the combination.
+        if args.flag("no-cache") {
+            return Err("suite --shards pre-warms the results cache the \
+                        figures then read; --no-cache is incompatible \
+                        (point --cache-dir at a fresh directory \
+                        instead)".into());
+        }
+        let specs = figures::suite_specs(&ctx);
+        let cfg = shard_config_from_args(args, shards)?;
+        println!("suite: pre-warming {} matrix cells across {} shards...",
+                 specs.len(), shards);
+        shard::run_sharded(&specs, &cfg)
+            .map_err(|e| format!("suite --shards: {e}"))?;
+    }
     for fig in ["1", "t1", "t2", "7", "8", "9", "10", "11", "12", "13",
                 "14", "15", "t6", "remap"] {
         emit_figure(fig, &ctx, args)?;

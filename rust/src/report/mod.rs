@@ -5,6 +5,7 @@
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::policies::{self, Policy};
 use crate::sim::{engine, EngineConfig, RunMetrics};
@@ -12,6 +13,7 @@ use crate::workloads::Workload;
 
 pub mod figures;
 pub mod serde_kv;
+pub mod shard;
 pub mod spec;
 pub mod spec_cli;
 pub mod sweep;
@@ -37,6 +39,14 @@ pub fn run_cached(spec: &RunSpec) -> RunMetrics {
 /// [`run_cached`] with an explicit cache directory, threaded through
 /// `SweepConfig` by the sweep orchestrator and set directly by tests
 /// (no process-global env-var mutation).
+///
+/// Entries become visible atomically (written to a per-process temp
+/// file, then renamed into place): the cache directory is shared by
+/// concurrent sweeps and shard-worker processes by design, and the
+/// shard merge path (`sweep::collect_cached`) treats a torn entry as
+/// fatal corruption, so a reader must never observe a half-written
+/// file. Concurrent writers of the same fingerprint produce identical
+/// bytes (determinism), so whichever rename lands last is fine.
 pub fn run_cached_in(dir: &Path, spec: &RunSpec) -> RunMetrics {
     let path = dir.join(format!("{}.kv", spec.fingerprint()));
     if let Ok(text) = fs::read_to_string(&path) {
@@ -46,7 +56,16 @@ pub fn run_cached_in(dir: &Path, spec: &RunSpec) -> RunMetrics {
     }
     let m = run_uncached(spec);
     let _ = fs::create_dir_all(dir);
-    let _ = fs::write(&path, serde_kv::metrics_to_kv(&m));
+    // pid + per-process sequence number: unique across processes AND
+    // across threads of one process, so no two writers ever share a
+    // temp file.
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = dir.join(format!(
+        "{}.kv.tmp.{}.{}", spec.fingerprint(), std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)));
+    if fs::write(&tmp, serde_kv::metrics_to_kv(&m)).is_ok() {
+        let _ = fs::rename(&tmp, &path);
+    }
     m
 }
 

@@ -1,16 +1,37 @@
-//! Key=value (de)serialization for RunMetrics (the on-disk results-cache
-//! format) and RunSpec (the canonical spec-file format behind the CLI's
-//! `--spec`). serde is unavailable offline; this is deliberately dumb
-//! and versioned.
+//! Key=value (de)serialization for every on-disk experiment artifact:
+//! `RunMetrics` (the results-cache entry format, one
+//! `<fingerprint>.kv` file per unique spec), `RunSpec` (the canonical
+//! spec-file format behind the CLI's `--spec`/`--save-spec`), and
+//! multi-spec **spec-list** files (the shard-worker's `--specs`
+//! surface, written by the shard coordinator in `report::shard`).
+//! serde is unavailable offline; this is deliberately dumb and
+//! versioned.
+//!
+//! Versioning contract: each format carries an explicit version key
+//! ([`METRICS_VERSION`] as `version=`, [`SPEC_VERSION`] as
+//! `specversion=`, [`SPEC_LIST_VERSION`] as `speclistversion=`) that
+//! is bumped on any incompatible change. Readers are strict: a missing
+//! or mismatched version is a parse failure, never a silent
+//! best-effort load — a stale cache entry re-simulates, a stale spec
+//! file errors out before any fan-out. The spec serialization is
+//! canonical (fixed field order, overrides sorted by key), which is
+//! what lets [`RunSpec::fingerprint`] hash it for cache identity.
 
 use crate::report::RunSpec;
 use crate::sim::metrics::{RunMetrics, RuntimeBreakdown, XlatBreakdown};
 
-// v4: per-tier row-buffer hit/miss counters (backend comparisons).
-const VERSION: u64 = 4;
+/// Version of the results-cache entry serialization.
+/// v4: per-tier row-buffer hit/miss counters (backend comparisons).
+pub const METRICS_VERSION: u64 = 4;
+
+// Internal alias so the (de)serializers below read naturally.
+const VERSION: u64 = METRICS_VERSION;
 
 /// Version of the spec-file serialization (bump on incompatible change).
 pub const SPEC_VERSION: u64 = 1;
+
+/// Version of the multi-spec list-file serialization.
+pub const SPEC_LIST_VERSION: u64 = 1;
 
 /// Canonical, order-independent serialization of a [`RunSpec`]: one
 /// `key=value` per line, fixed field order, overrides as sorted
@@ -100,6 +121,122 @@ pub fn spec_from_kv(text: &str) -> Result<RunSpec, String> {
         return Err("spec file must set workload and policy".to_string());
     }
     Ok(s)
+}
+
+/// Serialize a spec list: a versioned header (`speclistversion`,
+/// `count`, `checksum`) followed by one [`spec_to_kv`] block per spec,
+/// each introduced by a `---` separator line. The declared `count`
+/// catches whole-block loss; the FNV-1a `checksum` over the specs'
+/// canonical serializations catches mid-line truncation and value
+/// tampering (a cut `instructions=4000000` would otherwise still parse
+/// as a valid, silently different spec).
+pub fn specs_to_kv(specs: &[RunSpec]) -> String {
+    let mut out = format!(
+        "speclistversion={SPEC_LIST_VERSION}\ncount={}\nchecksum={:016x}\n",
+        specs.len(), spec_list_checksum(specs));
+    for s in specs {
+        out.push_str("---\n");
+        out.push_str(&spec_to_kv(s));
+    }
+    out
+}
+
+/// Checksum over the canonical serialization of every spec, in order —
+/// formatting-insensitive (comments and whitespace in a hand-edited
+/// file don't matter) but value-sensitive.
+fn spec_list_checksum(specs: &[RunSpec]) -> u64 {
+    let mut bytes = Vec::new();
+    for s in specs {
+        bytes.extend_from_slice(spec_to_kv(s).as_bytes());
+    }
+    crate::report::spec::fnv1a(&bytes)
+}
+
+/// Parse a spec list. Strict like [`spec_from_kv`]: the list version
+/// must match, every spec block must parse (with its own
+/// `specversion`), and the block count must equal the header's declared
+/// `count` — a truncated or garbled shard file is an error naming the
+/// offending block, never a silently shorter sweep.
+pub fn specs_from_kv(text: &str) -> Result<Vec<RunSpec>, String> {
+    let mut sections: Vec<Vec<&str>> = vec![Vec::new()];
+    for raw in text.lines() {
+        if raw.trim() == "---" {
+            sections.push(Vec::new());
+        } else {
+            sections.last_mut().unwrap().push(raw);
+        }
+    }
+    let mut version = None;
+    let mut count = None;
+    let mut checksum = None;
+    for raw in &sections[0] {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            format!("spec list header: expected key=value, got {line:?}")
+        })?;
+        match (k.trim(), v.trim()) {
+            ("speclistversion", v) => {
+                version = Some(v.parse::<u64>().map_err(|_| {
+                    format!("spec list: bad speclistversion {v:?}")
+                })?)
+            }
+            ("count", v) => {
+                count = Some(v.parse::<usize>().map_err(|_| {
+                    format!("spec list: bad count {v:?}")
+                })?)
+            }
+            ("checksum", v) => {
+                checksum = Some(u64::from_str_radix(v, 16).map_err(|_| {
+                    format!("spec list: bad checksum {v:?}")
+                })?)
+            }
+            (k, _) => {
+                return Err(format!("spec list header: unknown key {k:?}"))
+            }
+        }
+    }
+    match version {
+        Some(SPEC_LIST_VERSION) => {}
+        Some(v) => {
+            return Err(format!(
+                "spec list version {v} unsupported \
+                 (expected {SPEC_LIST_VERSION})"))
+        }
+        None => {
+            return Err("spec list missing speclistversion \
+                        (is this a spec-list .kv file?)".to_string())
+        }
+    }
+    let count = count
+        .ok_or("spec list missing count (truncated header?)")?;
+    // The header is untrusted input: cap the pre-allocation by the
+    // actual block count so an absurd declared count takes the
+    // mismatch-error path below instead of aborting the allocator.
+    let mut specs = Vec::with_capacity(count.min(sections.len()));
+    for (i, sec) in sections[1..].iter().enumerate() {
+        let body = sec.join("\n");
+        specs.push(spec_from_kv(&body).map_err(|e| {
+            format!("spec block {} of {count}: {e}", i + 1)
+        })?);
+    }
+    if specs.len() != count {
+        return Err(format!(
+            "spec list truncated or garbled: header declares {count} \
+             specs, found {} blocks", specs.len()));
+    }
+    let declared = checksum
+        .ok_or("spec list missing checksum (truncated header?)")?;
+    let actual = spec_list_checksum(&specs);
+    if actual != declared {
+        return Err(format!(
+            "spec list checksum mismatch (declared {declared:016x}, \
+             content hashes to {actual:016x}): file corrupt or \
+             truncated mid-value"));
+    }
+    Ok(specs)
 }
 
 pub fn metrics_to_kv(m: &RunMetrics) -> String {
@@ -314,6 +451,69 @@ mod tests {
     fn spec_comments_and_blanks_allowed() {
         let kv = format!("# a comment\n\n{}", spec_to_kv(&sample_spec()));
         assert!(spec_from_kv(&kv).is_ok());
+    }
+
+    #[test]
+    fn spec_list_roundtrip_preserves_order_and_identity() {
+        let specs = vec![
+            sample_spec(),
+            RunSpec::new("mcf", "flat"),
+            RunSpec::new("GUPS", "hscc2m")
+                .with("nvm.profile", "optane-dcpmm")
+                .with("rainbow.top_n", 8u64),
+        ];
+        let kv = specs_to_kv(&specs);
+        let back = specs_from_kv(&kv).unwrap();
+        assert_eq!(specs, back);
+        for (a, b) in specs.iter().zip(&back) {
+            assert_eq!(a.fingerprint(), b.fingerprint());
+        }
+    }
+
+    #[test]
+    fn spec_list_empty_and_comments_ok() {
+        let back = specs_from_kv(&specs_to_kv(&[])).unwrap();
+        assert!(back.is_empty());
+        let text = format!("# shard file\n\n{}", specs_to_kv(&[sample_spec()]));
+        assert_eq!(specs_from_kv(&text).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn spec_list_rejects_truncation_and_corruption() {
+        let specs = vec![sample_spec(), RunSpec::new("mcf", "flat")];
+        let kv = specs_to_kv(&specs);
+        // Cut mid-way through the second block: the block parse, the
+        // count check, or the checksum fires — all are clear errors.
+        let cut = &kv[..kv.len() - 30];
+        let e = specs_from_kv(cut).unwrap_err();
+        assert!(e.contains("spec block") || e.contains("truncated")
+                    || e.contains("checksum"),
+                "got: {e}");
+        // A mid-line cut that still parses as a (different) integer
+        // value must be caught by the checksum, not slip through.
+        let mangled = kv.replace("instructions=4000000", "instructions=4");
+        let e = specs_from_kv(&mangled).unwrap_err();
+        assert!(e.contains("checksum mismatch"), "got: {e}");
+        // Drop a whole block: the declared count no longer matches.
+        let one_block = kv[..kv.rfind("---").unwrap()].to_string();
+        let e = specs_from_kv(&one_block).unwrap_err();
+        assert!(e.contains("truncated or garbled"), "got: {e}");
+        // An absurd declared count is a clean error, not an allocator
+        // abort (the header is untrusted input).
+        let huge = kv.replace("count=2", "count=18446744073709551615");
+        let e = specs_from_kv(&huge).unwrap_err();
+        assert!(e.contains("truncated or garbled"), "got: {e}");
+        // Wrong / missing list version, unknown header key.
+        assert!(specs_from_kv("speclistversion=99\ncount=0\n").is_err());
+        assert!(specs_from_kv("count=0\n").is_err());
+        assert!(specs_from_kv("speclistversion=1\nshardid=3\ncount=0\n")
+            .is_err());
+        // Missing count is a truncated header.
+        let e = specs_from_kv("speclistversion=1\n").unwrap_err();
+        assert!(e.contains("count"), "got: {e}");
+        // A plain single-spec file is not a spec list.
+        let e = specs_from_kv(&spec_to_kv(&sample_spec())).unwrap_err();
+        assert!(e.contains("speclistversion"), "got: {e}");
     }
 
     #[test]

@@ -1,0 +1,628 @@
+//! Multi-process shard orchestrator: scales a sweep past one process by
+//! partitioning its spec matrix into N shards, executing each shard as
+//! a child `rainbow shard-worker` process, and merging the results back
+//! through the shared on-disk cache.
+//!
+//! The contracts the in-process sweep established carry across the
+//! process boundary unchanged:
+//!
+//! * **Determinism** — every simulation is bit-deterministic given its
+//!   spec, so shard-merged metrics are byte-identical (via the kv
+//!   serialization) to a serial `run_uncached` replay of the same spec
+//!   list; `tests/sweep_determinism.rs` locks this in across a real
+//!   child process.
+//! * **Fingerprint/cache identity** — shards communicate results ONLY
+//!   through fingerprint-named cache entries
+//!   (`<cache_dir>/<fingerprint>.kv`); the merge is
+//!   [`sweep::collect_cached`], which never simulates. Duplicate specs
+//!   are deduplicated BEFORE partitioning, so no two shards ever run
+//!   (or write) the same fingerprint.
+//! * **Order-independence** — [`partition`] sorts the unique specs by
+//!   fingerprint before round-robin assignment, so the shard layout is
+//!   a pure function of the spec *set*, not of matrix construction
+//!   order.
+//!
+//! On-disk artifacts (all formats versioned, see `report::serde_kv`
+//! and docs/MANUAL.md): each shard's spec list is a `.kv` spec-list
+//! file (`shard-000.kv`, ...), and [`write_shards`] drops a
+//! `manifest.kv` ([`ShardManifest`]) describing the layout — enough for
+//! an operator (or a future multi-host scheduler) to ship shard files
+//! to other machines, run `rainbow shard-worker --specs FILE
+//! --cache-dir DIR` anywhere, and merge by collecting the cache
+//! directories.
+
+use std::collections::HashSet;
+use std::fs;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::Duration;
+
+use crate::sim::RunMetrics;
+
+use super::{run_cached_in, serde_kv, spec_cli, sweep, RunSpec};
+
+/// Version of the shard-manifest serialization.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Poll interval while waiting for child workers.
+const REAP_POLL: Duration = Duration::from_millis(25);
+
+/// Execution knobs for a sharded sweep.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Requested shard count (clamped to the unique-spec count; >= 1).
+    pub shards: usize,
+    /// Maximum concurrently running child processes; 0 = one per
+    /// available core (like `SweepConfig::workers`).
+    pub parallel: usize,
+    /// Shared results-cache directory: children write fingerprint-named
+    /// entries here, the merge reads them back.
+    pub cache_dir: PathBuf,
+    /// Directory for the shard spec-list files and the manifest.
+    pub work_dir: PathBuf,
+    /// Override the worker command (argv prefix — e.g. a wrapper script
+    /// that ships the shard file to another host). `--specs FILE
+    /// --cache-dir DIR` is appended. `None` runs this binary's own
+    /// `shard-worker` subcommand.
+    pub cmd: Option<Vec<String>>,
+}
+
+impl ShardConfig {
+    /// Defaults for `n` shards over the given cache directory; shard
+    /// files land in `<cache_dir>/shards`.
+    pub fn new(shards: usize, cache_dir: PathBuf) -> ShardConfig {
+        let work_dir = cache_dir.join("shards");
+        ShardConfig { shards, parallel: 0, cache_dir, work_dir, cmd: None }
+    }
+
+    fn worker_command(&self, specs_file: &Path) -> Result<Command, String> {
+        let mut c = match &self.cmd {
+            Some(argv) if !argv.is_empty() => {
+                let mut c = Command::new(&argv[0]);
+                c.args(&argv[1..]);
+                c
+            }
+            Some(_) => return Err("shard: empty --shard-cmd".to_string()),
+            None => {
+                let exe = std::env::current_exe().map_err(|e| {
+                    format!("shard: cannot resolve current executable \
+                             (pass an explicit worker command): {e}")
+                })?;
+                let mut c = Command::new(exe);
+                c.arg("shard-worker");
+                c
+            }
+        };
+        c.arg("--specs").arg(specs_file);
+        c.arg("--cache-dir").arg(&self.cache_dir);
+        Ok(c)
+    }
+}
+
+/// Result of a sharded sweep: metrics in input order plus layout stats.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    pub metrics: Vec<RunMetrics>,
+    /// Unique fingerprints actually executed (after dedup).
+    pub unique_runs: usize,
+    /// Shard processes run (may be fewer than requested when the
+    /// unique-spec count is smaller).
+    pub shards_run: usize,
+}
+
+/// Layout record written next to the shard files as `manifest.kv`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    /// Input specs, duplicates included.
+    pub total_specs: usize,
+    /// Distinct fingerprints (what the shards actually simulate).
+    pub unique_specs: usize,
+    /// Per-shard `(file name, spec count)`, in shard order.
+    pub shard_files: Vec<(String, usize)>,
+}
+
+/// Serialize a [`ShardManifest`] (versioned kv, one `shard.<i>.*` pair
+/// per shard).
+pub fn manifest_to_kv(m: &ShardManifest) -> String {
+    let mut out = format!(
+        "manifestversion={MANIFEST_VERSION}\ntotalspecs={}\n\
+         uniquespecs={}\nshards={}\n",
+        m.total_specs, m.unique_specs, m.shard_files.len());
+    for (i, (file, n)) in m.shard_files.iter().enumerate() {
+        out.push_str(&format!("shard.{i}.file={file}\n"));
+        out.push_str(&format!("shard.{i}.specs={n}\n"));
+    }
+    out
+}
+
+/// Parse a manifest. Strict: version must match, every shard index in
+/// range must carry both its `file` and `specs` keys.
+pub fn manifest_from_kv(text: &str) -> Result<ShardManifest, String> {
+    let mut version = None;
+    let (mut total, mut unique, mut shards) = (None, None, None);
+    let mut files: Vec<Option<String>> = Vec::new();
+    let mut counts: Vec<Option<usize>> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            format!("manifest line {}: expected key=value, got {line:?}",
+                    lineno + 1)
+        })?;
+        let (k, v) = (k.trim(), v.trim());
+        let int = |what: &str| -> Result<usize, String> {
+            v.parse::<usize>().map_err(|_| {
+                format!("manifest line {}: {what}: expected integer, \
+                         got {v:?}", lineno + 1)
+            })
+        };
+        match k {
+            "manifestversion" => version = Some(int("manifestversion")? as u64),
+            "totalspecs" => total = Some(int("totalspecs")?),
+            "uniquespecs" => unique = Some(int("uniquespecs")?),
+            "shards" => {
+                if shards.is_some() {
+                    return Err(format!(
+                        "manifest line {}: duplicate shards= key",
+                        lineno + 1));
+                }
+                let n = int("shards")?;
+                // The header is untrusted input: a manifest with n
+                // shards carries two lines per shard, so an absurd
+                // count must error here, not abort the allocator.
+                if n > text.lines().count() {
+                    return Err(format!(
+                        "manifest line {}: shards={n} exceeds what the \
+                         file could hold (corrupt?)", lineno + 1));
+                }
+                files.resize(n, None);
+                counts.resize(n, None);
+                shards = Some(n);
+            }
+            _ => match k.strip_prefix("shard.") {
+                Some(rest) => {
+                    let (idx, field) = rest.split_once('.').ok_or_else(|| {
+                        format!("manifest line {}: bad shard key {k:?}",
+                                lineno + 1)
+                    })?;
+                    let i: usize = idx.parse().map_err(|_| {
+                        format!("manifest line {}: bad shard index {idx:?}",
+                                lineno + 1)
+                    })?;
+                    let n = shards.ok_or_else(|| {
+                        format!("manifest line {}: shard.{idx} before the \
+                                 shards= count", lineno + 1)
+                    })?;
+                    if i >= n {
+                        return Err(format!(
+                            "manifest line {}: shard index {i} out of \
+                             range (shards={n})", lineno + 1));
+                    }
+                    match field {
+                        "file" => files[i] = Some(v.to_string()),
+                        "specs" => counts[i] = Some(int("shard specs")?),
+                        _ => return Err(format!(
+                            "manifest line {}: unknown shard field \
+                             {field:?}", lineno + 1)),
+                    }
+                }
+                None => return Err(format!(
+                    "manifest line {}: unknown manifest key {k:?}",
+                    lineno + 1)),
+            },
+        }
+    }
+    match version {
+        Some(MANIFEST_VERSION) => {}
+        Some(v) => return Err(format!(
+            "manifest version {v} unsupported (expected {MANIFEST_VERSION})")),
+        None => return Err("manifest missing manifestversion".to_string()),
+    }
+    let total = total.ok_or("manifest missing totalspecs")?;
+    let unique = unique.ok_or("manifest missing uniquespecs")?;
+    let n = shards.ok_or("manifest missing shards")?;
+    let mut shard_files = Vec::with_capacity(n);
+    for (i, (file, count)) in files.iter().zip(&counts).enumerate() {
+        let file = file.clone().ok_or_else(|| {
+            format!("manifest missing shard.{i}.file")
+        })?;
+        let count = (*count).ok_or_else(|| {
+            format!("manifest missing shard.{i}.specs")
+        })?;
+        shard_files.push((file, count));
+    }
+    Ok(ShardManifest {
+        total_specs: total,
+        unique_specs: unique,
+        shard_files,
+    })
+}
+
+/// Partition a spec list for sharded execution: deduplicate by
+/// fingerprint, sort the unique specs by fingerprint, and deal them
+/// round-robin across `min(shards, unique)` shards. Deterministic and
+/// order-independent (the layout depends only on the spec *set*), with
+/// shard sizes differing by at most one. Never returns an empty shard;
+/// an empty spec list yields zero shards.
+pub fn partition(specs: &[RunSpec], shards: usize) -> Vec<Vec<RunSpec>> {
+    let mut seen = HashSet::new();
+    let mut uniq: Vec<(String, &RunSpec)> = specs
+        .iter()
+        .filter_map(|s| {
+            let fp = s.fingerprint();
+            seen.insert(fp.clone()).then_some((fp, s))
+        })
+        .collect();
+    uniq.sort_by(|a, b| a.0.cmp(&b.0));
+    let n = uniq.len().min(shards.max(1));
+    let mut out: Vec<Vec<RunSpec>> = (0..n).map(|_| Vec::new()).collect();
+    for (i, (_, s)) in uniq.iter().enumerate() {
+        out[i % n].push((*s).clone());
+    }
+    out
+}
+
+/// Write the shard spec-list files plus `manifest.kv` into
+/// `cfg.work_dir`; returns the shard file paths in shard order.
+/// `total_specs` is the pre-dedup input length recorded in the
+/// manifest.
+pub fn write_shards(parts: &[Vec<RunSpec>], total_specs: usize,
+                    cfg: &ShardConfig) -> Result<Vec<PathBuf>, String> {
+    fs::create_dir_all(&cfg.work_dir).map_err(|e| {
+        format!("shard: create {}: {e}", cfg.work_dir.display())
+    })?;
+    let mut paths = Vec::with_capacity(parts.len());
+    let mut manifest = ShardManifest {
+        total_specs,
+        unique_specs: parts.iter().map(|p| p.len()).sum(),
+        shard_files: Vec::with_capacity(parts.len()),
+    };
+    for (i, part) in parts.iter().enumerate() {
+        let name = format!("shard-{i:03}.kv");
+        let path = cfg.work_dir.join(&name);
+        fs::write(&path, serde_kv::specs_to_kv(part)).map_err(|e| {
+            format!("shard: write {}: {e}", path.display())
+        })?;
+        manifest.shard_files.push((name, part.len()));
+        paths.push(path);
+    }
+    let mpath = cfg.work_dir.join("manifest.kv");
+    fs::write(&mpath, manifest_to_kv(&manifest)).map_err(|e| {
+        format!("shard: write {}: {e}", mpath.display())
+    })?;
+    Ok(paths)
+}
+
+/// One running child worker plus the thread streaming its stdout.
+struct Running {
+    idx: usize,
+    child: Child,
+    pump: thread::JoinHandle<()>,
+}
+
+fn spawn_shard(cfg: &ShardConfig, idx: usize, specs_file: &Path)
+               -> Result<Running, String> {
+    let mut cmd = cfg.worker_command(specs_file)?;
+    cmd.stdout(Stdio::piped()).stderr(Stdio::inherit());
+    let mut child = cmd.spawn().map_err(|e| {
+        format!("shard {idx}: spawn {cmd:?}: {e}")
+    })?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    // Stream the worker's progress lines as they arrive, tagged with
+    // the shard index, so a long sweep is observable per shard.
+    let pump = thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            match line {
+                Ok(l) => println!("[shard {idx}] {l}"),
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(Running { idx, child, pump })
+}
+
+/// Reap every finished child in `running`; failures are recorded, not
+/// returned early (remaining shards keep running so one bad shard
+/// reports alongside the others' completion). Returns whether anything
+/// was reaped.
+fn reap_finished(running: &mut Vec<Running>, failures: &mut Vec<String>)
+                 -> bool {
+    let mut reaped = false;
+    let mut i = 0;
+    while i < running.len() {
+        match running[i].child.try_wait() {
+            Ok(Some(status)) => {
+                let r = running.swap_remove(i);
+                let _ = r.pump.join();
+                if !status.success() {
+                    failures.push(format!("shard {}: {status}", r.idx));
+                }
+                reaped = true;
+            }
+            Ok(None) => i += 1,
+            Err(e) => {
+                let mut r = running.swap_remove(i);
+                let _ = r.child.kill();
+                let _ = r.child.wait();
+                let _ = r.pump.join();
+                failures.push(format!("shard {}: wait failed: {e}", r.idx));
+                reaped = true;
+            }
+        }
+    }
+    reaped
+}
+
+fn kill_all(running: &mut Vec<Running>) {
+    for r in running.iter_mut() {
+        let _ = r.child.kill();
+        let _ = r.child.wait();
+    }
+    while let Some(r) = running.pop() {
+        let _ = r.pump.join();
+    }
+}
+
+/// Execute a spec matrix across child worker processes and merge the
+/// results: [`partition`] → [`write_shards`] → bounded-parallel
+/// `shard-worker` children → [`sweep::collect_cached`] merge. Metrics
+/// come back in input order, byte-identical to a serial `run_uncached`
+/// replay. Any failed shard (non-zero exit, spawn error) fails the
+/// whole sweep with the shard named; remaining children are reaped
+/// first.
+pub fn run_sharded(specs: &[RunSpec], cfg: &ShardConfig)
+                   -> Result<ShardOutcome, String> {
+    if specs.is_empty() {
+        return Ok(ShardOutcome {
+            metrics: Vec::new(),
+            unique_runs: 0,
+            shards_run: 0,
+        });
+    }
+    let parts = partition(specs, cfg.shards);
+    let unique_runs: usize = parts.iter().map(|p| p.len()).sum();
+    let files = write_shards(&parts, specs.len(), cfg)?;
+    // The cache directory must exist up front: a worker command that
+    // fails before its first write would otherwise leave the merge
+    // with a confusing "no such directory" instead of "missing entry".
+    fs::create_dir_all(&cfg.cache_dir).map_err(|e| {
+        format!("shard: create {}: {e}", cfg.cache_dir.display())
+    })?;
+    let limit = (if cfg.parallel == 0 {
+        sweep::auto_workers()
+    } else {
+        cfg.parallel
+    })
+    .clamp(1, files.len());
+    let mut next = 0;
+    let mut running: Vec<Running> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    while next < files.len() || !running.is_empty() {
+        while next < files.len() && running.len() < limit {
+            match spawn_shard(cfg, next, &files[next]) {
+                Ok(r) => running.push(r),
+                Err(e) => {
+                    kill_all(&mut running);
+                    return Err(e);
+                }
+            }
+            next += 1;
+        }
+        if !reap_finished(&mut running, &mut failures)
+            && !running.is_empty()
+        {
+            thread::sleep(REAP_POLL);
+        }
+    }
+    if !failures.is_empty() {
+        return Err(format!(
+            "{} of {} shard workers failed: {} (shard files kept in {})",
+            failures.len(), files.len(), failures.join("; "),
+            cfg.work_dir.display()));
+    }
+    let metrics = sweep::collect_cached(&cfg.cache_dir, specs)
+        .map_err(|e| format!("shard merge: {e}"))?;
+    Ok(ShardOutcome { metrics, unique_runs, shards_run: files.len() })
+}
+
+/// The worker half: load + validate a spec-list file, simulate every
+/// unique spec through the shared cache (`run_cached_in`), and stream
+/// one progress line per spec to stdout (the coordinator tags and
+/// forwards them). Returns the number of unique specs processed.
+///
+/// Workers are deliberately serial within a shard: the shard count is
+/// the parallelism knob, and a serial worker keeps per-shard output
+/// ordered and its memory footprint to one simulation.
+pub fn worker_run(specs_path: &Path, cache_dir: &Path)
+                  -> Result<usize, String> {
+    let specs = spec_cli::load_spec_list(specs_path)?;
+    let mut seen = HashSet::new();
+    let uniq: Vec<&RunSpec> = specs
+        .iter()
+        .filter(|s| seen.insert(s.fingerprint()))
+        .collect();
+    let total = uniq.len();
+    for (i, s) in uniq.iter().enumerate() {
+        let fp = s.fingerprint();
+        run_cached_in(cache_dir, s);
+        println!("[{}/{total}] {} x {} done ({fp})",
+                 i + 1, s.workload, s.policy);
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(w: &str, p: &str) -> RunSpec {
+        RunSpec::new(w, p)
+            .with_scale(64)
+            .with_instructions(20_000)
+            .with_seed(7)
+            .with("rainbow.interval_cycles", 100_000u64)
+            .with("rainbow.top_n", 8u64)
+    }
+
+    fn sample_specs() -> Vec<RunSpec> {
+        vec![
+            tiny("DICT", "flat"),
+            tiny("DICT", "rainbow"),
+            tiny("streamcluster", "flat"),
+            tiny("streamcluster", "rainbow"),
+            tiny("DICT", "flat").with("nvm.read_cycles", 248u64),
+        ]
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_order_independent() {
+        let specs = sample_specs();
+        let mut reversed = specs.clone();
+        reversed.reverse();
+        let a = partition(&specs, 2);
+        let b = partition(&reversed, 2);
+        assert_eq!(a, b, "layout must depend on the spec set, not order");
+        assert_eq!(a, partition(&specs, 2), "and must be deterministic");
+        // Balanced: sizes differ by at most one, nothing lost.
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].len() + a[1].len(), specs.len());
+        assert!(a[0].len().abs_diff(a[1].len()) <= 1);
+    }
+
+    #[test]
+    fn partition_dedups_duplicate_fingerprints() {
+        let mut specs = sample_specs();
+        specs.extend(sample_specs()); // every fingerprint twice
+        let parts = partition(&specs, 3);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, sample_specs().len(),
+                   "duplicates must collapse before partitioning");
+        let mut fps = HashSet::new();
+        for p in &parts {
+            for s in p {
+                assert!(fps.insert(s.fingerprint()),
+                        "no fingerprint may appear in two shards");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_clamps_to_unique_count_and_handles_empty() {
+        let specs = vec![tiny("DICT", "flat"), tiny("DICT", "rainbow")];
+        let parts = partition(&specs, 16);
+        assert_eq!(parts.len(), 2, "never more shards than unique specs");
+        assert!(parts.iter().all(|p| p.len() == 1));
+        assert!(partition(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_rejection() {
+        let m = ShardManifest {
+            total_specs: 12,
+            unique_specs: 10,
+            shard_files: vec![("shard-000.kv".into(), 5),
+                              ("shard-001.kv".into(), 5)],
+        };
+        let kv = manifest_to_kv(&m);
+        assert_eq!(manifest_from_kv(&kv).unwrap(), m);
+        // Wrong/missing version.
+        assert!(manifest_from_kv(&kv.replace(
+            "manifestversion=1", "manifestversion=9")).is_err());
+        assert!(manifest_from_kv("totalspecs=1\n").is_err());
+        // Missing per-shard keys and out-of-range indices are errors.
+        let e = manifest_from_kv(&kv.replace("shard.1.specs=5\n", ""))
+            .unwrap_err();
+        assert!(e.contains("shard.1.specs"), "got: {e}");
+        assert!(manifest_from_kv(&kv.replace("shard.1.", "shard.7."))
+            .is_err());
+        assert!(manifest_from_kv("manifestversion=1\nnope=3\n").is_err());
+        // Untrusted header: an absurd shard count is a clean error
+        // (never an allocator abort), and a duplicate shards= key
+        // cannot silently truncate recorded entries.
+        let e = manifest_from_kv(
+            "manifestversion=1\ntotalspecs=1\nuniquespecs=1\n\
+             shards=18446744073709551615\n").unwrap_err();
+        assert!(e.contains("exceeds"), "got: {e}");
+        assert!(manifest_from_kv(&kv.replace("shards=2", "shards=2\nshards=1"))
+            .is_err());
+    }
+
+    #[test]
+    fn write_shards_emits_lists_and_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_shard_write_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let cfg = ShardConfig {
+            work_dir: dir.clone(),
+            ..ShardConfig::new(2, dir.clone())
+        };
+        let specs = sample_specs();
+        let parts = partition(&specs, 2);
+        let files = write_shards(&parts, specs.len(), &cfg).unwrap();
+        assert_eq!(files.len(), 2);
+        // Every shard file round-trips through the strict list parser.
+        let mut seen = 0;
+        for (f, part) in files.iter().zip(&parts) {
+            let text = fs::read_to_string(f).unwrap();
+            let back = serde_kv::specs_from_kv(&text).unwrap();
+            assert_eq!(&back, part);
+            seen += back.len();
+        }
+        assert_eq!(seen, specs.len());
+        let man = manifest_from_kv(
+            &fs::read_to_string(dir.join("manifest.kv")).unwrap()).unwrap();
+        assert_eq!(man.total_specs, specs.len());
+        assert_eq!(man.unique_specs, specs.len());
+        assert_eq!(man.shard_files.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_rejects_corrupt_and_invalid_lists() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_shard_worker_bad_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let cache = dir.join("cache");
+        // Truncated list file: clear parse error, nothing simulated.
+        let full = serde_kv::specs_to_kv(&sample_specs());
+        let path = dir.join("trunc.kv");
+        fs::write(&path, &full[..full.len() - 25]).unwrap();
+        let e = worker_run(&path, &cache).unwrap_err();
+        assert!(e.contains("spec list"), "got: {e}");
+        assert!(!cache.exists(), "a bad list must not simulate anything");
+        // Valid list format but unknown workload name: rejected by
+        // validate_spec before any run.
+        let bogus = serde_kv::specs_to_kv(
+            &[RunSpec::new("notanapp", "rainbow")]);
+        fs::write(&path, bogus).unwrap();
+        let e = worker_run(&path, &cache).unwrap_err();
+        assert!(e.contains("unknown workload"), "got: {e}");
+        // Missing file.
+        assert!(worker_run(&dir.join("nope.kv"), &cache).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_executes_a_list_and_fills_the_cache() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_shard_worker_ok_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let cache = dir.join("cache");
+        let mut specs = vec![tiny("DICT", "flat"), tiny("DICT", "rainbow")];
+        specs.push(specs[0].clone()); // duplicate runs once
+        let path = dir.join("shard.kv");
+        fs::write(&path, serde_kv::specs_to_kv(&specs)).unwrap();
+        let n = worker_run(&path, &cache).unwrap();
+        assert_eq!(n, 2, "duplicate fingerprints run once");
+        // The merge path can now serve the full (duplicated) request.
+        let merged = sweep::collect_cached(&cache, &specs).unwrap();
+        assert_eq!(merged.len(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

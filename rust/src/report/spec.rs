@@ -196,8 +196,9 @@ fn escape_field(s: &str) -> String {
     out
 }
 
-/// FNV-1a 64-bit (dependency-free stable hash for override maps).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a 64-bit (dependency-free stable hash for override maps and the
+/// spec-list checksum in `report::serde_kv`).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

@@ -5,6 +5,8 @@
 //! instead of panicking a thread scope. Lives in the library (not
 //! `main.rs`) so the argument surface is integration-testable.
 
+use std::path::Path;
+
 use crate::config::knobs::KnobValue;
 use crate::report::{self, serde_kv, RunSpec};
 use crate::util::cli::Args;
@@ -65,10 +67,18 @@ pub fn spec_from_args(args: &Args) -> Result<RunSpec, String> {
     for set in args.get_all("set") {
         s = s.try_set_arg(set).map_err(|e| format!("--set: {e}"))?;
     }
-    // Validate the non-knob fields too: an unknown workload/policy would
-    // panic run_uncached — possibly inside a sweep worker thread — and
-    // Config::scaled panics on a bad scale (non-power-of-two, or so
-    // large the DRAM tier degenerates).
+    validate_spec(&s)?;
+    Ok(s)
+}
+
+/// Validate a spec's non-knob identity fields (knob overrides are
+/// already registry-checked at set time): an unknown workload/policy
+/// would panic `run_uncached` — possibly inside a sweep worker thread
+/// or a shard child process — and `Config::scaled` panics on a bad
+/// scale (non-power-of-two, or so large the DRAM tier degenerates).
+/// Shared by `--spec`/option parsing and shard-worker spec-list loading
+/// so every entry surface rejects bad input identically.
+pub fn validate_spec(s: &RunSpec) -> Result<(), String> {
     crate::config::Config::try_scaled(s.scale)
         .map_err(|e| format!("scale: {e}"))?;
     let known = crate::workloads::Workload::all_names();
@@ -80,7 +90,24 @@ pub fn spec_from_args(args: &Args) -> Result<RunSpec, String> {
         return Err(format!(
             "unknown policy {:?}; `rainbow list` shows them", s.policy));
     }
-    Ok(s)
+    Ok(())
+}
+
+/// Load and fully validate a multi-spec list file (the shard-worker
+/// `--specs` surface): strict parse (version, block count, checksum)
+/// through `serde_kv::specs_from_kv`, then [`validate_spec`] on every
+/// entry — a bad list fails here, before the worker simulates anything.
+pub fn load_spec_list(path: &Path) -> Result<Vec<RunSpec>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("spec list {}: {e}", path.display()))?;
+    let specs = serde_kv::specs_from_kv(&text)
+        .map_err(|e| format!("spec list {}: {e}", path.display()))?;
+    for (i, s) in specs.iter().enumerate() {
+        validate_spec(s).map_err(|e| {
+            format!("spec list {} block {}: {e}", path.display(), i + 1)
+        })?;
+    }
+    Ok(specs)
 }
 
 /// The value of `--name` when explicitly passed, `None` otherwise.

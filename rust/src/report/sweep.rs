@@ -12,15 +12,25 @@
 //! owns its seeded RNGs and machine state; nothing is shared), which
 //! makes the parallel path byte-identical to serial `run_uncached`
 //! calls — `tests/sweep_determinism.rs` locks that contract in.
+//!
+//! The module exposes the three pieces process-level orchestration
+//! composes from: [`matrix`] builds the spec matrix, [`run`] executes
+//! it in-process, and [`collect_cached`] is the merge path — it
+//! assembles a result set purely from fingerprint-named cache entries
+//! (`<cache_dir>/<fingerprint>.kv`, written by [`super::run_cached_in`])
+//! without simulating anything, which is how [`super::shard`] folds the
+//! work of N child worker processes back into one metrics vector.
 
 use std::collections::{HashMap, HashSet};
-use std::path::PathBuf;
+use std::fs;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::sim::RunMetrics;
 
-use super::{default_cache_dir, run_cached_in, run_uncached, RunSpec};
+use super::{default_cache_dir, run_cached_in, run_uncached, serde_kv,
+            RunSpec};
 
 /// Execution knobs for a sweep.
 #[derive(Clone, Debug, Default)]
@@ -112,6 +122,37 @@ pub fn run_parallel(specs: &[RunSpec], cfg: &SweepConfig) -> Vec<RunMetrics> {
     run(specs, cfg).metrics
 }
 
+/// The merge path: load every spec's metrics from its fingerprint-named
+/// cache entry in `dir`, in input order, WITHOUT simulating. Duplicate
+/// fingerprints share one load. A missing or corrupt entry is an error
+/// naming the spec and file — the shard coordinator treats that as a
+/// failed shard, and callers pre-warming a cache for figures learn
+/// exactly which cell is absent.
+pub fn collect_cached(dir: &Path, specs: &[RunSpec])
+                      -> Result<Vec<RunMetrics>, String> {
+    let mut by_fp: HashMap<String, RunMetrics> = HashMap::new();
+    let mut out = Vec::with_capacity(specs.len());
+    for s in specs {
+        let fp = s.fingerprint();
+        if let Some(m) = by_fp.get(&fp) {
+            out.push(m.clone());
+            continue;
+        }
+        let path = dir.join(format!("{fp}.kv"));
+        let text = fs::read_to_string(&path).map_err(|e| {
+            format!("missing cache entry for {} x {} ({}): {e}",
+                    s.workload, s.policy, path.display())
+        })?;
+        let m = serde_kv::metrics_from_kv(&text).ok_or_else(|| {
+            format!("corrupt or version-mismatched cache entry for \
+                     {} x {} ({})", s.workload, s.policy, path.display())
+        })?;
+        out.push(m.clone());
+        by_fp.insert(fp, m);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +208,37 @@ mod tests {
         let out = run(&specs, &cfg);
         assert_eq!(out.workers_used, 1, "never more workers than work");
         assert!(auto_workers() >= 1);
+    }
+
+    #[test]
+    fn collect_cached_merges_and_reports_missing_entries() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_collect_cache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Duplicates in the request must be served from one entry.
+        let specs = vec![tiny("DICT", "flat"), tiny("DICT", "rainbow"),
+                         tiny("DICT", "flat")];
+        // Nothing cached yet: the merge path must NOT simulate.
+        let e = collect_cached(&dir, &specs).unwrap_err();
+        assert!(e.contains("missing cache entry"), "got: {e}");
+        let cfg = SweepConfig {
+            workers: 2,
+            disk_cache: true,
+            cache_dir: Some(dir.clone()),
+        };
+        let ran = run(&specs, &cfg);
+        let merged = collect_cached(&dir, &specs).unwrap();
+        assert_eq!(merged.len(), specs.len());
+        for (a, b) in ran.metrics.iter().zip(&merged) {
+            assert_eq!(metrics_to_kv(a), metrics_to_kv(b),
+                       "merge path must be byte-identical to the run");
+        }
+        // A corrupt entry is an error naming the file, not a bad merge.
+        let entry = dir.join(format!("{}.kv", specs[0].fingerprint()));
+        std::fs::write(&entry, "version=0\n").unwrap();
+        let e = collect_cached(&dir, &specs).unwrap_err();
+        assert!(e.contains("corrupt"), "got: {e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

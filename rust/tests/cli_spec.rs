@@ -234,6 +234,60 @@ fn bad_workload_and_policy_names_rejected() {
 }
 
 #[test]
+fn spec_list_files_load_and_validate() {
+    use rainbow::report::serde_kv::specs_to_kv;
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("rainbow_list_{}.kv", std::process::id()));
+    let specs = vec![
+        RunSpec::new("mcf", "rainbow").with("rainbow.top_n", 25u64),
+        RunSpec::new("GUPS", "flat"),
+    ];
+    std::fs::write(&path, specs_to_kv(&specs)).unwrap();
+    let back = spec_cli::load_spec_list(&path).unwrap();
+    assert_eq!(back, specs);
+    // A syntactically valid list with an unknown policy fails
+    // validation, naming the file and block.
+    let bad = vec![RunSpec::new("mcf", "notapolicy")];
+    std::fs::write(&path, specs_to_kv(&bad)).unwrap();
+    let e = spec_cli::load_spec_list(&path).unwrap_err();
+    assert!(e.contains("unknown policy") && e.contains("block 1"),
+            "got: {e}");
+    let _ = std::fs::remove_file(&path);
+    // Missing file errors cleanly.
+    assert!(spec_cli::load_spec_list(
+        std::path::Path::new("/no/such/list.kv")).is_err());
+}
+
+/// docs/MANUAL.md is the operator's manual for the whole experiment
+/// surface; it must stay complete as the surface grows. Compiled in
+/// with include_str! so editing the manual re-runs the guard.
+#[test]
+fn manual_covers_every_subcommand_knob_and_profile() {
+    use rainbow::config::{knobs, profiles};
+    let manual: &str =
+        include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/MANUAL.md"));
+    for cmd in ["run", "sweep", "shard-worker", "backends", "figure",
+                "suite", "analyze", "storage", "list"] {
+        assert!(manual.contains(&format!("`{cmd}`")),
+                "MANUAL.md must document the `{cmd}` subcommand");
+    }
+    for k in knobs::all() {
+        assert!(manual.contains(&format!("`{}`", k.key)),
+                "MANUAL.md must document the {} knob", k.key);
+    }
+    for p in profiles::all() {
+        assert!(manual.contains(&format!("`{}`", p.name)),
+                "MANUAL.md must document the {} device profile", p.name);
+    }
+    // The on-disk formats are versioned; the manual names each version
+    // key so operators can recognize the files.
+    for key in ["specversion", "speclistversion", "manifestversion"] {
+        assert!(manual.contains(key),
+                "MANUAL.md must describe the {key} format");
+    }
+}
+
+#[test]
 fn spec_kv_roundtrip_through_files() {
     let spec = RunSpec::new("mix2", "hscc4k")
         .with_seed(7)

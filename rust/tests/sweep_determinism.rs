@@ -1,11 +1,15 @@
-//! Determinism contract of the parallel sweep orchestrator: a fixed-seed
+//! Determinism contract of the sweep orchestrators: a fixed-seed
 //! workload x policy matrix — including override-bearing specs — executed
 //! on scoped worker threads must yield metrics BYTE-identical (via the kv
 //! serialization) to the serial `run_uncached` path, and repeated
 //! parallel runs must agree with each other — any cross-worker state
 //! sharing or ordering race would surface as drift between rounds.
+//! The same contract holds across the PROCESS boundary: a sharded sweep
+//! executed by real child `rainbow shard-worker` processes and merged
+//! from the shared cache must match the serial replay byte-for-byte.
 
 use rainbow::report::serde_kv::{metrics_to_kv, spec_from_kv, spec_to_kv};
+use rainbow::report::shard::{self, ShardConfig};
 use rainbow::report::sweep::{self, SweepConfig};
 use rainbow::report::{run_cached_in, run_uncached, RunSpec};
 
@@ -82,6 +86,107 @@ fn single_worker_equals_many_workers() {
         assert_eq!(metrics_to_kv(a), metrics_to_kv(b),
                    "spec {i}: worker count changed the metrics");
     }
+}
+
+/// The tentpole contract: a 2-shard sweep executed by REAL child
+/// `rainbow shard-worker` processes (the compiled binary, not an
+/// in-process shortcut) and merged from the fingerprint-named cache
+/// entries must be byte-identical to a serial `run_uncached` replay —
+/// specs survive the spec-list file round-trip, the cache survives the
+/// process boundary, and duplicates still collapse to one simulation.
+#[test]
+fn sharded_sweep_crosses_process_boundary_byte_identical() {
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_shard_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut specs = matrix();
+    specs.push(specs[0].clone()); // duplicate shares one simulation
+    let unique = matrix().len();
+    let cfg = ShardConfig {
+        parallel: 2,
+        cmd: Some(vec![env!("CARGO_BIN_EXE_rainbow").to_string(),
+                       "shard-worker".to_string()]),
+        ..ShardConfig::new(2, dir.clone())
+    };
+    let out = shard::run_sharded(&specs, &cfg).expect("sharded sweep");
+    assert_eq!(out.shards_run, 2);
+    assert_eq!(out.unique_runs, unique);
+    assert_eq!(out.metrics.len(), specs.len());
+    for (s, m) in specs.iter().zip(&out.metrics) {
+        assert_eq!(metrics_to_kv(&run_uncached(s)), metrics_to_kv(m),
+                   "{} x {} diverged across the process boundary",
+                   s.workload, s.policy);
+    }
+    // The duplicate was served from the same cache entry.
+    assert_eq!(metrics_to_kv(&out.metrics[0]),
+               metrics_to_kv(out.metrics.last().unwrap()));
+    // The coordinator left an auditable layout behind: a versioned
+    // manifest plus one strict-parsing spec list per shard.
+    let work = dir.join("shards");
+    let man = shard::manifest_from_kv(
+        &std::fs::read_to_string(work.join("manifest.kv")).unwrap())
+        .unwrap();
+    assert_eq!(man.total_specs, specs.len());
+    assert_eq!(man.unique_specs, unique);
+    let mut listed = 0;
+    for (file, n) in &man.shard_files {
+        let text = std::fs::read_to_string(work.join(file)).unwrap();
+        let part = rainbow::report::serde_kv::specs_from_kv(&text).unwrap();
+        assert_eq!(part.len(), *n);
+        listed += part.len();
+    }
+    assert_eq!(listed, unique);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A failing shard worker (non-zero exit) must fail the whole sharded
+/// sweep with the shard named, not produce a silently partial result
+/// set — and a worker handed a corrupt spec-list file must be such a
+/// failure (it exits non-zero before simulating anything).
+#[test]
+fn sharded_sweep_reports_failed_workers() {
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_shard_fail_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let specs = vec![
+        RunSpec::new("DICT", "flat").with_scale(64).with_instructions(20_000),
+        RunSpec::new("DICT", "rainbow")
+            .with_scale(64)
+            .with_instructions(20_000),
+    ];
+    // Workers that exit non-zero without touching the cache.
+    let cfg = ShardConfig {
+        cmd: Some(vec!["sh".to_string(), "-c".to_string(),
+                       "exit 3".to_string()]),
+        ..ShardConfig::new(2, dir.clone())
+    };
+    let e = shard::run_sharded(&specs, &cfg).unwrap_err();
+    assert!(e.contains("shard workers failed"), "got: {e}");
+    // An unspawnable worker command errors out immediately.
+    let cfg = ShardConfig {
+        cmd: Some(vec!["/no/such/rainbow-worker".to_string()]),
+        ..ShardConfig::new(2, dir.clone())
+    };
+    let e = shard::run_sharded(&specs, &cfg).unwrap_err();
+    assert!(e.contains("spawn"), "got: {e}");
+    // And the real worker binary handed a corrupt (truncated) spec
+    // list exits non-zero before simulating anything.
+    let corrupt = dir.join("corrupt.kv");
+    let full = rainbow::report::serde_kv::specs_to_kv(&specs);
+    std::fs::write(&corrupt, &full[..full.len() - 25]).unwrap();
+    let cache = dir.join("worker-cache");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_rainbow"))
+        .arg("shard-worker")
+        .arg("--specs").arg(&corrupt)
+        .arg("--cache-dir").arg(&cache)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .expect("spawn shard-worker");
+    assert!(!status.success(),
+            "a corrupt spec list must fail the worker process");
+    assert!(!cache.exists(), "the failed worker must not simulate");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
