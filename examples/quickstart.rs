@@ -6,15 +6,16 @@
 //! cargo run --release --example quickstart [app]
 //! ```
 //!
-//! Results are cached on disk so a re-run is instant: the cache
-//! directory is threaded explicitly through `SweepConfig::cache_dir`
-//! (the same mechanism the CLI's `--cache-dir` and the shard
-//! orchestrator use — nothing mutates the environment;
-//! `default_cache_dir()` only *reads* `RAINBOW_CACHE` as a fallback
-//! default). See docs/MANUAL.md §1.
+//! Results are cached on disk so a re-run is instant: the results
+//! store is threaded explicitly through `SweepConfig::store` (the same
+//! mechanism the CLI's `--cache-dir`/`--store` and the shard
+//! orchestrator use — a directory store here; `Store::net` would point
+//! the same code at a `rainbow cache-server`. Nothing mutates the
+//! environment; `default_cache_dir()` only *reads* `RAINBOW_CACHE` as
+//! a fallback default). See docs/MANUAL.md §1.
 
 use rainbow::report::sweep::{self, SweepConfig};
-use rainbow::report::{default_cache_dir, RunSpec};
+use rainbow::report::{default_cache_dir, RunSpec, Store};
 use rainbow::util::tables::Table;
 
 fn main() {
@@ -27,7 +28,7 @@ fn main() {
     let cache_dir = default_cache_dir();
     let cfg = SweepConfig {
         disk_cache: true,
-        cache_dir: Some(cache_dir.clone()),
+        store: Some(Store::fs(cache_dir.clone())),
         ..SweepConfig::default()
     };
     let metrics = sweep::run_parallel(&[spec, rb_spec], &cfg);

@@ -6,10 +6,11 @@ use std::time::Instant;
 
 use rainbow::config::{knobs, profiles, Config};
 use rainbow::report::figures::{self, FigureCtx};
+use rainbow::report::netstore::{CacheServer, NetStore};
 use rainbow::report::shard;
 use rainbow::report::spec_cli;
 use rainbow::report::sweep::{self, SweepConfig};
-use rainbow::report::{self, serde_kv, RunSpec};
+use rainbow::report::{self, serde_kv, RunSpec, Store};
 use rainbow::util::cli::{help_text, Args, OptSpec};
 use rainbow::util::tables::Table;
 
@@ -43,13 +44,35 @@ const OPTS: &[OptSpec] = &[
               help: "results-cache directory (default: RAINBOW_CACHE or \
                      target/rainbow_results)",
               default: None, is_flag: false },
+    OptSpec { name: "store",
+              help: "results store: a cache directory, or \
+                     tcp://host:port for a `rainbow cache-server` \
+                     (overrides --cache-dir)",
+              default: None, is_flag: false },
+    OptSpec { name: "listen",
+              help: "cache-server: bind address (port 0 = ephemeral; \
+                     see --port-file)",
+              default: Some("127.0.0.1:7700"), is_flag: false },
+    OptSpec { name: "port-file",
+              help: "cache-server: write the bound host:port to this \
+                     file once listening (for scripts using port 0)",
+              default: None, is_flag: false },
+    OptSpec { name: "stop",
+              help: "cache-server: ask the server at tcp://host:port \
+                     to shut down cleanly, then exit",
+              default: None, is_flag: false },
+    OptSpec { name: "mem",
+              help: "cache-server: serve an ephemeral in-memory store \
+                     instead of a directory",
+              default: None, is_flag: true },
     OptSpec { name: "fig",
               help: "figure/table id: \
                      1,7,8,9,10,11,12,13,14,15,16,t1,t2,t6,remap",
               default: None, is_flag: false },
     OptSpec { name: "csv", help: "also write CSV next to target/figures/",
               default: None, is_flag: true },
-    OptSpec { name: "all", help: "use all 17 workloads (suite/figures)",
+    OptSpec { name: "all",
+              help: "use every registered workload (suite/figures)",
               default: None, is_flag: true },
     OptSpec { name: "accel",
               help: "use PJRT AOT artifacts for Rainbow identification",
@@ -88,11 +111,12 @@ const OPTS: &[OptSpec] = &[
               help: "sweep: worker command prefix, split on whitespace \
                      (no quoting — paths with spaces are unsupported; \
                      wrap them in a script). Default: this binary's \
-                     shard-worker; --specs/--cache-dir are appended",
+                     shard-worker; --specs/--store are appended",
               default: None, is_flag: false },
     OptSpec { name: "shard-dir",
               help: "sweep: directory for shard spec lists + manifest \
-                     (default: <cache-dir>/shards)",
+                     (default: <cache-dir>/shards, or \
+                     target/rainbow_shards with a tcp:// store)",
               default: None, is_flag: false },
     OptSpec { name: "specs",
               help: "shard-worker: spec-list (.kv) file to execute",
@@ -104,7 +128,10 @@ const COMMANDS: &[(&str, &str)] = &[
     ("sweep", "run a workload x policy matrix on parallel workers \
                (--shards N spreads it across child processes)"),
     ("shard-worker", "execute one shard's spec-list file against a \
-                      shared cache (spawned by sweep --shards)"),
+                      shared results store (spawned by sweep --shards)"),
+    ("cache-server", "serve a results store to sweep/shard workers \
+                      over TCP (--listen; clients use --store \
+                      tcp://host:port)"),
     ("backends", "policy x NVM-backend matrix across device profiles"),
     ("figure", "regenerate one paper table/figure (--fig N)"),
     ("suite", "regenerate every paper table/figure (fig 16 backend \
@@ -154,6 +181,22 @@ fn cache_dir_from_args(args: &Args) -> PathBuf {
         .unwrap_or_else(report::default_cache_dir)
 }
 
+/// Resolve the results store: `--store DIR|tcp://host:port` wins, else
+/// a directory store at `--cache-dir` (or its default). A networked
+/// store is pinged here — before any simulation or fan-out — so an
+/// unreachable cache server is one clear CLI error, not a mid-sweep
+/// worker panic.
+fn store_from_args(args: &Args) -> Result<Store, String> {
+    let store = match args.get("store") {
+        Some(arg) => Store::parse(arg).map_err(|e| format!("--store: {e}"))?,
+        None => Store::fs(cache_dir_from_args(args)),
+    };
+    if store.is_remote() {
+        store.ping().map_err(|e| format!("--store: {e}"))?;
+    }
+    Ok(store)
+}
+
 fn ctx_from_args(args: &Args) -> Result<FigureCtx, String> {
     let workloads: Vec<String> = if args.flag("all") {
         report::all_workloads()
@@ -162,7 +205,7 @@ fn ctx_from_args(args: &Args) -> Result<FigureCtx, String> {
     };
     let mut ctx = FigureCtx::new(workloads, spec_from_args(args)?);
     ctx.sweep.disk_cache = !args.flag("no-cache");
-    ctx.sweep.cache_dir = Some(cache_dir_from_args(args));
+    ctx.sweep.store = Some(store_from_args(args)?);
     Ok(ctx)
 }
 
@@ -175,6 +218,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
         "run" => cmd_run(args),
         "sweep" => cmd_sweep(args),
         "shard-worker" => cmd_shard_worker(args),
+        "cache-server" => cmd_cache_server(args),
         "backends" => cmd_backends(args),
         "figure" => cmd_figure(args),
         "suite" => cmd_suite(args),
@@ -208,7 +252,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let m = if args.flag("no-cache") {
         report::run_uncached(&spec)
     } else {
-        report::run_cached_in(&cache_dir_from_args(args), &spec)
+        report::run_stored(&store_from_args(args)?, &spec)?
     };
     let dt = t0.elapsed();
     let mut t = Table::new(
@@ -258,16 +302,23 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 }
 
 /// Build the shard-orchestrator config from the CLI surface
-/// (`--shards`, `--workers`, `--cache-dir`, `--shard-dir`,
-/// `--shard-cmd`).
+/// (`--shards`, `--workers`, `--store`/`--cache-dir`, `--shard-dir`,
+/// `--shard-cmd`). Shard spec-list files default next to a directory
+/// store; with a networked store there is no shared directory to
+/// derive from, so they land in `target/rainbow_shards` unless
+/// `--shard-dir` says otherwise.
 fn shard_config_from_args(args: &Args, shards: usize)
                           -> Result<shard::ShardConfig, String> {
-    let cache_dir = cache_dir_from_args(args);
-    let mut cfg = shard::ShardConfig::new(shards, cache_dir);
+    let store = store_from_args(args)?;
+    let work_dir = match args.get("shard-dir") {
+        Some(dir) => PathBuf::from(dir),
+        None => match store.fs_dir() {
+            Some(dir) => dir.join("shards"),
+            None => PathBuf::from("target/rainbow_shards"),
+        },
+    };
+    let mut cfg = shard::ShardConfig::with_store(shards, store, work_dir);
     cfg.parallel = args.get_usize("workers", 0)?;
-    if let Some(dir) = args.get("shard-dir") {
-        cfg.work_dir = PathBuf::from(dir);
-    }
     if let Some(cmd) = args.get("shard-cmd") {
         let argv: Vec<String> =
             cmd.split_whitespace().map(str::to_string).collect();
@@ -280,16 +331,61 @@ fn shard_config_from_args(args: &Args, shards: usize)
 }
 
 /// `shard-worker`: the child half of `sweep --shards` — execute a
-/// spec-list file against the shared cache. Also usable standalone
-/// (e.g. on another host against a shared directory).
+/// spec-list file against the shared results store. Also usable
+/// standalone (e.g. on another host against a shared directory, or
+/// pointed at a cache server with `--store tcp://host:port`).
 fn cmd_shard_worker(args: &Args) -> Result<(), String> {
     let specs = args
         .get("specs")
         .ok_or("shard-worker: --specs FILE required")?;
-    let cache_dir = cache_dir_from_args(args);
-    let n = shard::worker_run(Path::new(specs), &cache_dir)?;
-    println!("shard-worker: {n} unique specs cached in {}",
-             cache_dir.display());
+    let store = store_from_args(args)?;
+    let n = shard::worker_run(Path::new(specs), &store)?;
+    println!("shard-worker: {n} unique specs cached in {}", store.addr());
+    Ok(())
+}
+
+/// `cache-server`: serve any results store over TCP so sweeps and
+/// shard workers can run with no shared filesystem. `--stop
+/// tcp://host:port` instead asks a running server to shut down cleanly
+/// (acknowledged, accept loop stopped, in-flight requests drained).
+fn cmd_cache_server(args: &Args) -> Result<(), String> {
+    if let Some(target) = args.get("stop") {
+        let hostport = target.strip_prefix("tcp://").unwrap_or(target);
+        NetStore::new(hostport)
+            .shutdown_server()
+            .map_err(|e| format!("cache-server --stop: {e}"))?;
+        println!("cache-server at {hostport}: clean shutdown \
+                  acknowledged");
+        return Ok(());
+    }
+    let store = if args.flag("mem") {
+        Store::mem()
+    } else {
+        match args.get("store") {
+            // Allows fronting another server too (a relay); the usual
+            // backing store is a directory.
+            Some(arg) => {
+                Store::parse(arg).map_err(|e| format!("--store: {e}"))?
+            }
+            None => Store::fs(cache_dir_from_args(args)),
+        }
+    };
+    let listen = args.get_or("listen", "127.0.0.1:7700");
+    let server = CacheServer::bind(listen, store.clone())?;
+    let addr = server.local_addr();
+    if let Some(port_file) = args.get("port-file") {
+        // Temp + rename so a script polling the file never reads a
+        // half-written address.
+        let tmp = format!("{port_file}.tmp.{}", std::process::id());
+        std::fs::write(&tmp, addr.to_string())
+            .and_then(|()| std::fs::rename(&tmp, port_file))
+            .map_err(|e| format!("--port-file {port_file}: {e}"))?;
+    }
+    println!("cache-server: serving {} at tcp://{addr}", store.addr());
+    println!("cache-server: stop with `rainbow cache-server --stop \
+              tcp://{addr}`");
+    server.serve()?;
+    println!("cache-server: clean shutdown");
     Ok(())
 }
 
@@ -312,30 +408,31 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         // The cache IS the shard transport: silently serving (possibly
         // stale) entries against an explicit --no-cache would be a lie.
         if args.flag("no-cache") {
-            return Err("sweep --shards uses the results cache as its \
+            return Err("sweep --shards uses the results store as its \
                         merge transport; --no-cache is incompatible \
-                        (point --cache-dir at a fresh directory \
-                        instead)".into());
+                        (point --cache-dir/--store at a fresh \
+                        directory or server instead)".into());
         }
         let cfg = shard_config_from_args(args, shards)?;
-        // Pre-existing entries are legitimate (the cache is shared by
+        // Pre-existing entries are legitimate (the store is shared by
         // design) but under --check they make a divergence ambiguous:
         // call them out so a stale-entry failure isn't chased as a
-        // cross-process determinism bug.
+        // cross-process determinism bug. (`list` is also the one
+        // store round-trip the coordinator makes before fan-out.)
         if args.flag("check") {
+            let listed: std::collections::HashSet<String> =
+                cfg.store.list().unwrap_or_default().into_iter().collect();
             let pre = specs
                 .iter()
-                .filter(|s| cfg.cache_dir
-                    .join(format!("{}.kv", s.fingerprint()))
-                    .is_file())
+                .filter(|s| listed.contains(&s.fingerprint()))
                 .count();
             if pre > 0 {
                 println!(
                     "sweep --shards --check: {pre} of {} cells already \
                      cached in {} — a divergence may be a stale entry \
                      from an older build, not nondeterminism (use a \
-                     fresh --cache-dir to rule that out)",
-                    specs.len(), cfg.cache_dir.display());
+                     fresh --cache-dir/--store to rule that out)",
+                    specs.len(), cfg.store.addr());
             }
         }
         let out = shard::run_sharded(&specs, &cfg)
@@ -345,11 +442,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     } else {
         let cfg = SweepConfig {
             workers: args.get_usize("workers", 0)?,
-            // --check wants fresh simulations on both sides; stale disk
-            // entries would hide a divergence. (Under --shards the cache
-            // IS the transport, so --check verifies it instead.)
+            // --check wants fresh simulations on both sides; stale
+            // store entries would hide a divergence. (Under --shards
+            // the store IS the transport, so --check verifies it.)
             disk_cache: !args.flag("no-cache") && !args.flag("check"),
-            cache_dir: Some(cache_dir_from_args(args)),
+            store: Some(store_from_args(args)?),
         };
         let out = sweep::run(&specs, &cfg);
         (out.metrics, out.unique_runs,
@@ -380,8 +477,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         use rainbow::report::serde_kv::metrics_to_kv;
         let side = if shards > 0 { "shard-merged" } else { "parallel" };
         let hint = if shards > 0 {
-            " (a stale cache entry from an older build also looks like \
-             this; retry with a fresh --cache-dir)"
+            " (a stale store entry from an older build also looks like \
+             this; retry with a fresh --cache-dir/--store)"
         } else {
             ""
         };
@@ -488,10 +585,10 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
         // --no-cache the emitters would ignore that cache and simulate
         // everything a second time — reject the combination.
         if args.flag("no-cache") {
-            return Err("suite --shards pre-warms the results cache the \
+            return Err("suite --shards pre-warms the results store the \
                         figures then read; --no-cache is incompatible \
-                        (point --cache-dir at a fresh directory \
-                        instead)".into());
+                        (point --cache-dir/--store at a fresh \
+                        directory or server instead)".into());
         }
         let specs = figures::suite_specs(&ctx);
         let cfg = shard_config_from_args(args, shards)?;

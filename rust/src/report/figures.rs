@@ -20,7 +20,7 @@ pub struct FigureCtx {
     pub base: RunSpec,
     /// Sweep execution knobs for every simulating figure: disk-cached by
     /// default so a `suite` run shares each simulation across figures;
-    /// tests point `cache_dir` at a temp dir instead of mutating env.
+    /// tests point `store` at a temp-dir store instead of mutating env.
     pub sweep: SweepConfig,
 }
 
@@ -511,7 +511,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!(
             "rainbow_fig16_test_{}", std::process::id()));
         let mut ctx = tiny_ctx(&["DICT"]);
-        ctx.sweep.cache_dir = Some(dir.clone());
+        ctx.sweep.store = Some(crate::report::Store::fs(dir.clone()));
         let profs: Vec<String> = ["pcm-paper", "cxl-remote"]
             .iter().map(|s| s.to_string()).collect();
         let pols: Vec<String> = ["flat", "rainbow"]
@@ -529,7 +529,7 @@ mod tests {
             "rainbow_prewarm_test_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let mut ctx = tiny_ctx(&["DICT"]);
-        ctx.sweep.cache_dir = Some(dir.clone());
+        ctx.sweep.store = Some(crate::report::Store::fs(dir.clone()));
         let specs = suite_specs(&ctx);
         assert_eq!(specs.len(), crate::policies::all_names().len());
         // Pre-warm the cache the way a sharded sweep's merge leaves it:
@@ -556,7 +556,7 @@ mod tests {
             "rainbow_fig_test_{}", std::process::id()));
         let mut ctx = tiny_ctx(&["streamcluster"]);
         // Isolated cache dir, passed explicitly (no env mutation).
-        ctx.sweep.cache_dir = Some(dir.clone());
+        ctx.sweep.store = Some(crate::report::Store::fs(dir.clone()));
         let t = fig10_ipc(&ctx);
         assert_eq!(t.n_rows(), 3); // 1 app + 2 geomean rows
         let _ = std::fs::remove_dir_all(&dir);

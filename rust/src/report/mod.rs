@@ -1,29 +1,33 @@
 //! Experiment harness shared by `main.rs` and every bench binary: runs
-//! (workload x policy) simulations with a persistent on-disk cache so a
-//! full figure suite only simulates each pair once, and derives each
-//! paper table/figure from the cached metrics.
+//! (workload x policy) simulations against a pluggable results store
+//! ([`store::CacheStore`] — a local directory, an in-memory map, or a
+//! `rainbow cache-server` over TCP) so a full figure suite only
+//! simulates each pair once, and derives each paper table/figure from
+//! the stored metrics.
 
-use std::fs;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::policies::{self, Policy};
 use crate::sim::{engine, EngineConfig, RunMetrics};
 use crate::workloads::Workload;
 
 pub mod figures;
+pub mod netstore;
 pub mod serde_kv;
 pub mod shard;
 pub mod spec;
 pub mod spec_cli;
+pub mod store;
 pub mod sweep;
 
 pub use spec::RunSpec;
+pub use store::{CacheStore, FsStore, MemStore, Store, StoreKind};
 
 /// Default on-disk results-cache directory: the `RAINBOW_CACHE` env var
 /// if set (read-only — nothing in the crate mutates it), else
 /// `target/rainbow_results`. Callers that need isolation pass an
-/// explicit directory to [`run_cached_in`] / `SweepConfig::cache_dir`.
+/// explicit directory to [`run_cached_in`] or an explicit
+/// `SweepConfig::store`.
 pub fn default_cache_dir() -> PathBuf {
     std::env::var_os("RAINBOW_CACHE")
         .map(PathBuf::from)
@@ -36,37 +40,49 @@ pub fn run_cached(spec: &RunSpec) -> RunMetrics {
     run_cached_in(&default_cache_dir(), spec)
 }
 
-/// [`run_cached`] with an explicit cache directory, threaded through
-/// `SweepConfig` by the sweep orchestrator and set directly by tests
-/// (no process-global env-var mutation).
-///
-/// Entries become visible atomically (written to a per-process temp
-/// file, then renamed into place): the cache directory is shared by
-/// concurrent sweeps and shard-worker processes by design, and the
-/// shard merge path (`sweep::collect_cached`) treats a torn entry as
-/// fatal corruption, so a reader must never observe a half-written
-/// file. Concurrent writers of the same fingerprint produce identical
-/// bytes (determinism), so whichever rename lands last is fine.
+/// [`run_cached`] with an explicit cache directory — a thin wrapper
+/// over [`run_stored`] with a directory-backed [`Store`], kept because
+/// the local-directory case is the overwhelmingly common one in tests
+/// and benches. Entry atomicity (temp file + rename) lives in
+/// `store::FsStore`.
 pub fn run_cached_in(dir: &Path, spec: &RunSpec) -> RunMetrics {
-    let path = dir.join(format!("{}.kv", spec.fingerprint()));
-    if let Ok(text) = fs::read_to_string(&path) {
-        if let Some(m) = serde_kv::metrics_from_kv(&text) {
-            return m;
+    run_stored(&Store::fs(dir), spec)
+        .expect("local stores self-heal; run_stored only fails remotely")
+}
+
+/// Run the simulation described by `spec`, or serve it from `store`:
+/// a hit returns the stored metrics, a miss simulates and publishes
+/// the result.
+///
+/// Failure semantics follow the store kind. A *local* store is
+/// best-effort, as the disk cache has always been: a corrupt entry is
+/// warned about and re-simulated over (self-healing), an unwritable
+/// directory costs re-simulation later, and the function cannot fail.
+/// A *remote* store is a transport — the sharded sweep's merge depends
+/// on every result landing in it — so any remote error (server down,
+/// torn frame, corrupt entry server-side) is returned as a clean error
+/// instead of silently degrading a shared-nothing sweep into
+/// simulate-everything-locally.
+pub fn run_stored(store: &Store, spec: &RunSpec)
+                  -> Result<RunMetrics, String> {
+    let fp = spec.fingerprint();
+    match store.get(&fp) {
+        Ok(Some(m)) => return Ok(m),
+        Ok(None) => {}
+        Err(e) => {
+            if store.is_remote() {
+                return Err(e);
+            }
+            eprintln!("warning: {e}; re-simulating");
         }
     }
     let m = run_uncached(spec);
-    let _ = fs::create_dir_all(dir);
-    // pid + per-process sequence number: unique across processes AND
-    // across threads of one process, so no two writers ever share a
-    // temp file.
-    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-    let tmp = dir.join(format!(
-        "{}.kv.tmp.{}.{}", spec.fingerprint(), std::process::id(),
-        TMP_SEQ.fetch_add(1, Ordering::Relaxed)));
-    if fs::write(&tmp, serde_kv::metrics_to_kv(&m)).is_ok() {
-        let _ = fs::rename(&tmp, &path);
+    if let Err(e) = store.put(&fp, &m) {
+        if store.is_remote() {
+            return Err(e);
+        }
     }
-    m
+    Ok(m)
 }
 
 /// Always simulate (no cache).
@@ -88,7 +104,8 @@ pub fn policy_names() -> [&'static str; 5] {
 }
 
 /// Default workload set for the headline figures (subset keeps a full
-/// suite run in minutes; `--all` in the CLI uses all 17).
+/// suite run in minutes; `--all` in the CLI uses every registered
+/// workload — 14 apps plus the Table-V and 8-app mixes).
 pub fn default_workloads() -> Vec<&'static str> {
     vec!["cactusADM", "mcf", "soplex", "streamcluster", "DICT",
          "setCover", "Graph500", "GUPS", "mix2"]
@@ -128,5 +145,15 @@ mod tests {
         let m = run_uncached(&tiny_spec("streamcluster", "rainbow"));
         assert_eq!(m.instructions, 60_000);
         assert!(m.cycles > 0);
+    }
+
+    #[test]
+    fn run_stored_round_trips_through_a_mem_store() {
+        let store = Store::mem();
+        let spec = tiny_spec("DICT", "flat");
+        let a = run_stored(&store, &spec).unwrap();
+        let b = run_stored(&store, &spec).unwrap(); // served, not re-run
+        assert_eq!(serde_kv::metrics_to_kv(&a), serde_kv::metrics_to_kv(&b));
+        assert_eq!(store.list().unwrap(), vec![spec.fingerprint()]);
     }
 }

@@ -1,0 +1,586 @@
+//! Networked results store: the wire protocol, the multi-threaded
+//! [`CacheServer`] (the `rainbow cache-server` subcommand), and the
+//! [`NetStore`] client — the transport that lets a sharded sweep run
+//! with ZERO shared filesystem between coordinator and workers.
+//!
+//! ## Wire format
+//!
+//! One request/response exchange per connection, each side a single
+//! length-prefixed frame:
+//!
+//! ```text
+//! magic    4 bytes  b"RBKV"
+//! version  u16 LE   PROTOCOL_VERSION (bumped on incompatible change)
+//! opcode   u8       request: GET/PUT/LIST/PING/SHUTDOWN
+//!                   response: R_OK/R_MISSING/R_ERR
+//! length   u32 LE   payload bytes that follow (capped — untrusted)
+//! checksum u64 LE   FNV-1a over the payload
+//! payload  length bytes
+//! ```
+//!
+//! Payloads reuse the `serde_kv` text encodings: GET carries a
+//! fingerprint, its `R_OK` reply a full metrics entry (which carries
+//! its OWN version + checksum header, so entry integrity is checked
+//! end to end, independent of the frame); PUT carries
+//! `fingerprint\n<metrics entry>`; LIST's reply is newline-joined
+//! fingerprints. A torn or tampered frame fails the checksum and is a
+//! loud error — the same contract spec-list files already enforce.
+//!
+//! ## Failure modes
+//!
+//! The client fails *loudly*: connect timeouts with bounded retries
+//! (a worker racing a server still starting up gets a grace window),
+//! read/write timeouts, `R_ERR` surfaced verbatim with the server
+//! address. Callers treat any remote error as fatal for the run — a
+//! flaky transport must never silently degrade a shared-nothing sweep
+//! into simulate-everything-locally.
+//!
+//! The server validates everything it is handed: fingerprints must be
+//! fingerprint-shaped (no path separators — a `GET ../../x` cannot
+//! escape an `FsStore` directory), PUT payloads must parse as intact
+//! metrics entries, and unknown opcodes get `R_ERR`, not a crash. A
+//! `SHUTDOWN` request stops the accept loop, drains in-flight
+//! connections, and lets `serve` return `Ok` — the clean-shutdown path
+//! the CI smoke job asserts.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::sim::RunMetrics;
+
+use super::serde_kv;
+use super::spec::fnv1a;
+use super::store::{CacheStore, Store};
+
+/// Version of the framed request/response protocol.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+const MAGIC: [u8; 4] = *b"RBKV";
+const HEADER_LEN: usize = 4 + 2 + 1 + 4 + 8;
+
+/// Cap on any frame payload. The largest legitimate payload is a LIST
+/// reply (~60 bytes per fingerprint — tens of thousands of entries fit
+/// comfortably); the length prefix is untrusted input, so an absurd
+/// value must be a clean error, not an allocator abort.
+const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Protocol opcodes (requests < 0x80, responses >= 0x80).
+pub mod op {
+    pub const GET: u8 = 1;
+    pub const PUT: u8 = 2;
+    pub const LIST: u8 = 3;
+    pub const PING: u8 = 4;
+    pub const SHUTDOWN: u8 = 5;
+    pub const R_OK: u8 = 0x80;
+    pub const R_MISSING: u8 = 0x81;
+    pub const R_ERR: u8 = 0x82;
+}
+
+fn write_frame(w: &mut impl Write, opcode: u8, payload: &[u8])
+               -> io::Result<()> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame payload {} bytes exceeds cap {MAX_PAYLOAD}",
+                    payload.len()),
+        ));
+    }
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[..4].copy_from_slice(&MAGIC);
+    hdr[4..6].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    hdr[6] = opcode;
+    hdr[7..11].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr[11..19].copy_from_slice(&fnv1a(payload).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>), String> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr)
+        .map_err(|e| format!("read frame header: {e}"))?;
+    if hdr[..4] != MAGIC {
+        return Err("bad frame magic (peer is not a rainbow \
+                    cache server?)".to_string());
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != PROTOCOL_VERSION {
+        return Err(format!(
+            "protocol version {version} unsupported \
+             (expected {PROTOCOL_VERSION})"));
+    }
+    let opcode = hdr[6];
+    let len =
+        u32::from_le_bytes([hdr[7], hdr[8], hdr[9], hdr[10]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(format!(
+            "frame payload {len} bytes exceeds cap {MAX_PAYLOAD} \
+             (corrupt length prefix?)"));
+    }
+    let declared = u64::from_le_bytes([
+        hdr[11], hdr[12], hdr[13], hdr[14], hdr[15], hdr[16], hdr[17],
+        hdr[18],
+    ]);
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| format!("read frame payload ({len} bytes): {e}"))?;
+    let actual = fnv1a(&payload);
+    if actual != declared {
+        return Err(format!(
+            "frame checksum mismatch (declared {declared:016x}, \
+             payload hashes to {actual:016x}): torn or tampered"));
+    }
+    Ok((opcode, payload))
+}
+
+/// Fingerprints are %-escaped filesystem-safe tokens
+/// (`RunSpec::fingerprint`); anything else — in particular path
+/// separators — is rejected server-side so a hostile `GET`/`PUT` can
+/// never address files outside an `FsStore` directory.
+fn valid_fingerprint(fp: &str) -> bool {
+    !fp.is_empty()
+        && fp.len() <= 512
+        && !fp.contains("..")
+        && fp.bytes().all(|b| {
+            b.is_ascii_alphanumeric()
+                || b == b'_'
+                || b == b'.'
+                || b == b'-'
+                || b == b'%'
+        })
+}
+
+// ---------------------------------------------------------------- client
+
+/// TCP client half of the protocol. One connection per request (the
+/// exchanges are tiny and a sweep's workers are long-lived processes);
+/// connection establishment gets `connect_retries` extra attempts with
+/// `retry_backoff` between them, so a worker spawned alongside a
+/// still-starting server converges instead of failing its whole shard.
+#[derive(Clone, Debug)]
+pub struct NetStore {
+    addr: String,
+    pub connect_timeout: Duration,
+    pub io_timeout: Duration,
+    pub connect_retries: u32,
+    pub retry_backoff: Duration,
+}
+
+impl NetStore {
+    /// Client for the server at `host:port` with default timeouts.
+    pub fn new(hostport: &str) -> NetStore {
+        NetStore {
+            addr: hostport.to_string(),
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(60),
+            connect_retries: 3,
+            retry_backoff: Duration::from_millis(200),
+        }
+    }
+
+    /// The `host:port` this client targets.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&self) -> Result<TcpStream, String> {
+        let addrs: Vec<SocketAddr> = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| {
+                format!("cache server {}: resolve: {e}", self.addr)
+            })?
+            .collect();
+        if addrs.is_empty() {
+            return Err(format!(
+                "cache server {}: resolved to no addresses", self.addr));
+        }
+        let mut last = String::new();
+        for attempt in 0..=self.connect_retries {
+            if attempt > 0 {
+                thread::sleep(self.retry_backoff);
+            }
+            for a in &addrs {
+                match TcpStream::connect_timeout(a, self.connect_timeout)
+                {
+                    Ok(s) => {
+                        let _ = s.set_read_timeout(Some(self.io_timeout));
+                        let _ =
+                            s.set_write_timeout(Some(self.io_timeout));
+                        let _ = s.set_nodelay(true);
+                        return Ok(s);
+                    }
+                    Err(e) => last = e.to_string(),
+                }
+            }
+        }
+        Err(format!(
+            "cache server {} unreachable after {} attempts: {last}",
+            self.addr,
+            self.connect_retries + 1))
+    }
+
+    fn request(&self, opcode: u8, payload: &[u8])
+               -> Result<(u8, Vec<u8>), String> {
+        let mut stream = self.connect()?;
+        write_frame(&mut stream, opcode, payload)
+            .map_err(|e| format!("cache server {}: send: {e}", self.addr))?;
+        let (rop, rpayload) = read_frame(&mut stream)
+            .map_err(|e| format!("cache server {}: {e}", self.addr))?;
+        if rop == op::R_ERR {
+            return Err(format!(
+                "cache server {}: {}",
+                self.addr,
+                String::from_utf8_lossy(&rpayload)));
+        }
+        Ok((rop, rpayload))
+    }
+
+    /// Ask a running server to shut down cleanly (acknowledged before
+    /// the server's accept loop stops).
+    pub fn shutdown_server(&self) -> Result<(), String> {
+        match self.request(op::SHUTDOWN, &[])? {
+            (op::R_OK, _) => Ok(()),
+            (other, _) => Err(format!(
+                "cache server {}: unexpected shutdown reply {other:#04x}",
+                self.addr)),
+        }
+    }
+}
+
+impl CacheStore for NetStore {
+    fn get(&self, fingerprint: &str)
+           -> Result<Option<RunMetrics>, String> {
+        let (rop, payload) =
+            self.request(op::GET, fingerprint.as_bytes())?;
+        match rop {
+            op::R_MISSING => Ok(None),
+            op::R_OK => {
+                let text = String::from_utf8(payload).map_err(|_| {
+                    format!(
+                        "cache server {}: GET {fingerprint}: non-UTF8 \
+                         metrics payload", self.addr)
+                })?;
+                match serde_kv::metrics_from_kv_checked(&text) {
+                    Ok(m) => Ok(Some(m)),
+                    // Version skew between this binary and the server
+                    // (e.g. a long-lived server holding entries from
+                    // an older METRICS_VERSION) is a stale entry, not
+                    // corruption: a miss, so re-simulation heals it —
+                    // the same contract as a directory store.
+                    Err(serde_kv::MetricsError::Stale { .. }) => Ok(None),
+                    Err(e) => Err(format!(
+                        "cache server {}: GET {fingerprint}: corrupt \
+                         metrics payload: {e}", self.addr)),
+                }
+            }
+            other => Err(format!(
+                "cache server {}: GET {fingerprint}: unexpected reply \
+                 {other:#04x}", self.addr)),
+        }
+    }
+
+    fn put(&self, fingerprint: &str, metrics: &RunMetrics)
+           -> Result<(), String> {
+        let entry = serde_kv::metrics_to_kv(metrics);
+        let mut payload =
+            Vec::with_capacity(fingerprint.len() + 1 + entry.len());
+        payload.extend_from_slice(fingerprint.as_bytes());
+        payload.push(b'\n');
+        payload.extend_from_slice(entry.as_bytes());
+        match self.request(op::PUT, &payload)? {
+            (op::R_OK, _) => Ok(()),
+            (other, _) => Err(format!(
+                "cache server {}: PUT {fingerprint}: unexpected reply \
+                 {other:#04x}", self.addr)),
+        }
+    }
+
+    fn list(&self) -> Result<Vec<String>, String> {
+        let (rop, payload) = self.request(op::LIST, &[])?;
+        if rop != op::R_OK {
+            return Err(format!(
+                "cache server {}: LIST: unexpected reply {rop:#04x}",
+                self.addr));
+        }
+        let text = String::from_utf8(payload).map_err(|_| {
+            format!("cache server {}: LIST: non-UTF8 payload", self.addr)
+        })?;
+        Ok(text.lines().map(str::to_string).collect())
+    }
+
+    fn ping(&self) -> Result<(), String> {
+        match self.request(op::PING, &[])? {
+            (op::R_OK, _) => Ok(()),
+            (other, _) => Err(format!(
+                "cache server {}: PING: unexpected reply {other:#04x}",
+                self.addr)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- server
+
+/// Multi-threaded cache server fronting any [`Store`]: one handler
+/// thread per connection, the backing store shared behind its `Arc`.
+/// `FsStore` writes stay atomic (temp + rename) and `MemStore` is
+/// mutexed, so concurrent PUTs of one fingerprint are safe end to end.
+pub struct CacheServer {
+    listener: TcpListener,
+    store: Store,
+    local: SocketAddr,
+}
+
+impl CacheServer {
+    /// Bind to `addr` (e.g. `127.0.0.1:0` for an ephemeral port —
+    /// [`CacheServer::local_addr`] reports what was actually bound).
+    pub fn bind(addr: &str, store: Store) -> Result<CacheServer, String> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| format!("cache-server: bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("cache-server: local address: {e}"))?;
+        Ok(CacheServer { listener, store, local })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Serve until a `SHUTDOWN` request arrives, then drain in-flight
+    /// handlers and return `Ok(())` — the clean-shutdown contract.
+    pub fn serve(self) -> Result<(), String> {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+        for conn in self.listener.incoming() {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("cache-server: accept: {e}");
+                    continue;
+                }
+            };
+            let store = self.store.clone();
+            let sd = Arc::clone(&shutdown);
+            let local = self.local;
+            handlers.push(thread::spawn(move || {
+                handle_conn(stream, &store, &sd, local)
+            }));
+            handlers.retain(|h| !h.is_finished());
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// [`CacheServer::serve`] on a background thread — the in-process
+    /// form tests use (server on an ephemeral port, client in the same
+    /// process, child shard-workers across the process boundary).
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.local;
+        let join = thread::spawn(move || self.serve());
+        ServerHandle { addr, join }
+    }
+}
+
+/// Handle to a background [`CacheServer`]; [`ServerHandle::stop`]
+/// performs the clean-shutdown round-trip and joins the server thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    join: thread::JoinHandle<Result<(), String>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `host:port` for clients ([`Store::net`] / `--store tcp://...`).
+    pub fn host_port(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Request shutdown, then join the server thread; `Ok` only when
+    /// the server acknowledged and exited cleanly.
+    pub fn stop(self) -> Result<(), String> {
+        NetStore::new(&self.addr.to_string())
+            .shutdown_server()
+            .map_err(|e| format!("cache-server stop: {e}"))?;
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => Err("cache-server thread panicked".to_string()),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, store: &Store,
+               shutdown: &AtomicBool, local: SocketAddr) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(120)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(120)));
+    // A connection may carry several exchanges back to back; EOF (or
+    // any frame error — this is untrusted input) drops it.
+    loop {
+        let (opcode, payload) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let sent = match opcode {
+            op::GET => serve_get(&mut stream, store, &payload),
+            op::PUT => serve_put(&mut stream, store, &payload),
+            op::LIST => match store.list() {
+                Ok(fps) => write_frame(&mut stream, op::R_OK,
+                                       fps.join("\n").as_bytes()),
+                Err(e) => write_frame(&mut stream, op::R_ERR,
+                                      e.as_bytes()),
+            },
+            op::PING => write_frame(&mut stream, op::R_OK, &[]),
+            op::SHUTDOWN => {
+                // Flag first, acknowledge second, then poke the accept
+                // loop awake so it observes the flag and exits. A
+                // wildcard bind (0.0.0.0 / ::) is poked via loopback.
+                shutdown.store(true, Ordering::SeqCst);
+                let _ = write_frame(&mut stream, op::R_OK, &[]);
+                let mut wake = local;
+                if wake.ip().is_unspecified() {
+                    wake.set_ip(if wake.is_ipv4() {
+                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                    } else {
+                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                    });
+                }
+                let _ = TcpStream::connect(wake);
+                return;
+            }
+            other => write_frame(
+                &mut stream,
+                op::R_ERR,
+                format!("unknown opcode {other:#04x}").as_bytes()),
+        };
+        if sent.is_err() {
+            return;
+        }
+    }
+}
+
+fn serve_get(stream: &mut TcpStream, store: &Store, payload: &[u8])
+             -> io::Result<()> {
+    let fp = match std::str::from_utf8(payload) {
+        Ok(fp) if valid_fingerprint(fp) => fp,
+        _ => {
+            return write_frame(stream, op::R_ERR,
+                               b"GET: malformed fingerprint")
+        }
+    };
+    match store.get(fp) {
+        Ok(Some(m)) => write_frame(
+            stream, op::R_OK, serde_kv::metrics_to_kv(&m).as_bytes()),
+        Ok(None) => write_frame(stream, op::R_MISSING, &[]),
+        Err(e) => write_frame(stream, op::R_ERR, e.as_bytes()),
+    }
+}
+
+fn serve_put(stream: &mut TcpStream, store: &Store, payload: &[u8])
+             -> io::Result<()> {
+    let text = match std::str::from_utf8(payload) {
+        Ok(t) => t,
+        Err(_) => {
+            return write_frame(stream, op::R_ERR,
+                               b"PUT: non-UTF8 payload")
+        }
+    };
+    let Some((fp, entry)) = text.split_once('\n') else {
+        return write_frame(stream, op::R_ERR,
+                           b"PUT: missing fingerprint line");
+    };
+    if !valid_fingerprint(fp) {
+        return write_frame(stream, op::R_ERR,
+                           b"PUT: malformed fingerprint");
+    }
+    // Parse-before-store: the entry must be an intact, current-version
+    // metrics serialization, so a corrupt PUT is rejected at the door
+    // instead of poisoning the store for every later reader.
+    match serde_kv::metrics_from_kv_checked(entry) {
+        Ok(m) => match store.put(fp, &m) {
+            Ok(()) => write_frame(stream, op::R_OK, &[]),
+            Err(e) => write_frame(stream, op::R_ERR, e.as_bytes()),
+        },
+        Err(e) => write_frame(
+            stream,
+            op::R_ERR,
+            format!("PUT {fp}: rejected metrics payload: {e}").as_bytes()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_round_trips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, op::PUT, b"hello world").unwrap();
+        let (opc, payload) = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(opc, op::PUT);
+        assert_eq!(payload, b"hello world");
+        // Empty payloads are legal (PING, R_MISSING).
+        let mut buf = Vec::new();
+        write_frame(&mut buf, op::PING, &[]).unwrap();
+        let (opc, payload) = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(opc, op::PING);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn tampered_and_truncated_frames_fail_loudly() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, op::GET, b"v2_mcf_rainbow_s8").unwrap();
+        // Flip a payload byte: checksum mismatch.
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        let e = read_frame(&mut Cursor::new(&bad)).unwrap_err();
+        assert!(e.contains("checksum mismatch"), "got: {e}");
+        // Truncate the payload: clean read error, not a hang/panic.
+        let e = read_frame(&mut Cursor::new(&buf[..buf.len() - 3]))
+            .unwrap_err();
+        assert!(e.contains("payload"), "got: {e}");
+        // Wrong magic.
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let e = read_frame(&mut Cursor::new(&bad)).unwrap_err();
+        assert!(e.contains("magic"), "got: {e}");
+        // Unsupported protocol version.
+        let mut bad = buf.clone();
+        bad[4] = 0xFF;
+        let e = read_frame(&mut Cursor::new(&bad)).unwrap_err();
+        assert!(e.contains("protocol version"), "got: {e}");
+        // Absurd length prefix: clean error, no allocation attempt.
+        let mut bad = buf.clone();
+        bad[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = read_frame(&mut Cursor::new(&bad)).unwrap_err();
+        assert!(e.contains("exceeds cap"), "got: {e}");
+    }
+
+    #[test]
+    fn fingerprint_validation_blocks_path_shapes() {
+        assert!(valid_fingerprint("v2_mcf_rainbow_s8_i4000000_r1"));
+        assert!(valid_fingerprint("v2_a%5Fb_c_s8_i1_r0_o2x00ff00ff00ff00ff"));
+        for bad in ["", "../etc/passwd", "a/b", "a\\b", "a..b",
+                    "fp with spaces"] {
+            assert!(!valid_fingerprint(bad), "{bad:?} must be rejected");
+        }
+        let long = "a".repeat(513);
+        assert!(!valid_fingerprint(&long));
+    }
+}

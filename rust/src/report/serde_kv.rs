@@ -21,8 +21,11 @@ use crate::report::RunSpec;
 use crate::sim::metrics::{RunMetrics, RuntimeBreakdown, XlatBreakdown};
 
 /// Version of the results-cache entry serialization.
+/// v5: versioned header + FNV-1a checksum line (same integrity
+/// treatment as spec-list files — a torn or tampered entry fails
+/// loudly instead of parsing into silently different metrics).
 /// v4: per-tier row-buffer hit/miss counters (backend comparisons).
-pub const METRICS_VERSION: u64 = 4;
+pub const METRICS_VERSION: u64 = 5;
 
 // Internal alias so the (de)serializers below read naturally.
 const VERSION: u64 = METRICS_VERSION;
@@ -239,7 +242,19 @@ pub fn specs_from_kv(text: &str) -> Result<Vec<RunSpec>, String> {
     Ok(specs)
 }
 
+/// Serialize metrics as a versioned, checksummed cache entry: a
+/// two-line header (`version=`, `checksum=` — FNV-1a over every byte
+/// after the checksum line) followed by the flat field body. The
+/// checksum gives cache entries the same torn/tampered-file detection
+/// as spec-list files: a half-written or bit-flipped entry is a loud
+/// [`MetricsError::Corrupt`], never silently different metrics.
 pub fn metrics_to_kv(m: &RunMetrics) -> String {
+    let body = metrics_body_kv(m);
+    format!("version={VERSION}\nchecksum={:016x}\n{body}",
+            crate::report::spec::fnv1a(body.as_bytes()))
+}
+
+fn metrics_body_kv(m: &RunMetrics) -> String {
     let mut s = String::with_capacity(1024);
     let mut put = |k: &str, v: String| {
         s.push_str(k);
@@ -247,7 +262,6 @@ pub fn metrics_to_kv(m: &RunMetrics) -> String {
         s.push_str(&v);
         s.push('\n');
     };
-    put("version", VERSION.to_string());
     put("instructions", m.instructions.to_string());
     put("cycles", m.cycles.to_string());
     put("core_cycles", m.core_cycles.to_string());
@@ -287,15 +301,91 @@ pub fn metrics_to_kv(m: &RunMetrics) -> String {
     s
 }
 
+/// Why a metrics entry failed to load. The two cases demand opposite
+/// handling: a *stale* entry (older `version=`) is the expected result
+/// of upgrading the simulator — stores treat it as a miss and
+/// re-simulation heals it — while a *corrupt* entry (bad checksum,
+/// truncated header, garbled body) means the bytes themselves are
+/// wrong and must be reported, never silently re-run over.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricsError {
+    /// Entry written by an older (or newer) serialization version.
+    Stale { found: u64 },
+    /// Truncated, tampered, or not a metrics entry at all.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for MetricsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricsError::Stale { found } => write!(
+                f, "stale metrics version {found} (current {VERSION})"),
+            MetricsError::Corrupt(why) => write!(f, "{why}"),
+        }
+    }
+}
+
+/// Lenient load: `Some` on a current, intact entry; `None` otherwise.
+/// Kept for callers that only need hit-or-miss; integrity-sensitive
+/// paths (the stores, the shard merge) use
+/// [`metrics_from_kv_checked`] to distinguish stale from corrupt.
 pub fn metrics_from_kv(text: &str) -> Option<RunMetrics> {
+    metrics_from_kv_checked(text).ok()
+}
+
+/// Strict load of a metrics cache entry: the `version=` line must lead
+/// and match [`METRICS_VERSION`] (else [`MetricsError::Stale`]), the
+/// `checksum=` line must follow and match the FNV-1a hash of the
+/// remaining bytes, and every body line must parse — anything else is
+/// [`MetricsError::Corrupt`] naming what broke.
+pub fn metrics_from_kv_checked(text: &str)
+                               -> Result<RunMetrics, MetricsError> {
+    use MetricsError::Corrupt;
+    let (vline, rest) = text.split_once('\n').ok_or_else(|| {
+        Corrupt("truncated entry: missing version header".to_string())
+    })?;
+    let version = vline
+        .strip_prefix("version=")
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .ok_or_else(|| {
+            Corrupt(format!(
+                "first line must be version=N, got {vline:?}"))
+        })?;
+    if version != VERSION {
+        return Err(MetricsError::Stale { found: version });
+    }
+    let (cline, body) = rest.split_once('\n').ok_or_else(|| {
+        Corrupt("truncated entry: missing checksum header".to_string())
+    })?;
+    let declared = cline
+        .strip_prefix("checksum=")
+        .and_then(|c| u64::from_str_radix(c.trim(), 16).ok())
+        .ok_or_else(|| {
+            Corrupt(format!(
+                "second line must be checksum=HEX, got {cline:?}"))
+        })?;
+    let actual = crate::report::spec::fnv1a(body.as_bytes());
+    if actual != declared {
+        return Err(Corrupt(format!(
+            "checksum mismatch (declared {declared:016x}, content \
+             hashes to {actual:016x}): entry torn or tampered")));
+    }
     let mut m = RunMetrics::default();
-    let mut version = 0u64;
-    for line in text.lines() {
-        let (k, v) = line.split_once('=')?;
-        let u = || v.parse::<u64>().ok();
-        let f = || v.parse::<f64>().ok();
+    for line in body.lines() {
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            Corrupt(format!("expected key=value, got {line:?}"))
+        })?;
+        let u = || {
+            v.parse::<u64>().map_err(|_| {
+                Corrupt(format!("{k}: expected integer, got {v:?}"))
+            })
+        };
+        let f = || {
+            v.parse::<f64>().map_err(|_| {
+                Corrupt(format!("{k}: expected float, got {v:?}"))
+            })
+        };
         match k {
-            "version" => version = u()?,
             "instructions" => m.instructions = u()?,
             "cycles" => m.cycles = u()?,
             "core_cycles" => m.core_cycles = u()?,
@@ -335,7 +425,7 @@ pub fn metrics_from_kv(text: &str) -> Option<RunMetrics> {
             _ => {} // forward-compatible: ignore unknown keys
         }
     }
-    (version == VERSION).then_some(m)
+    Ok(m)
 }
 
 #[cfg(test)]
@@ -391,15 +481,63 @@ mod tests {
     }
 
     #[test]
-    fn version_mismatch_rejected() {
+    fn version_mismatch_is_stale_not_corrupt() {
         let kv = metrics_to_kv(&sample()).replace(
             &format!("version={VERSION}"), "version=0");
         assert!(metrics_from_kv(&kv).is_none());
+        assert!(matches!(metrics_from_kv_checked(&kv),
+                         Err(MetricsError::Stale { found: 0 })));
     }
 
     #[test]
     fn garbage_rejected() {
         assert!(metrics_from_kv("not a kv file").is_none());
+        assert!(matches!(metrics_from_kv_checked("not a kv file"),
+                         Err(MetricsError::Corrupt(_))));
+    }
+
+    #[test]
+    fn tampered_value_caught_by_checksum() {
+        // A mid-line cut or bit flip that still parses as a (different)
+        // integer must be caught by the checksum, not slip through.
+        let kv = metrics_to_kv(&sample()).replace("cycles=456",
+                                                  "cycles=4");
+        match metrics_from_kv_checked(&kv) {
+            Err(MetricsError::Corrupt(e)) => {
+                assert!(e.contains("checksum mismatch"), "got: {e}")
+            }
+            other => panic!("tampered entry must be Corrupt, got {other:?}"),
+        }
+        assert!(metrics_from_kv(&kv).is_none());
+    }
+
+    #[test]
+    fn truncated_entries_rejected() {
+        let kv = metrics_to_kv(&sample());
+        // Cut mid-body: the checksum no longer matches.
+        match metrics_from_kv_checked(&kv[..kv.len() - 10]) {
+            Err(MetricsError::Corrupt(e)) => {
+                assert!(e.contains("checksum"), "got: {e}")
+            }
+            other => panic!("truncated entry must be Corrupt, got {other:?}"),
+        }
+        // Header-only truncations name the missing piece.
+        let v_bare = format!("version={VERSION}");
+        let v_line = format!("version={VERSION}\n");
+        for frag in ["", v_bare.as_str(), v_line.as_str()] {
+            assert!(matches!(metrics_from_kv_checked(frag),
+                             Err(MetricsError::Corrupt(_))),
+                    "fragment {frag:?} must be Corrupt");
+        }
+    }
+
+    #[test]
+    fn entry_header_leads_and_checksum_covers_the_body() {
+        let kv = metrics_to_kv(&sample());
+        let mut lines = kv.lines();
+        assert_eq!(lines.next(), Some(format!("version={VERSION}").as_str()));
+        assert!(lines.next().unwrap().starts_with("checksum="),
+                "checksum must be the second line");
     }
 
     fn sample_spec() -> RunSpec {

@@ -12,9 +12,10 @@
 //!   list; `tests/sweep_determinism.rs` locks this in across a real
 //!   child process.
 //! * **Fingerprint/cache identity** — shards communicate results ONLY
-//!   through fingerprint-named cache entries
-//!   (`<cache_dir>/<fingerprint>.kv`); the merge is
-//!   [`sweep::collect_cached`], which never simulates. Duplicate specs
+//!   through fingerprint-keyed entries of the configured results
+//!   [`Store`] (a shared cache directory, or a `rainbow cache-server`
+//!   reached over TCP for shared-nothing clusters); the merge is
+//!   [`sweep::collect_stored`], which never simulates. Duplicate specs
 //!   are deduplicated BEFORE partitioning, so no two shards ever run
 //!   (or write) the same fingerprint.
 //! * **Order-independence** — [`partition`] sorts the unique specs by
@@ -27,9 +28,9 @@
 //! file (`shard-000.kv`, ...), and [`write_shards`] drops a
 //! `manifest.kv` ([`ShardManifest`]) describing the layout — enough for
 //! an operator (or a future multi-host scheduler) to ship shard files
-//! to other machines, run `rainbow shard-worker --specs FILE
-//! --cache-dir DIR` anywhere, and merge by collecting the cache
-//! directories.
+//! to other machines, run `rainbow shard-worker --specs FILE --store
+//! DIR|tcp://host:port` anywhere, and merge wherever the store is
+//! reachable.
 
 use std::collections::HashSet;
 use std::fs;
@@ -41,7 +42,7 @@ use std::time::Duration;
 
 use crate::sim::RunMetrics;
 
-use super::{run_cached_in, serde_kv, spec_cli, sweep, RunSpec};
+use super::{run_stored, serde_kv, spec_cli, sweep, RunSpec, Store};
 
 /// Version of the shard-manifest serialization.
 pub const MANIFEST_VERSION: u64 = 1;
@@ -57,14 +58,19 @@ pub struct ShardConfig {
     /// Maximum concurrently running child processes; 0 = one per
     /// available core (like `SweepConfig::workers`).
     pub parallel: usize,
-    /// Shared results-cache directory: children write fingerprint-named
-    /// entries here, the merge reads them back.
-    pub cache_dir: PathBuf,
-    /// Directory for the shard spec-list files and the manifest.
+    /// Results store — the transport of the sharded sweep: children
+    /// write fingerprint-keyed entries into it, the merge reads them
+    /// back. A shared cache directory, or a `tcp://host:port` cache
+    /// server when coordinator and workers share no filesystem. Its
+    /// textual address is re-serialized onto each child's command line
+    /// as `--store <addr>`.
+    pub store: Store,
+    /// Directory for the shard spec-list files and the manifest
+    /// (coordinator-local; only the store must be shared).
     pub work_dir: PathBuf,
     /// Override the worker command (argv prefix — e.g. a wrapper script
     /// that ships the shard file to another host). `--specs FILE
-    /// --cache-dir DIR` is appended. `None` runs this binary's own
+    /// --store ADDR` is appended. `None` runs this binary's own
     /// `shard-worker` subcommand.
     pub cmd: Option<Vec<String>>,
 }
@@ -74,7 +80,21 @@ impl ShardConfig {
     /// files land in `<cache_dir>/shards`.
     pub fn new(shards: usize, cache_dir: PathBuf) -> ShardConfig {
         let work_dir = cache_dir.join("shards");
-        ShardConfig { shards, parallel: 0, cache_dir, work_dir, cmd: None }
+        ShardConfig {
+            shards,
+            parallel: 0,
+            store: Store::fs(cache_dir),
+            work_dir,
+            cmd: None,
+        }
+    }
+
+    /// Defaults for `n` shards over an arbitrary results store (e.g.
+    /// `Store::net` for a shared-nothing sweep through a cache
+    /// server), with an explicit shard-file directory.
+    pub fn with_store(shards: usize, store: Store, work_dir: PathBuf)
+                      -> ShardConfig {
+        ShardConfig { shards, parallel: 0, store, work_dir, cmd: None }
     }
 
     fn worker_command(&self, specs_file: &Path) -> Result<Command, String> {
@@ -96,7 +116,7 @@ impl ShardConfig {
             }
         };
         c.arg("--specs").arg(specs_file);
-        c.arg("--cache-dir").arg(&self.cache_dir);
+        c.arg("--store").arg(self.store.addr());
         Ok(c)
     }
 }
@@ -386,12 +406,20 @@ pub fn run_sharded(specs: &[RunSpec], cfg: &ShardConfig)
     let parts = partition(specs, cfg.shards);
     let unique_runs: usize = parts.iter().map(|p| p.len()).sum();
     let files = write_shards(&parts, specs.len(), cfg)?;
-    // The cache directory must exist up front: a worker command that
-    // fails before its first write would otherwise leave the merge
-    // with a confusing "no such directory" instead of "missing entry".
-    fs::create_dir_all(&cfg.cache_dir).map_err(|e| {
-        format!("shard: create {}: {e}", cfg.cache_dir.display())
-    })?;
+    // Fail fast on an unusable transport BEFORE spawning children. A
+    // directory store must exist up front (a worker failing before its
+    // first write would otherwise leave the merge with a confusing "no
+    // such directory" instead of "missing entry"); a networked store
+    // gets a PING round-trip, so an unreachable server is one clear
+    // error instead of N identical worker failures.
+    match cfg.store.fs_dir() {
+        Some(dir) => fs::create_dir_all(dir).map_err(|e| {
+            format!("shard: create {}: {e}", dir.display())
+        })?,
+        None => cfg.store.ping().map_err(|e| {
+            format!("shard: results store unavailable: {e}")
+        })?,
+    }
     let limit = (if cfg.parallel == 0 {
         sweep::auto_workers()
     } else {
@@ -424,20 +452,23 @@ pub fn run_sharded(specs: &[RunSpec], cfg: &ShardConfig)
             failures.len(), files.len(), failures.join("; "),
             cfg.work_dir.display()));
     }
-    let metrics = sweep::collect_cached(&cfg.cache_dir, specs)
+    let metrics = sweep::collect_stored(&cfg.store, specs)
         .map_err(|e| format!("shard merge: {e}"))?;
     Ok(ShardOutcome { metrics, unique_runs, shards_run: files.len() })
 }
 
 /// The worker half: load + validate a spec-list file, simulate every
-/// unique spec through the shared cache (`run_cached_in`), and stream
-/// one progress line per spec to stdout (the coordinator tags and
-/// forwards them). Returns the number of unique specs processed.
+/// unique spec through the shared results store (`run_stored`), and
+/// stream one progress line per spec to stdout (the coordinator tags
+/// and forwards them). Returns the number of unique specs processed.
+/// A store failure (e.g. the cache server vanishing mid-shard) aborts
+/// the worker with a clean error — the coordinator reports the shard
+/// as failed instead of merging a silently partial result set.
 ///
 /// Workers are deliberately serial within a shard: the shard count is
 /// the parallelism knob, and a serial worker keeps per-shard output
 /// ordered and its memory footprint to one simulation.
-pub fn worker_run(specs_path: &Path, cache_dir: &Path)
+pub fn worker_run(specs_path: &Path, store: &Store)
                   -> Result<usize, String> {
     let specs = spec_cli::load_spec_list(specs_path)?;
     let mut seen = HashSet::new();
@@ -448,7 +479,7 @@ pub fn worker_run(specs_path: &Path, cache_dir: &Path)
     let total = uniq.len();
     for (i, s) in uniq.iter().enumerate() {
         let fp = s.fingerprint();
-        run_cached_in(cache_dir, s);
+        run_stored(store, s)?;
         println!("[{}/{total}] {} x {} done ({fp})",
                  i + 1, s.workload, s.policy);
     }
@@ -588,11 +619,12 @@ mod tests {
         let _ = fs::remove_dir_all(&dir);
         fs::create_dir_all(&dir).unwrap();
         let cache = dir.join("cache");
+        let store = Store::fs(cache.clone());
         // Truncated list file: clear parse error, nothing simulated.
         let full = serde_kv::specs_to_kv(&sample_specs());
         let path = dir.join("trunc.kv");
         fs::write(&path, &full[..full.len() - 25]).unwrap();
-        let e = worker_run(&path, &cache).unwrap_err();
+        let e = worker_run(&path, &store).unwrap_err();
         assert!(e.contains("spec list"), "got: {e}");
         assert!(!cache.exists(), "a bad list must not simulate anything");
         // Valid list format but unknown workload name: rejected by
@@ -600,10 +632,10 @@ mod tests {
         let bogus = serde_kv::specs_to_kv(
             &[RunSpec::new("notanapp", "rainbow")]);
         fs::write(&path, bogus).unwrap();
-        let e = worker_run(&path, &cache).unwrap_err();
+        let e = worker_run(&path, &store).unwrap_err();
         assert!(e.contains("unknown workload"), "got: {e}");
         // Missing file.
-        assert!(worker_run(&dir.join("nope.kv"), &cache).is_err());
+        assert!(worker_run(&dir.join("nope.kv"), &store).is_err());
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -618,11 +650,27 @@ mod tests {
         specs.push(specs[0].clone()); // duplicate runs once
         let path = dir.join("shard.kv");
         fs::write(&path, serde_kv::specs_to_kv(&specs)).unwrap();
-        let n = worker_run(&path, &cache).unwrap();
+        let n = worker_run(&path, &Store::fs(cache.clone())).unwrap();
         assert_eq!(n, 2, "duplicate fingerprints run once");
         // The merge path can now serve the full (duplicated) request.
         let merged = sweep::collect_cached(&cache, &specs).unwrap();
         assert_eq!(merged.len(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_runs_against_a_mem_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_shard_worker_mem_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let store = Store::mem();
+        let specs = vec![tiny("DICT", "flat")];
+        let path = dir.join("shard.kv");
+        fs::write(&path, serde_kv::specs_to_kv(&specs)).unwrap();
+        assert_eq!(worker_run(&path, &store).unwrap(), 1);
+        let merged = sweep::collect_stored(&store, &specs).unwrap();
+        assert_eq!(merged.len(), 1);
         let _ = fs::remove_dir_all(&dir);
     }
 }

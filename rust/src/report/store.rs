@@ -1,0 +1,366 @@
+//! Pluggable results-store subsystem: every consumer of cached
+//! [`RunMetrics`] — `run_cached_in`, the sweep orchestrator, the shard
+//! coordinator/worker pair, the figure emitters — talks to a
+//! [`CacheStore`] instead of touching `<cache_dir>/<fingerprint>.kv`
+//! paths directly. Three implementations ship:
+//!
+//! * [`FsStore`] — today's directory layout, behavior-preserving:
+//!   entries appear atomically (unique per-process temp file + rename),
+//!   concurrent writers of the same fingerprint produce identical bytes
+//!   (determinism), so whichever rename lands last is fine.
+//! * [`MemStore`] — a mutex-protected map; the test double, and the
+//!   backing store of an ephemeral `rainbow cache-server --mem`.
+//! * `NetStore` (in [`super::netstore`]) — a TCP client speaking the
+//!   framed cache-server protocol, for shared-nothing sweeps where
+//!   workers and coordinator share no filesystem at all.
+//!
+//! [`Store`] is the cloneable handle the config structs carry: a
+//! `CacheStore` behind an `Arc` plus the textual address
+//! (`DIR` | `tcp://host:port`) it was built from, so the shard
+//! coordinator can re-serialize the store location onto a child
+//! worker's command line (`--store <addr>`).
+//!
+//! Error contract (the integrity satellite): `get` returns `Ok(None)`
+//! for *absent* and for *stale* entries (an older `version=` — expected
+//! after upgrading the simulator; re-simulation heals it), and `Err`
+//! for *corrupt* ones (checksum mismatch, truncation, garbage) — a
+//! clean error naming the entry, never a panic and never silently
+//! different metrics.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs;
+use std::io::ErrorKind;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::RunMetrics;
+
+use super::netstore::NetStore;
+use super::serde_kv::{self, MetricsError};
+
+/// The store interface. Implementations must be shareable across the
+/// sweep's worker threads (`Send + Sync`); all methods take `&self`.
+pub trait CacheStore: Send + Sync {
+    /// Load the entry for `fingerprint`: `Ok(Some)` on a current,
+    /// intact entry; `Ok(None)` when absent or stale (older
+    /// serialization version — re-simulating heals it); `Err` when the
+    /// entry exists but is corrupt or unreadable.
+    fn get(&self, fingerprint: &str) -> Result<Option<RunMetrics>, String>;
+
+    /// Store (or overwrite) the entry for `fingerprint`.
+    fn put(&self, fingerprint: &str, metrics: &RunMetrics)
+           -> Result<(), String>;
+
+    /// Every fingerprint currently stored, sorted.
+    fn list(&self) -> Result<Vec<String>, String>;
+
+    /// Cheap liveness probe — a network round-trip for remote stores,
+    /// trivially `Ok` for local ones.
+    fn ping(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Which transport a [`Store`] handle wraps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    /// A directory of `<fingerprint>.kv` files ([`FsStore`]).
+    Fs,
+    /// An in-process map ([`MemStore`]).
+    Mem,
+    /// A `rainbow cache-server` reached over TCP (`NetStore`).
+    Net,
+}
+
+/// Cloneable handle to a [`CacheStore`], carrying the textual address
+/// it was parsed from (what `Store::parse` accepts and what the shard
+/// coordinator hands to child workers as `--store <addr>`).
+#[derive(Clone)]
+pub struct Store {
+    addr: String,
+    kind: StoreKind,
+    dir: Option<PathBuf>,
+    backend: Arc<dyn CacheStore>,
+}
+
+impl fmt::Debug for Store {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Store")
+            .field("addr", &self.addr)
+            .field("kind", &self.kind)
+            .finish()
+    }
+}
+
+impl Store {
+    /// Directory-backed store (the default transport).
+    pub fn fs(dir: impl Into<PathBuf>) -> Store {
+        let dir = dir.into();
+        Store {
+            addr: dir.display().to_string(),
+            kind: StoreKind::Fs,
+            backend: Arc::new(FsStore::new(dir.clone())),
+            dir: Some(dir),
+        }
+    }
+
+    /// Fresh in-memory store (tests, `cache-server --mem`).
+    pub fn mem() -> Store {
+        Store {
+            addr: "mem".to_string(),
+            kind: StoreKind::Mem,
+            dir: None,
+            backend: Arc::new(MemStore::new()),
+        }
+    }
+
+    /// Networked store talking to a cache server at `host:port`
+    /// (default client timeouts; [`Store::from_net`] takes a tuned
+    /// `NetStore`).
+    pub fn net(hostport: &str) -> Store {
+        Store::from_net(NetStore::new(hostport))
+    }
+
+    /// Networked store from an explicitly configured client.
+    pub fn from_net(client: NetStore) -> Store {
+        Store {
+            addr: format!("tcp://{}", client.addr()),
+            kind: StoreKind::Net,
+            dir: None,
+            backend: Arc::new(client),
+        }
+    }
+
+    /// Parse the CLI `--store` form: `tcp://host:port` for a cache
+    /// server, anything else (scheme-free) is a cache directory.
+    pub fn parse(arg: &str) -> Result<Store, String> {
+        let arg = arg.trim();
+        if arg.is_empty() {
+            return Err("store: empty address".to_string());
+        }
+        if let Some(hp) = arg.strip_prefix("tcp://") {
+            match hp.rsplit_once(':') {
+                Some((host, port))
+                    if !host.is_empty() && port.parse::<u16>().is_ok() =>
+                {
+                    Ok(Store::net(hp))
+                }
+                _ => Err(format!(
+                    "store {arg:?}: expected tcp://host:port")),
+            }
+        } else if arg.contains("://") {
+            Err(format!(
+                "store {arg:?}: unsupported scheme (use a directory \
+                 path or tcp://host:port)"))
+        } else {
+            Ok(Store::fs(PathBuf::from(arg)))
+        }
+    }
+
+    /// The textual address this handle was built from — round-trips
+    /// through [`Store::parse`] for fs/net stores, so it can ride a
+    /// child worker's `--store` argument.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn kind(&self) -> StoreKind {
+        self.kind
+    }
+
+    /// Whether operations cross a network (failures must be fatal, not
+    /// silently degraded to local simulation).
+    pub fn is_remote(&self) -> bool {
+        self.kind == StoreKind::Net
+    }
+
+    /// The backing directory, for fs stores only (shard layout
+    /// defaults, upfront `create_dir_all`).
+    pub fn fs_dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    pub fn get(&self, fingerprint: &str)
+               -> Result<Option<RunMetrics>, String> {
+        self.backend.get(fingerprint)
+    }
+
+    pub fn put(&self, fingerprint: &str, metrics: &RunMetrics)
+               -> Result<(), String> {
+        self.backend.put(fingerprint, metrics)
+    }
+
+    pub fn list(&self) -> Result<Vec<String>, String> {
+        self.backend.list()
+    }
+
+    pub fn ping(&self) -> Result<(), String> {
+        self.backend.ping()
+    }
+}
+
+/// Directory of `<fingerprint>.kv` entries — the on-disk layout every
+/// release so far has used, unchanged.
+pub struct FsStore {
+    dir: PathBuf,
+}
+
+impl FsStore {
+    pub fn new(dir: impl Into<PathBuf>) -> FsStore {
+        FsStore { dir: dir.into() }
+    }
+
+    fn entry_path(&self, fingerprint: &str) -> PathBuf {
+        self.dir.join(format!("{fingerprint}.kv"))
+    }
+}
+
+impl CacheStore for FsStore {
+    fn get(&self, fingerprint: &str)
+           -> Result<Option<RunMetrics>, String> {
+        let path = self.entry_path(fingerprint);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(format!("cache entry {}: {e}", path.display()))
+            }
+        };
+        match serde_kv::metrics_from_kv_checked(&text) {
+            Ok(m) => Ok(Some(m)),
+            // Older-version entries are expected after upgrading the
+            // simulator; a miss re-simulates and overwrites.
+            Err(MetricsError::Stale { .. }) => Ok(None),
+            Err(e) => Err(format!(
+                "corrupt cache entry {}: {e}", path.display())),
+        }
+    }
+
+    fn put(&self, fingerprint: &str, metrics: &RunMetrics)
+           -> Result<(), String> {
+        fs::create_dir_all(&self.dir).map_err(|e| {
+            format!("cache dir {}: {e}", self.dir.display())
+        })?;
+        // Entries become visible atomically (written to a per-process
+        // temp file, then renamed into place): the directory is shared
+        // by concurrent sweeps and shard-worker processes by design,
+        // and the merge path treats a torn entry as fatal corruption,
+        // so a reader must never observe a half-written file. pid +
+        // per-process sequence number keeps temp names unique across
+        // processes AND across threads of one process.
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            "{fingerprint}.kv.tmp.{}.{}", std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)));
+        let path = self.entry_path(fingerprint);
+        fs::write(&tmp, serde_kv::metrics_to_kv(metrics))
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        fs::rename(&tmp, &path).map_err(|e| {
+            let _ = fs::remove_file(&tmp);
+            format!("rename {} -> {}: {e}", tmp.display(), path.display())
+        })
+    }
+
+    fn list(&self) -> Result<Vec<String>, String> {
+        let rd = match fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            // A store nobody has written to yet is empty, not broken.
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                return Ok(Vec::new())
+            }
+            Err(e) => {
+                return Err(format!(
+                    "cache dir {}: {e}", self.dir.display()))
+            }
+        };
+        let mut out = Vec::new();
+        for entry in rd {
+            let entry = entry.map_err(|e| {
+                format!("cache dir {}: {e}", self.dir.display())
+            })?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            // In-flight temp files end in `.tmp.<pid>.<seq>`, so the
+            // `.kv` suffix alone distinguishes committed entries.
+            if let Some(fp) = name.strip_suffix(".kv") {
+                out.push(fp.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// Mutex-protected in-memory store: the conformance-test double and
+/// the backing store of an ephemeral `cache-server --mem`.
+#[derive(Default)]
+pub struct MemStore {
+    entries: Mutex<HashMap<String, RunMetrics>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl CacheStore for MemStore {
+    fn get(&self, fingerprint: &str)
+           -> Result<Option<RunMetrics>, String> {
+        Ok(self.entries.lock().unwrap().get(fingerprint).cloned())
+    }
+
+    fn put(&self, fingerprint: &str, metrics: &RunMetrics)
+           -> Result<(), String> {
+        // Last write wins: concurrent writers of one fingerprint carry
+        // identical metrics (determinism), same as the fs rename race.
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(fingerprint.to_string(), metrics.clone());
+        Ok(())
+    }
+
+    fn list(&self) -> Result<Vec<String>, String> {
+        let mut out: Vec<String> =
+            self.entries.lock().unwrap().keys().cloned().collect();
+        out.sort();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_dirs_and_tcp_and_rejects_junk() {
+        let s = Store::parse("target/some_cache").unwrap();
+        assert_eq!(s.kind(), StoreKind::Fs);
+        assert_eq!(s.addr(), "target/some_cache");
+        assert!(s.fs_dir().is_some());
+        let s = Store::parse("tcp://127.0.0.1:7700").unwrap();
+        assert_eq!(s.kind(), StoreKind::Net);
+        assert_eq!(s.addr(), "tcp://127.0.0.1:7700");
+        assert!(s.fs_dir().is_none());
+        assert!(s.is_remote());
+        // IPv6 host:port splits on the LAST colon.
+        assert!(Store::parse("tcp://[::1]:7700").is_ok());
+        for bad in ["", "  ", "tcp://", "tcp://nohost", "tcp://:7700",
+                    "tcp://h:notaport", "tcp://h:99999", "udp://h:1"] {
+            assert!(Store::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn store_addr_round_trips_through_parse() {
+        for arg in ["target/cache_rt", "tcp://127.0.0.1:7700"] {
+            let s = Store::parse(arg).unwrap();
+            let t = Store::parse(s.addr()).unwrap();
+            assert_eq!(s.kind(), t.kind());
+            assert_eq!(s.addr(), t.addr());
+        }
+    }
+}

@@ -15,35 +15,35 @@
 //!
 //! The module exposes the three pieces process-level orchestration
 //! composes from: [`matrix`] builds the spec matrix, [`run`] executes
-//! it in-process, and [`collect_cached`] is the merge path — it
-//! assembles a result set purely from fingerprint-named cache entries
-//! (`<cache_dir>/<fingerprint>.kv`, written by [`super::run_cached_in`])
-//! without simulating anything, which is how [`super::shard`] folds the
-//! work of N child worker processes back into one metrics vector.
+//! it in-process, and [`collect_stored`] is the merge path — it
+//! assembles a result set purely from fingerprint-keyed store entries
+//! (written by [`super::run_stored`]) without simulating anything,
+//! which is how [`super::shard`] folds the work of N child worker
+//! processes back into one metrics vector.
 
 use std::collections::{HashMap, HashSet};
-use std::fs;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::sim::RunMetrics;
 
-use super::{default_cache_dir, run_cached_in, run_uncached, serde_kv,
-            RunSpec};
+use super::{default_cache_dir, run_stored, run_uncached, RunSpec, Store};
 
 /// Execution knobs for a sweep.
 #[derive(Clone, Debug, Default)]
 pub struct SweepConfig {
     /// Worker threads; 0 = one per available core.
     pub workers: usize,
-    /// Route runs through the persistent on-disk results cache
-    /// (`run_cached_in`) instead of always simulating (`run_uncached`).
+    /// Route runs through the persistent results store (`run_stored`)
+    /// instead of always simulating (`run_uncached`).
     pub disk_cache: bool,
-    /// Results-cache directory when `disk_cache` is set; `None` uses
-    /// [`default_cache_dir`]. Threaded explicitly so tests and parallel
-    /// callers never have to mutate the process-global env var.
-    pub cache_dir: Option<PathBuf>,
+    /// Results store when `disk_cache` is set; `None` uses a
+    /// directory store at [`default_cache_dir`]. Threaded explicitly
+    /// (`Store::fs(dir)` for a directory, `Store::parse` for the CLI's
+    /// `--store DIR|tcp://host:port`) so tests and parallel callers
+    /// never have to mutate the process-global env var.
+    pub store: Option<Store>,
 }
 
 /// Worker count used when `SweepConfig::workers == 0`.
@@ -83,10 +83,10 @@ pub fn run(specs: &[RunSpec], cfg: &SweepConfig) -> SweepOutcome {
         (0..specs.len()).filter(|&i| seen.insert(keys[i].as_str())).collect();
     let workers = (if cfg.workers == 0 { auto_workers() } else { cfg.workers })
         .clamp(1, uniq.len().max(1));
-    let cache_dir = cfg
-        .cache_dir
+    let store = cfg
+        .store
         .clone()
-        .unwrap_or_else(default_cache_dir);
+        .unwrap_or_else(|| Store::fs(default_cache_dir()));
     let results: Mutex<HashMap<&str, RunMetrics>> =
         Mutex::new(HashMap::with_capacity(uniq.len()));
     let cursor = AtomicUsize::new(0);
@@ -96,7 +96,13 @@ pub fn run(specs: &[RunSpec], cfg: &SweepConfig) -> SweepOutcome {
                 let u = cursor.fetch_add(1, Ordering::Relaxed);
                 let Some(&i) = uniq.get(u) else { break };
                 let m = if cfg.disk_cache {
-                    run_cached_in(&cache_dir, &specs[i])
+                    // Store failures are remote-transport failures
+                    // (local stores self-heal); callers with a remote
+                    // store ping it before fanning out, so mid-sweep
+                    // loss of the server is a loud panic, not a
+                    // silently partial result set.
+                    run_stored(&store, &specs[i])
+                        .unwrap_or_else(|e| panic!("sweep worker: {e}"))
                 } else {
                     run_uncached(&specs[i])
                 };
@@ -122,13 +128,13 @@ pub fn run_parallel(specs: &[RunSpec], cfg: &SweepConfig) -> Vec<RunMetrics> {
     run(specs, cfg).metrics
 }
 
-/// The merge path: load every spec's metrics from its fingerprint-named
-/// cache entry in `dir`, in input order, WITHOUT simulating. Duplicate
-/// fingerprints share one load. A missing or corrupt entry is an error
-/// naming the spec and file — the shard coordinator treats that as a
-/// failed shard, and callers pre-warming a cache for figures learn
-/// exactly which cell is absent.
-pub fn collect_cached(dir: &Path, specs: &[RunSpec])
+/// The merge path: load every spec's metrics from its
+/// fingerprint-keyed entry in `store`, in input order, WITHOUT
+/// simulating. Duplicate fingerprints share one load. A missing or
+/// corrupt entry is an error naming the spec and store — the shard
+/// coordinator treats that as a failed shard, and callers pre-warming
+/// a store for figures learn exactly which cell is absent.
+pub fn collect_stored(store: &Store, specs: &[RunSpec])
                       -> Result<Vec<RunMetrics>, String> {
     let mut by_fp: HashMap<String, RunMetrics> = HashMap::new();
     let mut out = Vec::with_capacity(specs.len());
@@ -138,19 +144,30 @@ pub fn collect_cached(dir: &Path, specs: &[RunSpec])
             out.push(m.clone());
             continue;
         }
-        let path = dir.join(format!("{fp}.kv"));
-        let text = fs::read_to_string(&path).map_err(|e| {
-            format!("missing cache entry for {} x {} ({}): {e}",
-                    s.workload, s.policy, path.display())
-        })?;
-        let m = serde_kv::metrics_from_kv(&text).ok_or_else(|| {
-            format!("corrupt or version-mismatched cache entry for \
-                     {} x {} ({})", s.workload, s.policy, path.display())
-        })?;
+        let m = match store.get(&fp) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                return Err(format!(
+                    "missing cache entry for {} x {} ({fp} in {})",
+                    s.workload, s.policy, store.addr()))
+            }
+            Err(e) => {
+                return Err(format!(
+                    "corrupt cache entry for {} x {}: {e}",
+                    s.workload, s.policy))
+            }
+        };
         out.push(m.clone());
         by_fp.insert(fp, m);
     }
     Ok(out)
+}
+
+/// [`collect_stored`] against a cache directory (the common local
+/// form).
+pub fn collect_cached(dir: &Path, specs: &[RunSpec])
+                      -> Result<Vec<RunMetrics>, String> {
+    collect_stored(&Store::fs(dir), specs)
 }
 
 #[cfg(test)]
@@ -224,7 +241,7 @@ mod tests {
         let cfg = SweepConfig {
             workers: 2,
             disk_cache: true,
-            cache_dir: Some(dir.clone()),
+            store: Some(Store::fs(dir.clone())),
         };
         let ran = run(&specs, &cfg);
         let merged = collect_cached(&dir, &specs).unwrap();
@@ -233,16 +250,43 @@ mod tests {
             assert_eq!(metrics_to_kv(a), metrics_to_kv(b),
                        "merge path must be byte-identical to the run");
         }
-        // A corrupt entry is an error naming the file, not a bad merge.
+        // A corrupt (tampered) entry is a clean error naming the spec,
+        // not a bad merge.
         let entry = dir.join(format!("{}.kv", specs[0].fingerprint()));
-        std::fs::write(&entry, "version=0\n").unwrap();
+        let good = std::fs::read_to_string(&entry).unwrap();
+        std::fs::write(&entry, good.replace("cycles=", "cycles=9"))
+            .unwrap();
         let e = collect_cached(&dir, &specs).unwrap_err();
         assert!(e.contains("corrupt"), "got: {e}");
+        // A stale-version entry (older build) reads as absent — the
+        // merge reports it missing instead of blaming corruption.
+        std::fs::write(&entry, "version=0\n").unwrap();
+        let e = collect_cached(&dir, &specs).unwrap_err();
+        assert!(e.contains("missing cache entry"), "got: {e}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn explicit_cache_dir_is_used_and_hit() {
+    fn collect_stored_reads_any_store() {
+        let store = Store::mem();
+        let specs = vec![tiny("DICT", "flat"), tiny("DICT", "flat")];
+        let e = collect_stored(&store, &specs).unwrap_err();
+        assert!(e.contains("missing cache entry") && e.contains("mem"),
+                "got: {e}");
+        let cfg = SweepConfig {
+            workers: 1,
+            disk_cache: true,
+            store: Some(store.clone()),
+        };
+        let ran = run(&specs, &cfg);
+        let merged = collect_stored(&store, &specs).unwrap();
+        assert_eq!(merged.len(), 2, "duplicates share one entry");
+        assert_eq!(metrics_to_kv(&ran.metrics[0]),
+                   metrics_to_kv(&merged[1]));
+    }
+
+    #[test]
+    fn explicit_store_is_used_and_hit() {
         let dir = std::env::temp_dir().join(format!(
             "rainbow_sweep_cache_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -250,12 +294,12 @@ mod tests {
         let cfg = SweepConfig {
             workers: 1,
             disk_cache: true,
-            cache_dir: Some(dir.clone()),
+            store: Some(Store::fs(dir.clone())),
         };
         let a = run(&specs, &cfg);
         let entry = dir.join(format!("{}.kv", specs[0].fingerprint()));
         assert!(entry.is_file(), "cache entry must land in the explicit dir");
-        let b = run(&specs, &cfg); // served from the cache
+        let b = run(&specs, &cfg); // served from the store
         assert_eq!(metrics_to_kv(&a.metrics[0]), metrics_to_kv(&b.metrics[0]));
         let _ = std::fs::remove_dir_all(&dir);
     }

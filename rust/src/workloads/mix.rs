@@ -70,7 +70,8 @@ impl Workload {
             .map(|(n, apps)| Workload::mix_of(n, &apps, cores, scale, seed))
     }
 
-    /// All workload names of the evaluation (14 apps + 3 mixes).
+    /// All workload names of the evaluation (14 apps + the Table-V and
+    /// 8-app mixes).
     pub fn all_names() -> Vec<String> {
         let mut v: Vec<String> =
             AppProfile::all().iter().map(|p| p.name.to_string()).collect();
@@ -143,8 +144,30 @@ mod tests {
     }
 
     #[test]
-    fn seventeen_workloads() {
-        assert_eq!(Workload::all_names().len(), 17);
+    fn twentyone_workloads() {
+        // 14 apps + 3 Table-V mixes + 4 eight-app mixes.
+        assert_eq!(Workload::all_names().len(), 21);
+    }
+
+    #[test]
+    fn eight_app_mixes_assemble_one_app_per_core() {
+        for name in ["mixhot", "mixstream", "mixwide", "mixcap"] {
+            let mut w = Workload::by_name(name, 8, 64, 5)
+                .unwrap_or_else(|| panic!("mix {name} must resolve"));
+            assert_eq!(w.cores(), 8);
+            // Eight app slots: every core's stream lives in its own
+            // 1 TB address-space slot, and all eight slots are used.
+            let mut slots = std::collections::HashSet::new();
+            for c in 0..8 {
+                for _ in 0..50 {
+                    if let Op::Mem { vaddr, .. } = w.next_op(c) {
+                        slots.insert(vaddr / APP_STRIDE);
+                    }
+                }
+            }
+            assert_eq!(slots.len(), 8,
+                       "{name}: every core must get its own app slot");
+        }
     }
 
     #[test]

@@ -260,12 +260,36 @@ impl AppProfile {
     }
 }
 
-/// Multi-programmed mixes (Table V).
+/// Multi-programmed mixes: Table V's four-app mixes (each app on two
+/// of the eight cores) plus larger 8-app mixes (one app per core on
+/// the 8-core machine) that stress regimes Table V never reaches —
+/// every core competing for DRAM with hot working sets, pure streaming
+/// with almost nothing worth migrating, maximum app diversity, and
+/// capacity pressure from the largest-footprint apps all at once.
 pub fn mixes() -> Vec<(&'static str, Vec<&'static str>)> {
     vec![
         ("mix1", vec!["cactusADM", "soplex", "setCover", "MST"]),
         ("mix2", vec!["setCover", "BFS", "DICT", "mcf"]),
         ("mix3", vec!["canneal", "DICT", "MST", "soplex"]),
+        // All-hot-heavy: the eight highest hot-fraction profiles —
+        // every core's working set is a migration candidate, so the
+        // top-N monitor and the DRAM tier are maximally contended.
+        ("mixhot", vec!["setCover", "DICT", "MST", "streamcluster",
+                        "NPB-CG", "Linpack", "BFS", "soplex"]),
+        // All-streaming: high-spatial-locality, low-drift apps (two
+        // copies each, own address spaces) — row-buffer-friendly
+        // traffic where migration should barely trigger.
+        ("mixstream", vec!["streamcluster", "Linpack", "cactusADM",
+                           "bodytrack", "streamcluster", "Linpack",
+                           "cactusADM", "bodytrack"]),
+        // 8-app mixed: one core each across eight distinct profiles
+        // spanning the full locality/footprint spectrum.
+        ("mixwide", vec!["cactusADM", "mcf", "soplex", "canneal",
+                         "DICT", "BFS", "Graph500", "GUPS"]),
+        // Capacity-stress: the eight largest footprints simultaneously
+        // — DRAM-tier pressure and NVM residency at their worst.
+        ("mixcap", vec!["Graph500", "Linpack", "NPB-CG", "GUPS",
+                        "MST", "BFS", "setCover", "mcf"]),
     ]
 }
 
@@ -327,11 +351,36 @@ mod tests {
 
     #[test]
     fn mixes_reference_real_apps() {
-        for (_, apps) in mixes() {
-            assert_eq!(apps.len(), 4);
+        for (name, apps) in mixes() {
+            // Table V mixes pair 4 apps across 8 cores; the larger
+            // mixes give each of the 8 cores its own app slot.
+            assert!(apps.len() == 4 || apps.len() == 8,
+                    "{name}: {} apps", apps.len());
             for a in apps {
                 assert!(AppProfile::by_name(a).is_some(), "unknown app {a}");
             }
+        }
+    }
+
+    #[test]
+    fn eight_app_mixes_registered() {
+        let m = mixes();
+        assert_eq!(m.len(), 7, "3 Table-V mixes + 4 eight-app mixes");
+        for name in ["mixhot", "mixstream", "mixwide", "mixcap"] {
+            let (_, apps) = m
+                .iter()
+                .find(|(n, _)| *n == name)
+                .unwrap_or_else(|| panic!("mix {name} missing"));
+            assert_eq!(apps.len(), 8, "{name} must fill all 8 cores");
+        }
+        // mixwide really is 8 distinct apps; mixcap picks the giants.
+        let wide = &m.iter().find(|(n, _)| *n == "mixwide").unwrap().1;
+        let uniq: std::collections::HashSet<&&str> = wide.iter().collect();
+        assert_eq!(uniq.len(), 8);
+        let cap = &m.iter().find(|(n, _)| *n == "mixcap").unwrap().1;
+        for a in cap.iter() {
+            assert!(AppProfile::by_name(a).unwrap().footprint > GB,
+                    "{a} is not capacity-stressing");
         }
     }
 }

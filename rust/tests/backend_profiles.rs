@@ -57,7 +57,7 @@ fn specs_differing_only_in_backend_get_distinct_cache_entries() {
     let cfg = SweepConfig {
         workers: 2,
         disk_cache: true,
-        cache_dir: Some(dir.clone()),
+        store: Some(rainbow::report::Store::fs(dir.clone())),
     };
     let specs = vec![pcm.clone(), opt.clone()];
     let out = sweep::run(&specs, &cfg);

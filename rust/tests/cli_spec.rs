@@ -266,8 +266,9 @@ fn manual_covers_every_subcommand_knob_and_profile() {
     use rainbow::config::{knobs, profiles};
     let manual: &str =
         include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/MANUAL.md"));
-    for cmd in ["run", "sweep", "shard-worker", "backends", "figure",
-                "suite", "analyze", "storage", "list"] {
+    for cmd in ["run", "sweep", "shard-worker", "cache-server",
+                "backends", "figure", "suite", "analyze", "storage",
+                "list"] {
         assert!(manual.contains(&format!("`{cmd}`")),
                 "MANUAL.md must document the `{cmd}` subcommand");
     }
@@ -284,6 +285,30 @@ fn manual_covers_every_subcommand_knob_and_profile() {
     for key in ["specversion", "speclistversion", "manifestversion"] {
         assert!(manual.contains(key),
                 "MANUAL.md must describe the {key} format");
+    }
+    // The store surface: the --store argument forms and the wire
+    // protocol's integrity story must be documented for operators.
+    for needle in ["--store", "tcp://", "checksum"] {
+        assert!(manual.contains(needle),
+                "MANUAL.md must describe the results-store {needle} \
+                 surface");
+    }
+}
+
+/// The CLI's `--store` argument accepts exactly a directory or a
+/// `tcp://host:port`; everything else is a clear error (the same
+/// `Store::parse` the shard coordinator re-serializes onto child
+/// worker command lines).
+#[test]
+fn store_argument_forms() {
+    use rainbow::report::{Store, StoreKind};
+    let s = Store::parse("target/cli_store_test").unwrap();
+    assert_eq!(s.kind(), StoreKind::Fs);
+    let s = Store::parse("tcp://127.0.0.1:7700").unwrap();
+    assert_eq!(s.kind(), StoreKind::Net);
+    assert_eq!(s.addr(), "tcp://127.0.0.1:7700");
+    for bad in ["", "tcp://", "tcp://nohost", "tcp://h:x", "ftp://h:1"] {
+        assert!(Store::parse(bad).is_err(), "{bad:?} must be rejected");
     }
 }
 

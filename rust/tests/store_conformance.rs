@@ -1,0 +1,146 @@
+//! Conformance contract for every `CacheStore` implementation: one
+//! parameterized suite (get/put round-trip, missing key, list,
+//! concurrent puts of the same fingerprint, liveness) run against
+//! `FsStore`, `MemStore`, and `NetStore` — the latter talking to a
+//! real `CacheServer` on an ephemeral port in this process — plus
+//! per-store corrupt-entry rejection (a clean error naming the entry,
+//! never a panic, never silently different metrics) and the server's
+//! input hardening.
+
+use std::thread;
+
+use rainbow::report::netstore::CacheServer;
+use rainbow::report::serde_kv::metrics_to_kv;
+use rainbow::report::Store;
+use rainbow::sim::RunMetrics;
+
+fn sample_metrics(seed: u64) -> RunMetrics {
+    RunMetrics {
+        instructions: 1_000 + seed,
+        cycles: 5_000 + seed * 3,
+        mem_ops: 400 + seed,
+        migrations: seed,
+        energy_pj: 123.5 + seed as f64,
+        sp_hit_rate: 0.5,
+        ..RunMetrics::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rainbow_store_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The parameterized suite every store must pass.
+fn conformance(store: &Store, label: &str) {
+    // Missing key: a miss, not an error.
+    assert!(store.get("v2_missing_x_s8_i1_r0").unwrap().is_none(),
+            "{label}: missing key must read as None");
+    // Put/get round-trip is byte-identical through the kv encoding.
+    let m = sample_metrics(7);
+    store.put("fp_a", &m).unwrap();
+    let got = store.get("fp_a").unwrap().expect("fp_a stored");
+    assert_eq!(metrics_to_kv(&m), metrics_to_kv(&got),
+               "{label}: round-trip must preserve every field");
+    // Overwriting with the same bytes is legal (determinism makes all
+    // writers of one fingerprint agree).
+    store.put("fp_a", &m).unwrap();
+    // List returns every fingerprint, sorted.
+    store.put("fp_b", &sample_metrics(9)).unwrap();
+    let listed = store.list().unwrap();
+    assert!(listed.contains(&"fp_a".to_string())
+                && listed.contains(&"fp_b".to_string()),
+            "{label}: list must cover stored entries, got {listed:?}");
+    assert!(listed.windows(2).all(|w| w[0] <= w[1]),
+            "{label}: list must be sorted, got {listed:?}");
+    // Liveness probe.
+    store.ping().unwrap_or_else(|e| panic!("{label}: ping: {e}"));
+    // Concurrent puts of the SAME fingerprint must all succeed and
+    // leave an intact entry (atomic rename / mutexed map / server-side
+    // serialization — whichever, no torn result).
+    let m2 = sample_metrics(11);
+    thread::scope(|scope| {
+        for _ in 0..8 {
+            scope.spawn(|| store.put("fp_conc", &m2).unwrap());
+        }
+    });
+    let got = store.get("fp_conc").unwrap().expect("fp_conc stored");
+    assert_eq!(metrics_to_kv(&m2), metrics_to_kv(&got),
+               "{label}: concurrent puts must leave an intact entry");
+}
+
+#[test]
+fn fs_store_conformance_and_corruption() {
+    let dir = tmp_dir("fs");
+    let store = Store::fs(dir.clone());
+    conformance(&store, "FsStore");
+    // Corrupt-entry rejection: tamper a stored value behind the
+    // store's back — the checksum catches it as a clean error.
+    let path = dir.join("fp_a.kv");
+    let good = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, good.replace("cycles=", "cycles=9")).unwrap();
+    let e = store.get("fp_a").unwrap_err();
+    assert!(e.contains("corrupt") && e.contains("checksum"), "got: {e}");
+    // A stale-version entry (older build) is a miss, not corruption —
+    // re-simulation heals it transparently.
+    std::fs::write(&path, "version=1\nchecksum=0\n").unwrap();
+    assert!(store.get("fp_a").unwrap().is_none());
+    // Garbage that never was a metrics entry is corrupt.
+    std::fs::write(&path, "not a kv file\n").unwrap();
+    assert!(store.get("fp_a").is_err());
+    // In-flight temp files never show up in list().
+    std::fs::write(dir.join("fp_z.kv.tmp.1.0"), "partial").unwrap();
+    assert!(!store
+        .list()
+        .unwrap()
+        .iter()
+        .any(|fp| fp.contains("tmp")));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mem_store_conformance() {
+    conformance(&Store::mem(), "MemStore");
+}
+
+#[test]
+fn net_store_conformance_against_in_process_server() {
+    // Server fronting an in-memory store on an ephemeral port: the
+    // full shared-nothing client path, no filesystem involved.
+    let server = CacheServer::bind("127.0.0.1:0", Store::mem()).unwrap();
+    let hostport = server.local_addr().to_string();
+    let handle = server.spawn();
+    let store = Store::net(&hostport);
+    conformance(&store, "NetStore");
+    // Clean shutdown: acknowledged, accept loop drained, thread joined.
+    handle.stop().expect("clean cache-server shutdown");
+    // A stopped server is a clean client error, not a hang or panic.
+    let e = store.ping().unwrap_err();
+    assert!(e.contains(&hostport), "error must name the server: {e}");
+}
+
+#[test]
+fn net_store_surfaces_corruption_and_rejects_path_fingerprints() {
+    let dir = tmp_dir("net_fs");
+    let server =
+        CacheServer::bind("127.0.0.1:0", Store::fs(dir.clone())).unwrap();
+    let hostport = server.local_addr().to_string();
+    let handle = server.spawn();
+    let store = Store::net(&hostport);
+    store.put("fp_x", &sample_metrics(3)).unwrap();
+    // Corrupt the entry on disk behind the server: GET must surface
+    // the server-side integrity error verbatim, with the server named.
+    let path = dir.join("fp_x.kv");
+    let good = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, good.replace("cycles=", "cycles=9")).unwrap();
+    let e = store.get("fp_x").unwrap_err();
+    assert!(e.contains("corrupt") && e.contains(&hostport), "got: {e}");
+    // Path-shaped fingerprints cannot address files outside the store
+    // directory — rejected server-side before touching the fs.
+    assert!(store.get("../evil").is_err());
+    assert!(store.put("a/b", &sample_metrics(1)).is_err());
+    handle.stop().expect("clean cache-server shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -8,10 +8,11 @@
 //! executed by real child `rainbow shard-worker` processes and merged
 //! from the shared cache must match the serial replay byte-for-byte.
 
+use rainbow::report::netstore::CacheServer;
 use rainbow::report::serde_kv::{metrics_to_kv, spec_from_kv, spec_to_kv};
 use rainbow::report::shard::{self, ShardConfig};
 use rainbow::report::sweep::{self, SweepConfig};
-use rainbow::report::{run_cached_in, run_uncached, RunSpec};
+use rainbow::report::{run_cached_in, run_uncached, RunSpec, Store};
 
 fn tiny(workload: &str, policy: &str) -> RunSpec {
     RunSpec::new(workload, policy)
@@ -136,6 +137,77 @@ fn sharded_sweep_crosses_process_boundary_byte_identical() {
         listed += part.len();
     }
     assert_eq!(listed, unique);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The shared-nothing form of the same contract: coordinator and REAL
+/// child `rainbow shard-worker` processes share NOTHING but a TCP
+/// connection to an in-memory `cache-server` — no cache directory
+/// exists anywhere — and the merged metrics must still be
+/// byte-identical to a serial `run_uncached` replay (what `sweep
+/// --shards N --store tcp://... --check` asserts in CI).
+#[test]
+fn sharded_sweep_through_cache_server_no_shared_fs() {
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_netshard_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let server = CacheServer::bind("127.0.0.1:0", Store::mem())
+        .expect("bind ephemeral port");
+    let hostport = server.local_addr().to_string();
+    let handle = server.spawn();
+    let mut specs = matrix();
+    specs.push(specs[1].clone()); // duplicate shares one entry
+    let unique = matrix().len();
+    let cfg = ShardConfig {
+        parallel: 2,
+        cmd: Some(vec![env!("CARGO_BIN_EXE_rainbow").to_string(),
+                       "shard-worker".to_string()]),
+        ..ShardConfig::with_store(2, Store::net(&hostport),
+                                  dir.join("shards"))
+    };
+    let out = shard::run_sharded(&specs, &cfg).expect("net-sharded sweep");
+    assert_eq!(out.shards_run, 2);
+    assert_eq!(out.unique_runs, unique);
+    assert_eq!(out.metrics.len(), specs.len());
+    for (s, m) in specs.iter().zip(&out.metrics) {
+        assert_eq!(metrics_to_kv(&run_uncached(s)), metrics_to_kv(m),
+                   "{} x {} diverged through the cache server",
+                   s.workload, s.policy);
+    }
+    assert_eq!(metrics_to_kv(&out.metrics[1]),
+               metrics_to_kv(out.metrics.last().unwrap()),
+               "the duplicate must be served from the same entry");
+    // Every result lives in the server's memory, nowhere on disk: the
+    // workers were handed only `--store tcp://...`.
+    let held = Store::net(&hostport).list().expect("list");
+    assert_eq!(held.len(), unique);
+    handle.stop().expect("clean cache-server shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An unreachable cache server must fail a sharded sweep fast — one
+/// clean coordinator-side error before any child spawns, not N
+/// identical worker failures (or a hang).
+#[test]
+fn sharded_sweep_fails_fast_when_server_unreachable() {
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_netshard_down_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let specs = vec![
+        RunSpec::new("DICT", "flat").with_scale(64).with_instructions(20_000),
+    ];
+    // Reserve a port and close it so nothing is listening there.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let cfg = ShardConfig {
+        cmd: Some(vec![env!("CARGO_BIN_EXE_rainbow").to_string(),
+                       "shard-worker".to_string()]),
+        ..ShardConfig::with_store(2, Store::net(&dead), dir.join("shards"))
+    };
+    let e = shard::run_sharded(&specs, &cfg).unwrap_err();
+    assert!(e.contains("store unavailable"), "got: {e}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
