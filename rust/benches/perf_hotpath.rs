@@ -1,100 +1,45 @@
-//! Microbenchmarks of the simulation hot paths (EXPERIMENTS.md §Perf):
-//! raw policy access throughput per policy, the interval analytics
-//! (native vs PJRT when artifacts exist), and the workload generator.
-mod common;
+//! Microbenchmarks of the simulation hot paths (EXPERIMENTS.md §Perf),
+//! driving the shared [`rainbow::perf`] harness — the same stages,
+//! measurement, and `rainbow-bench-v1` JSON as the `rainbow perf`
+//! subcommand, so a cargo-bench run and a committed `BENCH_<n>.json`
+//! are directly comparable. Honors the `RAINBOW_BENCH_*` env caps;
+//! prints the per-stage lines as they complete, then the JSON report.
+//!
+//! The PJRT analytics path (when AOT artifacts exist) is benched here
+//! as an extra, outside the stable report schema.
 
-use std::time::Duration;
-
-use rainbow::config::Config;
-use rainbow::policies::{self, Policy};
-use rainbow::rainbow::counters::TwoStageCounters;
-use rainbow::rainbow::migration::UtilityParams;
-use rainbow::rainbow::RemapTable;
-use rainbow::runtime::{native, HotPageIdentifier, PjrtRuntime};
+use rainbow::perf::{run_suite, PerfConfig};
+use rainbow::runtime::PjrtRuntime;
 use rainbow::util::bench::{black_box, Bencher};
 use rainbow::util::rng::Rng;
-use rainbow::workloads::{AppProfile, Synth};
 
 fn main() {
-    let b = Bencher::new().warmup(Duration::from_millis(200)).samples(10);
+    let cfg = PerfConfig::from_env();
+    let report = run_suite(&cfg);
 
-    // Workload generator throughput.
-    let p = AppProfile::by_name("mcf").unwrap().scaled(8);
-    let mut synth = Synth::new(p, 0, 1);
-    b.run("synth::next_mem", || {
-        black_box(synth.next_mem());
-    });
-
-    // End-to-end access throughput per policy (the L3 hot path).
-    let cfg = Config::scaled(8);
-    for name in policies::all_names() {
-        let mut pol = policies::by_name(name, &cfg, false).unwrap();
-        let prof = AppProfile::by_name("DICT").unwrap().scaled(8);
-        let mut s = Synth::new(prof, 0, 2);
-        let mut now = 0u64;
-        b.run(&format!("policy::{name}::access"), || {
-            let (vaddr, w) = s.next_mem();
-            now += pol.access(0, vaddr, w, now) + 1;
-            black_box(now);
-        });
-    }
-
-    // Flat remap table: the per-access structure behind every
-    // superpage-TLB hit with a set bitmap bit (lookup-dominated mix).
-    let n_pages = 1usize << 20;
-    let n_frames = 1usize << 17;
-    let mut remap = RemapTable::with_capacity(n_pages, n_frames);
-    for f in 0..(n_frames as u64 / 2) {
-        remap.insert(f * 8, f); // every 8th page migrated
-    }
-    let mut rrng = Rng::new(0x51EE9);
-    b.run("remap::lookup(1Mi pages, 1/16 mapped)", || {
-        black_box(remap.lookup(rrng.below(n_pages as u64)));
-    });
-    b.run("remap::insert+remove", || {
-        let page = n_pages as u64 - 1;
-        let frame = n_frames as u64 - 1;
-        remap.insert(page, frame);
-        black_box(remap.remove(page));
-    });
-
-    // Interval analytics: native stage1+stage2 at artifact shapes.
-    let mut rng = Rng::new(3);
-    let reads: Vec<i32> =
-        (0..16384).map(|_| rng.below(0x8000) as i32).collect();
-    let writes: Vec<i32> =
-        (0..16384).map(|_| rng.below(0x8000) as i32).collect();
-    let params = [62.0f32, 547.0, 43.0, 91.0, 4096.0, 4096.0, 64.0, 3.0];
-    b.run("native::stage1(16384)", || {
-        black_box(native::stage1(&reads, &writes, &params, 128));
-    });
-    let pr: Vec<i32> = (0..128 * 512).map(|_| rng.below(0x8000) as i32).collect();
-    let pw: Vec<i32> = (0..128 * 512).map(|_| rng.below(0x8000) as i32).collect();
-    b.run("native::stage2(128x512)", || {
-        black_box(native::stage2(&pr, &pw, &params));
-    });
-
-    // PJRT path if artifacts exist.
+    // PJRT path if artifacts exist (not part of the report: artifact
+    // availability would make the schema's bench list machine-dependent).
     if let Ok(rt) = PjrtRuntime::load(&PjrtRuntime::default_dir()) {
-        b.run("pjrt::stage1(16384)", || {
+        let b = Bencher::from_env();
+        let mut rng = Rng::new(3);
+        let reads: Vec<i32> =
+            (0..16384).map(|_| rng.below(0x8000) as i32).collect();
+        let writes: Vec<i32> =
+            (0..16384).map(|_| rng.below(0x8000) as i32).collect();
+        let params = [62.0f32, 547.0, 43.0, 91.0, 4096.0, 4096.0, 64.0, 3.0];
+        b.run("pjrt.stage1(16384)", || {
             black_box(rt.stage1(&reads, &writes, &params).unwrap());
         });
-        b.run("pjrt::stage2(128x512)", || {
+        let pr: Vec<i32> =
+            (0..128 * 512).map(|_| rng.below(0x8000) as i32).collect();
+        let pw: Vec<i32> =
+            (0..128 * 512).map(|_| rng.below(0x8000) as i32).collect();
+        b.run("pjrt.stage2(128x512)", || {
             black_box(rt.stage2(&pr, &pw, &params).unwrap());
         });
     } else {
         println!("pjrt benches skipped (no artifacts)");
     }
 
-    // Full identifier pipeline through the facade.
-    let id = HotPageIdentifier::native();
-    let mut counters = TwoStageCounters::new(2048, 50);
-    for _ in 0..100_000 {
-        counters.record(rng.below(2048) as u32, rng.below(512) as u16,
-                        rng.chance(0.3));
-    }
-    let up = UtilityParams::from_config(&cfg);
-    b.run("identifier::select_top(2048)", || {
-        black_box(id.select_top(&counters, &up));
-    });
+    print!("{}", report.to_json().pretty());
 }

@@ -11,6 +11,45 @@ use crate::config::Config;
 
 use super::cache::{Cache, Writeback};
 
+/// Fixed-capacity dirty-victim buffer. One access displaces at most three
+/// dirty lines (an L1-spill escaping L3, an L2-spill escaping L3, and the
+/// demand fill's own L3 victim), so the outcome carries them inline — the
+/// old `Vec` put a heap allocation on every dirty-traffic access.
+#[derive(Clone, Copy, Debug)]
+pub struct WbBuf {
+    buf: [Writeback; 4],
+    len: u8,
+}
+
+impl Default for WbBuf {
+    fn default() -> WbBuf {
+        WbBuf { buf: [Writeback { addr: 0 }; 4], len: 0 }
+    }
+}
+
+impl WbBuf {
+    #[inline]
+    pub fn push(&mut self, wb: Writeback) {
+        assert!((self.len as usize) < self.buf.len(),
+                "more dirty victims than one access can displace");
+        self.buf[self.len as usize] = wb;
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[Writeback] {
+        &self.buf[..self.len as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// Result of a hierarchy access.
 #[derive(Clone, Debug, Default)]
 pub struct HierOutcome {
@@ -20,7 +59,7 @@ pub struct HierOutcome {
     pub llc_miss: bool,
     /// Dirty victim lines displaced at any level; the caller writes them
     /// to their home memory device.
-    pub writebacks: Vec<Writeback>,
+    pub writebacks: WbBuf,
 }
 
 #[derive(Clone, Debug)]
@@ -189,6 +228,31 @@ mod tests {
             }
         }
         assert!(got_wb, "dirty victims must eventually reach memory");
+    }
+
+    #[test]
+    fn wbbuf_holds_inline_victims() {
+        let mut b = WbBuf::default();
+        assert!(b.is_empty());
+        for i in 0..3u64 {
+            b.push(Writeback { addr: i * 64 });
+        }
+        assert_eq!(b.len(), 3);
+        let addrs: Vec<u64> = b.as_slice().iter().map(|w| w.addr).collect();
+        assert_eq!(addrs, vec![0, 64, 128]);
+    }
+
+    #[test]
+    fn heavy_dirty_traffic_never_overflows_wbbuf() {
+        // The inline buffer's bound (3 victims per access) must hold under
+        // sustained dirty thrashing; push() asserts on overflow.
+        let mut cfg = Config::scaled(8);
+        cfg.cores = 1;
+        let mut h = CacheHierarchy::new(&cfg);
+        for i in 0..200_000u64 {
+            let out = h.access(0, (i % 100_000) * 64, true);
+            assert!(out.writebacks.len() <= 3);
+        }
     }
 
     #[test]

@@ -4,4 +4,4 @@ pub mod cache;
 pub mod hierarchy;
 
 pub use cache::{Cache, CacheOutcome, CacheStats, Writeback};
-pub use hierarchy::{CacheHierarchy, HierOutcome};
+pub use hierarchy::{CacheHierarchy, HierOutcome, WbBuf};

@@ -12,6 +12,7 @@ pub mod cache;
 pub mod config;
 pub mod mem;
 pub mod os;
+pub mod perf;
 pub mod policies;
 pub mod rainbow;
 pub mod report;

@@ -121,6 +121,14 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "specs",
               help: "shard-worker: spec-list (.kv) file to execute",
               default: None, is_flag: false },
+    OptSpec { name: "out",
+              help: "perf: write the JSON report to FILE (e.g. \
+                     BENCH_6.json); default prints it to stdout",
+              default: None, is_flag: false },
+    OptSpec { name: "validate",
+              help: "perf: validate an existing report FILE against \
+                     the rainbow-bench-v1 schema and exit",
+              default: None, is_flag: false },
 ];
 
 const COMMANDS: &[(&str, &str)] = &[
@@ -138,6 +146,9 @@ const COMMANDS: &[(&str, &str)] = &[
                matrix runs separately: `backends` / --fig 16)"),
     ("analyze", "workload analytics (Fig 1 / Tables I-II) for --app"),
     ("storage", "Table VI storage-overhead model"),
+    ("perf", "measure hot-path throughput and emit a machine-readable \
+              rainbow-bench-v1 JSON report (--out FILE; --validate \
+              FILE checks an existing report)"),
     ("list", "list workloads and policies"),
 ];
 
@@ -227,6 +238,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
             figures::tab06_storage().emit(csv_path(args, "tab06").as_deref());
             Ok(())
         }
+        "perf" => cmd_perf(args),
         "list" => {
             println!("workloads: {}", report::all_workloads().join(", "));
             println!("policies : {}", report::policy_names().join(", "));
@@ -244,6 +256,43 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
         }
         other => Err(format!("unknown command {other:?}; try --help")),
     }
+}
+
+/// `perf`: run the hot-path throughput suite (`rainbow::perf`) and
+/// emit the versioned `rainbow-bench-v1` JSON report — the command
+/// behind the committed `BENCH_<n>.json` trajectory files (see
+/// EXPERIMENTS.md §Perf). `--validate FILE` instead checks an existing
+/// report against the schema, the drift guard CI's bench-smoke job
+/// runs. The `RAINBOW_BENCH_SAMPLES` / `RAINBOW_BENCH_WARMUP_MS` /
+/// `RAINBOW_BENCH_TARGET_MS` env caps shrink a run for smoke tests.
+fn cmd_perf(args: &Args) -> Result<(), String> {
+    use rainbow::perf;
+    use rainbow::util::json;
+    if let Some(path) = args.get("validate") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("--validate {path}: {e}"))?;
+        let doc = json::parse(&text)
+            .map_err(|e| format!("--validate {path}: {e}"))?;
+        perf::validate(&doc)
+            .map_err(|e| format!("--validate {path}: {e}"))?;
+        println!("{path}: valid {} report", perf::SCHEMA);
+        return Ok(());
+    }
+    let cfg = perf::PerfConfig::from_env();
+    let report = perf::run_suite(&cfg);
+    let text = report.to_json().pretty();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)
+                .map_err(|e| format!("--out {path}: {e}"))?;
+            println!("perf: {} report with {} benches written to {path} \
+                      (suite wall-clock {:.1}s)",
+                     perf::SCHEMA, report.benches.len(),
+                     report.wall_clock_s);
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {

@@ -262,6 +262,48 @@ mod tests {
         assert_eq!(g.reclaim, Reclaim::Clean { victim_owner: 2 });
     }
 
+    /// Churn regression for the lazy queues: a frame cycled through
+    /// clean -> dirty -> clean (via take) many times leaves a trail of
+    /// stale queue entries; every one must be discarded on pop, the
+    /// counts must stay exact, and reclaim order (free -> clean FIFO ->
+    /// dirty FIFO) must be computed only from *valid* entries.
+    #[test]
+    fn churned_frames_discard_stale_queue_entries() {
+        let mut m = DramMgr::new(2);
+        let a = m.take(1);
+        let b = m.take(2);
+        // Churn: repeatedly dirty both, then release + re-take so the
+        // same physical frames re-enter the clean queue under new gens.
+        for round in 0..50u64 {
+            m.mark_dirty(a.frame);
+            m.mark_dirty(b.frame);
+            assert_eq!((m.clean_count(), m.dirty_count()), (0, 2),
+                       "round {round}: counts must track churn exactly");
+            m.release(a.frame);
+            m.release(b.frame);
+            assert_eq!(m.free_count(), 2);
+            let g1 = m.take(100 + round);
+            let g2 = m.take(200 + round);
+            assert_eq!(g1.reclaim, Reclaim::Free);
+            assert_eq!(g2.reclaim, Reclaim::Free);
+            assert_eq!((m.clean_count(), m.dirty_count()), (2, 0));
+        }
+        // After heavy churn the queues hold dozens of stale entries.
+        // The next reclaims must skip all of them and evict the two
+        // *current* clean residents in FIFO order.
+        let g = m.take(7777);
+        assert_eq!(g.reclaim, Reclaim::Clean { victim_owner: 149 });
+        let g = m.take(8888);
+        assert_eq!(g.reclaim, Reclaim::Clean { victim_owner: 249 });
+        // And with everything dirty, dirty-FIFO falls back correctly.
+        m.mark_dirty(g.frame);
+        let other = if g.frame == a.frame { b.frame } else { a.frame };
+        m.mark_dirty(other);
+        let g = m.take(9999);
+        assert_eq!(g.reclaim, Reclaim::Dirty { victim_owner: 8888 });
+        assert_eq!(m.free_count() + m.clean_count() + m.dirty_count(), 2);
+    }
+
     /// Property: counts always partition the frame set — free + clean +
     /// dirty == total, and take() never double-grants a live frame.
     #[test]

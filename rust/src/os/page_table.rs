@@ -4,13 +4,28 @@
 //! Policies use one or both granularities: flat systems map 4 KB pages,
 //! superpage systems map 2 MB pages, Rainbow maps superpages in NVM plus
 //! a shadow 4 KB map for DRAM-cached hot pages.
+//!
+//! `translate` sits on the per-access hot path of every policy, so the
+//! table is a two-level chunked array rather than a HashMap (same
+//! flattening treatment as `rainbow::remap::RemapTable`): a directory
+//! indexed by `vpn >> CHUNK_BITS` holding lazily-allocated 4096-entry
+//! chunks of `u32` ppns, with `u32::MAX` as the not-mapped sentinel.
+//! Workload vaddrs are confined to a few sparse gigabyte-scale arenas, so
+//! the directory stays small and touched chunks are dense.
 
-use std::collections::HashMap;
+/// Entries per chunk (2^12); one chunk spans 16 MiB of 4 KB-page VA space.
+const CHUNK_BITS: u32 = 12;
+const CHUNK_LEN: usize = 1 << CHUNK_BITS;
+const CHUNK_MASK: u64 = CHUNK_LEN as u64 - 1;
+
+/// In-chunk sentinel for "no mapping".
+const NO_PPN: u32 = u32::MAX;
 
 /// One page-size mapping table.
 #[derive(Clone, Debug, Default)]
 pub struct PageTable {
-    map: HashMap<u64, u64>,
+    dir: Vec<Option<Box<[u32]>>>,
+    live: usize,
 }
 
 impl PageTable {
@@ -18,43 +33,110 @@ impl PageTable {
         PageTable::default()
     }
 
+    #[inline]
+    fn split(vpn: u64) -> (usize, usize) {
+        ((vpn >> CHUNK_BITS) as usize, (vpn & CHUNK_MASK) as usize)
+    }
+
+    #[inline]
     pub fn translate(&self, vpn: u64) -> Option<u64> {
-        self.map.get(&vpn).copied()
+        let (c, i) = Self::split(vpn);
+        match self.dir.get(c) {
+            Some(Some(chunk)) => {
+                let ppn = chunk[i];
+                if ppn == NO_PPN { None } else { Some(ppn as u64) }
+            }
+            _ => None,
+        }
+    }
+
+    /// Mutable slot for `vpn`, allocating directory + chunk as needed.
+    fn slot(&mut self, vpn: u64) -> &mut u32 {
+        let (c, i) = Self::split(vpn);
+        if c >= self.dir.len() {
+            self.dir.resize(c + 1, None);
+        }
+        let chunk = self.dir[c]
+            .get_or_insert_with(|| vec![NO_PPN; CHUNK_LEN].into_boxed_slice());
+        &mut chunk[i]
     }
 
     pub fn map(&mut self, vpn: u64, ppn: u64) {
-        self.map.insert(vpn, ppn);
+        assert!(ppn < NO_PPN as u64,
+                "ppn {ppn:#x} out of the table's u32 domain");
+        let slot = self.slot(vpn);
+        if *slot == NO_PPN {
+            self.live += 1;
+        }
+        *slot = ppn as u32;
     }
 
     /// Change an existing mapping (migration); returns the old ppn.
     pub fn remap(&mut self, vpn: u64, new_ppn: u64) -> Option<u64> {
-        self.map.insert(vpn, new_ppn)
+        assert!(new_ppn < NO_PPN as u64,
+                "ppn {new_ppn:#x} out of the table's u32 domain");
+        let slot = self.slot(vpn);
+        let old = *slot;
+        *slot = new_ppn as u32;
+        if old == NO_PPN {
+            self.live += 1;
+            None
+        } else {
+            Some(old as u64)
+        }
     }
 
     pub fn unmap(&mut self, vpn: u64) -> Option<u64> {
-        self.map.remove(&vpn)
+        let (c, i) = Self::split(vpn);
+        match self.dir.get_mut(c) {
+            Some(Some(chunk)) => {
+                let old = chunk[i];
+                if old == NO_PPN {
+                    None
+                } else {
+                    chunk[i] = NO_PPN;
+                    self.live -= 1;
+                    Some(old as u64)
+                }
+            }
+            _ => None,
+        }
     }
 
     pub fn is_mapped(&self, vpn: u64) -> bool {
-        self.map.contains_key(&vpn)
+        self.translate(vpn).is_some()
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.live == 0
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = (&u64, &u64)> {
-        self.map.iter()
+    /// All live mappings in ascending vpn order (off the hot path).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.dir.iter().enumerate().flat_map(|(c, chunk)| {
+            chunk.iter().flat_map(move |chunk| {
+                chunk.iter().enumerate().filter_map(move |(i, &ppn)| {
+                    if ppn == NO_PPN {
+                        None
+                    } else {
+                        Some((((c as u64) << CHUNK_BITS) | i as u64,
+                              ppn as u64))
+                    }
+                })
+            })
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{forall_shrink, shrink_vec};
+    use std::collections::HashMap;
 
     #[test]
     fn map_translate_unmap() {
@@ -73,5 +155,115 @@ mod tests {
         pt.map(5, 50);
         assert_eq!(pt.remap(5, 99), Some(50));
         assert_eq!(pt.translate(5), Some(99));
+    }
+
+    #[test]
+    fn chunk_boundaries_are_distinct_slots() {
+        let mut pt = PageTable::new();
+        // Neighbors across a chunk boundary and far-apart chunks.
+        for &vpn in &[0u64, CHUNK_MASK, CHUNK_MASK + 1, 1 << 28, 1 << 36] {
+            pt.map(vpn, vpn & 0xFFFF);
+        }
+        assert_eq!(pt.len(), 5);
+        for &vpn in &[0u64, CHUNK_MASK, CHUNK_MASK + 1, 1 << 28, 1 << 36] {
+            assert_eq!(pt.translate(vpn), Some(vpn & 0xFFFF));
+        }
+        assert_eq!(pt.translate(1), None);
+    }
+
+    #[test]
+    fn iter_is_sorted_and_complete() {
+        let mut pt = PageTable::new();
+        for &vpn in &[77u64, 3, CHUNK_MASK + 9, 3 + (1 << 20)] {
+            pt.map(vpn, vpn * 2);
+        }
+        let got: Vec<(u64, u64)> = pt.iter().collect();
+        let mut want: Vec<(u64, u64)> =
+            [77u64, 3, CHUNK_MASK + 9, 3 + (1 << 20)]
+                .iter().map(|&v| (v, v * 2)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "u32 domain")]
+    fn oversized_ppn_panics() {
+        let mut pt = PageTable::new();
+        pt.map(1, u32::MAX as u64);
+    }
+
+    /// Property: the chunked table behaves exactly like a HashMap model
+    /// under arbitrary map/remap/unmap interleavings.
+    #[test]
+    fn prop_matches_hashmap_model() {
+        type Op = (u8, u64, u64); // (kind, vpn, ppn)
+        let mut gen = |r: &mut crate::util::rng::Rng| {
+            (0..r.below(120))
+                .map(|_| {
+                    // Cluster vpns so ops actually collide, with a few
+                    // far-flung outliers to exercise directory growth.
+                    let vpn = if r.chance(0.1) {
+                        r.below(1 << 30)
+                    } else {
+                        r.below(3) * (CHUNK_LEN as u64) + r.below(48)
+                    };
+                    (r.below(3) as u8, vpn, r.below(1 << 20))
+                })
+                .collect::<Vec<Op>>()
+        };
+        let mut prop = |ops: &Vec<Op>| -> Result<(), String> {
+            let mut pt = PageTable::new();
+            let mut model: HashMap<u64, u64> = HashMap::new();
+            for &(kind, vpn, ppn) in ops {
+                match kind {
+                    0 => {
+                        pt.map(vpn, ppn);
+                        model.insert(vpn, ppn);
+                    }
+                    1 => {
+                        let got = pt.remap(vpn, ppn);
+                        let want = model.insert(vpn, ppn);
+                        if got != want {
+                            return Err(format!(
+                                "remap({vpn}): {got:?} != {want:?}"));
+                        }
+                    }
+                    _ => {
+                        let got = pt.unmap(vpn);
+                        let want = model.remove(&vpn);
+                        if got != want {
+                            return Err(format!(
+                                "unmap({vpn}): {got:?} != {want:?}"));
+                        }
+                    }
+                }
+                if pt.len() != model.len() {
+                    return Err(format!("len {} != model {}",
+                                       pt.len(), model.len()));
+                }
+            }
+            for (&vpn, &ppn) in &model {
+                if pt.translate(vpn) != Some(ppn) {
+                    return Err(format!("translate({vpn}) lost {ppn}"));
+                }
+                if !pt.is_mapped(vpn) {
+                    return Err(format!("is_mapped({vpn}) false"));
+                }
+            }
+            let mut live: Vec<(u64, u64)> = pt.iter().collect();
+            let mut want: Vec<(u64, u64)> =
+                model.iter().map(|(&v, &p)| (v, p)).collect();
+            want.sort_unstable();
+            if live != want {
+                return Err("iter() disagrees with model".into());
+            }
+            live.dedup_by_key(|e| e.0);
+            if live.len() != model.len() {
+                return Err("iter() emitted duplicate vpns".into());
+            }
+            Ok(())
+        };
+        forall_shrink("page-table-model", 0x9A6E, 80, &mut gen,
+                      shrink_vec, &mut prop);
     }
 }

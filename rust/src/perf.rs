@@ -1,0 +1,491 @@
+//! Machine-readable hot-path throughput harness.
+//!
+//! One code path serves three callers — the `rainbow perf` CLI
+//! subcommand, the `perf_hotpath` bench binary, and the tier-1 schema
+//! tests — so the committed `BENCH_<n>.json` trajectory files, the CI
+//! bench-smoke job, and local runs can never disagree on what is
+//! measured or how it is serialized.
+//!
+//! The report schema is versioned (`rainbow-bench-v1`): top-level
+//! `schema` / `config` (with a reproducibility fingerprint) /
+//! `wall_clock_s` / `benches`, each bench carrying `name`, `iters`,
+//! `ns_per_op`, and `ops_per_sec`. [`validate`] rejects any structural
+//! drift, so a future PR that changes the shape must bump the schema
+//! string and the committed reports together.
+
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::policies::{self, Policy};
+use crate::rainbow::counters::TwoStageCounters;
+use crate::rainbow::migration::UtilityParams;
+use crate::rainbow::RemapTable;
+use crate::runtime::HotPageIdentifier;
+use crate::tlb::CoreTlbs;
+use crate::util::bench::{black_box, Bencher, Measurement};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workloads::{AppProfile, Synth};
+
+/// Schema identifier stamped into (and required of) every report.
+pub const SCHEMA: &str = "rainbow-bench-v1";
+
+/// Everything that shapes a perf run — scale/seed pick the simulated
+/// machine and workload stream, the rest budget the measurement. The
+/// whole struct is serialized into the report (plus a one-line
+/// fingerprint) so a reading is never detached from how it was taken.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PerfConfig {
+    /// Capacity scale divisor vs the paper's Table IV machine.
+    pub scale: u64,
+    /// Workload RNG seed.
+    pub seed: u64,
+    /// Timed samples per benchmark.
+    pub samples: usize,
+    /// Warmup budget per benchmark (ms).
+    pub warmup_ms: u64,
+    /// Per-sample time budget iterations auto-scale toward (ms).
+    pub target_ms: u64,
+}
+
+impl Default for PerfConfig {
+    fn default() -> Self {
+        PerfConfig {
+            scale: 8,
+            seed: 1,
+            samples: 10,
+            warmup_ms: 200,
+            target_ms: 10,
+        }
+    }
+}
+
+impl PerfConfig {
+    /// Defaults with the `RAINBOW_BENCH_SAMPLES` /
+    /// `RAINBOW_BENCH_WARMUP_MS` / `RAINBOW_BENCH_TARGET_MS` env caps
+    /// applied (the CI bench-smoke job shrinks a run to milliseconds
+    /// with these; they are recorded in the fingerprint).
+    pub fn from_env() -> Self {
+        fn env_u64(key: &str) -> Option<u64> {
+            std::env::var(key).ok().and_then(|v| v.parse().ok())
+        }
+        let mut c = PerfConfig::default();
+        if let Some(n) = env_u64("RAINBOW_BENCH_SAMPLES") {
+            c.samples = (n as usize).max(1);
+        }
+        if let Some(ms) = env_u64("RAINBOW_BENCH_WARMUP_MS") {
+            c.warmup_ms = ms;
+        }
+        if let Some(ms) = env_u64("RAINBOW_BENCH_TARGET_MS") {
+            c.target_ms = ms;
+        }
+        c
+    }
+
+    /// One-line self-describing reproducibility key.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "rainbow-perf scale={} seed={} samples={} warmup_ms={} \
+             target_ms={}",
+            self.scale, self.seed, self.samples, self.warmup_ms,
+            self.target_ms)
+    }
+
+    fn bencher(&self) -> Bencher {
+        Bencher::new()
+            .warmup(Duration::from_millis(self.warmup_ms))
+            .samples(self.samples)
+            .target_per_sample(Duration::from_millis(self.target_ms))
+    }
+}
+
+/// One benchmark's published figures.
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    pub name: String,
+    /// Total iterations timed (across all samples).
+    pub iters: u64,
+    /// Median per-operation cost.
+    pub ns_per_op: f64,
+    /// Reciprocal throughput (accesses/sec for the access benches).
+    pub ops_per_sec: f64,
+}
+
+impl From<Measurement> for BenchEntry {
+    fn from(m: Measurement) -> BenchEntry {
+        BenchEntry {
+            iters: m.total_iters(),
+            ns_per_op: m.ns_per_op(),
+            ops_per_sec: m.ops_per_sec(),
+            name: m.name,
+        }
+    }
+}
+
+/// A complete perf run: per-stage figures plus suite wall-clock.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    pub config: PerfConfig,
+    /// End-to-end harness wall-clock (setup + warmup + sampling).
+    pub wall_clock_s: f64,
+    pub benches: Vec<BenchEntry>,
+}
+
+impl PerfReport {
+    /// Serialize to the `rainbow-bench-v1` document ([`validate`]
+    /// accepts exactly this shape).
+    pub fn to_json(&self) -> Json {
+        let c = &self.config;
+        Json::Obj(vec![
+            ("schema".into(), Json::Str(SCHEMA.into())),
+            ("config".into(), Json::Obj(vec![
+                ("scale".into(), Json::Num(c.scale as f64)),
+                ("seed".into(), Json::Num(c.seed as f64)),
+                ("samples".into(), Json::Num(c.samples as f64)),
+                ("warmup_ms".into(), Json::Num(c.warmup_ms as f64)),
+                ("target_ms".into(), Json::Num(c.target_ms as f64)),
+                ("fingerprint".into(), Json::Str(c.fingerprint())),
+            ])),
+            ("wall_clock_s".into(), Json::Num(self.wall_clock_s)),
+            ("benches".into(), Json::Arr(
+                self.benches.iter().map(|b| Json::Obj(vec![
+                    ("name".into(), Json::Str(b.name.clone())),
+                    ("iters".into(), Json::Num(b.iters as f64)),
+                    ("ns_per_op".into(), Json::Num(b.ns_per_op)),
+                    ("ops_per_sec".into(), Json::Num(b.ops_per_sec)),
+                ])).collect())),
+        ])
+    }
+}
+
+/// The hot-path stages every report must cover (beyond the per-policy
+/// `policy.<name>.access` entries): workload generation, remap-table
+/// lookup, split-TLB lookup, and the two interval-analytics stages.
+pub const REQUIRED_STAGES: [&str; 5] = [
+    "synth.next_mem",
+    "remap.lookup",
+    "tlb.lookup",
+    "analytics.select_top",
+    "analytics.classify",
+];
+
+/// Run the full hot-path suite and collect the report.
+pub fn run_suite(cfg: &PerfConfig) -> PerfReport {
+    let t0 = Instant::now();
+    let b = cfg.bencher();
+    let mut benches: Vec<BenchEntry> = Vec::new();
+
+    // Stage: workload generation (the simulator's input side).
+    let prof = AppProfile::by_name("mcf").unwrap().scaled(cfg.scale);
+    let mut synth = Synth::new(prof, 0, cfg.seed);
+    benches.push(b.run("synth.next_mem", || {
+        black_box(synth.next_mem());
+    }).into());
+
+    // Stage: end-to-end `Policy::access` per policy (the L3-miss hot
+    // path: translation, counters, tier access, interval machinery).
+    let config = Config::scaled(cfg.scale);
+    for name in policies::all_names() {
+        let mut pol = policies::by_name(name, &config, false).unwrap();
+        let prof = AppProfile::by_name("DICT").unwrap().scaled(cfg.scale);
+        let mut s = Synth::new(prof, 0, cfg.seed.wrapping_add(1));
+        let mut now = 0u64;
+        benches.push(b.run(&format!("policy.{name}.access"), || {
+            let (vaddr, is_write) = s.next_mem();
+            now += pol.access(0, vaddr, is_write, now) + 1;
+            black_box(now);
+        }).into());
+    }
+
+    // Stage: flat remap-table lookup (behind every superpage-TLB hit
+    // with a set bitmap bit; 1 Mi pages, 1/16 migrated).
+    let n_pages = 1usize << 20;
+    let n_frames = 1usize << 17;
+    let mut remap = RemapTable::with_capacity(n_pages, n_frames);
+    for f in 0..(n_frames as u64 / 2) {
+        remap.insert(f * 8, f);
+    }
+    let mut rr = Rng::new(cfg.seed.wrapping_add(2));
+    benches.push(b.run("remap.lookup", || {
+        black_box(remap.lookup(rr.below(n_pages as u64)));
+    }).into());
+
+    // Stage: the parallel split-TLB lookup over a hot 2 MB region
+    // (mixed 4K/SP hits and misses).
+    let mut tlbs = CoreTlbs::new(&config);
+    for vpn in 0..64u64 {
+        tlbs.insert_4k(vpn, vpn + 1000);
+    }
+    tlbs.insert_2m(0, 1);
+    let mut tr = Rng::new(cfg.seed.wrapping_add(3));
+    benches.push(b.run("tlb.lookup", || {
+        black_box(tlbs.lookup(tr.below(1 << 21)).cycles());
+    }).into());
+
+    // Stage: interval analytics at artifact shapes — stage-1 top-N
+    // selection over every superpage, stage-2 classification of the
+    // monitored slots' 4 KB counters.
+    let id = HotPageIdentifier::native();
+    let mut counters = TwoStageCounters::new(2048, 50);
+    counters.rotate(&(0..50).collect::<Vec<u32>>());
+    let mut cr = Rng::new(cfg.seed.wrapping_add(4));
+    for _ in 0..100_000 {
+        counters.record(cr.below(2048) as u32, cr.below(512) as u16,
+                        cr.chance(0.3));
+    }
+    let up = UtilityParams::from_config(&config);
+    benches.push(b.run("analytics.select_top", || {
+        black_box(id.select_top(&counters, &up));
+    }).into());
+    benches.push(b.run("analytics.classify", || {
+        black_box(id.classify(&counters, &up));
+    }).into());
+
+    PerfReport {
+        config: cfg.clone(),
+        wall_clock_s: t0.elapsed().as_secs_f64(),
+        benches,
+    }
+}
+
+fn field<'a>(obj: &'a Json, key: &str, what: &str)
+             -> Result<&'a Json, String> {
+    obj.get(key).ok_or_else(|| format!("{what}: missing field {key:?}"))
+}
+
+fn num_field(obj: &Json, key: &str, what: &str) -> Result<f64, String> {
+    field(obj, key, what)?
+        .as_f64()
+        .ok_or_else(|| format!("{what}: field {key:?} must be a number"))
+}
+
+/// Validate a parsed document against the `rainbow-bench-v1` schema.
+/// Structural drift (wrong schema string, missing/ill-typed fields,
+/// empty or duplicate benches, ns/op and ops/sec disagreeing) is an
+/// error naming the offending field.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    if doc.as_obj().is_none() {
+        return Err("report: document must be a JSON object".into());
+    }
+    let schema = field(doc, "schema", "report")?
+        .as_str()
+        .ok_or("report: field \"schema\" must be a string")?;
+    if schema != SCHEMA {
+        return Err(format!(
+            "report: schema {schema:?} is not the supported {SCHEMA:?}"));
+    }
+
+    let config = field(doc, "config", "report")?;
+    if config.as_obj().is_none() {
+        return Err("report: field \"config\" must be an object".into());
+    }
+    for key in ["scale", "seed", "samples", "warmup_ms", "target_ms"] {
+        field(config, key, "config")?
+            .as_u64()
+            .ok_or_else(|| format!(
+                "config: field {key:?} must be a non-negative integer"))?;
+    }
+    let fp = field(config, "fingerprint", "config")?
+        .as_str()
+        .ok_or("config: field \"fingerprint\" must be a string")?;
+    if fp.is_empty() {
+        return Err("config: fingerprint must be non-empty".into());
+    }
+
+    let wall = num_field(doc, "wall_clock_s", "report")?;
+    if !(wall >= 0.0 && wall.is_finite()) {
+        return Err("report: wall_clock_s must be a finite non-negative \
+                    number".into());
+    }
+
+    let benches = field(doc, "benches", "report")?
+        .as_arr()
+        .ok_or("report: field \"benches\" must be an array")?;
+    if benches.is_empty() {
+        return Err("report: benches must be non-empty".into());
+    }
+    let mut names: Vec<&str> = Vec::with_capacity(benches.len());
+    for (i, b) in benches.iter().enumerate() {
+        let what = format!("benches[{i}]");
+        if b.as_obj().is_none() {
+            return Err(format!("{what}: must be an object"));
+        }
+        let name = field(b, "name", &what)?
+            .as_str()
+            .ok_or_else(|| format!("{what}: field \"name\" must be a \
+                                    string"))?;
+        if name.is_empty() {
+            return Err(format!("{what}: name must be non-empty"));
+        }
+        if names.contains(&name) {
+            return Err(format!("{what}: duplicate bench name {name:?}"));
+        }
+        names.push(name);
+        let iters = field(b, "iters", &what)?
+            .as_u64()
+            .ok_or_else(|| format!(
+                "{what}: field \"iters\" must be a non-negative integer"))?;
+        if iters == 0 {
+            return Err(format!("{what}: iters must be >= 1"));
+        }
+        let ns = num_field(b, "ns_per_op", &what)?;
+        let ops = num_field(b, "ops_per_sec", &what)?;
+        if !(ns > 0.0 && ns.is_finite()) || !(ops > 0.0 && ops.is_finite()) {
+            return Err(format!(
+                "{what}: ns_per_op/ops_per_sec must be positive finite"));
+        }
+        // The two are one measurement in reciprocal views; a report
+        // where they disagree was edited by hand or emitted by a
+        // drifted writer.
+        let implied = 1e9 / ns;
+        if (implied - ops).abs() > 0.05 * implied {
+            return Err(format!(
+                "{what}: ops_per_sec {ops} disagrees with 1e9/ns_per_op \
+                 = {implied}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tiny() -> PerfConfig {
+        PerfConfig {
+            scale: 64,
+            seed: 7,
+            samples: 1,
+            warmup_ms: 1,
+            target_ms: 1,
+        }
+    }
+
+    #[test]
+    fn suite_covers_stages_and_roundtrips_valid_json() {
+        let report = run_suite(&tiny());
+        let names: Vec<&str> =
+            report.benches.iter().map(|b| b.name.as_str()).collect();
+        for stage in REQUIRED_STAGES {
+            assert!(names.contains(&stage), "missing stage {stage}");
+        }
+        for pol in policies::all_names() {
+            let n = format!("policy.{pol}.access");
+            assert!(names.iter().any(|&x| x == n), "missing {n}");
+        }
+        assert!(report.wall_clock_s > 0.0);
+        // Serialize -> parse -> validate: the committed-report path.
+        let text = report.to_json().pretty();
+        let doc = json::parse(&text).expect("emitted JSON must parse");
+        validate(&doc).expect("emitted JSON must validate");
+    }
+
+    fn valid_doc() -> Json {
+        let report = PerfReport {
+            config: PerfConfig::default(),
+            wall_clock_s: 1.5,
+            benches: vec![
+                BenchEntry {
+                    name: "synth.next_mem".into(),
+                    iters: 1000,
+                    ns_per_op: 40.0,
+                    ops_per_sec: 25_000_000.0,
+                },
+                BenchEntry {
+                    name: "remap.lookup".into(),
+                    iters: 2000,
+                    ns_per_op: 8.0,
+                    ops_per_sec: 125_000_000.0,
+                },
+            ],
+        };
+        report.to_json()
+    }
+
+    fn set(doc: &mut Json, key: &str, v: Json) {
+        let Json::Obj(fields) = doc else { panic!("not an object") };
+        match fields.iter_mut().find(|(k, _)| k == key) {
+            Some((_, slot)) => *slot = v,
+            None => fields.push((key.to_string(), v)),
+        }
+    }
+
+    #[test]
+    fn validator_accepts_the_emitted_shape() {
+        validate(&valid_doc()).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_schema_drift() {
+        let mut d = valid_doc();
+        set(&mut d, "schema", Json::Str("rainbow-bench-v0".into()));
+        let e = validate(&d).unwrap_err();
+        assert!(e.contains("schema"), "got: {e}");
+
+        let mut d = valid_doc();
+        set(&mut d, "benches", Json::Arr(vec![]));
+        assert!(validate(&d).unwrap_err().contains("non-empty"));
+
+        let mut d = valid_doc();
+        set(&mut d, "wall_clock_s", Json::Str("fast".into()));
+        assert!(validate(&d).unwrap_err().contains("wall_clock_s"));
+
+        // A bench losing a field is drift, not a tolerated extension.
+        let mut d = valid_doc();
+        if let Some(Json::Arr(benches)) = match &mut d {
+            Json::Obj(f) => f.iter_mut()
+                .find(|(k, _)| k == "benches")
+                .map(|(_, v)| v),
+            _ => None,
+        } {
+            if let Json::Obj(fields) = &mut benches[0] {
+                fields.retain(|(k, _)| k != "iters");
+            }
+        }
+        let e = validate(&d).unwrap_err();
+        assert!(e.contains("iters"), "got: {e}");
+    }
+
+    #[test]
+    fn validator_rejects_inconsistent_reciprocals() {
+        let mut d = valid_doc();
+        if let Json::Obj(f) = &mut d {
+            let benches = f.iter_mut()
+                .find(|(k, _)| k == "benches")
+                .map(|(_, v)| v)
+                .unwrap();
+            if let Json::Arr(items) = benches {
+                set(&mut items[0], "ops_per_sec", Json::Num(1.0));
+            }
+        }
+        let e = validate(&d).unwrap_err();
+        assert!(e.contains("disagrees"), "got: {e}");
+    }
+
+    #[test]
+    fn validator_rejects_duplicate_names() {
+        let mut d = valid_doc();
+        if let Json::Obj(f) = &mut d {
+            let benches = f.iter_mut()
+                .find(|(k, _)| k == "benches")
+                .map(|(_, v)| v)
+                .unwrap();
+            if let Json::Arr(items) = benches {
+                set(&mut items[1], "name",
+                    Json::Str("synth.next_mem".into()));
+            }
+        }
+        let e = validate(&d).unwrap_err();
+        assert!(e.contains("duplicate"), "got: {e}");
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_self_describing() {
+        let c = PerfConfig::default();
+        assert_eq!(
+            c.fingerprint(),
+            "rainbow-perf scale=8 seed=1 samples=10 warmup_ms=200 \
+             target_ms=10");
+    }
+}

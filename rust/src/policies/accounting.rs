@@ -1,0 +1,283 @@
+//! Flat per-interval accounting structures shared by the HSCC policies.
+//!
+//! HSCC counts at TLB level, i.e. its counter update sits on *every*
+//! access — the per-access HashMap `entry()` was one of the hottest
+//! operations in the whole simulator. These are the same flattening
+//! moves as `rainbow::remap::RemapTable`, property-tested against
+//! HashMap models below:
+//!
+//! * [`IntervalCounters`]: vpn -> (reads, writes) as a chunked two-level
+//!   array plus a touched-vpn list, so the hot-path update is two indexed
+//!   stores and the interval scan/clear is O(pages touched) in a
+//!   deterministic first-touch order (the HashMap iterated in random
+//!   order, which made equal-benefit migration ties nondeterministic).
+//! * [`FrameOwners`]: DRAM frame -> owning vpn as a dense array with a
+//!   `u64::MAX` sentinel (frames are small dense indices by construction).
+
+const CHUNK_BITS: u32 = 12;
+const CHUNK_LEN: usize = 1 << CHUNK_BITS;
+const CHUNK_MASK: u64 = CHUNK_LEN as u64 - 1;
+
+/// Per-interval (reads, writes) counters keyed by virtual page number.
+#[derive(Clone, Debug, Default)]
+pub struct IntervalCounters {
+    dir: Vec<Option<Box<[(u32, u32)]>>>,
+    /// Distinct vpns counted this interval, in first-touch order.
+    touched: Vec<u64>,
+}
+
+impl IntervalCounters {
+    pub fn new() -> IntervalCounters {
+        IntervalCounters::default()
+    }
+
+    /// Count one access (hot path: two indexed loads + a store).
+    #[inline]
+    pub fn record(&mut self, vpn: u64, is_write: bool) {
+        let (c, i) = ((vpn >> CHUNK_BITS) as usize,
+                      (vpn & CHUNK_MASK) as usize);
+        if c >= self.dir.len() {
+            self.dir.resize(c + 1, None);
+        }
+        let chunk = self.dir[c].get_or_insert_with(|| {
+            vec![(0u32, 0u32); CHUNK_LEN].into_boxed_slice()
+        });
+        let e = &mut chunk[i];
+        if e.0 == 0 && e.1 == 0 {
+            self.touched.push(vpn);
+        }
+        if is_write {
+            e.1 += 1;
+        } else {
+            e.0 += 1;
+        }
+    }
+
+    /// Counters of one vpn ((0, 0) if untouched).
+    pub fn get(&self, vpn: u64) -> (u32, u32) {
+        let (c, i) = ((vpn >> CHUNK_BITS) as usize,
+                      (vpn & CHUNK_MASK) as usize);
+        match self.dir.get(c) {
+            Some(Some(chunk)) => chunk[i],
+            _ => (0, 0),
+        }
+    }
+
+    /// Distinct pages touched this interval.
+    pub fn len(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+
+    /// All touched pages as (vpn, reads, writes), in first-touch order
+    /// (deterministic, unlike the HashMap this replaces).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u32, u32)> + '_ {
+        self.touched.iter().map(move |&vpn| {
+            let (r, w) = self.get(vpn);
+            (vpn, r, w)
+        })
+    }
+
+    /// Reset for the next interval: O(pages touched), keeps chunks
+    /// allocated for reuse.
+    pub fn clear(&mut self) {
+        for i in 0..self.touched.len() {
+            let vpn = self.touched[i];
+            let (c, j) = ((vpn >> CHUNK_BITS) as usize,
+                          (vpn & CHUNK_MASK) as usize);
+            if let Some(Some(chunk)) = self.dir.get_mut(c) {
+                chunk[j] = (0, 0);
+            }
+        }
+        self.touched.clear();
+    }
+}
+
+/// Sentinel: frame owns nothing.
+const NO_OWNER: u64 = u64::MAX;
+
+/// DRAM frame -> owning vpn, dense (frames come from `DramMgr` and are
+/// `< n_frames` by construction).
+#[derive(Clone, Debug)]
+pub struct FrameOwners {
+    owners: Vec<u64>,
+}
+
+impl FrameOwners {
+    pub fn new(n_frames: usize) -> FrameOwners {
+        FrameOwners { owners: vec![NO_OWNER; n_frames] }
+    }
+
+    pub fn set(&mut self, frame: u64, vpn: u64) {
+        assert_ne!(vpn, NO_OWNER, "vpn collides with the empty sentinel");
+        self.owners[frame as usize] = vpn;
+    }
+
+    pub fn get(&self, frame: u64) -> Option<u64> {
+        let o = self.owners[frame as usize];
+        (o != NO_OWNER).then_some(o)
+    }
+
+    /// Remove and return the owner (None if the frame was empty).
+    pub fn take(&mut self, frame: u64) -> Option<u64> {
+        let o = std::mem::replace(&mut self.owners[frame as usize], NO_OWNER);
+        (o != NO_OWNER).then_some(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall_shrink, shrink_vec};
+    use std::collections::HashMap;
+
+    #[test]
+    fn record_get_clear() {
+        let mut c = IntervalCounters::new();
+        assert!(c.is_empty());
+        c.record(7, false);
+        c.record(7, true);
+        c.record(7, true);
+        assert_eq!(c.get(7), (1, 2));
+        assert_eq!(c.get(8), (0, 0));
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(7), (0, 0));
+    }
+
+    #[test]
+    fn iter_is_first_touch_order() {
+        let mut c = IntervalCounters::new();
+        for &vpn in &[9u64, 2, CHUNK_MASK + 3, 2, 9] {
+            c.record(vpn, false);
+        }
+        let order: Vec<u64> = c.iter().map(|(v, _, _)| v).collect();
+        assert_eq!(order, vec![9, 2, CHUNK_MASK + 3]);
+        assert_eq!(c.iter().find(|&(v, _, _)| v == 9).unwrap(), (9, 2, 0));
+    }
+
+    #[test]
+    fn clear_reuses_across_intervals() {
+        let mut c = IntervalCounters::new();
+        c.record(1, true);
+        c.clear();
+        c.record(1, false);
+        assert_eq!(c.get(1), (1, 0), "old interval's counts must not leak");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn frame_owners_set_take() {
+        let mut f = FrameOwners::new(8);
+        assert_eq!(f.get(3), None);
+        f.set(3, 0x42);
+        assert_eq!(f.get(3), Some(0x42));
+        assert_eq!(f.take(3), Some(0x42));
+        assert_eq!(f.take(3), None);
+    }
+
+    /// Property: IntervalCounters behaves exactly like a
+    /// HashMap<vpn, (r, w)> model across record/clear interleavings.
+    #[test]
+    fn prop_counters_match_hashmap_model() {
+        type Op = (u8, u64, bool); // 0 = clear, else record
+        let mut gen = |r: &mut crate::util::rng::Rng| {
+            (0..r.below(100))
+                .map(|_| {
+                    let vpn = if r.chance(0.15) {
+                        r.below(1 << 30)
+                    } else {
+                        r.below(2) * CHUNK_LEN as u64 + r.below(24)
+                    };
+                    (r.below(8) as u8, vpn, r.chance(0.4))
+                })
+                .collect::<Vec<Op>>()
+        };
+        let mut prop = |ops: &Vec<Op>| -> Result<(), String> {
+            let mut c = IntervalCounters::new();
+            let mut model: HashMap<u64, (u32, u32)> = HashMap::new();
+            for &(kind, vpn, is_write) in ops {
+                if kind == 0 {
+                    c.clear();
+                    model.clear();
+                } else {
+                    c.record(vpn, is_write);
+                    let e = model.entry(vpn).or_insert((0, 0));
+                    if is_write {
+                        e.1 += 1;
+                    } else {
+                        e.0 += 1;
+                    }
+                }
+                if c.len() != model.len() {
+                    return Err(format!("len {} != model {}",
+                                       c.len(), model.len()));
+                }
+            }
+            for (&vpn, &rw) in &model {
+                if c.get(vpn) != rw {
+                    return Err(format!("get({vpn}) {:?} != {rw:?}",
+                                       c.get(vpn)));
+                }
+            }
+            let mut got: Vec<(u64, u32, u32)> = c.iter().collect();
+            got.sort_unstable();
+            let mut want: Vec<(u64, u32, u32)> =
+                model.iter().map(|(&v, &(r, w))| (v, r, w)).collect();
+            want.sort_unstable();
+            if got != want {
+                return Err("iter() disagrees with model".into());
+            }
+            Ok(())
+        };
+        forall_shrink("interval-counters-model", 0x1C7E5, 80, &mut gen,
+                      shrink_vec, &mut prop);
+    }
+
+    /// Property: FrameOwners behaves like a HashMap<frame, vpn> model.
+    #[test]
+    fn prop_frame_owners_match_hashmap_model() {
+        const N: u64 = 16;
+        type Op = (u8, u64, u64);
+        let mut gen = |r: &mut crate::util::rng::Rng| {
+            (0..r.below(80))
+                .map(|_| (r.below(3) as u8, r.below(N), r.below(1 << 36)))
+                .collect::<Vec<Op>>()
+        };
+        let mut prop = |ops: &Vec<Op>| -> Result<(), String> {
+            let mut f = FrameOwners::new(N as usize);
+            let mut model: HashMap<u64, u64> = HashMap::new();
+            for &(kind, frame, vpn) in ops {
+                match kind {
+                    0 => {
+                        f.set(frame, vpn);
+                        model.insert(frame, vpn);
+                    }
+                    1 => {
+                        let (got, want) =
+                            (f.take(frame), model.remove(&frame));
+                        if got != want {
+                            return Err(format!(
+                                "take({frame}): {got:?} != {want:?}"));
+                        }
+                    }
+                    _ => {
+                        let (got, want) =
+                            (f.get(frame), model.get(&frame).copied());
+                        if got != want {
+                            return Err(format!(
+                                "get({frame}): {got:?} != {want:?}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        };
+        forall_shrink("frame-owners-model", 0xF04E5, 80, &mut gen,
+                      shrink_vec, &mut prop);
+    }
+}

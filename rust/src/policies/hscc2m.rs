@@ -3,15 +3,14 @@
 //! wide TLB coverage but pays 512x the migration traffic, which is the
 //! penalty Figs. 10/11 quantify (it can even underperform HSCC-4KB).
 
-use std::collections::HashMap;
-
 use crate::config::{Config, SP_SHIFT, SP_SIZE};
 use crate::mem::sched::copy_page;
-use crate::os::{AddressSpace, DramMgr, Reclaim, Region};
+use crate::os::{AddressSpace, DramMgr, PageTable, Reclaim, Region};
 use crate::rainbow::migration::{ThresholdCtl, UtilityParams};
 use crate::sim::machine::{Machine, TableHome};
 use crate::tlb::{shootdown_2m, HitLevel, ShootdownStats};
 
+use super::accounting::{FrameOwners, IntervalCounters};
 use super::flat_static::TABLE_RESERVE;
 use super::Policy;
 
@@ -22,9 +21,10 @@ pub struct Hscc2M {
     /// DRAM managed in 2 MB frames.
     dram: DramMgr,
     /// Superpage counters (svpn -> reads/writes), TLB-level.
-    counters: HashMap<u64, (u32, u32)>,
-    frame_owner: HashMap<u64, u64>,
-    nvm_home: HashMap<u64, u64>,
+    counters: IntervalCounters,
+    frame_owner: FrameOwners,
+    /// svpn -> original NVM superpage number.
+    nvm_home: PageTable,
     params: UtilityParams,
     threshold: ThresholdCtl,
     sd_stats: ShootdownStats,
@@ -34,17 +34,18 @@ impl Hscc2M {
     pub fn new(cfg: &Config) -> Hscc2M {
         let m = Machine::new(cfg, TableHome::Dram, TableHome::Dram);
         let nvm_base = m.mem.nvm_base();
+        let n_frames = (cfg.dram.size - TABLE_RESERVE) / SP_SIZE;
         let mut params = UtilityParams::from_config(cfg);
         // Migration unit is a superpage.
         params.t_mig = cfg.t_mig_2m as f64;
         params.t_writeback = cfg.t_mig_2m as f64;
         Hscc2M {
             nvm: Region::new(nvm_base, cfg.nvm.size - TABLE_RESERVE),
-            dram: DramMgr::new((cfg.dram.size - TABLE_RESERVE) / SP_SIZE),
+            dram: DramMgr::new(n_frames),
             aspace: AddressSpace::new(),
-            counters: HashMap::new(),
-            frame_owner: HashMap::new(),
-            nvm_home: HashMap::new(),
+            counters: IntervalCounters::new(),
+            frame_owner: FrameOwners::new(n_frames as usize),
+            nvm_home: PageTable::new(),
             threshold: ThresholdCtl::new(params.threshold * 8.0),
             params,
             m,
@@ -60,14 +61,15 @@ impl Hscc2M {
             .aspace
             .ensure_2m(vaddr, &mut self.nvm)
             .expect("hscc2m: NVM exhausted");
-        self.nvm_home.insert(vaddr >> SP_SHIFT, pa);
+        self.nvm_home.map(vaddr >> SP_SHIFT, pa >> SP_SHIFT);
         self.aspace.resolve_2m(vaddr).unwrap()
     }
 
     fn evict(&mut self, frame: u64, dirty: bool, now: u64) -> u64 {
-        let svpn = self.frame_owner.remove(&frame)
+        let svpn = self.frame_owner.take(frame)
             .expect("evicting unowned 2MB frame");
-        let home = self.nvm_home[&svpn];
+        let home = self.nvm_home.translate(svpn)
+            .expect("evicted superpage has no NVM home") << SP_SHIFT;
         let dram_pa = frame * SP_SIZE;
         let mut cycles = 0;
         let (wbs, lines) = self.m.caches.clflush_range(dram_pa, SP_SIZE);
@@ -93,7 +95,8 @@ impl Hscc2M {
     }
 
     fn migrate_in(&mut self, svpn: u64, now: u64) -> u64 {
-        let src = self.nvm_home[&svpn];
+        let src = self.nvm_home.translate(svpn)
+            .expect("migrating superpage with no NVM home") << SP_SHIFT;
         let mut cycles = 0;
         let grant = self.dram.take(svpn);
         match grant.reclaim {
@@ -131,13 +134,13 @@ impl Hscc2M {
         cycles += sd;
         self.m.metrics.rt.shootdown_cycles += sd;
         self.m.metrics.shootdowns += 1;
-        self.frame_owner.insert(grant.frame, svpn);
+        self.frame_owner.set(grant.frame, svpn);
         cycles
     }
 
     fn evict_check(&mut self, svpn: u64, frame: u64, dirty: bool,
                    now: u64) -> u64 {
-        debug_assert_eq!(self.frame_owner.get(&frame), Some(&svpn));
+        debug_assert_eq!(self.frame_owner.get(frame), Some(svpn));
         self.evict(frame, dirty, now)
     }
 }
@@ -167,12 +170,7 @@ impl Policy for Hscc2M {
             _ => (look.ppn.unwrap() << SP_SHIFT)
                 | (vaddr & ((1 << SP_SHIFT) - 1)),
         };
-        let e = self.counters.entry(vaddr >> SP_SHIFT).or_insert((0, 0));
-        if is_write {
-            e.1 += 1;
-        } else {
-            e.0 += 1;
-        }
+        self.counters.record(vaddr >> SP_SHIFT, is_write);
         if is_write && paddr < self.m.mem.dram_size() {
             self.dram.mark_dirty(paddr / SP_SIZE);
         }
@@ -186,14 +184,14 @@ impl Policy for Hscc2M {
         let mut cand: Vec<(u64, f64)> = self
             .counters
             .iter()
-            .filter(|(svpn, _)| {
+            .filter(|&(svpn, _, _)| {
                 self.aspace
                     .pt_2m
-                    .translate(**svpn)
+                    .translate(svpn)
                     .map(|p| p << SP_SHIFT >= self.m.mem.dram_size())
                     .unwrap_or(false)
             })
-            .map(|(&svpn, &(r, w))| {
+            .map(|(svpn, r, w)| {
                 (svpn, self.params.benefit(r as u64, w as u64))
             })
             .filter(|&(_, b)| b > thresh)

@@ -5,15 +5,14 @@
 //! shows HSCC migrating more than Rainbow). Every migration remaps the
 //! page table, so it costs a TLB shootdown + clflush.
 
-use std::collections::HashMap;
-
 use crate::config::{Config, PAGE_SHIFT, PAGE_SIZE};
 use crate::mem::sched::copy_page;
-use crate::os::{AddressSpace, DramMgr, Reclaim, Region};
+use crate::os::{AddressSpace, DramMgr, PageTable, Reclaim, Region};
 use crate::rainbow::migration::{ThresholdCtl, UtilityParams};
 use crate::sim::machine::{Machine, TableHome};
 use crate::tlb::{shootdown_4k, HitLevel, ShootdownStats};
 
+use super::accounting::{FrameOwners, IntervalCounters};
 use super::flat_static::TABLE_RESERVE;
 use super::Policy;
 
@@ -23,12 +22,12 @@ pub struct Hscc4K {
     nvm: Region,
     dram: DramMgr,
     /// TLB-level access counters: vpn -> (reads, writes) this interval.
-    counters: HashMap<u64, (u32, u32)>,
+    counters: IntervalCounters,
     /// DRAM frame -> vpn, for eviction bookkeeping.
-    frame_owner: HashMap<u64, u64>,
-    /// vpn -> original NVM paddr (migration is a cache: eviction returns
-    /// the page home).
-    nvm_home: HashMap<u64, u64>,
+    frame_owner: FrameOwners,
+    /// vpn -> original NVM page number (migration is a cache: eviction
+    /// returns the page home).
+    nvm_home: PageTable,
     params: UtilityParams,
     threshold: ThresholdCtl,
     sd_stats: ShootdownStats,
@@ -38,14 +37,15 @@ impl Hscc4K {
     pub fn new(cfg: &Config) -> Hscc4K {
         let m = Machine::new(cfg, TableHome::Dram, TableHome::Dram);
         let nvm_base = m.mem.nvm_base();
+        let n_frames = (cfg.dram.size - TABLE_RESERVE) / PAGE_SIZE;
         let params = UtilityParams::from_config(cfg);
         Hscc4K {
             nvm: Region::new(nvm_base, cfg.nvm.size - TABLE_RESERVE),
-            dram: DramMgr::new((cfg.dram.size - TABLE_RESERVE) / PAGE_SIZE),
+            dram: DramMgr::new(n_frames),
             aspace: AddressSpace::new(),
-            counters: HashMap::new(),
-            frame_owner: HashMap::new(),
-            nvm_home: HashMap::new(),
+            counters: IntervalCounters::new(),
+            frame_owner: FrameOwners::new(n_frames as usize),
+            nvm_home: PageTable::new(),
             threshold: ThresholdCtl::new(params.threshold),
             params,
             m,
@@ -61,15 +61,16 @@ impl Hscc4K {
             .aspace
             .ensure_4k(vaddr, &mut self.nvm)
             .expect("hscc4k: NVM exhausted");
-        self.nvm_home.insert(vaddr >> PAGE_SHIFT, pa);
+        self.nvm_home.map(vaddr >> PAGE_SHIFT, pa >> PAGE_SHIFT);
         self.aspace.resolve_4k(vaddr).unwrap()
     }
 
     /// Evict the page in `frame` back to its NVM home. Returns cycles.
     fn evict(&mut self, frame: u64, dirty: bool, now: u64) -> u64 {
-        let vpn = self.frame_owner.remove(&frame)
+        let vpn = self.frame_owner.take(frame)
             .expect("evicting unowned frame");
-        let home = self.nvm_home[&vpn];
+        let home = self.nvm_home.translate(vpn)
+            .expect("evicted page has no NVM home") << PAGE_SHIFT;
         let dram_pa = frame * PAGE_SIZE;
         let mut cycles = 0;
         // Flush the page's lines out of the coherence domain.
@@ -99,7 +100,8 @@ impl Hscc4K {
 
     /// Migrate `vpn` into DRAM; returns cycles spent.
     fn migrate_in(&mut self, vpn: u64, now: u64) -> u64 {
-        let src = self.nvm_home[&vpn];
+        let src = self.nvm_home.translate(vpn)
+            .expect("migrating page with no NVM home") << PAGE_SHIFT;
         let mut cycles = 0;
         let grant = self.dram.take(vpn);
         match grant.reclaim {
@@ -138,13 +140,13 @@ impl Hscc4K {
         cycles += sd;
         self.m.metrics.rt.shootdown_cycles += sd;
         self.m.metrics.shootdowns += 1;
-        self.frame_owner.insert(grant.frame, vpn);
+        self.frame_owner.set(grant.frame, vpn);
         cycles
     }
 
     fn evict_owner(&mut self, vpn: u64, frame: u64, dirty: bool,
                    now: u64) -> u64 {
-        debug_assert_eq!(self.frame_owner.get(&frame), Some(&vpn));
+        debug_assert_eq!(self.frame_owner.get(frame), Some(vpn));
         self.evict(frame, dirty, now)
     }
 }
@@ -175,12 +177,7 @@ impl Policy for Hscc4K {
             _ => (look.ppn.unwrap() << PAGE_SHIFT) | (vaddr & 0xFFF),
         };
         // TLB-level (unfiltered) access counting — HSCC's design.
-        let e = self.counters.entry(vaddr >> PAGE_SHIFT).or_insert((0, 0));
-        if is_write {
-            e.1 += 1;
-        } else {
-            e.0 += 1;
-        }
+        self.counters.record(vaddr >> PAGE_SHIFT, is_write);
         // Dirty tracking for cached pages.
         if is_write && paddr < self.m.mem.dram_size() {
             self.dram.mark_dirty(paddr >> PAGE_SHIFT);
@@ -196,15 +193,15 @@ impl Policy for Hscc4K {
         let mut cand: Vec<(u64, f64, u32, u32)> = self
             .counters
             .iter()
-            .filter(|(vpn, _)| {
+            .filter(|&(vpn, _, _)| {
                 // Only NVM-resident pages are migration candidates.
                 self.aspace
                     .pt_4k
-                    .translate(**vpn)
+                    .translate(vpn)
                     .map(|ppn| ppn << PAGE_SHIFT >= self.m.mem.dram_size())
                     .unwrap_or(false)
             })
-            .map(|(&vpn, &(r, w))| {
+            .map(|(vpn, r, w)| {
                 (vpn, self.params.benefit(r as u64, w as u64), r, w)
             })
             .filter(|&(_, b, _, _)| b > thresh)

@@ -4,6 +4,7 @@
 
 use crate::sim::machine::Machine;
 
+pub mod accounting;
 pub mod dram_only;
 pub mod flat_static;
 pub mod hscc2m;

@@ -9,11 +9,24 @@
 //! Reads and writes are tracked separately so the write weighting
 //! (§III-B: "NVM write operations have a higher weighting") and the
 //! Eq.-1 utility model both get their inputs.
+//!
+//! The stage-2 sp -> slot association is consulted on *every* counted NVM
+//! reference, so it is a direct-mapped `Vec<u32>` indexed by superpage
+//! (sentinel `u32::MAX` = unmonitored) rather than a HashMap — the same
+//! flattening as `remap::RemapTable`. A property test below pins it to a
+//! HashMap model.
 
 use crate::config::PAGES_PER_SP;
 
 /// 15-bit saturating counter with overflow flag (Fig. 4).
 pub const COUNTER_MAX: u16 = 0x7FFF;
+
+/// In-band overflow flag bit (Fig. 4's 16th bit). Raw counter words carry
+/// it; arithmetic consumers must go through [`count_value`].
+pub const OVERFLOW_FLAG: u16 = 0x8000;
+
+/// Sentinel in the direct-mapped sp -> slot array.
+const NO_SLOT: u32 = u32::MAX;
 
 #[derive(Clone, Debug)]
 pub struct TwoStageCounters {
@@ -21,8 +34,9 @@ pub struct TwoStageCounters {
     /// superpage.
     sp_reads: Vec<u16>,
     sp_writes: Vec<u16>,
-    /// Stage-2 table: monitored superpage -> slot.
-    slots: std::collections::HashMap<u32, u32>,
+    /// Stage-2 association: superpage index -> slot (direct-mapped,
+    /// NO_SLOT = unmonitored). Hot-path lookup on every NVM reference.
+    sp_slot: Vec<u32>,
     /// Slot payloads: top_n x 512 small-page read/write counters.
     pg_reads: Vec<u16>,
     pg_writes: Vec<u16>,
@@ -36,7 +50,7 @@ impl TwoStageCounters {
         TwoStageCounters {
             sp_reads: vec![0; n_superpages],
             sp_writes: vec![0; n_superpages],
-            slots: std::collections::HashMap::with_capacity(top_n),
+            sp_slot: vec![NO_SLOT; n_superpages],
             pg_reads: vec![0; top_n * PAGES_PER_SP as usize],
             pg_writes: vec![0; top_n * PAGES_PER_SP as usize],
             top_n,
@@ -62,8 +76,9 @@ impl TwoStageCounters {
         } else {
             self.sp_reads[spi] = sat(self.sp_reads[spi]);
         }
-        // Stage 2: only for monitored superpages.
-        if let Some(&slot) = self.slots.get(&sp) {
+        // Stage 2: only for monitored superpages (one indexed load).
+        let slot = self.sp_slot[spi];
+        if slot != NO_SLOT {
             let idx = slot as usize * PAGES_PER_SP as usize + page as usize;
             if is_write {
                 self.pg_writes[idx] = sat(self.pg_writes[idx]);
@@ -91,8 +106,36 @@ impl TwoStageCounters {
         (o != u32::MAX).then_some(o)
     }
 
+    /// Monitored (superpage, slot) pairs in slot order (deterministic).
     pub fn monitored(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
-        self.slots.iter().map(|(&sp, &slot)| (sp, slot))
+        self.slot_owner.iter().enumerate().filter_map(|(slot, &sp)| {
+            (sp != u32::MAX).then_some((sp, slot as u32))
+        })
+    }
+
+    /// True if any stage-1 or monitored stage-2 counter of `sp` has hit
+    /// its 15-bit ceiling this interval ("definitely hot", §III-B).
+    pub fn sp_overflowed(&self, sp: u32) -> bool {
+        let spi = sp as usize;
+        if overflowed(self.sp_reads[spi]) || overflowed(self.sp_writes[spi]) {
+            return true;
+        }
+        let slot = self.sp_slot[spi];
+        if slot != NO_SLOT {
+            let (r, w) = self.slot_counts(slot as usize);
+            return r.iter().chain(w).any(|&x| overflowed(x));
+        }
+        false
+    }
+
+    /// Number of superpages whose stage-1 counters overflowed this
+    /// interval — an explicit signal instead of the in-band flag bit.
+    pub fn overflow_count(&self) -> usize {
+        self.sp_reads
+            .iter()
+            .zip(&self.sp_writes)
+            .filter(|&(&r, &w)| overflowed(r) || overflowed(w))
+            .count()
     }
 
     /// Interval boundary: adopt the new top-N monitored set and clear all
@@ -105,17 +148,24 @@ impl TwoStageCounters {
         self.sp_writes.fill(0);
         self.pg_reads.fill(0);
         self.pg_writes.fill(0);
-        self.slots.clear();
+        // Clear only the O(top_n) populated sp_slot entries.
+        for &sp in &self.slot_owner {
+            if sp != u32::MAX {
+                self.sp_slot[sp as usize] = NO_SLOT;
+            }
+        }
         self.slot_owner.fill(u32::MAX);
         let mut slot = 0usize;
         for &sp in new_top {
             if slot >= self.top_n {
                 break;
             }
-            if self.slots.contains_key(&sp) {
+            assert!((sp as usize) < self.sp_slot.len(),
+                    "rotate: superpage {sp} out of range");
+            if self.sp_slot[sp as usize] != NO_SLOT {
                 continue;
             }
-            self.slots.insert(sp, slot as u32);
+            self.sp_slot[sp as usize] = slot as u32;
             self.slot_owner[slot] = sp;
             slot += 1;
         }
@@ -136,7 +186,7 @@ impl TwoStageCounters {
 fn sat(x: u16) -> u16 {
     // Saturate at 15 bits; the MSB is the overflow flag which stays set.
     if x >= COUNTER_MAX {
-        COUNTER_MAX | 0x8000
+        COUNTER_MAX | OVERFLOW_FLAG
     } else {
         x + 1
     }
@@ -151,12 +201,14 @@ pub fn count_value(x: u16) -> u16 {
 /// Overflow flag (the superpage is "definitely hot", §III-B).
 #[inline]
 pub fn overflowed(x: u16) -> bool {
-    x & 0x8000 != 0
+    x & OVERFLOW_FLAG != 0
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{forall_shrink, shrink_vec};
+    use std::collections::HashMap;
 
     #[test]
     fn stage1_counts_all_stage2_only_monitored() {
@@ -200,6 +252,22 @@ mod tests {
         let x = c.sp_counts().0[0];
         assert!(overflowed(x), "overflow flag must be set");
         assert_eq!(count_value(x), COUNTER_MAX);
+    }
+
+    #[test]
+    fn overflow_surfaced_as_signal() {
+        let mut c = TwoStageCounters::new(8, 2);
+        c.rotate(&[3]);
+        assert_eq!(c.overflow_count(), 0);
+        assert!(!c.sp_overflowed(3));
+        for _ in 0..(COUNTER_MAX as u32 + 5) {
+            c.record(3, 1, true);
+        }
+        assert!(c.sp_overflowed(3), "stage-1/2 overflow must be visible");
+        assert!(!c.sp_overflowed(4));
+        assert_eq!(c.overflow_count(), 1);
+        c.rotate(&[3]);
+        assert_eq!(c.overflow_count(), 0, "rotate clears overflow state");
     }
 
     #[test]
@@ -287,5 +355,74 @@ mod tests {
         assert_eq!(c.monitored().count(), 0);
         c.record(1, 0, false); // must not index an empty stage-2 table
         assert_eq!(c.sp_counts().0[1], 1);
+    }
+
+    /// Property: the direct-mapped sp -> slot array agrees with a HashMap
+    /// model across arbitrary rotate/record sequences — same monitored
+    /// set, same slot assignment, same per-slot counts.
+    #[test]
+    fn prop_slot_assoc_matches_hashmap_model() {
+        const N_SP: u64 = 24;
+        const TOP_N: usize = 4;
+        // Op: rotate with a fresh top list (kind 0) or record (kind 1+).
+        type Op = (u8, Vec<u32>, u32, u16, bool);
+        let mut gen = |r: &mut crate::util::rng::Rng| {
+            (0..r.below(60))
+                .map(|_| {
+                    let kind = r.below(5) as u8;
+                    let top: Vec<u32> = (0..r.below(8))
+                        .map(|_| r.below(N_SP) as u32)
+                        .collect();
+                    (kind, top, r.below(N_SP) as u32,
+                     r.below(PAGES_PER_SP) as u16, r.chance(0.4))
+                })
+                .collect::<Vec<Op>>()
+        };
+        let mut prop = |ops: &Vec<Op>| -> Result<(), String> {
+            let mut c = TwoStageCounters::new(N_SP as usize, TOP_N);
+            let mut model: HashMap<u32, u32> = HashMap::new();
+            let mut model_pg: HashMap<(u32, u16), u32> = HashMap::new();
+            for (kind, top, sp, page, is_write) in ops {
+                if *kind == 0 {
+                    c.rotate(top);
+                    model.clear();
+                    model_pg.clear();
+                    let mut slot = 0u32;
+                    for &s in top {
+                        if slot as usize >= TOP_N {
+                            break;
+                        }
+                        if model.contains_key(&s) {
+                            continue;
+                        }
+                        model.insert(s, slot);
+                        slot += 1;
+                    }
+                } else {
+                    c.record(*sp, *page, *is_write);
+                    if model.contains_key(sp) {
+                        *model_pg.entry((*sp, *page)).or_insert(0) += 1;
+                    }
+                }
+                // Monitored sets must agree exactly.
+                let got: HashMap<u32, u32> = c.monitored().collect();
+                if got != model {
+                    return Err(format!("monitored {got:?} != {model:?}"));
+                }
+            }
+            for (&(sp, page), &n) in &model_pg {
+                let slot = model[&sp] as usize;
+                let (r, w) = c.slot_counts(slot);
+                let total = count_value(r[page as usize]) as u32
+                    + count_value(w[page as usize]) as u32;
+                if total != n.min(COUNTER_MAX as u32) {
+                    return Err(format!(
+                        "sp {sp} page {page}: count {total} != {n}"));
+                }
+            }
+            Ok(())
+        };
+        forall_shrink("counters-slot-model", 0xC0417, 60, &mut gen,
+                      shrink_vec, &mut prop);
     }
 }

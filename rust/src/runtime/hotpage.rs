@@ -5,7 +5,7 @@
 
 use std::path::Path;
 
-use crate::rainbow::counters::{count_value, TwoStageCounters};
+use crate::rainbow::counters::{count_value, overflowed, TwoStageCounters};
 use crate::rainbow::migration::UtilityParams;
 
 use super::native;
@@ -32,7 +32,13 @@ pub struct SlotVerdict {
     /// The monitored NVM superpage.
     pub sp: u32,
     /// Hot 4 KB page indices with their (reads, writes) in the interval.
+    /// Counts are overflow-masked 15-bit values (an overflowed counter
+    /// contributes `COUNTER_MAX`, never the raw flagged word).
     pub hot_pages: Vec<(u16, u32, u32)>,
+    /// True if any of the slot's counters hit the 15-bit ceiling: the
+    /// counts above are floors, and the superpage is "definitely hot"
+    /// (§III-B) — surfaced out-of-band instead of the in-band flag bit.
+    pub overflowed: bool,
 }
 
 pub struct HotPageIdentifier {
@@ -114,10 +120,12 @@ impl HotPageIdentifier {
         let mut reads = Vec::with_capacity(n_slots * 512);
         let mut writes = Vec::with_capacity(n_slots * 512);
         let mut owners = Vec::with_capacity(n_slots);
+        let mut slot_ovf = Vec::with_capacity(n_slots);
         for slot in 0..n_slots {
             let Some(sp) = counters.slot_owner(slot) else { continue };
             let (r, w) = counters.slot_counts(slot);
             owners.push(sp);
+            slot_ovf.push(r.iter().chain(w).any(|&x| overflowed(x)));
             reads.extend(r.iter().map(|&x| count_value(x) as i32));
             writes.extend(w.iter().map(|&x| count_value(x) as i32));
         }
@@ -147,7 +155,7 @@ impl HotPageIdentifier {
                                reads[base + pg] as u32,
                                writes[base + pg] as u32))
                     .collect();
-                SlotVerdict { sp, hot_pages }
+                SlotVerdict { sp, hot_pages, overflowed: slot_ovf[si] }
             })
             .collect()
     }
@@ -197,6 +205,47 @@ mod tests {
         assert_eq!(hot, vec![5]);
         let (_, r, w) = verdicts[0].hot_pages[0];
         assert_eq!((r, w), (0, 200));
+    }
+
+    /// Saturation-boundary regression: an overflowed counter (raw word
+    /// `COUNTER_MAX | OVERFLOW_FLAG` = 0xFFFF) must contribute exactly
+    /// `COUNTER_MAX` (32767) to ranking inputs — a bare `as u32` cast of
+    /// the raw word would contribute 65535 — and the overflow condition
+    /// must be visible as its own signal instead.
+    #[test]
+    fn overflowed_counter_contributes_masked_value() {
+        use crate::rainbow::counters::COUNTER_MAX;
+        let mut c = TwoStageCounters::new(64, 4);
+        c.rotate(&[9]);
+        for _ in 0..(COUNTER_MAX as u32 + 100) {
+            c.record(9, 5, true); // drives page 5 past saturation
+        }
+        c.record(9, 6, false);
+        let id = HotPageIdentifier::native();
+        let verdicts = id.classify(&c, &params());
+        assert_eq!(verdicts.len(), 1);
+        let (_, r, w) = *verdicts[0]
+            .hot_pages
+            .iter()
+            .find(|h| h.0 == 5)
+            .expect("saturated page must still classify hot");
+        assert_eq!(w, COUNTER_MAX as u32,
+                   "overflowed counter must contribute the masked value");
+        assert_eq!(r, 0);
+        assert!(verdicts[0].overflowed,
+                "overflow must surface as an explicit signal");
+        assert!(c.sp_overflowed(9));
+        // One counter tick below the ceiling: no overflow signal.
+        let mut c2 = TwoStageCounters::new(64, 4);
+        c2.rotate(&[9]);
+        for _ in 0..(COUNTER_MAX as u32 - 1) {
+            c2.record(9, 5, true);
+        }
+        let v2 = id.classify(&c2, &params());
+        assert!(!v2[0].overflowed);
+        assert!(!c2.sp_overflowed(9));
+        let (_, _, w2) = v2[0].hot_pages[0];
+        assert_eq!(w2, COUNTER_MAX as u32 - 1);
     }
 
     #[test]

@@ -89,7 +89,7 @@ impl Machine {
         }
         // Dirty victims stream out in the background; they occupy the
         // devices (affecting later accesses) but don't stall this load.
-        for wb in &out.writebacks {
+        for wb in out.writebacks.as_slice() {
             self.mem.access(now + cycles, wb.addr, true, 64);
         }
         (cycles, out.llc_miss)

@@ -216,6 +216,35 @@ mod tests {
         assert_eq!(r.small.level, HitLevel::Miss);
     }
 
+    /// Migration lifecycle across the two levels: shootdown, then refill
+    /// with the page's new frame — the stale ppn must be unreachable.
+    #[test]
+    fn shootdown_refill_serves_new_translation() {
+        let mut t = tlbs();
+        let vpn = 0x42u64;
+        t.insert_4k(vpn, 10);
+        t.lookup(vpn << PAGE_SHIFT);
+        assert!(t.invalidate_4k(vpn));
+        t.insert_4k(vpn, 99);
+        let r = t.lookup(vpn << PAGE_SHIFT);
+        assert_eq!(r.small.level, HitLevel::L1);
+        assert_eq!(r.small.ppn, Some(99), "stale ppn must not survive");
+    }
+
+    /// A shootdown must reach an entry that only lives in L2 (e.g. after
+    /// demotion), and a later refill restores the normal hit path.
+    #[test]
+    fn shootdown_reaches_demoted_l2_entry() {
+        let mut t = tlbs();
+        let vpn = 0x7u64;
+        t.l2_4k.insert(vpn, 70); // resident only in L2
+        assert!(t.invalidate_4k(vpn));
+        let r = t.lookup(vpn << PAGE_SHIFT);
+        assert_eq!(r.small.level, HitLevel::Miss);
+        t.insert_4k(vpn, 71);
+        assert_eq!(t.lookup(vpn << PAGE_SHIFT).small.ppn, Some(71));
+    }
+
     #[test]
     fn sp_hit_rate_tracks() {
         let mut t = tlbs();

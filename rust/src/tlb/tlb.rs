@@ -198,6 +198,40 @@ mod tests {
         assert_eq!(t.stats.shootdowns, 1);
     }
 
+    /// Shootdown-then-refill edge: the invalidated way must absorb the
+    /// next fill in its set instead of evicting a still-valid LRU entry.
+    #[test]
+    fn shootdown_slot_reused_before_lru_eviction() {
+        let mut t = Tlb::new(8, 2, 1); // 4 sets x 2 ways
+        // vpns 0, 4, 8 all map to set 0.
+        t.insert(0, 100);
+        t.insert(4, 104);
+        t.lookup(4); // 4 MRU, 0 LRU
+        assert!(t.invalidate(4)); // shootdown mid-set
+        let ev = t.insert(8, 108);
+        assert_eq!(ev, None, "invalid way must absorb the refill");
+        assert_eq!(t.stats.evictions, 0);
+        assert!(t.contains(0) && t.contains(8) && !t.contains(4));
+    }
+
+    /// A refill after a shootdown gets a *fresh* LRU stamp (it is the MRU
+    /// of its set), and serves the new translation, never the stale one —
+    /// the exact lifecycle of a migrated page's 4 KB entry.
+    #[test]
+    fn refill_after_shootdown_is_mru_with_new_ppn() {
+        let mut t = Tlb::new(8, 2, 1);
+        t.insert(0, 100);
+        t.insert(4, 104);
+        t.lookup(0); // 0 MRU, 4 LRU
+        assert!(t.invalidate(0));
+        t.insert(0, 200); // refill post-migration with the new frame
+        // The refilled entry must be MRU: a conflicting insert evicts 4.
+        let ev = t.insert(8, 108);
+        assert_eq!(ev, Some((4, 104)),
+                   "refilled entry must not be the eviction victim");
+        assert_eq!(t.lookup(0), Some(200), "refill serves the new ppn");
+    }
+
     #[test]
     fn flush_all_empties() {
         let mut t = tlb();

@@ -12,6 +12,10 @@ use std::time::{Duration, Instant};
 pub struct Measurement {
     pub name: String,
     pub samples_ns: Vec<f64>,
+    /// Iterations timed per sample (total work = this × samples). The
+    /// machine-readable perf reports record it so a reader can tell a
+    /// 10-iteration flier from a million-iteration steady state.
+    pub iters_per_sample: u64,
 }
 
 impl Measurement {
@@ -25,6 +29,23 @@ impl Measurement {
 
     pub fn stddev_ns(&self) -> f64 {
         super::stats::stddev(&self.samples_ns)
+    }
+
+    /// The headline per-operation cost: the median sample (robust to
+    /// scheduler fliers, the figure `BENCH_*.json` publishes).
+    pub fn ns_per_op(&self) -> f64 {
+        self.median_ns()
+    }
+
+    /// Operations per second implied by [`Measurement::ns_per_op`].
+    pub fn ops_per_sec(&self) -> f64 {
+        let ns = self.ns_per_op();
+        if ns > 0.0 { 1e9 / ns } else { 0.0 }
+    }
+
+    /// Total iterations timed across all samples.
+    pub fn total_iters(&self) -> u64 {
+        self.iters_per_sample * self.samples_ns.len() as u64
     }
 
     pub fn report(&self) {
@@ -55,6 +76,7 @@ pub fn fmt_ns(ns: f64) -> String {
 pub struct Bencher {
     warmup: Duration,
     samples: usize,
+    target_per_sample: Duration,
     min_iters_per_sample: u64,
 }
 
@@ -63,6 +85,7 @@ impl Default for Bencher {
         Bencher {
             warmup: Duration::from_millis(300),
             samples: 20,
+            target_per_sample: Duration::from_millis(10),
             min_iters_per_sample: 1,
         }
     }
@@ -71,6 +94,26 @@ impl Default for Bencher {
 impl Bencher {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Honor the `RAINBOW_BENCH_SAMPLES` / `RAINBOW_BENCH_WARMUP_MS` /
+    /// `RAINBOW_BENCH_TARGET_MS` env caps on top of the defaults, so CI
+    /// smoke jobs can run the same harness in milliseconds.
+    pub fn from_env() -> Self {
+        fn env_u64(key: &str) -> Option<u64> {
+            std::env::var(key).ok().and_then(|v| v.parse().ok())
+        }
+        let mut b = Bencher::default();
+        if let Some(n) = env_u64("RAINBOW_BENCH_SAMPLES") {
+            b = b.samples(n as usize);
+        }
+        if let Some(ms) = env_u64("RAINBOW_BENCH_WARMUP_MS") {
+            b = b.warmup(Duration::from_millis(ms));
+        }
+        if let Some(ms) = env_u64("RAINBOW_BENCH_TARGET_MS") {
+            b = b.target_per_sample(Duration::from_millis(ms));
+        }
+        b
     }
 
     pub fn warmup(mut self, d: Duration) -> Self {
@@ -83,7 +126,14 @@ impl Bencher {
         self
     }
 
-    /// Measure `f`, auto-scaling iterations per sample to ~10ms.
+    /// Per-sample time budget iterations are auto-scaled toward.
+    pub fn target_per_sample(mut self, d: Duration) -> Self {
+        self.target_per_sample = d;
+        self
+    }
+
+    /// Measure `f`, auto-scaling iterations per sample to the target
+    /// per-sample budget (default ~10 ms).
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
         // Warmup + estimate cost.
         let wstart = Instant::now();
@@ -93,7 +143,7 @@ impl Bencher {
             iters += 1;
         }
         let per_iter = wstart.elapsed().as_nanos() as f64 / iters as f64;
-        let target_ns = 10e6; // 10 ms per sample
+        let target_ns = self.target_per_sample.as_nanos() as f64;
         let iters_per_sample =
             ((target_ns / per_iter.max(1.0)) as u64).max(self.min_iters_per_sample);
 
@@ -105,7 +155,11 @@ impl Bencher {
             }
             samples.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
         }
-        let m = Measurement { name: name.to_string(), samples_ns: samples };
+        let m = Measurement {
+            name: name.to_string(),
+            samples_ns: samples,
+            iters_per_sample,
+        };
         m.report();
         m
     }
@@ -132,6 +186,26 @@ mod tests {
         assert_eq!(m.samples_ns.len(), 3);
         assert!(m.mean_ns() > 0.0);
         assert!(m.median_ns() > 0.0);
+        assert!(m.iters_per_sample >= 1);
+        assert_eq!(m.total_iters(), m.iters_per_sample * 3);
+        // ns/op and ops/sec are reciprocal views of the same median.
+        let product = m.ns_per_op() * m.ops_per_sec();
+        assert!((product - 1e9).abs() < 1.0, "got {product}");
+    }
+
+    #[test]
+    fn env_caps_parse() {
+        // from_env with no vars set equals the defaults (tier-1 never
+        // sets the caps; CI smoke does).
+        let b = Bencher::from_env();
+        let m = b
+            .warmup(Duration::from_millis(1))
+            .samples(2)
+            .target_per_sample(Duration::from_millis(1))
+            .run("spin-env", || {
+                black_box((0..10u64).sum::<u64>());
+            });
+        assert_eq!(m.samples_ns.len(), 2);
     }
 
     #[test]

@@ -2,12 +2,18 @@
 //! identically across policies (and across runs — the e2e driver uses this
 //! to guarantee every system sees byte-identical input).
 //!
-//! Record layout (little-endian u64 per op):
-//!   bit 63      = is_write
-//!   bits 62..32 = think instructions preceding this access (31 bits)
-//!   bits 31..0  = vaddr / 64 truncated? -- no: vaddr stored separately.
-//! We use a simple two-word record: [meta, vaddr]. Header: magic, version,
-//! record count.
+//! Record layout (two little-endian u64 words per op): `[meta, vaddr]`.
+//!
+//!   meta bit 63      = is_write
+//!   meta bits 62..32 = think instructions preceding this access (31 bits)
+//!   meta bits 31..0  = reserved, must be zero
+//!
+//! Header: magic, version, record count. Version history:
+//!   v1: `think_before` was clamped to 32 bits at record time but packed
+//!       into bits 63..32 — a think count ≥ 2^31 overwrote the `is_write`
+//!       flag, silently turning reads into writes. v1 files are rejected.
+//!   v2: 31-bit think clamp applied at record time, save refuses
+//!       out-of-range values, load rejects nonzero reserved bits.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -16,7 +22,10 @@ use std::path::Path;
 use super::synth::Op;
 
 const MAGIC: u64 = 0x5241_494E_424F_5754; // "RAINBOWT"
-const VERSION: u64 = 1;
+const VERSION: u64 = 2;
+
+/// Largest representable think count (31 bits, see the meta layout).
+pub const THINK_MAX: u32 = 0x7FFF_FFFF;
 
 /// One replayable record.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -32,8 +41,13 @@ pub struct Trace {
     pub recs: Vec<TraceRec>,
 }
 
+fn corrupt(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
 impl Trace {
-    /// Capture `n_mem` memory operations from an op stream.
+    /// Capture `n_mem` memory operations from an op stream. Accumulated
+    /// think time is clamped to the 31 bits the format can carry.
     pub fn record<F: FnMut() -> Op>(mut next: F, n_mem: usize) -> Trace {
         let mut recs = Vec::with_capacity(n_mem);
         let mut think: u64 = 0;
@@ -42,7 +56,7 @@ impl Trace {
                 Op::Think(n) => think += n as u64,
                 Op::Mem { vaddr, is_write } => {
                     recs.push(TraceRec {
-                        think_before: think.min(u32::MAX as u64) as u32,
+                        think_before: think.min(THINK_MAX as u64) as u32,
                         vaddr,
                         is_write,
                     });
@@ -74,8 +88,15 @@ impl Trace {
         w.write_all(&MAGIC.to_le_bytes())?;
         w.write_all(&VERSION.to_le_bytes())?;
         w.write_all(&(self.recs.len() as u64).to_le_bytes())?;
-        for r in &self.recs {
-            let meta = ((r.is_write as u64) << 63) | ((r.think_before as u64) << 32);
+        for (i, r) in self.recs.iter().enumerate() {
+            if r.think_before > THINK_MAX {
+                return Err(corrupt(format!(
+                    "record {i}: think_before {:#x} exceeds the 31-bit \
+                     trace field (max {THINK_MAX:#x})",
+                    r.think_before)));
+            }
+            let meta = ((r.is_write as u64) << 63)
+                | ((r.think_before as u64) << 32);
             w.write_all(&meta.to_le_bytes())?;
             w.write_all(&r.vaddr.to_le_bytes())?;
         }
@@ -91,22 +112,26 @@ impl Trace {
         };
         let magic = read_u64(&mut r)?;
         if magic != MAGIC {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData, "bad trace magic"));
+            return Err(corrupt("bad trace magic"));
         }
         let version = read_u64(&mut r)?;
         if version != VERSION {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("unsupported trace version {version}")));
+            return Err(corrupt(format!(
+                "unsupported trace version {version} (want {VERSION}; v1 \
+                 files corrupt the write flag and must be re-recorded)")));
         }
         let n = read_u64(&mut r)? as usize;
         let mut recs = Vec::with_capacity(n);
-        for _ in 0..n {
+        for i in 0..n {
             let meta = read_u64(&mut r)?;
             let vaddr = read_u64(&mut r)?;
+            if meta & 0xFFFF_FFFF != 0 {
+                return Err(corrupt(format!(
+                    "record {i}: nonzero reserved meta bits {:#x}",
+                    meta & 0xFFFF_FFFF)));
+            }
             recs.push(TraceRec {
-                think_before: ((meta >> 32) & 0x7FFF_FFFF) as u32,
+                think_before: ((meta >> 32) & THINK_MAX as u64) as u32,
                 vaddr,
                 is_write: meta >> 63 == 1,
             });
@@ -118,8 +143,15 @@ impl Trace {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{forall_shrink, shrink_vec};
     use crate::workloads::profile::AppProfile;
     use crate::workloads::synth::Synth;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("rainbow_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
 
     #[test]
     fn record_from_synth() {
@@ -135,9 +167,7 @@ mod tests {
         let p = AppProfile::by_name("mcf").unwrap().scaled(64);
         let mut s = Synth::new(p, 0, 5);
         let t = Trace::record(|| s.next_op(), 500);
-        let dir = std::env::temp_dir().join("rainbow_trace_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t.trace");
+        let path = tmp("t.trace");
         t.save(&path).unwrap();
         let u = Trace::load(&path).unwrap();
         assert_eq!(t.recs, u.recs);
@@ -146,9 +176,7 @@ mod tests {
 
     #[test]
     fn bad_magic_rejected() {
-        let dir = std::env::temp_dir().join("rainbow_trace_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.trace");
+        let path = tmp("bad.trace");
         std::fs::write(&path, b"not a trace file, definitely").unwrap();
         assert!(Trace::load(&path).is_err());
         std::fs::remove_file(&path).ok();
@@ -162,14 +190,159 @@ mod tests {
                 TraceRec { think_before: 0, vaddr: 0x1000, is_write: false },
             ],
         };
-        let dir = std::env::temp_dir().join("rainbow_trace_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("w.trace");
+        let path = tmp("w.trace");
         t.save(&path).unwrap();
         let u = Trace::load(&path).unwrap();
         assert_eq!(u.recs[0].is_write, true);
         assert_eq!(u.recs[0].think_before, 7);
         assert_eq!(u.recs[1].is_write, false);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The v1 corruption regression: a *read* with maximal think time must
+    /// round-trip as a read. Under the old layout (think in bits 63..32)
+    /// `think_before = THINK_MAX` followed by the 32-bit record clamp let a
+    /// think count ≥ 2^31 flip bit 63 and come back as a write.
+    #[test]
+    fn max_think_read_stays_a_read() {
+        let t = Trace {
+            recs: vec![
+                TraceRec { think_before: THINK_MAX, vaddr: 0x2000,
+                           is_write: false },
+                TraceRec { think_before: THINK_MAX, vaddr: 0x3000,
+                           is_write: true },
+            ],
+        };
+        let path = tmp("maxthink.trace");
+        t.save(&path).unwrap();
+        let u = Trace::load(&path).unwrap();
+        assert_eq!(u.recs, t.recs);
+        assert!(!u.recs[0].is_write, "read must not round-trip as a write");
+        assert_eq!(u.recs[0].think_before, THINK_MAX);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Record-time clamp: accumulated think ≥ 2^31 is clamped into the
+    /// 31-bit field instead of being stored out of range.
+    #[test]
+    fn record_clamps_think_to_31_bits() {
+        let mut ops = vec![
+            Op::Mem { vaddr: 0x9000, is_write: false },
+            Op::Think(u32::MAX),     // 2^32 - 1 ...
+            Op::Think(u32::MAX),     // ... accumulated well past 2^31
+            Op::Mem { vaddr: 0x8000, is_write: false },
+        ];
+        // `record` consumes via pop(), i.e. back-to-front of this vec.
+        let t = Trace::record(|| ops.pop().unwrap(), 2);
+        assert_eq!(t.recs[0].think_before, 0);
+        assert_eq!(t.recs[0].vaddr, 0x8000);
+        assert_eq!(t.recs[1].think_before, THINK_MAX);
+        assert!(!t.recs[1].is_write);
+    }
+
+    /// Out-of-range records are rejected loudly at save time rather than
+    /// silently truncated or smeared into the flag bit.
+    #[test]
+    fn save_rejects_out_of_range_think() {
+        let t = Trace {
+            recs: vec![TraceRec { think_before: THINK_MAX + 1, vaddr: 0,
+                                  is_write: false }],
+        };
+        let path = tmp("oor.trace");
+        let err = t.save(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// v1 files (and any unknown version) are rejected: the v1 meta layout
+    /// is ambiguous, so pretending to read it would resurrect the bug.
+    #[test]
+    fn old_version_rejected() {
+        let path = tmp("v1.trace");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // VERSION 1
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // one record
+        // v1 encoding of a read with think ≥ 2^31: bit 63 set by accident.
+        let meta = (0x8000_0000u64) << 32;
+        bytes.extend_from_slice(&meta.to_le_bytes());
+        bytes.extend_from_slice(&0x1000u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Trace::load(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("version"), "err: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Nonzero reserved low bits mean the record was not produced by a
+    /// conforming writer; reject instead of decoding garbage.
+    #[test]
+    fn nonzero_reserved_bits_rejected() {
+        let path = tmp("reserved.trace");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&0xDEAD_BEEFu64.to_le_bytes()); // reserved!
+        bytes.extend_from_slice(&0x1000u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Trace::load(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("reserved"), "err: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A file that ends mid-record (or mid-header) must error, not yield a
+    /// short trace.
+    #[test]
+    fn truncated_file_rejected() {
+        let p = AppProfile::by_name("mcf").unwrap().scaled(64);
+        let mut s = Synth::new(p, 0, 9);
+        let t = Trace::record(|| s.next_op(), 64);
+        let path = tmp("trunc.trace");
+        t.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Chop at several interesting boundaries: inside the header,
+        // between records, and mid-record.
+        for cut in [4usize, 20, 24 + 16 * 10 + 3, full.len() - 8,
+                    full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(Trace::load(&path).is_err(),
+                    "truncation at {cut} bytes must be rejected");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Property: any in-range trace round-trips bit-exactly through
+    /// save/load, independent of flag/think/vaddr combinations.
+    #[test]
+    fn prop_roundtrip_matches() {
+        let path = tmp("prop.trace");
+        let mut gen = |r: &mut crate::util::rng::Rng| {
+            (0..r.below(40))
+                .map(|_| TraceRec {
+                    // Bias towards the 31-bit boundary where v1 corrupted.
+                    think_before: match r.below(4) {
+                        0 => THINK_MAX,
+                        1 => THINK_MAX - r.below(16) as u32,
+                        _ => r.below(1 << 31) as u32,
+                    },
+                    vaddr: r.below(1 << 48),
+                    is_write: r.chance(0.5),
+                })
+                .collect::<Vec<TraceRec>>()
+        };
+        let mut prop = |recs: &Vec<TraceRec>| -> Result<(), String> {
+            let t = Trace { recs: recs.clone() };
+            t.save(&path).map_err(|e| format!("save: {e}"))?;
+            let u = Trace::load(&path).map_err(|e| format!("load: {e}"))?;
+            if u.recs != t.recs {
+                return Err("round-trip mismatch".into());
+            }
+            Ok(())
+        };
+        forall_shrink("trace-roundtrip", 0x7ACE5, 60, &mut gen, shrink_vec,
+                      &mut prop);
         std::fs::remove_file(&path).ok();
     }
 }

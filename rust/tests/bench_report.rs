@@ -1,0 +1,88 @@
+//! The committed `BENCH_<n>.json` perf-trajectory files are part of the
+//! repo's contract: every one must parse and validate against the
+//! `rainbow-bench-v1` schema (the same validator `rainbow perf
+//! --validate` and the CI bench-smoke job run), and the newest report
+//! must cover every hot-path stage the harness measures today. A schema
+//! or stage-list change must update the committed reports (or bump the
+//! schema) in the same PR — this test is what fails otherwise.
+
+use rainbow::perf::{self, REQUIRED_STAGES};
+use rainbow::util::json::{self, Json};
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// All committed BENCH_*.json files, (numeric suffix, parsed doc).
+fn committed_reports() -> Vec<(u64, Json)> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(repo_root()).unwrap() {
+        let name = entry.unwrap().file_name();
+        let name = name.to_string_lossy().into_owned();
+        let Some(num) = name
+            .strip_prefix("BENCH_")
+            .and_then(|rest| rest.strip_suffix(".json"))
+        else {
+            continue;
+        };
+        let Ok(n) = num.parse::<u64>() else { continue };
+        let text = std::fs::read_to_string(repo_root().join(&name))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let doc = json::parse(&text)
+            .unwrap_or_else(|e| panic!("{name} must parse: {e}"));
+        out.push((n, doc));
+    }
+    out.sort_by_key(|(n, _)| *n);
+    out
+}
+
+#[test]
+fn every_committed_bench_report_validates() {
+    let reports = committed_reports();
+    assert!(!reports.is_empty(),
+            "the perf campaign must have at least one committed \
+             BENCH_<n>.json at the repo root");
+    for (n, doc) in &reports {
+        perf::validate(doc)
+            .unwrap_or_else(|e| panic!("BENCH_{n}.json invalid: {e}"));
+    }
+}
+
+#[test]
+fn newest_report_covers_every_current_stage() {
+    let reports = committed_reports();
+    let (n, doc) = reports.last().expect("at least BENCH_6.json");
+    let names: Vec<&str> = doc
+        .get("benches")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|b| b.get("name").and_then(Json::as_str).unwrap())
+        .collect();
+    for stage in REQUIRED_STAGES {
+        assert!(names.contains(&stage),
+                "BENCH_{n}.json must cover stage {stage:?} (regenerate \
+                 with `cargo run --release -- perf --out BENCH_{n}.json`)");
+    }
+    for pol in rainbow::policies::all_names() {
+        let want = format!("policy.{pol}.access");
+        assert!(names.iter().any(|&x| x == want),
+                "BENCH_{n}.json must cover {want:?}");
+    }
+}
+
+#[test]
+fn reports_share_one_schema_and_fingerprinted_configs() {
+    for (n, doc) in committed_reports() {
+        assert_eq!(doc.get("schema").and_then(Json::as_str),
+                   Some(perf::SCHEMA), "BENCH_{n}.json schema");
+        let fp = doc
+            .get("config")
+            .and_then(|c| c.get("fingerprint"))
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("BENCH_{n}.json fingerprint"));
+        assert!(fp.starts_with("rainbow-perf "),
+                "BENCH_{n}.json fingerprint {fp:?} must be the \
+                 self-describing rainbow-perf form");
+    }
+}

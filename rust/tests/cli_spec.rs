@@ -268,7 +268,7 @@ fn manual_covers_every_subcommand_knob_and_profile() {
         include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/MANUAL.md"));
     for cmd in ["run", "sweep", "shard-worker", "cache-server",
                 "backends", "figure", "suite", "analyze", "storage",
-                "list"] {
+                "perf", "list"] {
         assert!(manual.contains(&format!("`{cmd}`")),
                 "MANUAL.md must document the `{cmd}` subcommand");
     }
