@@ -1,0 +1,414 @@
+//! A minimal Rust lexer for the lint pass (`super`): just enough to
+//! token-match rule patterns without false positives from comments,
+//! string literals, raw strings, or lifetimes-vs-char-literals — the
+//! classic traps of grep-based linting. Dependency-free by design
+//! (the same constraint as `util::json` / `util::tomlite`).
+//!
+//! The output is a flat token stream plus the comment list (comments
+//! carry the `rainbow-lint: allow(...)` suppression markers and the
+//! `SAFETY:` justifications the `unsafe-audit` rule looks for).
+
+/// Token class. Rules match on `Ident`/`Punct` text; literals exist so
+/// their *content* can never be mistaken for code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub line: u32,
+    pub text: String,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// One comment (line `//...` or block `/*...*/`), with the leading
+/// `//`/`///`/`//!`/`/*` decoration stripped and content trimmed.
+/// Block comments are anchored at their starting line.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lex result: the token stream and the comments, both in source order.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Lex `src`. Never fails: unrecognized bytes become single-char
+/// `Punct` tokens, an unterminated literal simply ends at EOF — a lint
+/// pass must degrade gracefully on code mid-edit.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+
+    // Raw-string opener at `i` (after an optional `b`): `r#*"`.
+    // Returns the number of `#`s when it is one.
+    let raw_open = |cs: &[char], i: usize| -> Option<usize> {
+        if cs.get(i) != Some(&'r') {
+            return None;
+        }
+        let mut j = i + 1;
+        while cs.get(j) == Some(&'#') {
+            j += 1;
+        }
+        (cs.get(j) == Some(&'"')).then_some(j - (i + 1))
+    };
+
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments /// and //!).
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let mut j = i + 2;
+            while j < cs.len() && cs[j] != '\n' {
+                j += 1;
+            }
+            let body: String = cs[i + 2..j].iter().collect();
+            let body = body.trim_start_matches(['/', '!']).trim();
+            out.comments.push(Comment { line, text: body.to_string() });
+            i = j;
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut body = String::new();
+            while j < cs.len() && depth > 0 {
+                if cs[j] == '/' && cs.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '*' && cs.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                body.push(cs[j]);
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line: start_line,
+                text: body.trim_matches(['*', ' ', '\n', '!']).to_string(),
+            });
+            i = j;
+            continue;
+        }
+        // Raw strings r"..." / r#"..."#, byte strings b"...", raw
+        // byte strings br#"..."#, and raw identifiers r#ident.
+        if c == 'r' || c == 'b' {
+            let after_b = if c == 'b' { i + 1 } else { i };
+            let raw_at = if c == 'b' && cs.get(i + 1) == Some(&'r') {
+                i + 1
+            } else {
+                i
+            };
+            if let Some(hashes) = raw_open(&cs, raw_at) {
+                // Scan to `"` followed by `hashes` x `#`.
+                let start_line = line;
+                let mut j = raw_at + 1 + hashes + 1;
+                while j < cs.len() {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    if cs[j] == '"'
+                        && cs[j + 1..].iter().take(hashes).filter(|&&h| h == '#')
+                            .count() == hashes
+                    {
+                        j += 1 + hashes;
+                        break;
+                    }
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    line: start_line,
+                    text: String::new(),
+                });
+                i = j;
+                continue;
+            }
+            if c == 'b' && cs.get(after_b) == Some(&'"') {
+                // Fall through to the string scanner below from the
+                // quote position.
+                i = after_b;
+                // (handled by the '"' arm on the next loop turn)
+                continue;
+            }
+            if c == 'r'
+                && cs.get(i + 1) == Some(&'#')
+                && cs.get(i + 2).copied().is_some_and(is_ident_start)
+            {
+                let mut j = i + 2;
+                while j < cs.len() && is_ident_continue(cs[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    line,
+                    text: cs[i + 2..j].iter().collect(),
+                });
+                i = j;
+                continue;
+            }
+        }
+        if c == '"' {
+            let start_line = line;
+            let mut j = i + 1;
+            let mut body = String::new();
+            while j < cs.len() {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                body.push(cs[j]);
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                line: start_line,
+                text: body,
+            });
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime ('a, 'static) iff an identifier follows and the
+            // char after it is NOT a closing quote ('a' is a char).
+            let mut j = i + 1;
+            if cs.get(j).copied().is_some_and(is_ident_start) {
+                let mut k = j + 1;
+                while k < cs.len() && is_ident_continue(cs[k]) {
+                    k += 1;
+                }
+                if cs.get(k) != Some(&'\'') {
+                    out.toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        line,
+                        text: cs[j..k].iter().collect(),
+                    });
+                    i = k;
+                    continue;
+                }
+            }
+            // Char literal, escapes included ('\'', '\n', '\u{1F980}').
+            while j < cs.len() {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\'' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Char,
+                line,
+                text: String::new(),
+            });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < cs.len() && is_ident_continue(cs[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                line,
+                text: cs[i..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // Numbers loosely: digits, letters, `_`, and `.` only when
+            // a digit follows — so `x.0.clone()` and `0..n` tokenize
+            // as Num / Punct / Ident, not one blob.
+            let mut j = i + 1;
+            while j < cs.len() {
+                let d = cs[j];
+                if d == '.' {
+                    if cs.get(j + 1).copied().is_some_and(|n| n.is_ascii_digit())
+                    {
+                        j += 2;
+                        continue;
+                    }
+                    break;
+                }
+                if is_ident_continue(d) {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                line,
+                text: cs[i..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Punctuation: `::` and `->` fuse (path / fn-pointer matching
+        // stays single-token), everything else is one char.
+        if c == ':' && cs.get(i + 1) == Some(&':') {
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                line,
+                text: "::".to_string(),
+            });
+            i += 2;
+            continue;
+        }
+        if c == '-' && cs.get(i + 1) == Some(&'>') {
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                line,
+                text: "->".to_string(),
+            });
+            i += 2;
+            continue;
+        }
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            line,
+            text: c.to_string(),
+        });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_are_not_tokens() {
+        let l = lex("let x = 1; // HashMap in a comment\n/* Vec::new */");
+        assert!(l.toks.iter().all(|t| t.text != "HashMap"));
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].text, "HashMap in a comment");
+        assert_eq!(l.comments[1].text, "Vec::new");
+    }
+
+    #[test]
+    fn doc_comment_decoration_stripped() {
+        let l = lex("/// doc line\n//! inner doc\ncode();");
+        assert_eq!(l.comments[0].text, "doc line");
+        assert_eq!(l.comments[1].text, "inner doc");
+    }
+
+    #[test]
+    fn strings_hide_their_content() {
+        let l = lex(r#"let s = "HashMap::new() \" quoted"; x();"#);
+        assert!(l.toks.iter().all(|t| !t.text.contains("HashMap")
+            || t.kind == TokKind::Str));
+        // Content is carried on the Str token only.
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let l = lex("let s = r#\"unwrap() \"# ; let r#type = 1;");
+        assert!(l.toks.iter().all(|t| t.text != "unwrap"));
+        assert!(l.toks.iter().any(|t| t.is_ident("type")));
+        // A multi-line raw string advances line accounting.
+        let l2 = lex("r\"a\nb\"\nx");
+        let x = l2.toks.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 3);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; }");
+        let lifetimes: Vec<_> = l.toks.iter()
+            .filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars = l.toks.iter()
+            .filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn paths_and_arrows_fuse() {
+        assert_eq!(texts("Vec::new() -> X"),
+                   vec!["Vec", "::", "new", "(", ")", "->", "X"]);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_calls() {
+        assert_eq!(texts("x.0.clone()"),
+                   vec!["x", ".", "0", ".", "clone", "(", ")"]);
+        assert_eq!(texts("for i in 0..10 {}"),
+                   vec!["for", "i", "in", "0", ".", ".", "10", "{", "}"]);
+        assert_eq!(texts("1.5e3 0xFF_u64"), vec!["1.5e3", "0xFF_u64"]);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let l = lex("a\n\nb /* x\ny */ c");
+        let a = l.toks.iter().find(|t| t.is_ident("a")).unwrap();
+        let b = l.toks.iter().find(|t| t.is_ident("b")).unwrap();
+        let c = l.toks.iter().find(|t| t.is_ident("c")).unwrap();
+        assert_eq!((a.line, b.line, c.line), (1, 3, 4));
+    }
+}

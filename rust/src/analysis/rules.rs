@@ -1,0 +1,760 @@
+//! The lint rules and the engine that runs them over a [`SourceTree`].
+//!
+//! Four enforced invariant families (DESIGN.md §11):
+//!
+//! * **hot-path purity** (`hot-collections`, `hot-alloc`) — the
+//!   per-access pipeline stays HashMap-free and allocation-free, the
+//!   property the PR 6 throughput campaign bought.
+//! * **determinism** (`nondet-clock`, `nondet-iter`) — no wall-clock
+//!   reads outside the bench/perf harness, no unordered-map identifiers
+//!   inside `*_to_kv` serialization functions, so byte-identical sweeps
+//!   stay byte-identical.
+//! * **wire-format lock** (`wire-schema`, in [`super::schema`]) — a
+//!   serialized struct cannot change shape without its version
+//!   constant changing too.
+//! * **panic hygiene** (`panic-protocol`, `unsafe-audit`) — protocol
+//!   code fails loud-but-clean (PR 5 contract), and any `unsafe` must
+//!   carry a `SAFETY:` justification next to its `#[allow]`.
+//!
+//! Suppression: a finding on line `L` is silenced by a
+//! `rainbow-lint: allow(rule-id, reason)` comment on line `L` or
+//! `L-1`. The reason is mandatory (`allow-hygiene` fires otherwise)
+//! and a marker that silences nothing is itself reportable
+//! (`stale-allow`, behind [`LintConfig::stale_allows`]).
+
+use super::lexer::{self, Comment, Tok, TokKind};
+use super::source::SourceTree;
+
+/// Static description of one rule, for `rainbow lint --list-rules`
+/// and the MANUAL completeness guard.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub family: &'static str,
+    pub summary: &'static str,
+    /// Whether an allow-marker may silence it. Schema and marker
+    /// hygiene findings are not suppressible: their fix is a version
+    /// bump or a better marker, not an exception.
+    pub suppressible: bool,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "hot-collections",
+        family: "hot-path",
+        summary: "HashMap/BTreeMap/HashSet types in a declared hot \
+                  module (outside tests)",
+        suppressible: true,
+    },
+    RuleInfo {
+        id: "hot-alloc",
+        family: "hot-path",
+        summary: "Vec::new / vec![] / Box::new / format! / .to_string() \
+                  / .clone() in a hot module's non-constructor, \
+                  non-test function",
+        suppressible: true,
+    },
+    RuleInfo {
+        id: "nondet-clock",
+        family: "determinism",
+        summary: "SystemTime::now / Instant::now outside util/bench.rs \
+                  and perf.rs",
+        suppressible: true,
+    },
+    RuleInfo {
+        id: "nondet-iter",
+        family: "determinism",
+        summary: "HashMap/HashSet inside a *_to_kv serialization \
+                  function (unordered iteration feeding the wire)",
+        suppressible: true,
+    },
+    RuleInfo {
+        id: "wire-schema",
+        family: "wire-format",
+        summary: "serialized struct layout changed without its VERSION \
+                  constant changing (schemas.lock)",
+        suppressible: false,
+    },
+    RuleInfo {
+        id: "panic-protocol",
+        family: "panic-hygiene",
+        summary: ".unwrap() / .expect( / panic! in protocol code \
+                  (report/{netstore,store,shard}.rs non-test paths)",
+        suppressible: true,
+    },
+    RuleInfo {
+        id: "unsafe-audit",
+        family: "panic-hygiene",
+        summary: "`unsafe` without an adjacent SAFETY: comment \
+                  (the crate root denies unsafe_code)",
+        suppressible: true,
+    },
+    RuleInfo {
+        id: "allow-hygiene",
+        family: "lint",
+        summary: "malformed allow marker: missing reason or unknown \
+                  rule id",
+        suppressible: false,
+    },
+    RuleInfo {
+        id: "stale-allow",
+        family: "lint",
+        summary: "allow marker that suppresses nothing (--stale-allows)",
+        suppressible: false,
+    },
+];
+
+pub fn rule(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// One diagnostic, displayed as `file:line: [rule-id] message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule,
+               self.msg)
+    }
+}
+
+/// Hot modules: the per-access pipeline (ROADMAP "simulator-core
+/// throughput"). Directory prefixes relative to the lint root.
+const HOT_PREFIXES: &[&str] =
+    &["tlb/", "cache/", "rainbow/", "mem/", "policies/"];
+const HOT_FILES: &[&str] = &["os/page_table.rs"];
+
+/// Files allowed to read wall clocks: the measurement harness itself.
+const CLOCK_EXEMPT: &[&str] = &["util/bench.rs", "perf.rs"];
+
+/// Protocol code bound to the loud-but-clean error contract.
+const PROTOCOL_FILES: &[&str] =
+    &["report/netstore.rs", "report/store.rs", "report/shard.rs"];
+
+fn is_hot(path: &str) -> bool {
+    HOT_PREFIXES.iter().any(|p| path.starts_with(p))
+        || HOT_FILES.contains(&path)
+}
+
+/// Constructor-shaped functions are exempt from `hot-alloc`: setup
+/// allocation is the point of a constructor.
+fn is_constructor_name(name: &str) -> bool {
+    name == "new"
+        || name == "default"
+        || name.starts_with("new_")
+        || name.starts_with("with_")
+        || name.starts_with("from_")
+}
+
+// ---------------------------------------------------------------- context
+
+/// Per-token context from a lightweight structural pass: enclosing
+/// function name and whether the token sits in test code
+/// (`#[cfg(test)]` module or `#[test]` function).
+#[derive(Clone, Debug, Default)]
+struct Ctx {
+    fn_name: Option<String>,
+    in_test: bool,
+}
+
+struct Scope {
+    open_depth: u32,
+    is_test: bool,
+    fn_name: Option<String>,
+}
+
+/// Compute the context of every token. Single forward pass tracking
+/// brace depth, `fn`/`mod` items, and their preceding attributes.
+fn contexts(toks: &[Tok]) -> Vec<Ctx> {
+    let mut ctxs: Vec<Ctx> = Vec::with_capacity(toks.len());
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut depth: u32 = 0;
+    // Attribute state carried to the next `fn`/`mod` item.
+    let mut pending_test_attr = false;
+    // A seen `fn name` / `mod name` awaiting its opening `{`. Tokens
+    // between the name and the body (parameters, return type) belong
+    // to the pending function already — `fn spec_to_kv(m: &HashMap..)`
+    // must attribute the signature to `spec_to_kv`.
+    let mut pending_item: Option<(Option<String>, bool)> = None;
+    // Paren/bracket nesting inside a pending signature, so the `;` in
+    // `fn f(x: [u8; 4])` does not cancel the pending item.
+    let mut pending_nest: i32 = 0;
+
+    let current = |scopes: &[Scope],
+                   pending: &Option<(Option<String>, bool)>|
+     -> Ctx {
+        let mut c = Ctx {
+            in_test: scopes.iter().any(|s| s.is_test),
+            fn_name: scopes
+                .iter()
+                .rev()
+                .find_map(|s| s.fn_name.clone()),
+        };
+        if let Some((name, is_test)) = pending {
+            if let Some(name) = name {
+                c.fn_name = Some(name.clone());
+            }
+            if *is_test {
+                c.in_test = true;
+            }
+        }
+        c
+    };
+
+    let mut k = 0usize;
+    while k < toks.len() {
+        let t = &toks[k];
+        ctxs.push(current(&scopes, &pending_item));
+        if t.is_punct("#") {
+            // Attribute: `#[...]` or `#![...]`. Consume to the
+            // matching `]`; a bare `test` ident inside (and no `not`)
+            // marks the next item as test code.
+            let mut j = k + 1;
+            if toks.get(j).map(|t| t.is_punct("!")).unwrap_or(false) {
+                ctxs.push(current(&scopes, &pending_item));
+                j += 1;
+            }
+            if toks.get(j).map(|t| t.is_punct("[")).unwrap_or(false) {
+                let mut nest = 0i32;
+                let mut saw_test = false;
+                let mut saw_not = false;
+                while j < toks.len() {
+                    let a = &toks[j];
+                    if j > k {
+                        ctxs.push(current(&scopes, &pending_item));
+                    }
+                    if a.is_punct("[") {
+                        nest += 1;
+                    } else if a.is_punct("]") {
+                        nest -= 1;
+                        if nest == 0 {
+                            break;
+                        }
+                    } else if a.is_ident("test") {
+                        saw_test = true;
+                    } else if a.is_ident("not") {
+                        saw_not = true;
+                    }
+                    j += 1;
+                }
+                if saw_test && !saw_not {
+                    pending_test_attr = true;
+                }
+                k = j + 1;
+                continue;
+            }
+            k = j;
+            continue;
+        }
+        if t.is_ident("fn") {
+            if let Some(name) =
+                toks.get(k + 1).filter(|n| n.kind == TokKind::Ident)
+            {
+                pending_item =
+                    Some((Some(name.text.clone()), pending_test_attr));
+                pending_test_attr = false;
+            }
+        } else if t.is_ident("mod") {
+            if toks.get(k + 1).map(|n| n.kind == TokKind::Ident)
+                == Some(true)
+            {
+                pending_item = Some((None, pending_test_attr));
+                pending_test_attr = false;
+            }
+        } else if t.is_punct("(") || t.is_punct("[") {
+            if pending_item.is_some() {
+                pending_nest += 1;
+            }
+        } else if t.is_punct(")") || t.is_punct("]") {
+            if pending_item.is_some() {
+                pending_nest -= 1;
+            }
+        } else if t.is_punct(";") {
+            // `mod name;` / bodyless trait fn: the pending item never
+            // opens a scope. A `;` nested inside the signature (array
+            // types like `[u8; 4]`) is not a terminator.
+            if pending_nest == 0 {
+                pending_item = None;
+            }
+        } else if t.is_punct("{") {
+            depth += 1;
+            if let Some((fn_name, is_test)) = pending_item.take() {
+                pending_nest = 0;
+                scopes.push(Scope { open_depth: depth, is_test, fn_name });
+            }
+        } else if t.is_punct("}") {
+            while scopes
+                .last()
+                .map(|s| s.open_depth == depth)
+                .unwrap_or(false)
+            {
+                scopes.pop();
+            }
+            depth = depth.saturating_sub(1);
+        }
+        k += 1;
+    }
+    ctxs
+}
+
+// ------------------------------------------------------------- markers
+
+/// A parsed `rainbow-lint: allow(rule, reason)` marker.
+#[derive(Clone, Debug)]
+pub struct AllowMarker {
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+const MARKER_PREFIX: &str = "rainbow-lint:";
+
+/// Extract markers from a file's comments. Malformed markers (no
+/// `allow(...)`, empty reason, unknown rule id) come back as
+/// `allow-hygiene` diagnostics instead.
+fn parse_markers(path: &str, comments: &[Comment])
+                 -> (Vec<AllowMarker>, Vec<Diagnostic>) {
+    let mut markers = Vec::new();
+    let mut diags = Vec::new();
+    for c in comments {
+        let text = c.text.trim();
+        let Some(rest) = text.strip_prefix(MARKER_PREFIX) else {
+            continue;
+        };
+        let bad = |msg: String| Diagnostic {
+            file: path.to_string(),
+            line: c.line,
+            rule: "allow-hygiene",
+            msg,
+        };
+        let rest = rest.trim();
+        let Some(inner) = rest
+            .strip_prefix("allow(")
+            .and_then(|r| r.rfind(')').map(|end| &r[..end]))
+        else {
+            diags.push(bad(format!(
+                "malformed marker {text:?}: expected \
+                 `rainbow-lint: allow(rule-id, reason)`")));
+            continue;
+        };
+        let Some((id, reason)) = inner.split_once(',') else {
+            diags.push(bad(format!(
+                "allow({inner}) has no reason; every exception must \
+                 say why (`allow(rule-id, reason)`)")));
+            continue;
+        };
+        let id = id.trim();
+        let reason = reason.trim();
+        match rule(id) {
+            None => diags.push(bad(format!(
+                "allow({id}, ...): unknown rule id (see \
+                 `rainbow lint --list-rules`)"))),
+            Some(info) if !info.suppressible => diags.push(bad(format!(
+                "allow({id}, ...): rule {id} is not suppressible"))),
+            Some(_) if reason.is_empty() => diags.push(bad(format!(
+                "allow({id}, ...): empty reason"))),
+            Some(_) => markers.push(AllowMarker {
+                line: c.line,
+                rule: id.to_string(),
+                reason: reason.to_string(),
+            }),
+        }
+    }
+    (markers, diags)
+}
+
+// ------------------------------------------------------------- patterns
+
+fn path2(toks: &[Tok], k: usize, a: &str, b: &str) -> bool {
+    toks[k].is_ident(a)
+        && toks.get(k + 1).map(|t| t.is_punct("::")).unwrap_or(false)
+        && toks.get(k + 2).map(|t| t.is_ident(b)).unwrap_or(false)
+}
+
+fn macro_call(toks: &[Tok], k: usize, name: &str) -> bool {
+    toks[k].is_ident(name)
+        && toks.get(k + 1).map(|t| t.is_punct("!")).unwrap_or(false)
+}
+
+fn method_call(toks: &[Tok], k: usize, name: &str) -> bool {
+    toks[k].is_punct(".")
+        && toks.get(k + 1).map(|t| t.is_ident(name)).unwrap_or(false)
+        && toks.get(k + 2).map(|t| t.is_punct("(")).unwrap_or(false)
+}
+
+// --------------------------------------------------------------- engine
+
+/// Everything the token rules produced for one file.
+pub struct FileLint {
+    pub findings: Vec<Diagnostic>,
+    pub markers: Vec<AllowMarker>,
+    pub marker_diags: Vec<Diagnostic>,
+}
+
+/// Run every token-level rule over one file.
+pub fn lint_file(path: &str, text: &str) -> FileLint {
+    let lexed = lexer::lex(text);
+    let toks = &lexed.toks;
+    let ctxs = contexts(toks);
+    let mut findings: Vec<Diagnostic> = Vec::new();
+    let mut push = |line: u32, rule: &'static str, msg: String| {
+        findings.push(Diagnostic { file: path.to_string(), line, rule, msg })
+    };
+
+    let hot = is_hot(path);
+    let clock_exempt = CLOCK_EXEMPT.contains(&path);
+    let protocol = PROTOCOL_FILES.contains(&path);
+
+    for (k, t) in toks.iter().enumerate() {
+        let ctx = &ctxs[k];
+        if ctx.in_test {
+            continue;
+        }
+
+        if hot && t.kind == TokKind::Ident {
+            if matches!(t.text.as_str(), "HashMap" | "BTreeMap" | "HashSet")
+            {
+                push(t.line, "hot-collections", format!(
+                    "{} in hot module {path}: the per-access pipeline \
+                     is flat-array only (flatten like RemapTable, or \
+                     justify with an allow marker)", t.text));
+            }
+        }
+        if hot {
+            let in_plain_fn = ctx
+                .fn_name
+                .as_deref()
+                .map(|n| !is_constructor_name(n))
+                .unwrap_or(false);
+            if in_plain_fn {
+                let hit = if path2(toks, k, "Vec", "new") {
+                    Some("Vec::new")
+                } else if macro_call(toks, k, "vec") {
+                    Some("vec![]")
+                } else if path2(toks, k, "Box", "new") {
+                    Some("Box::new")
+                } else if macro_call(toks, k, "format") {
+                    Some("format!")
+                } else if method_call(toks, k, "to_string") {
+                    Some(".to_string()")
+                } else if method_call(toks, k, "clone") {
+                    Some(".clone()")
+                } else {
+                    None
+                };
+                if let Some(what) = hit {
+                    let f = ctx.fn_name.as_deref().unwrap_or("?");
+                    push(t.line, "hot-alloc", format!(
+                        "{what} in hot function {f}() of {path}: \
+                         per-access paths must not allocate \
+                         (preallocate in the constructor, or justify \
+                         with an allow marker)"));
+                }
+            }
+        }
+        if !clock_exempt
+            && (path2(toks, k, "Instant", "now")
+                || path2(toks, k, "SystemTime", "now"))
+        {
+            push(t.line, "nondet-clock", format!(
+                "{}::now in {path}: wall-clock reads outside \
+                 util/bench.rs and perf.rs break byte-identical \
+                 replays", t.text));
+        }
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "HashMap" | "HashSet")
+        {
+            if let Some(f) = ctx.fn_name.as_deref() {
+                if f.ends_with("to_kv") {
+                    push(t.line, "nondet-iter", format!(
+                        "{} inside serialization function {f}(): \
+                         unordered iteration feeding the wire format \
+                         is nondeterministic (use a sorted or ordered \
+                         structure)", t.text));
+                }
+            }
+        }
+        if protocol {
+            let hit = if method_call(toks, k, "unwrap") {
+                Some(".unwrap()")
+            } else if method_call(toks, k, "expect") {
+                Some(".expect(")
+            } else if macro_call(toks, k, "panic") {
+                Some("panic!")
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                push(t.line, "panic-protocol", format!(
+                    "{what} in protocol code {path}: a malformed peer \
+                     or poisoned lock must surface as a propagated \
+                     error, not a process abort (PR 5 contract)"));
+            }
+        }
+        if t.is_ident("unsafe") {
+            let has_safety = lexed.comments.iter().any(|c| {
+                c.line + 3 >= t.line
+                    && c.line <= t.line
+                    && c.text.contains("SAFETY:")
+            });
+            if !has_safety {
+                push(t.line, "unsafe-audit", format!(
+                    "`unsafe` in {path} without an adjacent SAFETY: \
+                     comment (the crate root denies unsafe_code; each \
+                     surviving site needs #[allow(unsafe_code)] plus \
+                     a SAFETY: justification)"));
+            }
+        }
+    }
+
+    let (markers, marker_diags) = parse_markers(path, &lexed.comments);
+    FileLint { findings, markers, marker_diags }
+}
+
+/// Lint configuration (what `rainbow lint`'s flags toggle).
+#[derive(Clone, Debug, Default)]
+pub struct LintConfig {
+    /// Report valid markers that suppress nothing (`--stale-allows`).
+    pub stale_allows: bool,
+    /// The committed `schemas.lock` content; `None` skips the
+    /// wire-schema rule (fixture runs that do not care about it).
+    pub schemas_lock: Option<String>,
+}
+
+/// Run the full pass: token rules per file, marker suppression,
+/// marker hygiene, staleness, and the wire-schema lock. Diagnostics
+/// come back sorted by (file, line, rule) — deterministic output is a
+/// lint-tool wire format too.
+pub fn lint_tree(tree: &SourceTree, cfg: &LintConfig) -> Vec<Diagnostic> {
+    let mut out: Vec<Diagnostic> = Vec::new();
+    for f in &tree.files {
+        let fl = lint_file(&f.path, &f.text);
+        let mut used = vec![false; fl.markers.len()];
+        for d in fl.findings {
+            let suppressed = fl.markers.iter().enumerate().any(
+                |(i, m)| {
+                    let hit = m.rule == d.rule
+                        && (m.line == d.line || m.line + 1 == d.line);
+                    if hit {
+                        used[i] = true;
+                    }
+                    hit
+                });
+            if !suppressed {
+                out.push(d);
+            }
+        }
+        out.extend(fl.marker_diags);
+        if cfg.stale_allows {
+            for (i, m) in fl.markers.iter().enumerate() {
+                if !used[i] {
+                    out.push(Diagnostic {
+                        file: f.path.clone(),
+                        line: m.line,
+                        rule: "stale-allow",
+                        msg: format!(
+                            "allow({}, ...) suppresses nothing on line \
+                             {} or {}; remove the stale marker",
+                            m.rule, m.line, m.line + 1),
+                    });
+                }
+            }
+        }
+    }
+    if let Some(lock) = &cfg.schemas_lock {
+        out.extend(super::schema::check(tree, Some(lock.as_str()),
+                                        super::schema::TRACKED));
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> Vec<Diagnostic> {
+        lint_tree(&SourceTree::from_files(&[(path, src)]),
+                  &LintConfig::default())
+    }
+
+    #[test]
+    fn contexts_track_fns_mods_and_tests() {
+        let src = "fn hot() { body(); }\n\
+                   #[cfg(test)]\nmod tests {\n  #[test]\n  fn case() { \
+                   t(); }\n}\nfn after() { b(); }";
+        let lexed = lexer::lex(src);
+        let ctxs = contexts(&lexed.toks);
+        let at = |name: &str| {
+            let k = lexed.toks.iter().position(|t| t.is_ident(name))
+                .unwrap();
+            ctxs[k].clone()
+        };
+        assert_eq!(at("body").fn_name.as_deref(), Some("hot"));
+        assert!(!at("body").in_test);
+        assert!(at("t").in_test);
+        assert_eq!(at("t").fn_name.as_deref(), Some("case"));
+        assert!(!at("b").in_test, "scope must close after the test mod");
+        assert_eq!(at("b").fn_name.as_deref(), Some("after"));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test_code() {
+        let src = "#[cfg(not(test))]\nfn shipping() { \
+                   let m: HashMap<u8, u8>; }";
+        let d = one("rainbow/x.rs", src);
+        assert!(d.iter().any(|d| d.rule == "hot-collections"), "{d:?}");
+    }
+
+    #[test]
+    fn constructor_and_test_exemptions() {
+        let src = "impl X {\n  fn new() -> X { let v = Vec::new(); }\n  \
+                   fn with_capacity(n: usize) { let v = vec![0; n]; }\n  \
+                   fn access(&mut self) { let v = Vec::new(); }\n}\n\
+                   #[cfg(test)]\nmod tests {\n  fn helper() { \
+                   let v = Vec::new(); }\n}";
+        let d = one("tlb/x.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "hot-alloc");
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn nonhot_files_allocate_freely() {
+        let d = one("report/x.rs",
+                    "fn f() { let v = Vec::new(); let s = x.clone(); }");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let d = one("cache/x.rs",
+                    "fn f() { // HashMap Vec::new()\n  \
+                     let s = \"Instant::now HashMap\"; }");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn suppression_same_line_and_preceding_line() {
+        let src = "fn access() {\n  \
+                   // rainbow-lint: allow(hot-alloc, bounded burst)\n  \
+                   let v = Vec::new();\n  \
+                   let w = Vec::new(); // rainbow-lint: allow(hot-alloc, x)\n\
+                   }";
+        let d = one("mem/x.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn marker_for_other_rule_does_not_suppress() {
+        let src = "fn access() {\n  \
+                   // rainbow-lint: allow(nondet-clock, wrong rule)\n  \
+                   let v = Vec::new();\n}";
+        let d = one("mem/x.rs", src);
+        assert!(d.iter().any(|d| d.rule == "hot-alloc"), "{d:?}");
+    }
+
+    #[test]
+    fn marker_hygiene() {
+        // No reason.
+        let d = one("a.rs", "// rainbow-lint: allow(hot-alloc)\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "allow-hygiene");
+        // Unknown rule.
+        let d = one("a.rs", "// rainbow-lint: allow(no-such-rule, x)\n");
+        assert_eq!(d[0].rule, "allow-hygiene");
+        // Unsuppressible rule.
+        let d = one("a.rs", "// rainbow-lint: allow(wire-schema, x)\n");
+        assert_eq!(d[0].rule, "allow-hygiene");
+        // Garbage after the prefix.
+        let d = one("a.rs", "// rainbow-lint: disable everything\n");
+        assert_eq!(d[0].rule, "allow-hygiene");
+        // Empty reason.
+        let d = one("a.rs", "// rainbow-lint: allow(hot-alloc,  )\n");
+        assert_eq!(d[0].rule, "allow-hygiene");
+    }
+
+    #[test]
+    fn stale_allows_only_with_flag() {
+        let src = "// rainbow-lint: allow(hot-alloc, nothing here)\n\
+                   fn quiet() {}\n";
+        let tree = SourceTree::from_files(&[("mem/x.rs", src)]);
+        assert!(lint_tree(&tree, &LintConfig::default()).is_empty());
+        let d = lint_tree(&tree, &LintConfig {
+            stale_allows: true,
+            ..Default::default()
+        });
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "stale-allow");
+    }
+
+    #[test]
+    fn clock_rule_exempts_the_harness() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert!(one("util/bench.rs", src).is_empty());
+        assert!(one("perf.rs", src).is_empty());
+        let d = one("report/sweep.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "nondet-clock");
+        let d = one("report/sweep.rs",
+                    "fn f() { let t = SystemTime::now(); }");
+        assert_eq!(d[0].rule, "nondet-clock");
+    }
+
+    #[test]
+    fn to_kv_functions_reject_unordered_maps() {
+        let d = one("report/serde_kv.rs",
+                    "fn widget_to_kv(m: &HashMap<String, u64>) {}");
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "nondet-iter");
+        // Same type in a non-serialization fn: quiet.
+        assert!(one("report/serde_kv.rs",
+                    "fn order(m: &HashMap<String, u64>) {}").is_empty());
+    }
+
+    #[test]
+    fn panic_rule_scoped_to_protocol_files() {
+        let src = "fn f() { x.unwrap(); y.expect(\"m\"); panic!(\"b\"); }";
+        let d = one("report/netstore.rs", src);
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d.iter().all(|d| d.rule == "panic-protocol"));
+        assert!(one("sim/engine.rs", src).is_empty());
+        // Test code in protocol files may unwrap.
+        let d = one("report/store.rs",
+                    "#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); }\n}");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let d = one("util/x.rs", "fn f() { unsafe { g(); } }");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "unsafe-audit");
+        let d = one("util/x.rs",
+                    "fn f() {\n  // SAFETY: g is infallible here\n  \
+                     unsafe { g(); }\n}");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn diagnostics_sorted_and_displayable() {
+        let tree = SourceTree::from_files(&[
+            ("mem/b.rs", "fn f() { let v = Vec::new(); }"),
+            ("cache/a.rs", "fn f() { let v = Vec::new(); }"),
+        ]);
+        let d = lint_tree(&tree, &LintConfig::default());
+        assert_eq!(d.len(), 2);
+        assert!(d[0].file < d[1].file);
+        let shown = d[0].to_string();
+        assert!(shown.starts_with("cache/a.rs:1: [hot-alloc]"), "{shown}");
+    }
+}

@@ -1,0 +1,607 @@
+//! The wire-format lock (`wire-schema` rule): fingerprints of the
+//! field lists of every struct that crosses a serialization boundary
+//! — serde_kv results/specs, the binary trace format, the
+//! rainbow-bench JSON report — committed to `rust/schemas.lock`
+//! together with the version constant guarding each format.
+//!
+//! The invariant: **a tracked struct's layout may not change unless
+//! its version constant changes in the same diff.** The last two
+//! silent-corruption bugs (the trace meta-layout bit-63 collision and
+//! the counter 0x8000 overflow aliasing, PR 6) were exactly layout
+//! drift nothing enforced; this rule turns that class of bug into a
+//! lint failure.
+//!
+//! Workflow when a layout legitimately changes:
+//! 1. edit the struct, 2. bump its version constant
+//! (`METRICS_VERSION`, trace `VERSION`, perf `SCHEMA`, ...),
+//! 3. run `rainbow lint --update-schemas` to re-stamp the lock,
+//! 4. commit the lock with the code. Step 3 *refuses* to run if the
+//! version was not bumped — the lock can never paper over drift.
+
+use super::lexer::{self, Tok, TokKind};
+use super::rules::Diagnostic;
+use super::source::SourceTree;
+
+/// First line of every lock file; bump if the lock format itself
+/// changes (it is a wire format too, after all).
+pub const LOCK_VERSION: u64 = 1;
+
+/// One struct ↔ version-constant binding.
+#[derive(Clone, Copy, Debug)]
+pub struct Tracked {
+    /// File holding the struct, relative to the lint root.
+    pub struct_file: &'static str,
+    pub struct_name: &'static str,
+    /// File holding the guarding version constant.
+    pub version_file: &'static str,
+    pub version_const: &'static str,
+}
+
+/// Every struct that crosses a serialization boundary today. Adding a
+/// serialized struct means adding a row here and re-stamping the lock.
+pub const TRACKED: &[Tracked] = &[
+    // serde_kv metrics entries (cache/store wire + on-disk format).
+    Tracked {
+        struct_file: "sim/metrics.rs",
+        struct_name: "RunMetrics",
+        version_file: "report/serde_kv.rs",
+        version_const: "METRICS_VERSION",
+    },
+    Tracked {
+        struct_file: "sim/metrics.rs",
+        struct_name: "XlatBreakdown",
+        version_file: "report/serde_kv.rs",
+        version_const: "METRICS_VERSION",
+    },
+    Tracked {
+        struct_file: "sim/metrics.rs",
+        struct_name: "RuntimeBreakdown",
+        version_file: "report/serde_kv.rs",
+        version_const: "METRICS_VERSION",
+    },
+    // Spec files / spec-list shard files.
+    Tracked {
+        struct_file: "report/spec.rs",
+        struct_name: "RunSpec",
+        version_file: "report/serde_kv.rs",
+        version_const: "SPEC_VERSION",
+    },
+    // Binary trace format (meta-layout v2).
+    Tracked {
+        struct_file: "workloads/trace.rs",
+        struct_name: "TraceRec",
+        version_file: "workloads/trace.rs",
+        version_const: "VERSION",
+    },
+    // rainbow-bench-v1 JSON report.
+    Tracked {
+        struct_file: "perf.rs",
+        struct_name: "PerfConfig",
+        version_file: "perf.rs",
+        version_const: "SCHEMA",
+    },
+    Tracked {
+        struct_file: "perf.rs",
+        struct_name: "BenchEntry",
+        version_file: "perf.rs",
+        version_const: "SCHEMA",
+    },
+    Tracked {
+        struct_file: "perf.rs",
+        struct_name: "PerfReport",
+        version_file: "perf.rs",
+        version_const: "SCHEMA",
+    },
+];
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Extract `struct name { field: Type, ... }` field descriptors from a
+/// token stream: `name:Type tokens` joined, one string per field
+/// (tuple structs yield `0:Type`, `1:Type`, ...). Comments,
+/// whitespace, and attributes never affect the result — only real
+/// layout does.
+pub fn struct_fields(toks: &[Tok], name: &str) -> Option<Vec<String>> {
+    let mut k = 0usize;
+    while k + 1 < toks.len() {
+        if toks[k].is_ident("struct") && toks[k + 1].is_ident(name) {
+            break;
+        }
+        k += 1;
+    }
+    if k + 1 >= toks.len() {
+        return None;
+    }
+    // Skip generics to the body opener.
+    let mut j = k + 2;
+    let mut angle = 0i32;
+    loop {
+        let t = toks.get(j)?;
+        if t.is_punct("<") {
+            angle += 1;
+        } else if t.is_punct(">") {
+            angle -= 1;
+        } else if angle == 0 && (t.is_punct("{") || t.is_punct("(")) {
+            break;
+        } else if angle == 0 && t.is_punct(";") {
+            return Some(Vec::new()); // unit struct
+        }
+        j += 1;
+    }
+    let tuple = toks[j].is_punct("(");
+    let close = if tuple { ")" } else { "}" };
+    let open = if tuple { "(" } else { "{" };
+    j += 1;
+
+    let mut fields = Vec::new();
+    let mut cur: Vec<String> = Vec::new();
+    let mut depth = 0i32; // nesting of any bracket kind inside a type
+    let mut idx = 0usize;
+    let flush = |cur: &mut Vec<String>, fields: &mut Vec<String>,
+                 idx: &mut usize, tuple: bool| {
+        // Drop visibility modifiers and (named case) split name: type.
+        let mut parts: &[String] = cur;
+        while parts.first().map(|p| p == "pub").unwrap_or(false) {
+            parts = &parts[1..];
+            // pub(crate) / pub(super): the paren group is one token
+            // sequence ( crate ) — drop it too.
+            if parts.first().map(|p| p == "(").unwrap_or(false) {
+                if let Some(close) =
+                    parts.iter().position(|p| p == ")")
+                {
+                    parts = &parts[close + 1..];
+                }
+            }
+        }
+        if parts.is_empty() {
+            cur.clear();
+            return;
+        }
+        let desc = if tuple {
+            format!("{}:{}", idx, parts.join(" "))
+        } else {
+            parts.join(" ")
+        };
+        fields.push(desc);
+        *idx += 1;
+        cur.clear();
+    };
+    while let Some(t) = toks.get(j) {
+        if t.is_punct("#") {
+            // Field attribute: skip the [ ... ] group.
+            let mut nest = 0i32;
+            j += 1;
+            while let Some(a) = toks.get(j) {
+                if a.is_punct("[") {
+                    nest += 1;
+                } else if a.is_punct("]") {
+                    nest -= 1;
+                    if nest == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            j += 1;
+            continue;
+        }
+        if depth == 0 && t.is_punct(close) {
+            if !cur.is_empty() {
+                flush(&mut cur, &mut fields, &mut idx, tuple);
+            }
+            return Some(fields);
+        }
+        if t.is_punct("<") || t.is_punct("[") || t.is_punct("(")
+            || t.is_punct(open)
+        {
+            depth += 1;
+        } else if t.is_punct(">") || t.is_punct("]") || t.is_punct(")") {
+            depth -= 1;
+        } else if depth == 0 && t.is_punct(",") {
+            flush(&mut cur, &mut fields, &mut idx, tuple);
+            j += 1;
+            continue;
+        }
+        cur.push(t.text.clone());
+        j += 1;
+    }
+    None // unterminated body: treat as not found
+}
+
+/// Fingerprint a field list (order-sensitive — field order IS layout
+/// for every format we serialize).
+pub fn fingerprint(fields: &[String]) -> u64 {
+    let mut buf = String::new();
+    for f in fields {
+        buf.push_str(f);
+        buf.push(';');
+    }
+    fnv1a(buf.as_bytes())
+}
+
+/// Extract the value of `const NAME: T = <literal>;` — integer
+/// constants yield their digits, string constants their content.
+pub fn const_value(toks: &[Tok], name: &str) -> Option<String> {
+    let mut k = 0usize;
+    while k + 1 < toks.len() {
+        if toks[k].is_ident("const") && toks[k + 1].is_ident(name) {
+            // Find the `=`, then the literal.
+            let mut j = k + 2;
+            while let Some(t) = toks.get(j) {
+                if t.is_punct("=") {
+                    let v = toks.get(j + 1)?;
+                    return match v.kind {
+                        TokKind::Num | TokKind::Ident => {
+                            Some(v.text.clone())
+                        }
+                        TokKind::Str => Some(v.text.clone()),
+                        _ => None,
+                    };
+                }
+                if t.is_punct(";") {
+                    break;
+                }
+                j += 1;
+            }
+        }
+        k += 1;
+    }
+    None
+}
+
+/// One parsed lock entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LockEntry {
+    pub key: String, // "<struct_file>::<struct_name>"
+    pub n_fields: usize,
+    pub fp: u64,
+    pub version_key: String, // "<version_file>::<version_const>"
+    pub value: String,
+}
+
+fn entry_key(t: &Tracked) -> String {
+    format!("{}::{}", t.struct_file, t.struct_name)
+}
+
+/// Parse a lock file; returns entries or a description of what is
+/// wrong with it (a corrupt lock is a loud error, like every other
+/// versioned file in this repo).
+pub fn parse_lock(text: &str) -> Result<Vec<LockEntry>, String> {
+    let mut lines = text.lines().filter(|l| {
+        let l = l.trim();
+        !l.is_empty() && !l.starts_with('#')
+    });
+    let head = lines.next().ok_or("schemas.lock: empty file")?;
+    let ver = head
+        .strip_prefix("schemalockversion=")
+        .and_then(|v| v.parse::<u64>().ok())
+        .ok_or_else(|| format!(
+            "schemas.lock: bad header {head:?} (expected \
+             schemalockversion={LOCK_VERSION})"))?;
+    if ver != LOCK_VERSION {
+        return Err(format!(
+            "schemas.lock: version {ver} unsupported (expected \
+             {LOCK_VERSION}); regenerate with --update-schemas"));
+    }
+    let mut out = Vec::new();
+    for line in lines {
+        let mut key = None;
+        let mut n_fields = None;
+        let mut fp = None;
+        let mut version_key = None;
+        let mut value = None;
+        for part in line.split_whitespace() {
+            let Some((k, v)) = part.split_once('=') else {
+                return Err(format!("schemas.lock: bad token {part:?} \
+                                    in line {line:?}"));
+            };
+            match k {
+                "struct" => key = Some(v.to_string()),
+                "fields" => n_fields = v.parse::<usize>().ok(),
+                "fp" => fp = u64::from_str_radix(v, 16).ok(),
+                "version" => version_key = Some(v.to_string()),
+                "value" => value = Some(v.to_string()),
+                _ => {
+                    return Err(format!(
+                        "schemas.lock: unknown key {k:?} in {line:?}"))
+                }
+            }
+        }
+        match (key, n_fields, fp, version_key, value) {
+            (Some(key), Some(n_fields), Some(fp), Some(version_key),
+             Some(value)) => out.push(LockEntry {
+                key, n_fields, fp, version_key, value,
+            }),
+            _ => {
+                return Err(format!(
+                    "schemas.lock: incomplete entry {line:?}"))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Current (tree-derived) state of one tracked struct.
+struct Current {
+    n_fields: usize,
+    fp: u64,
+    value: String,
+}
+
+fn current_of(tree: &SourceTree, t: &Tracked)
+              -> Result<Current, Diagnostic> {
+    let diag = |file: &str, msg: String| Diagnostic {
+        file: file.to_string(),
+        line: 1,
+        rule: "wire-schema",
+        msg,
+    };
+    let sf = tree.get(t.struct_file).ok_or_else(|| {
+        diag(t.struct_file, format!(
+            "tracked file {} missing from the tree", t.struct_file))
+    })?;
+    let toks = lexer::lex(&sf.text).toks;
+    let fields = struct_fields(&toks, t.struct_name).ok_or_else(|| {
+        diag(t.struct_file, format!(
+            "tracked struct {} not found in {}", t.struct_name,
+            t.struct_file))
+    })?;
+    let vf = tree.get(t.version_file).ok_or_else(|| {
+        diag(t.version_file, format!(
+            "version file {} missing from the tree", t.version_file))
+    })?;
+    let vtoks = lexer::lex(&vf.text).toks;
+    let value =
+        const_value(&vtoks, t.version_const).ok_or_else(|| {
+            diag(t.version_file, format!(
+                "version constant {} not found in {}", t.version_const,
+                t.version_file))
+        })?;
+    Ok(Current { n_fields: fields.len(), fp: fingerprint(&fields), value })
+}
+
+/// Check a tree against a lock. `lock: None` means the lock file is
+/// missing — one diagnostic says so. Every mismatch explains the
+/// repair (bump the version, or re-stamp the lock).
+pub fn check(tree: &SourceTree, lock: Option<&str>, tracked: &[Tracked])
+             -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let entries = match lock {
+        None => {
+            out.push(Diagnostic {
+                file: "schemas.lock".to_string(),
+                line: 1,
+                rule: "wire-schema",
+                msg: "schemas.lock missing; generate it with \
+                      `rainbow lint --update-schemas` and commit it"
+                    .to_string(),
+            });
+            return out;
+        }
+        Some(text) => match parse_lock(text) {
+            Ok(e) => e,
+            Err(msg) => {
+                out.push(Diagnostic {
+                    file: "schemas.lock".to_string(),
+                    line: 1,
+                    rule: "wire-schema",
+                    msg,
+                });
+                return out;
+            }
+        },
+    };
+    for t in tracked {
+        let cur = match current_of(tree, t) {
+            Ok(c) => c,
+            Err(d) => {
+                out.push(d);
+                continue;
+            }
+        };
+        let key = entry_key(t);
+        let Some(e) = entries.iter().find(|e| e.key == key) else {
+            out.push(Diagnostic {
+                file: t.struct_file.to_string(),
+                line: 1,
+                rule: "wire-schema",
+                msg: format!(
+                    "{key} is tracked but absent from schemas.lock; \
+                     run `rainbow lint --update-schemas`"),
+            });
+            continue;
+        };
+        let layout_changed = cur.fp != e.fp;
+        let version_changed = cur.value != e.value;
+        match (layout_changed, version_changed) {
+            (false, false) => {}
+            (true, false) => out.push(Diagnostic {
+                file: t.struct_file.to_string(),
+                line: 1,
+                rule: "wire-schema",
+                msg: format!(
+                    "{} changed layout ({} -> {} fields, fp \
+                     {:016x} -> {:016x}) but {} is still {:?}: bump \
+                     the version constant, then re-stamp with \
+                     `rainbow lint --update-schemas`",
+                    key, e.n_fields, cur.n_fields, e.fp, cur.fp,
+                    e.version_key, e.value),
+            }),
+            (true, true) | (false, true) => out.push(Diagnostic {
+                file: t.struct_file.to_string(),
+                line: 1,
+                rule: "wire-schema",
+                msg: format!(
+                    "schemas.lock is stale for {} ({} now {:?}, locked \
+                     {:?}); run `rainbow lint --update-schemas` and \
+                     commit the lock",
+                    key, e.version_key, cur.value, e.value),
+            }),
+        }
+    }
+    // Lock entries for structs no longer tracked are noise that hides
+    // real drift — flag them too.
+    for e in &entries {
+        if !tracked.iter().any(|t| entry_key(t) == e.key) {
+            out.push(Diagnostic {
+                file: "schemas.lock".to_string(),
+                line: 1,
+                rule: "wire-schema",
+                msg: format!(
+                    "lock entry {} matches no tracked struct; \
+                     re-stamp with `rainbow lint --update-schemas`",
+                    e.key),
+            });
+        }
+    }
+    out
+}
+
+/// Render a fresh lock for `tree`. Fails with a readable message if a
+/// tracked struct or version constant cannot be found.
+pub fn render_lock(tree: &SourceTree, tracked: &[Tracked])
+                   -> Result<String, String> {
+    let mut out = format!(
+        "# rainbow lint wire-format lock — generated by \
+         `rainbow lint --update-schemas`.\n\
+         # A tracked struct's layout may not change unless its version \
+         constant changes too.\n\
+         schemalockversion={LOCK_VERSION}\n");
+    for t in tracked {
+        let cur = current_of(tree, t).map_err(|d| d.to_string())?;
+        out.push_str(&format!(
+            "struct={} fields={} fp={:016x} version={}::{} value={}\n",
+            entry_key(t), cur.n_fields, cur.fp, t.version_file,
+            t.version_const, cur.value));
+    }
+    Ok(out)
+}
+
+/// `--update-schemas`: regenerate the lock, but REFUSE if any struct's
+/// layout drifted while its version constant did not — re-stamping
+/// would silently bless exactly the drift the rule exists to catch.
+pub fn update_lock(tree: &SourceTree, old_lock: Option<&str>,
+                   tracked: &[Tracked]) -> Result<String, String> {
+    if let Some(old) = old_lock {
+        if let Ok(entries) = parse_lock(old) {
+            for t in tracked {
+                let Ok(cur) = current_of(tree, t) else { continue };
+                let key = entry_key(t);
+                if let Some(e) = entries.iter().find(|e| e.key == key) {
+                    if cur.fp != e.fp && cur.value == e.value {
+                        return Err(format!(
+                            "--update-schemas refused: {} changed \
+                             layout but {} is still {:?}; bump the \
+                             version constant first",
+                            key, e.version_key, e.value));
+                    }
+                }
+            }
+        }
+        // An unparseable old lock is fine to overwrite: regenerating
+        // is exactly how a corrupt lock is repaired.
+    }
+    render_lock(tree, tracked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lexer::lex(src).toks
+    }
+
+    #[test]
+    fn named_struct_fields_extracted() {
+        let src = "/// doc\npub struct Rec {\n  /// doc\n  pub a: u64,\n  \
+                   b: Vec<(u32, String)>,\n  #[allow(dead_code)]\n  \
+                   pub(crate) c: bool,\n}";
+        let f = struct_fields(&toks(src), "Rec").unwrap();
+        assert_eq!(f, vec!["a : u64", "b : Vec < ( u32 , String ) >",
+                           "c : bool"]);
+    }
+
+    #[test]
+    fn tuple_and_unit_structs() {
+        let f = struct_fields(&toks("struct P(pub u64, bool);"), "P")
+            .unwrap();
+        assert_eq!(f, vec!["0:u64", "1:bool"]);
+        let f = struct_fields(&toks("struct U;"), "U").unwrap();
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn generic_struct_body_found_past_bounds() {
+        let src = "struct W<T: Ord, const N: usize> { x: [T; N] }";
+        let f = struct_fields(&toks(src), "W").unwrap();
+        assert_eq!(f, vec!["x : [ T ; N ]"]);
+    }
+
+    #[test]
+    fn formatting_and_comments_do_not_change_fingerprint() {
+        let a = struct_fields(
+            &toks("struct S { a: u64, b: f64 }"), "S").unwrap();
+        let b = struct_fields(
+            &toks("pub struct S {\n  // why a exists\n  pub a: u64,\n\n  \
+                   b:   f64,\n}"), "S").unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        // ...but renames, reorders, retypes all do.
+        for other in ["struct S { a2: u64, b: f64 }",
+                      "struct S { b: f64, a: u64 }",
+                      "struct S { a: u32, b: f64 }",
+                      "struct S { a: u64, b: f64, c: u8 }"] {
+            let o = struct_fields(&toks(other), "S").unwrap();
+            assert_ne!(fingerprint(&a), fingerprint(&o), "{other}");
+        }
+    }
+
+    #[test]
+    fn const_values_int_and_str() {
+        let src = "pub const METRICS_VERSION: u64 = 5;\n\
+                   const VERSION: u64 = 2;\n\
+                   pub const SCHEMA: &str = \"rainbow-bench-v1\";";
+        let t = toks(src);
+        assert_eq!(const_value(&t, "METRICS_VERSION").unwrap(), "5");
+        assert_eq!(const_value(&t, "VERSION").unwrap(), "2");
+        assert_eq!(const_value(&t, "SCHEMA").unwrap(), "rainbow-bench-v1");
+        assert!(const_value(&t, "MISSING").is_none());
+    }
+
+    #[test]
+    fn lock_round_trips() {
+        let tracked: &[Tracked] = &[Tracked {
+            struct_file: "w.rs",
+            struct_name: "Wire",
+            version_file: "w.rs",
+            version_const: "V",
+        }];
+        let tree = SourceTree::from_files(&[(
+            "w.rs", "pub const V: u64 = 1;\nstruct Wire { a: u64 }")]);
+        let lock = render_lock(&tree, tracked).unwrap();
+        let entries = parse_lock(&lock).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].key, "w.rs::Wire");
+        assert_eq!(entries[0].value, "1");
+        assert!(check(&tree, Some(&lock), tracked).is_empty());
+    }
+
+    #[test]
+    fn corrupt_and_missing_locks_are_loud() {
+        let tree = SourceTree::from_files(&[("a.rs", "")]);
+        let d = check(&tree, None, &[]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].msg.contains("missing"));
+        let d = check(&tree, Some("schemalockversion=99\n"), &[]);
+        assert!(d[0].msg.contains("unsupported"), "{d:?}");
+        let d = check(&tree, Some("garbage"), &[]);
+        assert_eq!(d[0].rule, "wire-schema");
+    }
+}

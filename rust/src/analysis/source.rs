@@ -1,0 +1,121 @@
+//! Source-tree abstraction for the lint pass: a list of
+//! `(relative path, content)` pairs, loadable from a real directory
+//! (the committed tree) or built in memory (rule fixtures in tests).
+//! Paths are `/`-separated and sorted, so diagnostics and the schema
+//! lock are deterministic across platforms and filesystem orders.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One `.rs` file, path relative to the lint root (e.g. `rust/src`).
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// The set of files one lint run sees.
+#[derive(Clone, Debug, Default)]
+pub struct SourceTree {
+    pub files: Vec<SourceFile>,
+}
+
+impl SourceTree {
+    /// Load every `*.rs` under `root`, recursively, sorted by relative
+    /// path. Hidden directories and `target/` are skipped.
+    pub fn from_dir(root: &Path) -> Result<SourceTree, String> {
+        if !root.is_dir() {
+            return Err(format!("lint: {} is not a directory",
+                               root.display()));
+        }
+        let mut paths: Vec<PathBuf> = Vec::new();
+        collect_rs(root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::with_capacity(paths.len());
+        for p in paths {
+            let text = fs::read_to_string(&p)
+                .map_err(|e| format!("lint: read {}: {e}", p.display()))?;
+            let rel = p
+                .strip_prefix(root)
+                .map_err(|_| format!("lint: {} escapes {}", p.display(),
+                                     root.display()))?;
+            let rel = rel
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            files.push(SourceFile { path: rel, text });
+        }
+        Ok(SourceTree { files })
+    }
+
+    /// In-memory tree for rule fixtures.
+    pub fn from_files(files: &[(&str, &str)]) -> SourceTree {
+        let mut files: Vec<SourceFile> = files
+            .iter()
+            .map(|(p, t)| SourceFile {
+                path: p.to_string(),
+                text: t.to_string(),
+            })
+            .collect();
+        files.sort_by(|a, b| a.path.cmp(&b.path));
+        SourceTree { files }
+    }
+
+    pub fn get(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| format!("lint: read dir {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry =
+            entry.map_err(|e| format!("lint: {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_trees_sort_and_lookup() {
+        let t = SourceTree::from_files(&[("b.rs", "fn b() {}"),
+                                         ("a/x.rs", "fn a() {}")]);
+        assert_eq!(t.files[0].path, "a/x.rs");
+        assert_eq!(t.files[1].path, "b.rs");
+        assert!(t.get("b.rs").is_some());
+        assert!(t.get("missing.rs").is_none());
+    }
+
+    #[test]
+    fn from_dir_walks_recursively_and_relativizes() {
+        let dir = std::env::temp_dir()
+            .join(format!("rainbow_lint_src_{}", std::process::id()));
+        let sub = dir.join("deep");
+        fs::create_dir_all(&sub).unwrap();
+        fs::write(dir.join("top.rs"), "fn t() {}").unwrap();
+        fs::write(sub.join("leaf.rs"), "fn l() {}").unwrap();
+        fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let t = SourceTree::from_dir(&dir).unwrap();
+        let paths: Vec<&str> =
+            t.files.iter().map(|f| f.path.as_str()).collect();
+        assert_eq!(paths, vec!["deep/leaf.rs", "top.rs"]);
+        fs::remove_dir_all(&dir).unwrap();
+        assert!(SourceTree::from_dir(&dir).is_err());
+    }
+}

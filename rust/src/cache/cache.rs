@@ -170,6 +170,7 @@ impl Cache {
 
     /// Flush every line in `[start, start+len)`; returns dirty writebacks.
     pub fn flush_range(&mut self, start: u64, len: u64) -> Vec<Writeback> {
+        // rainbow-lint: allow(hot-alloc, per-migration-event flush, not per-access)
         let mut out = Vec::new();
         let mut a = start & !((1 << LINE_SHIFT) - 1);
         while a < start + len {

@@ -139,6 +139,7 @@ impl CacheHierarchy {
     /// lines invalidated (each costs `t_clflush_line`).
     pub fn clflush_range(&mut self, start: u64, len: u64)
                          -> (Vec<Writeback>, u64) {
+        // rainbow-lint: allow(hot-alloc, per-migration-event flush, not per-access)
         let mut wbs = Vec::new();
         let mut lines = 0u64;
         for c in self.l1.iter_mut().chain(self.l2.iter_mut()) {

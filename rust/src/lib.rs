@@ -8,6 +8,12 @@
 //! table and figure of the evaluation. See DESIGN.md for the architecture
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
+// The unsafe audit (ISSUE 7): the crate is 100% safe code today, and
+// the lint rule `unsafe-audit` requires any future site to carry a
+// per-site `#[allow(unsafe_code)]` plus a SAFETY: justification.
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod cache;
 pub mod config;
 pub mod mem;

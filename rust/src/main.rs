@@ -4,6 +4,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use rainbow::analysis;
 use rainbow::config::{knobs, profiles, Config};
 use rainbow::report::figures::{self, FigureCtx};
 use rainbow::report::netstore::{CacheServer, NetStore};
@@ -121,6 +122,26 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "specs",
               help: "shard-worker: spec-list (.kv) file to execute",
               default: None, is_flag: false },
+    OptSpec { name: "list-rules",
+              help: "lint: print the rule catalog and exit",
+              default: None, is_flag: true },
+    OptSpec { name: "fix-allow",
+              help: "lint: stamp a TODO allow marker above every \
+                     suppressible finding (then edit each into an \
+                     honest reason, or fix the code)",
+              default: None, is_flag: true },
+    OptSpec { name: "stale-allows",
+              help: "lint: also report allow markers that suppress \
+                     nothing",
+              default: None, is_flag: true },
+    OptSpec { name: "update-schemas",
+              help: "lint: re-stamp rust/schemas.lock (refuses layout \
+                     drift without a version-constant bump)",
+              default: None, is_flag: true },
+    OptSpec { name: "src",
+              help: "lint: source root to lint (default: rust/src of \
+                     this checkout)",
+              default: None, is_flag: false },
     OptSpec { name: "out",
               help: "perf: write the JSON report to FILE (e.g. \
                      BENCH_6.json); default prints it to stdout",
@@ -149,6 +170,10 @@ const COMMANDS: &[(&str, &str)] = &[
     ("perf", "measure hot-path throughput and emit a machine-readable \
               rainbow-bench-v1 JSON report (--out FILE; --validate \
               FILE checks an existing report)"),
+    ("lint", "static-analysis pass enforcing the hot-path, determinism, \
+              wire-format, and panic-hygiene invariants (--list-rules; \
+              --fix-allow; --stale-allows; --update-schemas; exits \
+              non-zero on findings)"),
     ("list", "list workloads and policies"),
 ];
 
@@ -239,6 +264,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
             Ok(())
         }
         "perf" => cmd_perf(args),
+        "lint" => cmd_lint(args),
         "list" => {
             println!("workloads: {}", report::all_workloads().join(", "));
             println!("policies : {}", report::policy_names().join(", "));
@@ -297,6 +323,7 @@ fn cmd_perf(args: &Args) -> Result<(), String> {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let spec = spec_from_args(args)?;
+    // rainbow-lint: allow(nondet-clock, operator-facing wall-clock display only)
     let t0 = Instant::now();
     let m = if args.flag("no-cache") {
         report::run_uncached(&spec)
@@ -452,6 +479,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let policies = spec_cli::sweep_policies(args)?;
     let specs = sweep::matrix(&base, &workloads, &policies);
     let shards = args.get_usize("shards", 0)?;
+    // rainbow-lint: allow(nondet-clock, operator-facing wall-clock display only)
     let t0 = Instant::now();
     let (metrics, unique_runs, exec_label) = if shards > 0 {
         // The cache IS the shard transport: silently serving (possibly
@@ -625,6 +653,7 @@ fn emit_figure(fig: &str, ctx: &FigureCtx, args: &Args)
 
 fn cmd_suite(args: &Args) -> Result<(), String> {
     let ctx = ctx_from_args(args)?;
+    // rainbow-lint: allow(nondet-clock, operator-facing wall-clock display only)
     let t0 = Instant::now();
     let shards = args.get_usize("shards", 0)?;
     if shards > 0 {
@@ -663,4 +692,63 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
     figures::tab01_hotstats(&ctx).emit(csv_path(args, "tab01").as_deref());
     figures::tab02_hotdist(&ctx).emit(csv_path(args, "tab02").as_deref());
     Ok(())
+}
+
+/// `rainbow lint`: run the static-analysis pass over `rust/src` (or
+/// `--src DIR`) and exit non-zero on findings. See docs/MANUAL.md
+/// §lint for the rule catalog and the schemas.lock workflow.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    if args.flag("list-rules") {
+        for r in analysis::RULES {
+            println!("{:<16} {:<13} {}{}", r.id, r.family, r.summary,
+                     if r.suppressible { "" } else {
+                         "  [not suppressible]"
+                     });
+        }
+        return Ok(());
+    }
+    let src = args
+        .get("src")
+        .map(PathBuf::from)
+        .unwrap_or_else(analysis::default_src_dir);
+    let tree = analysis::SourceTree::from_dir(&src)?;
+
+    if args.flag("update-schemas") {
+        let old = analysis::load_lock(&src)?;
+        let text = analysis::schema::update_lock(
+            &tree, old.as_deref(), analysis::schema::TRACKED)?;
+        let path = analysis::lock_path_for(&src);
+        std::fs::write(&path, &text)
+            .map_err(|e| format!("lint: write {}: {e}", path.display()))?;
+        println!("schemas lock re-stamped: {}", path.display());
+        return Ok(());
+    }
+
+    let cfg = analysis::LintConfig {
+        stale_allows: args.flag("stale-allows"),
+        schemas_lock: analysis::load_lock(&src)?,
+    };
+    let findings = analysis::lint_tree(&tree, &cfg);
+
+    if args.flag("fix-allow") {
+        let n = analysis::fix_allow(&src, &findings)?;
+        println!("lint: stamped {n} allow marker(s); edit each TODO \
+                  into an honest reason, then rerun `rainbow lint`");
+        return Ok(());
+    }
+
+    for d in &findings {
+        println!("{d}");
+    }
+    if findings.is_empty() {
+        println!("lint clean: {} files, {} rules", tree.files.len(),
+                 analysis::RULES.len());
+        Ok(())
+    } else {
+        Err(format!("{} lint finding(s) across {} scanned files \
+                     (suppress a justified exception with \
+                     `rainbow-lint: allow(rule-id, reason)` or \
+                     `--fix-allow`; see `--list-rules`)",
+                    findings.len(), tree.files.len()))
+    }
 }

@@ -57,6 +57,7 @@ impl PageTable {
             self.dir.resize(c + 1, None);
         }
         let chunk = self.dir[c]
+            // rainbow-lint: allow(hot-alloc, amortized one-time chunk allocation)
             .get_or_insert_with(|| vec![NO_PPN; CHUNK_LEN].into_boxed_slice());
         &mut chunk[i]
     }

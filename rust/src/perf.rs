@@ -186,7 +186,7 @@ pub fn run_suite(cfg: &PerfConfig) -> PerfReport {
     // path: translation, counters, tier access, interval machinery).
     let config = Config::scaled(cfg.scale);
     for name in policies::all_names() {
-        let mut pol = policies::by_name(name, &config, false).unwrap();
+        let mut pol = policies::from_name(name, &config, false).unwrap();
         let prof = AppProfile::by_name("DICT").unwrap().scaled(cfg.scale);
         let mut s = Synth::new(prof, 0, cfg.seed.wrapping_add(1));
         let mut now = 0u64;

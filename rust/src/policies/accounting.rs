@@ -40,6 +40,7 @@ impl IntervalCounters {
             self.dir.resize(c + 1, None);
         }
         let chunk = self.dir[c].get_or_insert_with(|| {
+            // rainbow-lint: allow(hot-alloc, amortized one-time chunk allocation)
             vec![(0u32, 0u32); CHUNK_LEN].into_boxed_slice()
         });
         let e = &mut chunk[i];

@@ -40,7 +40,7 @@ pub trait Policy {
 }
 
 /// Canonical short name for any accepted policy alias (None = unknown).
-/// Single source of truth for [`by_name`] and [`is_valid_name`].
+/// Single source of truth for [`from_name`] and [`is_valid_name`].
 fn canonical_name(name: &str) -> Option<&'static str> {
     Some(match name.to_ascii_lowercase().as_str() {
         "flat" | "flat-static" => "flat",
@@ -54,7 +54,7 @@ fn canonical_name(name: &str) -> Option<&'static str> {
 
 /// Construct a policy by name ("flat", "hscc4k", "hscc2m", "dram",
 /// "rainbow"), with `accel` choosing the Rainbow identification backend.
-pub fn by_name(name: &str, cfg: &crate::config::Config, accel: bool)
+pub fn from_name(name: &str, cfg: &crate::config::Config, accel: bool)
                -> Option<Box<dyn Policy>> {
     let p: Box<dyn Policy> = match canonical_name(name)? {
         "flat" => Box::new(FlatStatic::new(cfg)),
@@ -67,7 +67,7 @@ pub fn by_name(name: &str, cfg: &crate::config::Config, accel: bool)
     Some(p)
 }
 
-/// Whether `name` resolves to a policy — the same aliases [`by_name`]
+/// Whether `name` resolves to a policy — the same aliases [`from_name`]
 /// accepts — without constructing the policy's machine (used for CLI
 /// validation before a sweep fans out to worker threads).
 pub fn is_valid_name(name: &str) -> bool {

@@ -13,7 +13,6 @@
 //! * Counting is memory-controller level (LLC-filtered), superpage-
 //!   granular in stage 1 and 4 KB-granular for the monitored top-N.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 
 use crate::config::{Config, PAGES_PER_SP, PAGE_SHIFT, PAGE_SIZE, SP_SHIFT,
@@ -31,6 +30,9 @@ use super::counters::TwoStageCounters;
 use super::migration::{ThresholdCtl, UtilityParams};
 use super::remap::RemapTable;
 
+/// Sentinel in [`Rainbow::sp_rev`]: superpage never allocated.
+const NO_SVPN: u64 = u64::MAX;
+
 pub struct Rainbow {
     m: Machine,
     /// Virtual 2 MB mapping into NVM.
@@ -39,7 +41,9 @@ pub struct Rainbow {
     /// DRAM 4 KB frame manager (free/clean/dirty lists).
     dram: DramMgr,
     /// NVM superpage index -> virtual superpage number (for shootdowns).
-    sp_rev: HashMap<u32, u64>,
+    /// Flat array indexed by superpage, [`NO_SVPN`] = not yet touched —
+    /// the eviction path reads it, so no HashMap here.
+    sp_rev: Vec<u64>,
     counters: TwoStageCounters,
     bitmap: MigrationBitmap,
     bitmap_cache: BitmapCache,
@@ -70,7 +74,7 @@ impl Rainbow {
             nvm: Region::new(nvm_base, cfg.nvm.size - TABLE_RESERVE),
             dram: DramMgr::new((cfg.dram.size - TABLE_RESERVE) / PAGE_SIZE),
             aspace: AddressSpace::new(),
-            sp_rev: HashMap::new(),
+            sp_rev: vec![NO_SVPN; n_sp],
             counters: TwoStageCounters::new(n_sp, cfg.top_n),
             bitmap: MigrationBitmap::new(n_sp),
             bitmap_cache: BitmapCache::new(cfg.bitmap_cache_entries,
@@ -108,7 +112,7 @@ impl Rainbow {
             .aspace
             .ensure_2m(vaddr, &mut self.nvm)
             .expect("rainbow: NVM exhausted");
-        self.sp_rev.insert(self.sp_index(base), vaddr >> SP_SHIFT);
+        self.sp_rev[self.sp_index(base) as usize] = vaddr >> SP_SHIFT;
         base
     }
 
@@ -182,7 +186,8 @@ impl Rainbow {
         self.remap.remove(nvm_page);
         // Shoot down the 4 KB translation (the only shootdown Rainbow
         // ever performs, §III-F).
-        if let Some(&svpn) = self.sp_rev.get(&sp) {
+        let svpn = self.sp_rev[sp as usize];
+        if svpn != NO_SVPN {
             let vpn = svpn * PAGES_PER_SP + page_in_sp as u64;
             let sd = shootdown_4k(&self.m.cfg, &mut self.m.tlbs, vpn,
                                   &mut self.sd_stats);
@@ -452,7 +457,7 @@ mod tests {
         let pa = p.aspace.resolve_2m(0x123_4567).unwrap();
         assert!(pa >= p.m.mem.dram_size());
         // Table VI bookkeeping: reverse map populated.
-        assert_eq!(p.sp_rev.len(), 1);
+        assert_eq!(p.sp_rev.iter().filter(|&&s| s != NO_SVPN).count(), 1);
     }
 
     #[test]

@@ -92,7 +92,7 @@ pub fn run_uncached(spec: &RunSpec) -> RunMetrics {
         Workload::by_name(&spec.workload, cfg.cores, spec.scale, spec.seed)
             .unwrap_or_else(|| panic!("unknown workload {}", spec.workload));
     let mut policy: Box<dyn Policy> =
-        policies::by_name(&spec.policy, &cfg, spec.accel)
+        policies::from_name(&spec.policy, &cfg, spec.accel)
             .unwrap_or_else(|| panic!("unknown policy {}", spec.policy));
     let ecfg = EngineConfig::new(spec.instructions, cfg.interval_cycles);
     engine::run(policy.as_mut(), &mut workload, &ecfg).metrics

@@ -331,7 +331,9 @@ fn spawn_shard(cfg: &ShardConfig, idx: usize, specs_file: &Path)
     let mut child = cmd.spawn().map_err(|e| {
         format!("shard {idx}: spawn {cmd:?}: {e}")
     })?;
-    let stdout = child.stdout.take().expect("stdout was piped");
+    let stdout = child.stdout.take().ok_or_else(|| {
+        format!("shard {idx}: spawned worker has no piped stdout")
+    })?;
     // Stream the worker's progress lines as they arrive, tagged with
     // the shard index, so a long sweep is observable per shard.
     let pump = thread::spawn(move || {

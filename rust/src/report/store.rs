@@ -304,28 +304,39 @@ impl MemStore {
     pub fn new() -> MemStore {
         MemStore::default()
     }
+
+    /// A poisoned mutex means a writer panicked mid-insert; surface it
+    /// as a store error (the loud-but-clean contract) instead of
+    /// propagating the panic into every later caller.
+    fn locked(&self)
+              -> Result<std::sync::MutexGuard<'_, HashMap<String, RunMetrics>>,
+                        String> {
+        self.entries
+            .lock()
+            .map_err(|_| "mem store: mutex poisoned by a panicked \
+                          writer"
+                .to_string())
+    }
 }
 
 impl CacheStore for MemStore {
     fn get(&self, fingerprint: &str)
            -> Result<Option<RunMetrics>, String> {
-        Ok(self.entries.lock().unwrap().get(fingerprint).cloned())
+        Ok(self.locked()?.get(fingerprint).cloned())
     }
 
     fn put(&self, fingerprint: &str, metrics: &RunMetrics)
            -> Result<(), String> {
         // Last write wins: concurrent writers of one fingerprint carry
         // identical metrics (determinism), same as the fs rename race.
-        self.entries
-            .lock()
-            .unwrap()
+        self.locked()?
             .insert(fingerprint.to_string(), metrics.clone());
         Ok(())
     }
 
     fn list(&self) -> Result<Vec<String>, String> {
         let mut out: Vec<String> =
-            self.entries.lock().unwrap().keys().cloned().collect();
+            self.locked()?.keys().cloned().collect();
         out.sort();
         Ok(out)
     }

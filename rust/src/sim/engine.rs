@@ -114,7 +114,7 @@ pub fn run(policy: &mut dyn Policy, workload: &mut Workload,
 mod tests {
     use super::*;
     use crate::config::Config;
-    use crate::policies::{by_name, FlatStatic};
+    use crate::policies::{from_name, FlatStatic};
     use crate::workloads::{AppProfile, Workload};
 
     fn small_cfg() -> Config {
@@ -148,7 +148,7 @@ mod tests {
     fn intervals_fire_for_migrating_policies() {
         let cfg = small_cfg();
         let mut w = small_workload(&cfg);
-        let mut p = by_name("rainbow", &cfg, false).unwrap();
+        let mut p = from_name("rainbow", &cfg, false).unwrap();
         let out = run(p.as_mut(), &mut w,
                       &EngineConfig::new(400_000, cfg.interval_cycles));
         // DICT is hot-heavy: Rainbow must have migrated something.
@@ -177,7 +177,7 @@ mod tests {
         let cfg = small_cfg();
         for name in crate::policies::all_names() {
             let mut w = small_workload(&cfg);
-            let mut p = by_name(name, &cfg, false).unwrap();
+            let mut p = from_name(name, &cfg, false).unwrap();
             let out = run(p.as_mut(), &mut w,
                           &EngineConfig::new(60_000, cfg.interval_cycles));
             assert_eq!(out.metrics.instructions, 60_000, "policy {name}");

@@ -268,7 +268,7 @@ fn manual_covers_every_subcommand_knob_and_profile() {
         include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/MANUAL.md"));
     for cmd in ["run", "sweep", "shard-worker", "cache-server",
                 "backends", "figure", "suite", "analyze", "storage",
-                "perf", "list"] {
+                "perf", "lint", "list"] {
         assert!(manual.contains(&format!("`{cmd}`")),
                 "MANUAL.md must document the `{cmd}` subcommand");
     }
@@ -292,6 +292,18 @@ fn manual_covers_every_subcommand_knob_and_profile() {
         assert!(manual.contains(needle),
                 "MANUAL.md must describe the results-store {needle} \
                  surface");
+    }
+    // The lint surface: every rule id, the suppression-marker syntax,
+    // and the wire-format lock workflow must be documented.
+    for r in rainbow::analysis::RULES {
+        assert!(manual.contains(&format!("`{}`", r.id)),
+                "MANUAL.md must document the {} lint rule", r.id);
+    }
+    for needle in ["rainbow-lint: allow(", "schemas.lock",
+                   "--update-schemas", "--fix-allow", "--stale-allows",
+                   "--list-rules"] {
+        assert!(manual.contains(needle),
+                "MANUAL.md must describe the lint {needle} surface");
     }
 }
 

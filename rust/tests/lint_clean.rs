@@ -1,0 +1,371 @@
+//! `rainbow lint` tier-1 gate: the committed tree must lint clean
+//! (including marker staleness and the schemas.lock wire-format
+//! check), every rule family must both FIRE on a violation fixture
+//! and SUPPRESS under a justified allow marker, and mutating a
+//! serialized struct without bumping its version constant must fail
+//! the schema-lock rule. See DESIGN.md §11 and docs/MANUAL.md §lint.
+
+use rainbow::analysis::schema::{self, Tracked};
+use rainbow::analysis::{self, lint_tree, LintConfig, SourceTree, RULES};
+
+fn render(ds: &[analysis::Diagnostic]) -> String {
+    ds.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+/// Rule ids produced by linting one in-memory fixture file (default
+/// config: no staleness, no schema lock).
+fn lint_one(path: &str, src: &str) -> Vec<String> {
+    lint_tree(&SourceTree::from_files(&[(path, src)]),
+              &LintConfig::default())
+        .iter()
+        .map(|d| d.rule.to_string())
+        .collect()
+}
+
+// ------------------------------------------------- the committed tree
+
+#[test]
+fn committed_tree_lints_clean() {
+    let src = analysis::default_src_dir();
+    let tree = SourceTree::from_dir(&src).unwrap();
+    let lock = analysis::load_lock(&src).unwrap();
+    assert!(lock.is_some(),
+            "rust/schemas.lock must be committed next to rust/src");
+    let ds = lint_tree(&tree, &LintConfig {
+        stale_allows: true,
+        schemas_lock: lock,
+    });
+    assert!(ds.is_empty(),
+            "committed tree must lint clean, got {} finding(s):\n{}",
+            ds.len(), render(&ds));
+}
+
+#[test]
+fn committed_lock_restamps_byte_identically() {
+    // `rainbow lint --update-schemas` on the committed tree must be a
+    // no-op: the lock in git is exactly what the generator emits.
+    let src = analysis::default_src_dir();
+    let tree = SourceTree::from_dir(&src).unwrap();
+    let lock = analysis::load_lock(&src).unwrap().unwrap();
+    let fresh = schema::update_lock(&tree, Some(lock.as_str()),
+                                    schema::TRACKED).unwrap();
+    assert_eq!(fresh, lock,
+               "rust/schemas.lock drifted from the generator output; \
+                run `rainbow lint --update-schemas` and commit");
+}
+
+#[test]
+fn mutating_a_serialized_struct_without_version_bump_fails() {
+    // The acceptance criterion: grow RunSpec (a serde_kv-serialized
+    // struct) in memory without touching SPEC_VERSION — the lock
+    // check must flag it and --update-schemas must refuse to bless it.
+    let src = analysis::default_src_dir();
+    let mut tree = SourceTree::from_dir(&src).unwrap();
+    let lock = analysis::load_lock(&src).unwrap();
+    let anchor = "pub struct RunSpec {";
+    let f = tree
+        .files
+        .iter_mut()
+        .find(|f| f.path == "report/spec.rs")
+        .expect("report/spec.rs in the tree");
+    assert!(f.text.contains(anchor), "RunSpec anchor moved");
+    f.text = f.text.replace(
+        anchor, "pub struct RunSpec {\n    pub lint_canary: u64,");
+    let ds = lint_tree(&tree, &LintConfig {
+        stale_allows: false,
+        schemas_lock: lock.clone(),
+    });
+    let hit = ds.iter().find(|d| {
+        d.rule == "wire-schema" && d.file == "report/spec.rs"
+    });
+    let hit = hit.unwrap_or_else(|| {
+        panic!("expected a wire-schema finding for report/spec.rs, \
+                got:\n{}", render(&ds))
+    });
+    assert!(hit.msg.contains("bump the version constant"),
+            "repair hint missing: {}", hit.msg);
+    let e = schema::update_lock(&tree, lock.as_deref(), schema::TRACKED)
+        .unwrap_err();
+    assert!(e.contains("refused"), "got: {e}");
+
+    // Bumping SPEC_VERSION alongside turns the finding into a plain
+    // "lock is stale, re-stamp" — and --update-schemas now agrees.
+    let v = tree
+        .files
+        .iter_mut()
+        .find(|f| f.path == "report/serde_kv.rs")
+        .unwrap();
+    let vanchor = "pub const SPEC_VERSION: u64 = 1;";
+    assert!(v.text.contains(vanchor), "SPEC_VERSION anchor moved");
+    v.text =
+        v.text.replace(vanchor, "pub const SPEC_VERSION: u64 = 2;");
+    let ds = lint_tree(&tree, &LintConfig {
+        stale_allows: false,
+        schemas_lock: lock.clone(),
+    });
+    assert!(ds.iter().all(|d| d.rule == "wire-schema"), "{}",
+            render(&ds));
+    assert!(ds.iter().any(|d| d.msg.contains("--update-schemas")),
+            "re-stamp hint missing:\n{}", render(&ds));
+    let lock2 = schema::update_lock(&tree, lock.as_deref(),
+                                    schema::TRACKED).unwrap();
+    let ds = lint_tree(&tree, &LintConfig {
+        stale_allows: false,
+        schemas_lock: Some(lock2),
+    });
+    assert!(ds.is_empty(), "{}", render(&ds));
+}
+
+// --------------------------------------------- hot-path rule family
+
+#[test]
+fn hot_collections_fires_and_suppresses() {
+    let bad = "use std::collections::HashMap;\n\
+               pub struct T { m: HashMap<u64, u64> }\n";
+    assert_eq!(lint_one("tlb/lookup.rs", bad),
+               ["hot-collections", "hot-collections"]);
+    // The same text in a cold module is fine.
+    assert!(lint_one("report/figures.rs", bad).is_empty());
+    // A justified marker on the preceding line suppresses.
+    let ok = "// rainbow-lint: allow(hot-collections, fixture: model \
+              table)\nuse std::collections::HashMap;\n";
+    assert!(lint_one("tlb/lookup.rs", ok).is_empty());
+    // Test code is exempt wholesale.
+    let tests = "#[cfg(test)]\nmod tests {\n    \
+                 use std::collections::HashMap;\n}\n";
+    assert!(lint_one("tlb/lookup.rs", tests).is_empty());
+}
+
+#[test]
+fn hot_alloc_fires_and_exempts_constructors() {
+    let bad = "impl T {\n    pub fn access(&mut self) {\n        \
+               self.buf = Vec::new();\n        \
+               let s = format!(\"x\");\n    }\n}\n";
+    assert_eq!(lint_one("rainbow/remap.rs", bad),
+               ["hot-alloc", "hot-alloc"]);
+    // Constructor-shaped functions may allocate: that is their job.
+    let ctor = "impl T {\n    pub fn new() -> T {\n        \
+                T { buf: Vec::new() }\n    }\n    \
+                pub fn from_parts() -> T {\n        \
+                T { buf: vec![1] }\n    }\n}\n";
+    assert!(lint_one("rainbow/remap.rs", ctor).is_empty());
+    // A justified marker suppresses a genuine exception.
+    let marked = "pub fn access() {\n    \
+                  // rainbow-lint: allow(hot-alloc, fixture: \
+                  amortized)\n    let v = Vec::new();\n}\n";
+    assert!(lint_one("cache/cache.rs", marked).is_empty());
+}
+
+// ------------------------------------------- determinism rule family
+
+#[test]
+fn nondet_clock_fires_outside_the_harness() {
+    let bad = "fn stamp() {\n    let t0 = Instant::now();\n}\n";
+    assert_eq!(lint_one("sim/engine.rs", bad), ["nondet-clock"]);
+    // The measurement harness itself is the exemption.
+    assert!(lint_one("perf.rs", bad).is_empty());
+    assert!(lint_one("util/bench.rs", bad).is_empty());
+    let marked = "fn stamp() {\n    \
+                  // rainbow-lint: allow(nondet-clock, fixture: \
+                  operator display)\n    let t0 = Instant::now();\n}\n";
+    assert!(lint_one("sim/engine.rs", marked).is_empty());
+}
+
+#[test]
+fn nondet_iter_fires_inside_to_kv_functions() {
+    // Unordered iteration feeding the wire format — even when the
+    // HashMap only appears in the signature, it belongs to the fn.
+    let bad = "fn widget_to_kv(m: &HashMap<u64, u64>) -> String {\n    \
+               String::new()\n}\n";
+    assert_eq!(lint_one("report/serde_extra.rs", bad), ["nondet-iter"]);
+    // The same type in a non-serialization fn of a cold module is fine.
+    let ok = "fn build(m: &HashMap<u64, u64>) {}\n";
+    assert!(lint_one("report/serde_extra.rs", ok).is_empty());
+    let marked = "// rainbow-lint: allow(nondet-iter, fixture: sorted \
+                  before emit)\nfn widget_to_kv(m: &HashMap<u64, u64>) \
+                  -> String {\n    String::new()\n}\n";
+    assert!(lint_one("report/serde_extra.rs", marked).is_empty());
+}
+
+// ----------------------------------------- panic-hygiene rule family
+
+#[test]
+fn panic_protocol_fires_in_protocol_files_only() {
+    let bad = "fn read_frame(s: &mut S) -> u64 {\n    \
+               s.next().unwrap();\n    s.len().expect(\"len\");\n    \
+               panic!(\"nope\")\n}\n";
+    assert_eq!(lint_one("report/netstore.rs", bad),
+               ["panic-protocol", "panic-protocol", "panic-protocol"]);
+    // Same code outside the protocol files is not this rule's business.
+    assert!(lint_one("report/figures.rs", bad).is_empty());
+    // Test code in a protocol file may unwrap freely.
+    let tests = "#[cfg(test)]\nmod tests {\n    #[test]\n    \
+                 fn t() { x().unwrap(); }\n}\n";
+    assert!(lint_one("report/store.rs", tests).is_empty());
+    let marked = "fn f() {\n    \
+                  // rainbow-lint: allow(panic-protocol, fixture: \
+                  infallible by construction)\n    x().unwrap();\n}\n";
+    assert!(lint_one("report/shard.rs", marked).is_empty());
+}
+
+#[test]
+fn unsafe_audit_requires_safety_comments() {
+    let bad = "fn f() {\n    unsafe { core(); }\n}\n";
+    assert_eq!(lint_one("util/x.rs", bad), ["unsafe-audit"]);
+    let ok = "fn f() {\n    // SAFETY: fixture — bounds checked \
+              above\n    unsafe { core(); }\n}\n";
+    assert!(lint_one("util/x.rs", ok).is_empty());
+}
+
+// ------------------------------------------------- marker hygiene
+
+#[test]
+fn allow_hygiene_rejects_malformed_markers() {
+    for (src, why) in [
+        ("// rainbow-lint: allow(hot-alloc)\n", "missing reason"),
+        ("// rainbow-lint: allow(hot-alloc, )\n", "empty reason"),
+        ("// rainbow-lint: allow(bogus-rule, because)\n",
+         "unknown rule id"),
+        ("// rainbow-lint: allow(wire-schema, because)\n",
+         "unsuppressible rule"),
+        ("// rainbow-lint: disable-everything\n", "malformed marker"),
+    ] {
+        let got = lint_one("util/x.rs", src);
+        assert_eq!(got, ["allow-hygiene"], "{why}: got {got:?}");
+    }
+}
+
+#[test]
+fn stale_allow_flags_markers_that_suppress_nothing() {
+    let src = "// rainbow-lint: allow(hot-alloc, fixture: nothing \
+               here)\nfn f() {}\n";
+    let tree = SourceTree::from_files(&[("util/x.rs", src)]);
+    // Off by default: a stale marker is only noise, not a failure.
+    assert!(lint_tree(&tree, &LintConfig::default()).is_empty());
+    let ds = lint_tree(&tree, &LintConfig {
+        stale_allows: true,
+        schemas_lock: None,
+    });
+    assert_eq!(ds.len(), 1, "{}", render(&ds));
+    assert_eq!((ds[0].rule, ds[0].line), ("stale-allow", 1));
+}
+
+// ------------------------------------------------- wire-format lock
+
+const WIRE_TRACKED: &[Tracked] = &[Tracked {
+    struct_file: "wire.rs",
+    struct_name: "Rec",
+    version_file: "wire.rs",
+    version_const: "VERSION",
+}];
+
+#[test]
+fn schema_lock_version_bump_workflow() {
+    let v1 = SourceTree::from_files(&[(
+        "wire.rs",
+        "pub const VERSION: u64 = 1;\n\
+         pub struct Rec { pub a: u64 }\n",
+    )]);
+    let lock = schema::render_lock(&v1, WIRE_TRACKED).unwrap();
+    assert!(schema::check(&v1, Some(lock.as_str()), WIRE_TRACKED)
+        .is_empty());
+    // Missing lock is itself a finding, not a silent pass.
+    let ds = schema::check(&v1, None, WIRE_TRACKED);
+    assert_eq!(ds.len(), 1);
+    assert_eq!(ds[0].rule, "wire-schema");
+
+    // Layout drifts, version does not: flagged, and re-stamp refused.
+    let drift = SourceTree::from_files(&[(
+        "wire.rs",
+        "pub const VERSION: u64 = 1;\n\
+         pub struct Rec { pub a: u64, pub b: u32 }\n",
+    )]);
+    let ds = schema::check(&drift, Some(lock.as_str()), WIRE_TRACKED);
+    assert_eq!(ds.len(), 1, "{}", render(&ds));
+    assert_eq!(ds[0].rule, "wire-schema");
+    assert!(ds[0].msg.contains("bump the version constant"),
+            "{}", ds[0].msg);
+    let e = schema::update_lock(&drift, Some(lock.as_str()),
+                                WIRE_TRACKED)
+        .unwrap_err();
+    assert!(e.contains("refused"), "got: {e}");
+
+    // Version bumped alongside: stale lock, re-stamp allowed, clean.
+    let bumped = SourceTree::from_files(&[(
+        "wire.rs",
+        "pub const VERSION: u64 = 2;\n\
+         pub struct Rec { pub a: u64, pub b: u32 }\n",
+    )]);
+    let ds = schema::check(&bumped, Some(lock.as_str()), WIRE_TRACKED);
+    assert_eq!(ds.len(), 1, "{}", render(&ds));
+    assert!(ds[0].msg.contains("--update-schemas"), "{}", ds[0].msg);
+    let lock2 = schema::update_lock(&bumped, Some(lock.as_str()),
+                                    WIRE_TRACKED).unwrap();
+    assert!(schema::check(&bumped, Some(lock2.as_str()), WIRE_TRACKED)
+        .is_empty());
+
+    // Comment / attribute / formatting churn never touches the lock.
+    let cosmetic = SourceTree::from_files(&[(
+        "wire.rs",
+        "pub const VERSION: u64 = 1;\n/// doc\n#[derive(Clone)]\n\
+         pub struct Rec {\n    // why a exists\n    pub a: u64,\n}\n",
+    )]);
+    assert!(schema::check(&cosmetic, Some(lock.as_str()), WIRE_TRACKED)
+        .is_empty());
+}
+
+// ------------------------------------------------------- CLI surface
+
+fn rainbow_bin() -> std::process::Command {
+    let mut c = std::process::Command::new(env!("CARGO_BIN_EXE_rainbow"));
+    c.current_dir(env!("CARGO_MANIFEST_DIR"));
+    c
+}
+
+#[test]
+fn cli_lint_exits_zero_on_the_committed_tree() {
+    let out = rainbow_bin()
+        .args(["lint", "--stale-allows"])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "lint failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("lint clean"), "got: {stdout}");
+}
+
+#[test]
+fn cli_lint_list_rules_names_every_rule() {
+    let out = rainbow_bin()
+        .args(["lint", "--list-rules"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for r in RULES {
+        assert!(stdout.contains(r.id),
+                "--list-rules must name {}", r.id);
+    }
+}
+
+#[test]
+fn cli_lint_exits_nonzero_on_findings() {
+    let dir = std::env::temp_dir()
+        .join(format!("rainbow_lint_cli_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("tlb")).unwrap();
+    std::fs::write(dir.join("tlb/x.rs"),
+                   "fn access() {\n    let v = Vec::new();\n}\n")
+        .unwrap();
+    let out = rainbow_bin()
+        .args(["lint", "--src", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1),
+               "findings must exit 1, got {:?}", out.status.code());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("hot-alloc"), "got: {stdout}");
+    assert!(stderr.contains("lint finding"), "got: {stderr}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

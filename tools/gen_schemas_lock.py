@@ -1,0 +1,336 @@
+#!/usr/bin/env python3
+"""Reference generator for rust/schemas.lock.
+
+Replicates rust/src/analysis/{lexer,schema}.rs exactly (tokenization,
+field descriptors, FNV-1a fingerprint, lock rendering) so the lock can
+be (re)generated without a Rust toolchain. The canonical generator is
+`rainbow lint --update-schemas`; CI asserts both agree by linting the
+committed tree.
+"""
+
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "rust" / "src"
+LOCK = Path(__file__).resolve().parent.parent / "rust" / "schemas.lock"
+LOCK_VERSION = 1
+
+TRACKED = [
+    ("sim/metrics.rs", "RunMetrics", "report/serde_kv.rs", "METRICS_VERSION"),
+    ("sim/metrics.rs", "XlatBreakdown", "report/serde_kv.rs",
+     "METRICS_VERSION"),
+    ("sim/metrics.rs", "RuntimeBreakdown", "report/serde_kv.rs",
+     "METRICS_VERSION"),
+    ("report/spec.rs", "RunSpec", "report/serde_kv.rs", "SPEC_VERSION"),
+    ("workloads/trace.rs", "TraceRec", "workloads/trace.rs", "VERSION"),
+    ("perf.rs", "PerfConfig", "perf.rs", "SCHEMA"),
+    ("perf.rs", "BenchEntry", "perf.rs", "SCHEMA"),
+    ("perf.rs", "PerfReport", "perf.rs", "SCHEMA"),
+]
+
+
+def is_ident_start(c):
+    return c == "_" or c.isalpha()
+
+
+def is_ident_continue(c):
+    return c == "_" or c.isalnum()
+
+
+def lex(src):
+    """Port of analysis::lexer::lex — returns (kind, text) tokens."""
+    cs = list(src)
+    toks = []
+    i = 0
+    n = len(cs)
+
+    def raw_open(i):
+        if i >= n or cs[i] != "r":
+            return None
+        j = i + 1
+        while j < n and cs[j] == "#":
+            j += 1
+        return (j - (i + 1)) if j < n and cs[j] == '"' else None
+
+    while i < n:
+        c = cs[i]
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and cs[i + 1] == "/":
+            j = i + 2
+            while j < n and cs[j] != "\n":
+                j += 1
+            i = j
+            continue
+        if c == "/" and i + 1 < n and cs[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if cs[j] == "/" and j + 1 < n and cs[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                    continue
+                if cs[j] == "*" and j + 1 < n and cs[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                    continue
+                j += 1
+            i = j
+            continue
+        if c in ("r", "b"):
+            after_b = i + 1 if c == "b" else i
+            raw_at = i + 1 if (c == "b" and i + 1 < n
+                               and cs[i + 1] == "r") else i
+            hashes = raw_open(raw_at)
+            if hashes is not None:
+                j = raw_at + 1 + hashes + 1
+                while j < n:
+                    if cs[j] == '"' and cs[j + 1:j + 1 + hashes] == \
+                            ["#"] * hashes:
+                        j += 1 + hashes
+                        break
+                    j += 1
+                toks.append(("Str", ""))
+                i = j
+                continue
+            if c == "b" and after_b < n and cs[after_b] == '"':
+                i = after_b
+                continue
+            if (c == "r" and i + 1 < n and cs[i + 1] == "#"
+                    and i + 2 < n and is_ident_start(cs[i + 2])):
+                j = i + 2
+                while j < n and is_ident_continue(cs[j]):
+                    j += 1
+                toks.append(("Ident", "".join(cs[i + 2:j])))
+                i = j
+                continue
+        if c == '"':
+            j = i + 1
+            body = []
+            while j < n:
+                if cs[j] == "\\":
+                    j += 2
+                    continue
+                if cs[j] == '"':
+                    j += 1
+                    break
+                body.append(cs[j])
+                j += 1
+            toks.append(("Str", "".join(body)))
+            i = j
+            continue
+        if c == "'":
+            j = i + 1
+            if j < n and is_ident_start(cs[j]):
+                k = j + 1
+                while k < n and is_ident_continue(cs[k]):
+                    k += 1
+                if k >= n or cs[k] != "'":
+                    toks.append(("Lifetime", "".join(cs[j:k])))
+                    i = k
+                    continue
+            while j < n:
+                if cs[j] == "\\":
+                    j += 2
+                    continue
+                if cs[j] == "'":
+                    j += 1
+                    break
+                j += 1
+            toks.append(("Char", ""))
+            i = j
+            continue
+        if is_ident_start(c):
+            j = i + 1
+            while j < n and is_ident_continue(cs[j]):
+                j += 1
+            toks.append(("Ident", "".join(cs[i:j])))
+            i = j
+            continue
+        if c.isdigit() and c.isascii():
+            j = i + 1
+            while j < n:
+                d = cs[j]
+                if d == ".":
+                    if j + 1 < n and cs[j + 1].isdigit() \
+                            and cs[j + 1].isascii():
+                        j += 2
+                        continue
+                    break
+                if is_ident_continue(d):
+                    j += 1
+                    continue
+                break
+            toks.append(("Num", "".join(cs[i:j])))
+            i = j
+            continue
+        if c == ":" and i + 1 < n and cs[i + 1] == ":":
+            toks.append(("Punct", "::"))
+            i += 2
+            continue
+        if c == "-" and i + 1 < n and cs[i + 1] == ">":
+            toks.append(("Punct", "->"))
+            i += 2
+            continue
+        toks.append(("Punct", c))
+        i += 1
+    return toks
+
+
+def is_punct(t, s):
+    return t[0] == "Punct" and t[1] == s
+
+
+def is_ident(t, s):
+    return t[0] == "Ident" and t[1] == s
+
+
+def struct_fields(toks, name):
+    """Port of analysis::schema::struct_fields."""
+    k = 0
+    while k + 1 < len(toks):
+        if is_ident(toks[k], "struct") and is_ident(toks[k + 1], name):
+            break
+        k += 1
+    if k + 1 >= len(toks):
+        return None
+    j = k + 2
+    angle = 0
+    while True:
+        if j >= len(toks):
+            return None
+        t = toks[j]
+        if is_punct(t, "<"):
+            angle += 1
+        elif is_punct(t, ">"):
+            angle -= 1
+        elif angle == 0 and (is_punct(t, "{") or is_punct(t, "(")):
+            break
+        elif angle == 0 and is_punct(t, ";"):
+            return []
+        j += 1
+    tuple_struct = is_punct(toks[j], "(")
+    close = ")" if tuple_struct else "}"
+    open_p = "(" if tuple_struct else "{"
+    j += 1
+
+    fields = []
+    cur = []
+    depth = 0
+    idx = [0]
+
+    def flush():
+        parts = cur[:]
+        while parts and parts[0] == "pub":
+            parts = parts[1:]
+            if parts and parts[0] == "(":
+                if ")" in parts:
+                    parts = parts[parts.index(")") + 1:]
+        if not parts:
+            cur.clear()
+            return
+        if tuple_struct:
+            fields.append(f"{idx[0]}:{' '.join(parts)}")
+        else:
+            fields.append(" ".join(parts))
+        idx[0] += 1
+        cur.clear()
+
+    while j < len(toks):
+        t = toks[j]
+        if is_punct(t, "#"):
+            nest = 0
+            j += 1
+            while j < len(toks):
+                a = toks[j]
+                if is_punct(a, "["):
+                    nest += 1
+                elif is_punct(a, "]"):
+                    nest -= 1
+                    if nest == 0:
+                        break
+                j += 1
+            j += 1
+            continue
+        if depth == 0 and is_punct(t, close):
+            if cur:
+                flush()
+            return fields
+        if is_punct(t, "<") or is_punct(t, "[") or is_punct(t, "(") \
+                or is_punct(t, open_p):
+            depth += 1
+        elif is_punct(t, ">") or is_punct(t, "]") or is_punct(t, ")"):
+            depth -= 1
+        elif depth == 0 and is_punct(t, ","):
+            flush()
+            j += 1
+            continue
+        cur.append(t[1])
+        j += 1
+    return None
+
+
+def fingerprint(fields):
+    h = 0xCBF29CE484222325
+    for f in fields:
+        for b in (f + ";").encode("utf-8"):
+            h ^= b
+            h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def const_value(toks, name):
+    k = 0
+    while k + 1 < len(toks):
+        if is_ident(toks[k], "const") and is_ident(toks[k + 1], name):
+            j = k + 2
+            while j < len(toks):
+                t = toks[j]
+                if is_punct(t, "="):
+                    v = toks[j + 1]
+                    if v[0] in ("Num", "Ident", "Str"):
+                        return v[1]
+                    return None
+                if is_punct(t, ";"):
+                    break
+                j += 1
+        k += 1
+    return None
+
+
+def main():
+    lexed = {}
+
+    def toks_of(rel):
+        if rel not in lexed:
+            lexed[rel] = lex((SRC / rel).read_text())
+        return lexed[rel]
+
+    out = [
+        "# rainbow lint wire-format lock — generated by "
+        "`rainbow lint --update-schemas`.",
+        "# A tracked struct's layout may not change unless its version "
+        "constant changes too.",
+        f"schemalockversion={LOCK_VERSION}",
+    ]
+    for sf, sn, vf, vc in TRACKED:
+        fields = struct_fields(toks_of(sf), sn)
+        if fields is None:
+            sys.exit(f"struct {sn} not found in {sf}")
+        value = const_value(toks_of(vf), vc)
+        if value is None:
+            sys.exit(f"const {vc} not found in {vf}")
+        fp = fingerprint(fields)
+        out.append(f"struct={sf}::{sn} fields={len(fields)} fp={fp:016x} "
+                   f"version={vf}::{vc} value={value}")
+        print(f"{sf}::{sn}: {len(fields)} fields, fp {fp:016x}, "
+              f"{vc}={value}")
+        for f in fields:
+            print(f"    {f}")
+    LOCK.write_text("\n".join(out) + "\n")
+    print(f"wrote {LOCK}")
+
+
+if __name__ == "__main__":
+    main()
