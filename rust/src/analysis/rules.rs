@@ -79,7 +79,8 @@ pub const RULES: &[RuleInfo] = &[
         id: "panic-protocol",
         family: "panic-hygiene",
         summary: ".unwrap() / .expect( / panic! in protocol code \
-                  (report/{netstore,store,shard}.rs non-test paths)",
+                  (report/{netstore,store,shard,queue}.rs non-test \
+                  paths)",
         suppressible: true,
     },
     RuleInfo {
@@ -134,8 +135,8 @@ const HOT_FILES: &[&str] = &["os/page_table.rs"];
 const CLOCK_EXEMPT: &[&str] = &["util/bench.rs", "perf.rs"];
 
 /// Protocol code bound to the loud-but-clean error contract.
-const PROTOCOL_FILES: &[&str] =
-    &["report/netstore.rs", "report/store.rs", "report/shard.rs"];
+const PROTOCOL_FILES: &[&str] = &["report/netstore.rs", "report/store.rs",
+                                  "report/shard.rs", "report/queue.rs"];
 
 fn is_hot(path: &str) -> bool {
     HOT_PREFIXES.iter().any(|p| path.starts_with(p))

@@ -92,6 +92,31 @@ pub const TRACKED: &[Tracked] = &[
         version_file: "perf.rs",
         version_const: "SCHEMA",
     },
+    // Job-queue wire records (LEASE/COMPLETE/QSTAT payloads).
+    Tracked {
+        struct_file: "report/queue.rs",
+        struct_name: "LeaseRequest",
+        version_file: "report/serde_kv.rs",
+        version_const: "QUEUE_WIRE_VERSION",
+    },
+    Tracked {
+        struct_file: "report/queue.rs",
+        struct_name: "LeaseReply",
+        version_file: "report/serde_kv.rs",
+        version_const: "QUEUE_WIRE_VERSION",
+    },
+    Tracked {
+        struct_file: "report/queue.rs",
+        struct_name: "CompleteRequest",
+        version_file: "report/serde_kv.rs",
+        version_const: "QUEUE_WIRE_VERSION",
+    },
+    Tracked {
+        struct_file: "report/queue.rs",
+        struct_name: "QueueStat",
+        version_file: "report/serde_kv.rs",
+        version_const: "QUEUE_WIRE_VERSION",
+    },
 ];
 
 fn fnv1a(bytes: &[u8]) -> u64 {

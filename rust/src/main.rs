@@ -8,6 +8,7 @@ use rainbow::analysis;
 use rainbow::config::{knobs, profiles, Config};
 use rainbow::report::figures::{self, FigureCtx};
 use rainbow::report::netstore::{CacheServer, NetStore};
+use rainbow::report::queue;
 use rainbow::report::shard;
 use rainbow::report::spec_cli;
 use rainbow::report::sweep::{self, SweepConfig};
@@ -109,11 +110,27 @@ const OPTS: &[OptSpec] = &[
                      shard-worker processes (0 = in-process sweep)",
               default: Some("0"), is_flag: false },
     OptSpec { name: "shard-cmd",
-              help: "sweep: worker command prefix, split on whitespace \
-                     (no quoting — paths with spaces are unsupported; \
-                     wrap them in a script). Default: this binary's \
-                     shard-worker; --specs/--store are appended",
+              help: "sweep: DEPRECATED worker wrapper — the whole value \
+                     is one program path (the old whitespace splitting \
+                     was dropped); --specs/--store are appended. Prefer \
+                     --queue with `rainbow queue-worker` on each host",
               default: None, is_flag: false },
+    OptSpec { name: "queue",
+              help: "sweep: dynamic work-stealing dispatch through the \
+                     cache server at --store tcp://host:port (workers \
+                     lease one spec at a time; stragglers and dead \
+                     workers are re-leased on deadline)",
+              default: None, is_flag: true },
+    OptSpec { name: "worker-id",
+              help: "queue-worker: stable worker identity (default: \
+                     w<pid>); also seeds the deterministic \
+                     connect-retry jitter",
+              default: None, is_flag: false },
+    OptSpec { name: "lease-ms",
+              help: "cache-server: job-queue lease deadline in ms — a \
+                     spec leased longer than this is re-leased to the \
+                     next idle worker",
+              default: Some("60000"), is_flag: false },
     OptSpec { name: "shard-dir",
               help: "sweep: directory for shard spec lists + manifest \
                      (default: <cache-dir>/shards, or \
@@ -158,9 +175,12 @@ const COMMANDS: &[(&str, &str)] = &[
                (--shards N spreads it across child processes)"),
     ("shard-worker", "execute one shard's spec-list file against a \
                       shared results store (spawned by sweep --shards)"),
-    ("cache-server", "serve a results store to sweep/shard workers \
-                      over TCP (--listen; clients use --store \
-                      tcp://host:port)"),
+    ("queue-worker", "lease specs one at a time from a cache server's \
+                      job queue, simulate, push results (spawned by \
+                      sweep --queue; run standalone on any host)"),
+    ("cache-server", "serve a results store + work-stealing job queue \
+                      to sweep/shard workers over TCP (--listen; \
+                      clients use --store tcp://host:port)"),
     ("backends", "policy x NVM-backend matrix across device profiles"),
     ("figure", "regenerate one paper table/figure (--fig N)"),
     ("suite", "regenerate every paper table/figure (fig 16 backend \
@@ -254,6 +274,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
         "run" => cmd_run(args),
         "sweep" => cmd_sweep(args),
         "shard-worker" => cmd_shard_worker(args),
+        "queue-worker" => cmd_queue_worker(args),
         "cache-server" => cmd_cache_server(args),
         "backends" => cmd_backends(args),
         "figure" => cmd_figure(args),
@@ -396,12 +417,20 @@ fn shard_config_from_args(args: &Args, shards: usize)
     let mut cfg = shard::ShardConfig::with_store(shards, store, work_dir);
     cfg.parallel = args.get_usize("workers", 0)?;
     if let Some(cmd) = args.get("shard-cmd") {
-        let argv: Vec<String> =
-            cmd.split_whitespace().map(str::to_string).collect();
-        if argv.is_empty() {
+        let cmd = cmd.trim();
+        if cmd.is_empty() {
             return Err("--shard-cmd: empty command".into());
         }
-        cfg.cmd = Some(argv);
+        // Deprecated: the old whitespace splitting could not express a
+        // path with spaces and invited quoting bugs. The whole value
+        // is now a single program path (--specs/--store are still
+        // appended); multi-host dispatch belongs to the queue worker.
+        eprintln!(
+            "warning: --shard-cmd is deprecated; its value is now a \
+             single worker program path (the old whitespace splitting \
+             was dropped). For remote workers prefer `sweep --queue` \
+             with `rainbow queue-worker` on each host.");
+        cfg.cmd = Some(vec![cmd.to_string()]);
     }
     Ok(cfg)
 }
@@ -417,6 +446,39 @@ fn cmd_shard_worker(args: &Args) -> Result<(), String> {
     let store = store_from_args(args)?;
     let n = shard::worker_run(Path::new(specs), &store)?;
     println!("shard-worker: {n} unique specs cached in {}", store.addr());
+    Ok(())
+}
+
+/// `queue-worker`: lease specs one at a time from a cache server's
+/// job queue, simulate each through the store, and acknowledge with
+/// COMPLETE — until the queue reports itself drained. The standalone
+/// remote half of `sweep --queue`: run it on any host with a route to
+/// the server; no spec files, no shared filesystem.
+fn cmd_queue_worker(args: &Args) -> Result<(), String> {
+    let store = store_from_args(args)?;
+    let hostport = match store.addr().strip_prefix("tcp://") {
+        Some(hp) if store.is_remote() => hp.to_string(),
+        _ => {
+            return Err("queue-worker: --store tcp://host:port required \
+                        (the cache server is the scheduler)".into())
+        }
+    };
+    let worker_id = match args.get("worker-id") {
+        Some(id) => id.to_string(),
+        None => format!("w{}", std::process::id()),
+    };
+    if !queue::valid_worker_id(&worker_id) {
+        return Err(format!(
+            "queue-worker: malformed --worker-id {worker_id:?} (1-64 \
+             chars, alphanumeric/._-)"));
+    }
+    // Per-worker deterministic jitter on connect retries: a fleet
+    // reconnecting after a server restart fans out instead of
+    // thundering-herding.
+    let client = NetStore::new(&hostport).with_worker_jitter(&worker_id);
+    let n = queue::worker_loop(&client, &worker_id)?;
+    println!("queue-worker {worker_id}: {n} job(s) completed; queue \
+              drained at {}", store.addr());
     Ok(())
 }
 
@@ -447,7 +509,12 @@ fn cmd_cache_server(args: &Args) -> Result<(), String> {
         }
     };
     let listen = args.get_or("listen", "127.0.0.1:7700");
-    let server = CacheServer::bind(listen, store.clone())?;
+    let lease_ms = args.get_u64("lease-ms", queue::DEFAULT_LEASE_MS)?;
+    if lease_ms == 0 {
+        return Err("--lease-ms: must be positive".into());
+    }
+    let server =
+        CacheServer::bind(listen, store.clone())?.with_lease_ms(lease_ms);
     let addr = server.local_addr();
     if let Some(port_file) = args.get("port-file") {
         // Temp + rename so a script polling the file never reads a
@@ -466,10 +533,14 @@ fn cmd_cache_server(args: &Args) -> Result<(), String> {
 }
 
 /// `sweep`: execute a workload x policy matrix — on scoped worker
-/// threads (report::sweep), or with `--shards N` across child
+/// threads (report::sweep), with `--shards N` across child
 /// `shard-worker` processes merged through the shared cache
-/// (report::shard) — print one row per cell, and optionally verify the
-/// results byte-for-byte against a serial `run_uncached` replay.
+/// (report::shard), or with `--queue` dynamically dispatched through a
+/// cache server's job queue (report::queue, work-stealing: each worker
+/// leases one spec at a time, so skewed per-spec costs balance without
+/// static partitioning) — print one row per cell, and optionally
+/// verify the results byte-for-byte against a serial `run_uncached`
+/// replay.
 /// Specs, names, and every `--set` override are validated up front (in
 /// `report::spec_cli`): an unknown name or knob inside a worker thread
 /// would panic the scope instead of taking the CLI's error path.
@@ -479,9 +550,47 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let policies = spec_cli::sweep_policies(args)?;
     let specs = sweep::matrix(&base, &workloads, &policies);
     let shards = args.get_usize("shards", 0)?;
+    let queue_mode = args.flag("queue");
+    if queue_mode && shards > 0 {
+        return Err("sweep: --queue and --shards are mutually exclusive \
+                    (dynamic dispatch replaces static partitioning)".into());
+    }
     // rainbow-lint: allow(nondet-clock, operator-facing wall-clock display only)
     let t0 = Instant::now();
-    let (metrics, unique_runs, exec_label) = if shards > 0 {
+    let (metrics, unique_runs, exec_label) = if queue_mode {
+        // Same rationale as --shards: the store IS the merge transport.
+        if args.flag("no-cache") {
+            return Err("sweep --queue uses the results store as its \
+                        merge transport; --no-cache is incompatible \
+                        (point --store at a fresh server instead)".into());
+        }
+        let store = store_from_args(args)?;
+        if !store.is_remote() {
+            return Err("sweep --queue: --store tcp://host:port required \
+                        (the cache server is the scheduler)".into());
+        }
+        if args.flag("check") {
+            let listed: std::collections::HashSet<String> =
+                store.list().unwrap_or_default().into_iter().collect();
+            let pre = specs
+                .iter()
+                .filter(|s| listed.contains(&s.fingerprint()))
+                .count();
+            if pre > 0 {
+                println!(
+                    "sweep --queue --check: {pre} of {} cells already \
+                     cached in {} — a divergence may be a stale entry \
+                     from an older build, not nondeterminism (use a \
+                     fresh --store to rule that out)",
+                    specs.len(), store.addr());
+            }
+        }
+        let out =
+            queue::run_queued(&specs, &store, args.get_usize("workers", 0)?)
+                .map_err(|e| format!("sweep --queue: {e}"))?;
+        let label = format!("{} queue workers", out.workers_used);
+        (out.metrics, out.unique_runs, label)
+    } else if shards > 0 {
         // The cache IS the shard transport: silently serving (possibly
         // stale) entries against an explicit --no-cache would be a lie.
         if args.flag("no-cache") {
@@ -552,8 +661,14 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 
     if args.flag("check") {
         use rainbow::report::serde_kv::metrics_to_kv;
-        let side = if shards > 0 { "shard-merged" } else { "parallel" };
-        let hint = if shards > 0 {
+        let side = if queue_mode {
+            "queue-merged"
+        } else if shards > 0 {
+            "shard-merged"
+        } else {
+            "parallel"
+        };
+        let hint = if queue_mode || shards > 0 {
             " (a stale store entry from an older build also looks like \
              this; retry with a fresh --cache-dir/--store)"
         } else {

@@ -13,6 +13,7 @@ use crate::workloads::Workload;
 
 pub mod figures;
 pub mod netstore;
+pub mod queue;
 pub mod serde_kv;
 pub mod shard;
 pub mod spec;

@@ -5,13 +5,14 @@
 //!
 //! ## Wire format
 //!
-//! One request/response exchange per connection, each side a single
-//! length-prefixed frame:
+//! Request/response exchanges (a connection may carry several back to
+//! back), each side a single length-prefixed frame:
 //!
 //! ```text
 //! magic    4 bytes  b"RBKV"
 //! version  u16 LE   PROTOCOL_VERSION (bumped on incompatible change)
 //! opcode   u8       request: GET/PUT/LIST/PING/SHUTDOWN
+//!                            LEASE/COMPLETE/REQUEUE/QSTAT
 //!                   response: R_OK/R_MISSING/R_ERR
 //! length   u32 LE   payload bytes that follow (capped — untrusted)
 //! checksum u64 LE   FNV-1a over the payload
@@ -25,6 +26,14 @@
 //! `fingerprint\n<metrics entry>`; LIST's reply is newline-joined
 //! fingerprints. A torn or tampered frame fails the checksum and is a
 //! loud error — the same contract spec-list files already enforce.
+//!
+//! Protocol v2 adds the job-queue opcodes (the work-stealing sweep
+//! scheduler in [`super::queue`]): REQUEUE enqueues a checksummed
+//! spec-list job set, LEASE hands one spec to a worker under a
+//! deadline, COMPLETE acknowledges a stored result (idempotent,
+//! byte-identity asserted), QSTAT snapshots the queue counters. Their
+//! payloads are the versioned `key=value` records of
+//! `report::queue` (`queuewireversion=`).
 //!
 //! ## Failure modes
 //!
@@ -46,18 +55,20 @@
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::sim::RunMetrics;
 
+use super::queue::{self, QueueState};
 use super::serde_kv;
 use super::spec::fnv1a;
 use super::store::{CacheStore, Store};
 
 /// Version of the framed request/response protocol.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// v2: job-queue opcodes (LEASE/COMPLETE/REQUEUE/QSTAT).
+pub const PROTOCOL_VERSION: u16 = 2;
 
 const MAGIC: [u8; 4] = *b"RBKV";
 const HEADER_LEN: usize = 4 + 2 + 1 + 4 + 8;
@@ -75,6 +86,14 @@ pub mod op {
     pub const LIST: u8 = 3;
     pub const PING: u8 = 4;
     pub const SHUTDOWN: u8 = 5;
+    /// Job queue (protocol v2): lease one spec under a deadline.
+    pub const LEASE: u8 = 6;
+    /// Job queue: acknowledge a stored result (idempotent).
+    pub const COMPLETE: u8 = 7;
+    /// Job queue: enqueue a checksummed spec-list job set.
+    pub const REQUEUE: u8 = 8;
+    /// Job queue: snapshot the queue counters.
+    pub const QSTAT: u8 = 9;
     pub const R_OK: u8 = 0x80;
     pub const R_MISSING: u8 = 0x81;
     pub const R_ERR: u8 = 0x82;
@@ -188,6 +207,18 @@ impl NetStore {
         &self.addr
     }
 
+    /// Spread this worker's connect-retry backoff deterministically:
+    /// base backoff plus a jitter in `[0, base)` derived from the
+    /// worker id's FNV-1a hash — no clock, no RNG, so the same worker
+    /// always retries on the same schedule, but a fleet reconnecting
+    /// after a server restart fans out instead of thundering-herding.
+    pub fn with_worker_jitter(mut self, worker_id: &str) -> NetStore {
+        let base = self.retry_backoff.as_millis() as u64;
+        let jitter = fnv1a(worker_id.as_bytes()) % base.max(1);
+        self.retry_backoff = Duration::from_millis(base + jitter);
+        self
+    }
+
     fn connect(&self) -> Result<TcpStream, String> {
         let addrs: Vec<SocketAddr> = self
             .addr
@@ -250,6 +281,67 @@ impl NetStore {
                 "cache server {}: unexpected shutdown reply {other:#04x}",
                 self.addr)),
         }
+    }
+
+    // ------------------------------------------ job-queue client half
+
+    fn queue_text_reply(&self, opcode: u8, what: &str, payload: &[u8])
+                        -> Result<String, String> {
+        let (rop, rpayload) = self.request(opcode, payload)?;
+        if rop != op::R_OK {
+            return Err(format!(
+                "cache server {}: {what}: unexpected reply {rop:#04x}",
+                self.addr));
+        }
+        String::from_utf8(rpayload).map_err(|_| {
+            format!("cache server {}: {what}: non-UTF8 reply", self.addr)
+        })
+    }
+
+    /// `REQUEUE`: submit a job set as a checksummed spec list. The
+    /// server deduplicates by fingerprint and never re-runs completed
+    /// work; the reply is the post-enqueue counter snapshot.
+    pub fn enqueue_jobs(&self, specs: &[super::RunSpec])
+                        -> Result<queue::QueueStat, String> {
+        let payload = serde_kv::specs_to_kv(specs);
+        let text = self.queue_text_reply(
+            op::REQUEUE, "REQUEUE", payload.as_bytes())?;
+        queue::queue_stat_from_kv(&text)
+            .map_err(|e| format!("cache server {}: REQUEUE: {e}", self.addr))
+    }
+
+    /// `LEASE`: ask for one spec to work on.
+    pub fn lease_job(&self, worker: &str)
+                     -> Result<queue::LeaseReply, String> {
+        let req = queue::LeaseRequest { worker: worker.to_string() };
+        let payload = queue::lease_request_to_kv(&req);
+        let text = self.queue_text_reply(
+            op::LEASE, "LEASE", payload.as_bytes())?;
+        queue::lease_reply_from_kv(&text)
+            .map_err(|e| format!("cache server {}: LEASE: {e}", self.addr))
+    }
+
+    /// `COMPLETE`: acknowledge that `fingerprint`'s entry is in the
+    /// store (the server verifies and records its checksum; duplicate
+    /// completions with identical bytes are accepted idempotently).
+    pub fn complete_job(&self, worker: &str, fingerprint: &str,
+                        lease_id: u64) -> Result<(), String> {
+        let req = queue::CompleteRequest {
+            worker: worker.to_string(),
+            fingerprint: fingerprint.to_string(),
+            lease_id,
+        };
+        let payload = queue::complete_request_to_kv(&req);
+        self.queue_text_reply(op::COMPLETE, "COMPLETE",
+                              payload.as_bytes())?;
+        Ok(())
+    }
+
+    /// `QSTAT`: the queue's counter snapshot.
+    pub fn queue_stat(&self) -> Result<queue::QueueStat, String> {
+        let text = self.queue_text_reply(op::QSTAT, "QSTAT", &[])?;
+        queue::queue_stat_from_kv(&text)
+            .map_err(|e| format!("cache server {}: QSTAT: {e}", self.addr))
     }
 }
 
@@ -330,10 +422,18 @@ impl CacheStore for NetStore {
 /// thread per connection, the backing store shared behind its `Arc`.
 /// `FsStore` writes stay atomic (temp + rename) and `MemStore` is
 /// mutexed, so concurrent PUTs of one fingerprint are safe end to end.
+///
+/// Since protocol v2 the server also hosts the job queue
+/// ([`queue::QueueState`] behind a mutex): lease deadlines are
+/// measured against a private monotonic epoch captured at bind time,
+/// so queue time never depends on wall-clock adjustments and is never
+/// compared across hosts.
 pub struct CacheServer {
     listener: TcpListener,
     store: Store,
     local: SocketAddr,
+    queue: Arc<Mutex<QueueState>>,
+    epoch: Instant,
 }
 
 impl CacheServer {
@@ -345,7 +445,23 @@ impl CacheServer {
         let local = listener
             .local_addr()
             .map_err(|e| format!("cache-server: local address: {e}"))?;
-        Ok(CacheServer { listener, store, local })
+        Ok(CacheServer {
+            listener,
+            store,
+            local,
+            queue: Arc::new(Mutex::new(QueueState::new(
+                queue::DEFAULT_LEASE_MS))),
+            // rainbow-lint: allow(nondet-clock, lease deadlines are relative to a private server epoch; never serialized into results or compared across hosts)
+            epoch: Instant::now(),
+        })
+    }
+
+    /// Override the job-queue lease deadline (`--lease-ms`).
+    pub fn with_lease_ms(self, lease_ms: u64) -> CacheServer {
+        CacheServer {
+            queue: Arc::new(Mutex::new(QueueState::new(lease_ms))),
+            ..self
+        }
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -371,8 +487,10 @@ impl CacheServer {
             let store = self.store.clone();
             let sd = Arc::clone(&shutdown);
             let local = self.local;
+            let queue = Arc::clone(&self.queue);
+            let epoch = self.epoch;
             handlers.push(thread::spawn(move || {
-                handle_conn(stream, &store, &sd, local)
+                handle_conn(stream, &store, &sd, local, &queue, epoch)
             }));
             handlers.retain(|h| !h.is_finished());
         }
@@ -423,7 +541,8 @@ impl ServerHandle {
 }
 
 fn handle_conn(mut stream: TcpStream, store: &Store,
-               shutdown: &AtomicBool, local: SocketAddr) {
+               shutdown: &AtomicBool, local: SocketAddr,
+               queue: &Mutex<QueueState>, epoch: Instant) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(120)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(120)));
@@ -434,6 +553,7 @@ fn handle_conn(mut stream: TcpStream, store: &Store,
             Ok(f) => f,
             Err(_) => return,
         };
+        let now_ms = epoch.elapsed().as_millis() as u64;
         let sent = match opcode {
             op::GET => serve_get(&mut stream, store, &payload),
             op::PUT => serve_put(&mut stream, store, &payload),
@@ -444,6 +564,14 @@ fn handle_conn(mut stream: TcpStream, store: &Store,
                                       e.as_bytes()),
             },
             op::PING => write_frame(&mut stream, op::R_OK, &[]),
+            op::LEASE => serve_lease(&mut stream, queue, &payload, now_ms),
+            op::COMPLETE => {
+                serve_complete(&mut stream, store, queue, &payload, now_ms)
+            }
+            op::REQUEUE => {
+                serve_requeue(&mut stream, queue, &payload, now_ms)
+            }
+            op::QSTAT => serve_qstat(&mut stream, queue, now_ms),
             op::SHUTDOWN => {
                 // Flag first, acknowledge second, then poke the accept
                 // loop awake so it observes the flag and exits. A
@@ -521,6 +649,103 @@ fn serve_put(stream: &mut TcpStream, store: &Store, payload: &[u8])
     }
 }
 
+// --------------------------------------------------- queue handlers
+
+/// Lock the queue, mapping a poisoned mutex (a panicked handler) to a
+/// clean protocol error instead of a server-side panic cascade.
+fn lock_queue<'q>(queue: &'q Mutex<QueueState>)
+                  -> Result<std::sync::MutexGuard<'q, QueueState>, String> {
+    queue.lock().map_err(|_| {
+        "job queue mutex poisoned by a panicked handler".to_string()
+    })
+}
+
+fn serve_lease(stream: &mut TcpStream, queue: &Mutex<QueueState>,
+               payload: &[u8], now_ms: u64) -> io::Result<()> {
+    let reply = std::str::from_utf8(payload)
+        .map_err(|_| "LEASE: non-UTF8 payload".to_string())
+        .and_then(queue::lease_request_from_kv)
+        .and_then(|req| {
+            let mut q = lock_queue(queue)?;
+            Ok(q.lease(&req.worker, now_ms))
+        });
+    match reply {
+        Ok(r) => write_frame(stream, op::R_OK,
+                             queue::lease_reply_to_kv(&r).as_bytes()),
+        Err(e) => write_frame(stream, op::R_ERR, e.as_bytes()),
+    }
+}
+
+fn serve_requeue(stream: &mut TcpStream, queue: &Mutex<QueueState>,
+                 payload: &[u8], now_ms: u64) -> io::Result<()> {
+    // The job set arrives as a checksummed spec list — the same
+    // strict, integrity-checked format shard files use, so a torn or
+    // tampered submission is rejected before anything is scheduled.
+    let stat = std::str::from_utf8(payload)
+        .map_err(|_| "REQUEUE: non-UTF8 payload".to_string())
+        .and_then(|text| {
+            serde_kv::specs_from_kv(text)
+                .map_err(|e| format!("REQUEUE: {e}"))
+        })
+        .and_then(|specs| {
+            let mut q = lock_queue(queue)?;
+            Ok(q.enqueue(&specs, now_ms))
+        });
+    match stat {
+        Ok(s) => write_frame(stream, op::R_OK,
+                             queue::queue_stat_to_kv(&s).as_bytes()),
+        Err(e) => write_frame(stream, op::R_ERR, e.as_bytes()),
+    }
+}
+
+/// `COMPLETE` trusts the store, not the worker: the claimed entry is
+/// read back from the backing store and its canonical checksum is
+/// what the completion is recorded (and, on duplicates, compared)
+/// against. A `COMPLETE` for an entry the store does not hold is an
+/// error — `PUT` must land first.
+fn serve_complete(stream: &mut TcpStream, store: &Store,
+                  queue: &Mutex<QueueState>, payload: &[u8],
+                  now_ms: u64) -> io::Result<()> {
+    let outcome = std::str::from_utf8(payload)
+        .map_err(|_| "COMPLETE: non-UTF8 payload".to_string())
+        .and_then(queue::complete_request_from_kv)
+        .and_then(|req| {
+            if !valid_fingerprint(&req.fingerprint) {
+                return Err("COMPLETE: malformed fingerprint".to_string());
+            }
+            let checksum = match store.get(&req.fingerprint) {
+                Ok(Some(m)) => queue::entry_checksum(&m),
+                Ok(None) => {
+                    return Err(format!(
+                        "COMPLETE {}: no metrics entry in the store \
+                         (PUT must precede COMPLETE)", req.fingerprint))
+                }
+                Err(e) => {
+                    return Err(format!(
+                        "COMPLETE {}: {e}", req.fingerprint))
+                }
+            };
+            let mut q = lock_queue(queue)?;
+            q.complete(&req.fingerprint, req.lease_id, checksum, now_ms)
+        });
+    match outcome {
+        Ok(_) => write_frame(stream, op::R_OK, &[]),
+        Err(e) => write_frame(stream, op::R_ERR, e.as_bytes()),
+    }
+}
+
+fn serve_qstat(stream: &mut TcpStream, queue: &Mutex<QueueState>,
+               now_ms: u64) -> io::Result<()> {
+    match lock_queue(queue) {
+        Ok(mut q) => {
+            let s = q.stat(now_ms);
+            write_frame(stream, op::R_OK,
+                        queue::queue_stat_to_kv(&s).as_bytes())
+        }
+        Err(e) => write_frame(stream, op::R_ERR, e.as_bytes()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -570,6 +795,22 @@ mod tests {
         bad[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
         let e = read_frame(&mut Cursor::new(&bad)).unwrap_err();
         assert!(e.contains("exceeds cap"), "got: {e}");
+    }
+
+    #[test]
+    fn worker_jitter_is_deterministic_and_spreads_backoff() {
+        let base = NetStore::new("127.0.0.1:7700").retry_backoff;
+        let a = NetStore::new("127.0.0.1:7700").with_worker_jitter("w-0");
+        let a2 = NetStore::new("127.0.0.1:7700").with_worker_jitter("w-0");
+        let b = NetStore::new("127.0.0.1:7700").with_worker_jitter("w-1");
+        // Same worker id -> same schedule (no clock, no RNG).
+        assert_eq!(a.retry_backoff, a2.retry_backoff);
+        // Distinct ids spread out (these two differ by construction).
+        assert_ne!(a.retry_backoff, b.retry_backoff);
+        for j in [&a, &b] {
+            assert!(j.retry_backoff >= base, "jitter only adds delay");
+            assert!(j.retry_backoff < base * 2, "jitter < one base step");
+        }
     }
 
     #[test]

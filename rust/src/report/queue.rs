@@ -1,0 +1,924 @@
+//! Work-stealing job queue: the subsystem that turns `rainbow
+//! cache-server` into a sweep *scheduler*. The coordinator enqueues a
+//! checksummed spec-list job set (`REQUEUE`), workers on any host
+//! lease one spec at a time (`LEASE`), simulate it, push the metrics
+//! entry through the ordinary `PUT` path, and acknowledge
+//! (`COMPLETE`); `QSTAT` reports drain progress. Against static
+//! round-robin partitioning (`report::shard`) this keeps every worker
+//! busy until the queue is dry, so a matrix with 10:1 per-spec cost
+//! skew is no longer dominated by whichever shard drew the expensive
+//! cells.
+//!
+//! ## Straggler recovery
+//!
+//! Every lease carries a deadline (server-relative milliseconds). A
+//! worker that dies — or just straggles — past its deadline has its
+//! spec returned to the pending set and re-leased to the next idle
+//! worker, in deterministic (fingerprint-sorted) order. Because
+//! simulations are bit-deterministic, the recovery paths all converge
+//! on identical bytes:
+//!
+//! * death *before* `PUT`: the re-leased worker simulates from
+//!   scratch and publishes the entry;
+//! * death *between* `PUT` and `COMPLETE`: the re-leased worker's
+//!   `run_stored` hits the published entry and merely acknowledges;
+//! * a straggler finishing *after* its spec was re-leased and
+//!   completed elsewhere: its duplicate `COMPLETE` is idempotent —
+//!   the server keys completions by fingerprint, first write wins,
+//!   and asserts byte-identity (the stored entry's checksum) so a
+//!   *divergent* duplicate is a loud determinism violation, never a
+//!   silent overwrite.
+//!
+//! ## State machine ([`QueueState`])
+//!
+//! Jobs move `pending -> leased -> completed`, with `leased ->
+//! pending` on deadline expiry. All transitions take an injected
+//! `now_ms` (the server's monotonic epoch-relative clock) — the state
+//! machine itself never reads a clock, so every transition is unit
+//! testable deterministically. Collections are ordered (`BTreeMap` /
+//! `BTreeSet`): grant order, re-lease order, and `QSTAT` snapshots
+//! are reproducible.
+//!
+//! The wire records below ride the framed netstore protocol
+//! (`report::netstore`, protocol v2) as versioned `key=value` text,
+//! guarded by [`serde_kv::QUEUE_WIRE_VERSION`] and schema-locked like
+//! every other serialized struct in the crate.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::process::{Child, Command};
+use std::thread;
+use std::time::Duration;
+
+use crate::sim::RunMetrics;
+
+use super::netstore::NetStore;
+use super::serde_kv::{self, QUEUE_WIRE_VERSION};
+use super::spec::fnv1a;
+use super::spec_cli;
+use super::store::Store;
+use super::sweep::{self, SweepOutcome};
+use super::{run_stored, RunSpec};
+
+/// Default lease deadline: how long a worker may hold a spec before
+/// the server re-leases it (`cache-server --lease-ms` overrides).
+/// Generous — paper-scale specs take minutes; an expiry only delays
+/// recovery, it never loses work.
+pub const DEFAULT_LEASE_MS: u64 = 60_000;
+
+/// How long the coordinator sleeps between `QSTAT` polls.
+const POLL_MS: u64 = 25;
+
+/// Worker identities ride wire records as single `key=value` lines
+/// and appear in operator-facing logs; keep them token-shaped.
+pub fn valid_worker_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 64
+        && id.bytes().all(|b| {
+            b.is_ascii_alphanumeric() || b == b'_' || b == b'.' || b == b'-'
+        })
+}
+
+// ------------------------------------------------------- wire records
+
+/// `LEASE` request payload: which worker is asking for work.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LeaseRequest {
+    pub worker: String,
+}
+
+/// What a `LEASE` reply tells the worker to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseState {
+    /// A spec is attached; simulate it, `PUT` the entry, `COMPLETE`.
+    Granted,
+    /// Nothing pending but leases are outstanding — work may come
+    /// back on expiry. Retry after `retry_ms`.
+    Wait,
+    /// Every job is completed (or the queue is empty); exit cleanly.
+    Drained,
+}
+
+impl LeaseState {
+    fn as_str(self) -> &'static str {
+        match self {
+            LeaseState::Granted => "granted",
+            LeaseState::Wait => "wait",
+            LeaseState::Drained => "drained",
+        }
+    }
+
+    fn parse(s: &str) -> Result<LeaseState, String> {
+        match s {
+            "granted" => Ok(LeaseState::Granted),
+            "wait" => Ok(LeaseState::Wait),
+            "drained" => Ok(LeaseState::Drained),
+            other => Err(format!("lease reply: unknown state {other:?}")),
+        }
+    }
+}
+
+/// `LEASE` reply payload. `lease_id`/`deadline_ms` are meaningful for
+/// `Granted` (deadline is server-epoch-relative — workers treat it as
+/// informational, the server enforces it); `retry_ms` for `Wait`;
+/// `spec` is attached iff `Granted`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaseReply {
+    pub state: LeaseState,
+    pub lease_id: u64,
+    pub deadline_ms: u64,
+    pub retry_ms: u64,
+    pub spec: Option<RunSpec>,
+}
+
+/// `COMPLETE` request payload: worker acknowledges that the entry for
+/// `fingerprint` is in the store. The server verifies that claim
+/// against the store itself — the request carries no metrics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompleteRequest {
+    pub worker: String,
+    pub fingerprint: String,
+    pub lease_id: u64,
+}
+
+/// Queue counters: a `QSTAT` (and `REQUEUE`) reply. `total` counts
+/// every job ever enqueued; `expired` counts lease expiries (a
+/// diagnostic — how often stragglers were re-leased).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStat {
+    pub total: u64,
+    pub pending: u64,
+    pub leased: u64,
+    pub completed: u64,
+    pub expired: u64,
+}
+
+impl QueueStat {
+    /// Nothing pending and nothing leased: every enqueued job has a
+    /// completed entry (vacuously true for an empty queue).
+    pub fn drained(&self) -> bool {
+        self.pending == 0 && self.leased == 0
+    }
+}
+
+// -------------------------------------------- wire (de)serialization
+
+fn kv_header() -> String {
+    format!("queuewireversion={QUEUE_WIRE_VERSION}\n")
+}
+
+/// Strict header/field parser shared by the queue records: versioned,
+/// every key known, every required key present — same contract as the
+/// spec/metrics readers.
+fn parse_kv_fields(text: &str, what: &str)
+                   -> Result<BTreeMap<String, String>, String> {
+    let mut fields = BTreeMap::new();
+    let mut version = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            format!("{what} line {}: expected key=value, got {line:?}",
+                    lineno + 1)
+        })?;
+        let (k, v) = (k.trim(), v.trim());
+        if k == "queuewireversion" {
+            version = Some(v.parse::<u64>().map_err(|_| {
+                format!("{what}: bad queuewireversion {v:?}")
+            })?);
+        } else {
+            fields.insert(k.to_string(), v.to_string());
+        }
+    }
+    match version {
+        Some(QUEUE_WIRE_VERSION) => Ok(fields),
+        Some(v) => Err(format!(
+            "{what}: queue wire version {v} unsupported \
+             (expected {QUEUE_WIRE_VERSION})")),
+        None => Err(format!("{what}: missing queuewireversion")),
+    }
+}
+
+fn take_field(fields: &mut BTreeMap<String, String>, what: &str,
+              key: &str) -> Result<String, String> {
+    fields
+        .remove(key)
+        .ok_or_else(|| format!("{what}: missing {key}"))
+}
+
+fn take_u64(fields: &mut BTreeMap<String, String>, what: &str,
+            key: &str) -> Result<u64, String> {
+    let v = take_field(fields, what, key)?;
+    v.parse::<u64>()
+        .map_err(|_| format!("{what}: {key}: expected integer, got {v:?}"))
+}
+
+fn reject_unknown(fields: &BTreeMap<String, String>, what: &str)
+                  -> Result<(), String> {
+    match fields.keys().next() {
+        Some(k) => Err(format!("{what}: unknown key {k:?}")),
+        None => Ok(()),
+    }
+}
+
+pub fn lease_request_to_kv(r: &LeaseRequest) -> String {
+    format!("{}worker={}\n", kv_header(), r.worker)
+}
+
+pub fn lease_request_from_kv(text: &str) -> Result<LeaseRequest, String> {
+    const WHAT: &str = "lease request";
+    let mut f = parse_kv_fields(text, WHAT)?;
+    let worker = take_field(&mut f, WHAT, "worker")?;
+    reject_unknown(&f, WHAT)?;
+    if !valid_worker_id(&worker) {
+        return Err(format!("{WHAT}: malformed worker id {worker:?}"));
+    }
+    Ok(LeaseRequest { worker })
+}
+
+/// A granted reply embeds the spec as a canonical spec block after a
+/// `---` separator (the spec-list convention, minus the list header).
+pub fn lease_reply_to_kv(r: &LeaseReply) -> String {
+    let mut out = format!(
+        "{}state={}\nleaseid={}\ndeadlinems={}\nretryms={}\n",
+        kv_header(), r.state.as_str(), r.lease_id, r.deadline_ms,
+        r.retry_ms);
+    if let Some(spec) = &r.spec {
+        out.push_str("---\n");
+        out.push_str(&serde_kv::spec_to_kv(spec));
+    }
+    out
+}
+
+pub fn lease_reply_from_kv(text: &str) -> Result<LeaseReply, String> {
+    const WHAT: &str = "lease reply";
+    let (head, spec_block) = match text.split_once("---\n") {
+        Some((h, s)) => (h, Some(s)),
+        None => (text, None),
+    };
+    let mut f = parse_kv_fields(head, WHAT)?;
+    let state = LeaseState::parse(&take_field(&mut f, WHAT, "state")?)?;
+    let lease_id = take_u64(&mut f, WHAT, "leaseid")?;
+    let deadline_ms = take_u64(&mut f, WHAT, "deadlinems")?;
+    let retry_ms = take_u64(&mut f, WHAT, "retryms")?;
+    reject_unknown(&f, WHAT)?;
+    let spec = match spec_block {
+        Some(block) => Some(
+            serde_kv::spec_from_kv(block)
+                .map_err(|e| format!("{WHAT}: embedded spec: {e}"))?),
+        None => None,
+    };
+    match (state, &spec) {
+        (LeaseState::Granted, None) => {
+            Err(format!("{WHAT}: granted but no spec attached"))
+        }
+        (LeaseState::Wait | LeaseState::Drained, Some(_)) => Err(format!(
+            "{WHAT}: spec attached to a {} reply", state.as_str())),
+        _ => Ok(LeaseReply { state, lease_id, deadline_ms, retry_ms, spec }),
+    }
+}
+
+pub fn complete_request_to_kv(r: &CompleteRequest) -> String {
+    format!("{}worker={}\nfingerprint={}\nleaseid={}\n",
+            kv_header(), r.worker, r.fingerprint, r.lease_id)
+}
+
+pub fn complete_request_from_kv(text: &str)
+                                -> Result<CompleteRequest, String> {
+    const WHAT: &str = "complete request";
+    let mut f = parse_kv_fields(text, WHAT)?;
+    let worker = take_field(&mut f, WHAT, "worker")?;
+    let fingerprint = take_field(&mut f, WHAT, "fingerprint")?;
+    let lease_id = take_u64(&mut f, WHAT, "leaseid")?;
+    reject_unknown(&f, WHAT)?;
+    if !valid_worker_id(&worker) {
+        return Err(format!("{WHAT}: malformed worker id {worker:?}"));
+    }
+    Ok(CompleteRequest { worker, fingerprint, lease_id })
+}
+
+pub fn queue_stat_to_kv(s: &QueueStat) -> String {
+    format!(
+        "{}total={}\npending={}\nleased={}\ncompleted={}\nexpired={}\n",
+        kv_header(), s.total, s.pending, s.leased, s.completed, s.expired)
+}
+
+pub fn queue_stat_from_kv(text: &str) -> Result<QueueStat, String> {
+    const WHAT: &str = "queue stat";
+    let mut f = parse_kv_fields(text, WHAT)?;
+    let stat = QueueStat {
+        total: take_u64(&mut f, WHAT, "total")?,
+        pending: take_u64(&mut f, WHAT, "pending")?,
+        leased: take_u64(&mut f, WHAT, "leased")?,
+        completed: take_u64(&mut f, WHAT, "completed")?,
+        expired: take_u64(&mut f, WHAT, "expired")?,
+    };
+    reject_unknown(&f, WHAT)?;
+    Ok(stat)
+}
+
+/// The byte-identity key a `COMPLETE` is verified against: the
+/// checksum of the entry's canonical serialization. Two workers
+/// completing one fingerprint must have produced identical bytes.
+pub fn entry_checksum(metrics: &RunMetrics) -> u64 {
+    fnv1a(serde_kv::metrics_to_kv(metrics).as_bytes())
+}
+
+// ------------------------------------------------------ state machine
+
+#[derive(Clone, Debug)]
+struct LeaseInfo {
+    lease_id: u64,
+    worker: String,
+    deadline_ms: u64,
+}
+
+/// Outcome of a `COMPLETE`, for callers that want to distinguish the
+/// idempotent-duplicate path (tests, logs) from the first write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompleteOutcome {
+    /// First completion of this fingerprint.
+    Recorded,
+    /// Already completed with identical bytes — idempotent no-op.
+    Duplicate,
+}
+
+/// The server-side job queue: fingerprint-keyed jobs moving
+/// `pending -> leased -> completed` (and back to `pending` on lease
+/// expiry). Every method takes the caller's `now_ms`; the state
+/// machine holds no clock. Ordered collections make grant and
+/// re-lease order deterministic: always the lexicographically
+/// smallest pending fingerprint.
+#[derive(Debug)]
+pub struct QueueState {
+    lease_ms: u64,
+    jobs: BTreeMap<String, RunSpec>,
+    pending: BTreeSet<String>,
+    leased: BTreeMap<String, LeaseInfo>,
+    completed: BTreeMap<String, u64>,
+    next_lease_id: u64,
+    expired_total: u64,
+}
+
+impl QueueState {
+    pub fn new(lease_ms: u64) -> QueueState {
+        QueueState {
+            lease_ms: lease_ms.max(1),
+            jobs: BTreeMap::new(),
+            pending: BTreeSet::new(),
+            leased: BTreeMap::new(),
+            completed: BTreeMap::new(),
+            next_lease_id: 0,
+            expired_total: 0,
+        }
+    }
+
+    /// The `Wait` retry interval: a fraction of the lease deadline, so
+    /// an idle worker notices an expiry-driven re-lease promptly
+    /// without hammering the server.
+    fn retry_ms(&self) -> u64 {
+        (self.lease_ms / 4).clamp(10, 1_000)
+    }
+
+    /// Add a job set. Idempotent by fingerprint: a job already
+    /// pending, leased, or completed is left exactly as it is — the
+    /// coordinator can re-submit its spec list after a reconnect
+    /// without double-scheduling or re-running finished work.
+    pub fn enqueue(&mut self, specs: &[RunSpec], now_ms: u64) -> QueueStat {
+        for s in specs {
+            let fp = s.fingerprint();
+            if self.jobs.contains_key(&fp) {
+                continue;
+            }
+            self.jobs.insert(fp.clone(), s.clone());
+            self.pending.insert(fp);
+        }
+        self.stat(now_ms)
+    }
+
+    /// Return expired leases to the pending set. Called by every
+    /// other transition, so no caller observes a stale lease.
+    fn expire(&mut self, now_ms: u64) {
+        let dead: Vec<String> = self
+            .leased
+            .iter()
+            .filter(|(_, l)| l.deadline_ms <= now_ms)
+            .map(|(fp, _)| fp.clone())
+            .collect();
+        for fp in dead {
+            self.leased.remove(&fp);
+            self.pending.insert(fp);
+            self.expired_total += 1;
+        }
+    }
+
+    /// Grant the smallest pending fingerprint to `worker`, or tell it
+    /// to wait (leases outstanding) or exit (drained).
+    pub fn lease(&mut self, worker: &str, now_ms: u64) -> LeaseReply {
+        self.expire(now_ms);
+        if let Some(fp) = self.pending.iter().next().cloned() {
+            self.pending.remove(&fp);
+            self.next_lease_id += 1;
+            let lease_id = self.next_lease_id;
+            let deadline_ms = now_ms.saturating_add(self.lease_ms);
+            let spec = self.jobs.get(&fp).cloned();
+            self.leased.insert(fp, LeaseInfo {
+                lease_id,
+                worker: worker.to_string(),
+                deadline_ms,
+            });
+            return LeaseReply {
+                state: LeaseState::Granted,
+                lease_id,
+                deadline_ms,
+                retry_ms: 0,
+                spec,
+            };
+        }
+        let state = if self.leased.is_empty() {
+            LeaseState::Drained
+        } else {
+            LeaseState::Wait
+        };
+        LeaseReply {
+            state,
+            lease_id: 0,
+            deadline_ms: 0,
+            retry_ms: self.retry_ms(),
+            spec: None,
+        }
+    }
+
+    /// Record a completion. `checksum` is the stored entry's
+    /// [`entry_checksum`]; a duplicate with the same checksum is an
+    /// idempotent no-op (first write wins), a duplicate with a
+    /// *different* checksum is a determinism violation and errors
+    /// loudly. Stale lease ids are accepted: a straggler whose lease
+    /// expired (even one re-leased elsewhere) still simulated the
+    /// same deterministic bytes, and the checksum proves it.
+    pub fn complete(&mut self, fingerprint: &str, _lease_id: u64,
+                    checksum: u64, now_ms: u64)
+                    -> Result<CompleteOutcome, String> {
+        self.expire(now_ms);
+        if !self.jobs.contains_key(fingerprint) {
+            return Err(format!(
+                "COMPLETE {fingerprint}: not a queued job"));
+        }
+        if let Some(&prev) = self.completed.get(fingerprint) {
+            return if prev == checksum {
+                Ok(CompleteOutcome::Duplicate)
+            } else {
+                Err(format!(
+                    "COMPLETE {fingerprint}: entry checksum \
+                     {checksum:016x} diverges from the first \
+                     completion's {prev:016x} — determinism violation \
+                     (two workers produced different bytes for one \
+                     spec)"))
+            };
+        }
+        self.leased.remove(fingerprint);
+        self.pending.remove(fingerprint);
+        self.completed.insert(fingerprint.to_string(), checksum);
+        Ok(CompleteOutcome::Recorded)
+    }
+
+    /// Counter snapshot (expires stale leases first, so `leased`
+    /// never counts a dead worker past its deadline).
+    pub fn stat(&mut self, now_ms: u64) -> QueueStat {
+        self.expire(now_ms);
+        QueueStat {
+            total: self.jobs.len() as u64,
+            pending: self.pending.len() as u64,
+            leased: self.leased.len() as u64,
+            completed: self.completed.len() as u64,
+            expired: self.expired_total,
+        }
+    }
+
+    /// Which worker currently holds `fingerprint`, if any (tests,
+    /// diagnostics).
+    pub fn holder_of(&self, fingerprint: &str) -> Option<&str> {
+        self.leased.get(fingerprint).map(|l| l.worker.as_str())
+    }
+}
+
+// ------------------------------------------------------- worker loop
+
+/// The queue-worker main loop (`rainbow queue-worker`): lease,
+/// simulate through `run_stored` (which publishes the entry via the
+/// ordinary `PUT` path — or serves a cache hit, which is exactly how
+/// a re-leased spec whose first worker died after `PUT` avoids
+/// re-simulating), acknowledge with `COMPLETE`, repeat until the
+/// queue reports `Drained`. Returns the number of jobs this worker
+/// completed.
+pub fn worker_loop(client: &NetStore, worker_id: &str)
+                   -> Result<usize, String> {
+    if !valid_worker_id(worker_id) {
+        return Err(format!(
+            "queue-worker: malformed worker id {worker_id:?} (1-64 \
+             chars, alphanumeric/._-)"));
+    }
+    let store = Store::from_net(client.clone());
+    let mut done = 0usize;
+    loop {
+        let reply = client.lease_job(worker_id)?;
+        match reply.state {
+            LeaseState::Granted => {
+                let Some(spec) = reply.spec else {
+                    return Err(format!(
+                        "queue-worker {worker_id}: lease granted \
+                         without a spec"));
+                };
+                // Same pre-flight the shard worker runs: a server
+                // handing out a spec this binary cannot simulate must
+                // be a clean error, not a panic mid-lease.
+                spec_cli::validate_spec(&spec).map_err(|e| {
+                    format!("queue-worker {worker_id}: leased spec: {e}")
+                })?;
+                let fp = spec.fingerprint();
+                run_stored(&store, &spec)?;
+                client.complete_job(worker_id, &fp, reply.lease_id)?;
+                done += 1;
+                println!("[{worker_id}] {} x {} done ({fp})",
+                         spec.workload, spec.policy);
+            }
+            LeaseState::Wait => {
+                thread::sleep(Duration::from_millis(reply.retry_ms.max(1)));
+            }
+            LeaseState::Drained => return Ok(done),
+        }
+    }
+}
+
+// -------------------------------------------------------- coordinator
+
+fn tcp_hostport(store: &Store) -> Result<&str, String> {
+    store
+        .addr()
+        .strip_prefix("tcp://")
+        .filter(|_| store.is_remote())
+        .ok_or_else(|| {
+            format!(
+                "dynamic dispatch requires a tcp:// store (the cache \
+                 server doubles as the scheduler); got {}", store.addr())
+        })
+}
+
+/// Dynamic-dispatch sweep (`sweep --queue`): enqueue the deduplicated
+/// spec matrix on the cache server at `store`, spawn `workers` local
+/// child `rainbow queue-worker` processes (0 = one per core), poll
+/// `QSTAT` until the queue drains, and merge the results purely from
+/// the store — the same merge path as a sharded sweep. Child deaths
+/// mid-sweep are tolerated (their leases expire and re-issue to the
+/// survivors); only all-local-workers-dead with jobs remaining is an
+/// error, because then nothing local can drain the queue (remote
+/// `queue-worker`s, if any, still could — but the CLI cannot know,
+/// so it fails loudly rather than poll forever).
+pub fn run_queued(specs: &[RunSpec], store: &Store, workers: usize)
+                  -> Result<SweepOutcome, String> {
+    let hostport = tcp_hostport(store)?;
+    let client = NetStore::new(hostport);
+    let stat = client.enqueue_jobs(specs)?;
+    let mut uniq = BTreeSet::new();
+    for s in specs {
+        uniq.insert(s.fingerprint());
+    }
+    let unique_runs = uniq.len();
+    let n = (if workers == 0 { sweep::auto_workers() } else { workers })
+        .clamp(1, unique_runs.max(1));
+    let exe = std::env::current_exe()
+        .map_err(|e| format!("queue: locate own binary: {e}"))?;
+    println!(
+        "queue: {} job(s) on {} ({} already complete); spawning {n} \
+         local worker(s)",
+        stat.total, store.addr(), stat.completed);
+    let mut children: Vec<(String, Option<Child>)> = Vec::new();
+    for i in 0..n {
+        let wid = format!("q{}-{i}", std::process::id());
+        let child = Command::new(&exe)
+            .arg("queue-worker")
+            .arg("--store")
+            .arg(store.addr())
+            .arg("--worker-id")
+            .arg(&wid)
+            .spawn()
+            .map_err(|e| format!("queue: spawn worker {wid}: {e}"))?;
+        children.push((wid, Some(child)));
+    }
+    let drained = loop {
+        let stat = client.queue_stat()?;
+        if stat.drained() {
+            break stat;
+        }
+        let mut alive = 0usize;
+        for (wid, slot) in children.iter_mut() {
+            let Some(child) = slot else { continue };
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    if !status.success() {
+                        eprintln!(
+                            "queue: worker {wid} exited ({status}) with \
+                             jobs remaining — its lease(s) will re-issue \
+                             on deadline expiry");
+                    }
+                    *slot = None;
+                }
+                Ok(None) => alive += 1,
+                Err(e) => {
+                    return Err(format!("queue: reap worker {wid}: {e}"))
+                }
+            }
+        }
+        if alive == 0 {
+            return Err(format!(
+                "queue: all {n} local workers exited but {} job(s) \
+                 remain ({} pending, {} leased) on {}",
+                stat.pending + stat.leased, stat.pending, stat.leased,
+                store.addr()));
+        }
+        thread::sleep(Duration::from_millis(POLL_MS));
+    };
+    // Drained: surviving children will observe it on their next lease
+    // and exit; a straggler mid-simulation of an already-completed
+    // spec would only burn time, so reap it now — the queue holds
+    // every result and duplicate COMPLETEs are idempotent anyway.
+    for (_, slot) in children.iter_mut() {
+        if let Some(child) = slot {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+    if drained.expired > 0 {
+        println!(
+            "queue: drained with {} lease expiry(ies) — straggler or \
+             dead-worker recovery re-leased those jobs", drained.expired);
+    }
+    let metrics = sweep::collect_stored(store, specs)
+        .map_err(|e| format!("queue merge: {e}"))?;
+    Ok(SweepOutcome { metrics, unique_runs, workers_used: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(w: &str, p: &str) -> RunSpec {
+        RunSpec::new(w, p)
+            .with_scale(64)
+            .with_instructions(20_000)
+            .with_seed(7)
+            .with("rainbow.interval_cycles", 100_000u64)
+            .with("rainbow.top_n", 8u64)
+    }
+
+    fn three_specs() -> Vec<RunSpec> {
+        vec![tiny("DICT", "flat"), tiny("DICT", "rainbow"),
+             tiny("GUPS", "flat")]
+    }
+
+    fn sorted_fps(specs: &[RunSpec]) -> Vec<String> {
+        let mut fps: Vec<String> =
+            specs.iter().map(|s| s.fingerprint()).collect();
+        fps.sort();
+        fps
+    }
+
+    #[test]
+    fn wire_records_round_trip_and_reject_version_skew() {
+        let req = LeaseRequest { worker: "w-1".to_string() };
+        assert_eq!(lease_request_from_kv(&lease_request_to_kv(&req))
+                       .unwrap(), req);
+        let spec = tiny("DICT", "flat");
+        let granted = LeaseReply {
+            state: LeaseState::Granted,
+            lease_id: 42,
+            deadline_ms: 9_000,
+            retry_ms: 0,
+            spec: Some(spec),
+        };
+        assert_eq!(lease_reply_from_kv(&lease_reply_to_kv(&granted))
+                       .unwrap(), granted);
+        let drained = LeaseReply {
+            state: LeaseState::Drained,
+            lease_id: 0,
+            deadline_ms: 0,
+            retry_ms: 50,
+            spec: None,
+        };
+        assert_eq!(lease_reply_from_kv(&lease_reply_to_kv(&drained))
+                       .unwrap(), drained);
+        let comp = CompleteRequest {
+            worker: "w-1".to_string(),
+            fingerprint: "v2_DICT_flat_s64".to_string(),
+            lease_id: 42,
+        };
+        assert_eq!(complete_request_from_kv(&complete_request_to_kv(&comp))
+                       .unwrap(), comp);
+        let stat = QueueStat {
+            total: 8, pending: 3, leased: 2, completed: 3, expired: 1,
+        };
+        assert_eq!(queue_stat_from_kv(&queue_stat_to_kv(&stat)).unwrap(),
+                   stat);
+        // Version skew and malformed input are loud.
+        let skew = lease_request_to_kv(&req)
+            .replace("queuewireversion=1", "queuewireversion=99");
+        let e = lease_request_from_kv(&skew).unwrap_err();
+        assert!(e.contains("unsupported"), "got: {e}");
+        let e = queue_stat_from_kv("total=1\n").unwrap_err();
+        assert!(e.contains("queuewireversion"), "got: {e}");
+        let e = queue_stat_from_kv(
+            "queuewireversion=1\ntotal=1\npending=0\nleased=0\n\
+             completed=1\nexpired=0\nbogus=7\n").unwrap_err();
+        assert!(e.contains("unknown key"), "got: {e}");
+    }
+
+    #[test]
+    fn malformed_lease_replies_fail_loudly() {
+        // granted without a spec block
+        let e = lease_reply_from_kv(
+            "queuewireversion=1\nstate=granted\nleaseid=1\n\
+             deadlinems=5\nretryms=0\n").unwrap_err();
+        assert!(e.contains("no spec"), "got: {e}");
+        // spec attached to a drained reply
+        let text = format!(
+            "queuewireversion=1\nstate=drained\nleaseid=0\n\
+             deadlinems=0\nretryms=5\n---\n{}",
+            serde_kv::spec_to_kv(&tiny("DICT", "flat")));
+        let e = lease_reply_from_kv(&text).unwrap_err();
+        assert!(e.contains("drained"), "got: {e}");
+        // unknown state
+        let e = lease_reply_from_kv(
+            "queuewireversion=1\nstate=maybe\nleaseid=0\n\
+             deadlinems=0\nretryms=5\n").unwrap_err();
+        assert!(e.contains("unknown state"), "got: {e}");
+    }
+
+    #[test]
+    fn worker_ids_are_validated() {
+        assert!(valid_worker_id("q123-0"));
+        assert!(valid_worker_id("host.7_a"));
+        for bad in ["", "a b", "a\nb", "a/b", &"x".repeat(65)] {
+            assert!(!valid_worker_id(bad), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn leases_grant_in_fingerprint_order() {
+        let specs = three_specs();
+        let fps = sorted_fps(&specs);
+        let mut q = QueueState::new(1_000);
+        q.enqueue(&specs, 0);
+        for (i, fp) in fps.iter().enumerate() {
+            let r = q.lease("w", 0);
+            assert_eq!(r.state, LeaseState::Granted);
+            assert_eq!(r.spec.unwrap().fingerprint(), *fp, "grant {i}");
+            assert_eq!(r.deadline_ms, 1_000);
+        }
+        // Everything leased: wait, not drained.
+        let r = q.lease("w", 1);
+        assert_eq!(r.state, LeaseState::Wait);
+        assert!(r.retry_ms > 0);
+    }
+
+    #[test]
+    fn expired_leases_rejoin_pending_and_release_in_order() {
+        let specs = three_specs();
+        let fps = sorted_fps(&specs);
+        let mut q = QueueState::new(500);
+        q.enqueue(&specs, 0);
+        let a = q.lease("victim", 0);
+        let b = q.lease("victim", 0);
+        assert_eq!(a.spec.unwrap().fingerprint(), fps[0]);
+        assert_eq!(b.spec.unwrap().fingerprint(), fps[1]);
+        assert_eq!(q.holder_of(&fps[0]), Some("victim"));
+        // Just before the deadline nothing expires...
+        let s = q.stat(499);
+        assert_eq!((s.pending, s.leased, s.expired), (1, 2, 0));
+        // ...at the deadline both leases return to pending, and the
+        // re-lease order is fingerprint order again.
+        let s = q.stat(500);
+        assert_eq!((s.pending, s.leased, s.expired), (3, 0, 2));
+        assert_eq!(q.holder_of(&fps[0]), None);
+        let r = q.lease("rescuer", 500);
+        assert_eq!(r.spec.unwrap().fingerprint(), fps[0]);
+        assert_eq!(r.deadline_ms, 1_000);
+        assert_eq!(q.holder_of(&fps[0]), Some("rescuer"));
+    }
+
+    #[test]
+    fn duplicate_complete_is_idempotent_and_divergence_is_loud() {
+        let specs = three_specs();
+        let fps = sorted_fps(&specs);
+        let mut q = QueueState::new(100);
+        q.enqueue(&specs, 0);
+        let lease = q.lease("w1", 0);
+        assert_eq!(q.complete(&fps[0], lease.lease_id, 0xAB, 1).unwrap(),
+                   CompleteOutcome::Recorded);
+        // Identical duplicate (stale lease id, late straggler): no-op.
+        assert_eq!(q.complete(&fps[0], 999, 0xAB, 2).unwrap(),
+                   CompleteOutcome::Duplicate);
+        // Divergent duplicate: determinism violation, loud.
+        let e = q.complete(&fps[0], 999, 0xCD, 3).unwrap_err();
+        assert!(e.contains("determinism violation"), "got: {e}");
+        // First write won: the recorded checksum is unchanged.
+        assert_eq!(q.complete(&fps[0], 1, 0xAB, 4).unwrap(),
+                   CompleteOutcome::Duplicate);
+        // Unknown fingerprint: not a queued job.
+        let e = q.complete("not_a_job", 1, 0xAB, 5).unwrap_err();
+        assert!(e.contains("not a queued job"), "got: {e}");
+    }
+
+    #[test]
+    fn straggler_completion_after_expiry_still_counts_once() {
+        let specs = three_specs();
+        let fps = sorted_fps(&specs);
+        let mut q = QueueState::new(100);
+        q.enqueue(&specs, 0);
+        let old = q.lease("straggler", 0);
+        // Lease expires; the job is re-leased to a rescuer.
+        let release = q.lease("rescuer", 100);
+        assert_eq!(release.spec.as_ref().unwrap().fingerprint(), fps[0]);
+        // The straggler finishes anyway (identical bytes) — accepted,
+        // and the rescuer's later COMPLETE is the idempotent duplicate.
+        assert_eq!(q.complete(&fps[0], old.lease_id, 0x11, 150).unwrap(),
+                   CompleteOutcome::Recorded);
+        assert_eq!(q.complete(&fps[0], release.lease_id, 0x11, 160)
+                       .unwrap(),
+                   CompleteOutcome::Duplicate);
+        let s = q.stat(160);
+        assert_eq!((s.completed, s.pending, s.leased), (1, 2, 0));
+    }
+
+    #[test]
+    fn enqueue_is_idempotent_and_drained_when_all_complete() {
+        let specs = three_specs();
+        let fps = sorted_fps(&specs);
+        let mut q = QueueState::new(100);
+        let s = q.enqueue(&specs, 0);
+        assert_eq!((s.total, s.pending), (3, 3));
+        // Re-enqueue: no duplicates.
+        let s = q.enqueue(&specs, 0);
+        assert_eq!((s.total, s.pending), (3, 3));
+        for fp in &fps {
+            let lease = q.lease("w", 0);
+            q.complete(fp, lease.lease_id, 1, 0).unwrap();
+        }
+        let s = q.stat(0);
+        assert!(s.drained());
+        assert_eq!(s.completed, 3);
+        // Completed jobs stay completed across a re-enqueue.
+        let s = q.enqueue(&specs, 0);
+        assert!(s.drained());
+        assert_eq!(q.lease("w", 0).state, LeaseState::Drained);
+        // An empty queue is trivially drained.
+        let mut empty = QueueState::new(100);
+        assert_eq!(empty.lease("w", 0).state, LeaseState::Drained);
+    }
+
+    // ---------------------------------- end-to-end over a live server
+
+    #[test]
+    fn queue_round_trips_through_a_live_cache_server() {
+        use super::super::netstore::CacheServer;
+        let server = CacheServer::bind("127.0.0.1:0", Store::mem())
+            .unwrap()
+            .with_lease_ms(60_000);
+        let handle = server.spawn();
+        let hostport = handle.host_port();
+        let client = NetStore::new(&hostport);
+        let specs = vec![tiny("DICT", "flat"), tiny("DICT", "rainbow")];
+        let stat = client.enqueue_jobs(&specs).unwrap();
+        assert_eq!((stat.total, stat.pending), (2, 2));
+        // An in-process worker drains the queue.
+        let done = worker_loop(&client, "t-worker").unwrap();
+        assert_eq!(done, 2);
+        let stat = client.queue_stat().unwrap();
+        assert!(stat.drained());
+        assert_eq!(stat.completed, 2);
+        // The results merged from the store are byte-identical to
+        // serial uncached runs.
+        let store = Store::net(&hostport);
+        let merged = sweep::collect_stored(&store, &specs).unwrap();
+        for (s, m) in specs.iter().zip(&merged) {
+            assert_eq!(serde_kv::metrics_to_kv(&super::super::run_uncached(s)),
+                       serde_kv::metrics_to_kv(m),
+                       "{} x {}", s.workload, s.policy);
+        }
+        // Duplicate COMPLETE over the wire: idempotent.
+        let fp = specs[0].fingerprint();
+        client.complete_job("t-worker", &fp, 1).unwrap();
+        // COMPLETE without a store entry is rejected server-side.
+        let mut orphan = tiny("GUPS", "rainbow");
+        orphan.instructions = 30_000;
+        client.enqueue_jobs(&[orphan.clone()]).unwrap();
+        let e = client
+            .complete_job("t-worker", &orphan.fingerprint(), 7)
+            .unwrap_err();
+        assert!(e.contains("no metrics entry"), "got: {e}");
+        // Leave the queue drained so the server can stop cleanly.
+        let done = worker_loop(&client, "t-worker2").unwrap();
+        assert_eq!(done, 1);
+        handle.stop().unwrap();
+    }
+}

@@ -36,6 +36,12 @@ pub const SPEC_VERSION: u64 = 1;
 /// Version of the multi-spec list-file serialization.
 pub const SPEC_LIST_VERSION: u64 = 1;
 
+/// Version of the job-queue wire records (`report::queue`): lease
+/// requests/replies, completion requests, and queue-stat snapshots
+/// exchanged over the LEASE/COMPLETE/REQUEUE/QSTAT opcodes. Bump on
+/// any incompatible change (the structs are schema-locked against it).
+pub const QUEUE_WIRE_VERSION: u64 = 1;
+
 /// Canonical, order-independent serialization of a [`RunSpec`]: one
 /// `key=value` per line, fixed field order, overrides as sorted
 /// `set.<knob>` lines. Triple duty: on-disk spec-file format, `--spec`

@@ -266,9 +266,9 @@ fn manual_covers_every_subcommand_knob_and_profile() {
     use rainbow::config::{knobs, profiles};
     let manual: &str =
         include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/MANUAL.md"));
-    for cmd in ["run", "sweep", "shard-worker", "cache-server",
-                "backends", "figure", "suite", "analyze", "storage",
-                "perf", "lint", "list"] {
+    for cmd in ["run", "sweep", "shard-worker", "queue-worker",
+                "cache-server", "backends", "figure", "suite", "analyze",
+                "storage", "perf", "lint", "list"] {
         assert!(manual.contains(&format!("`{cmd}`")),
                 "MANUAL.md must document the `{cmd}` subcommand");
     }
@@ -292,6 +292,15 @@ fn manual_covers_every_subcommand_knob_and_profile() {
         assert!(manual.contains(needle),
                 "MANUAL.md must describe the results-store {needle} \
                  surface");
+    }
+    // The job-queue surface: every queue opcode, the wire-record
+    // version key, the lease-deadline knob, and the dynamic-dispatch
+    // sweep flags must be documented for operators.
+    for needle in ["LEASE", "COMPLETE", "REQUEUE", "QSTAT",
+                   "queuewireversion", "--lease-ms", "--queue",
+                   "--worker-id"] {
+        assert!(manual.contains(needle),
+                "MANUAL.md must describe the job-queue {needle} surface");
     }
     // The lint surface: every rule id, the suppression-marker syntax,
     // and the wire-format lock workflow must be documented.

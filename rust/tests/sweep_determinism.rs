@@ -6,9 +6,12 @@
 //! sharing or ordering race would surface as drift between rounds.
 //! The same contract holds across the PROCESS boundary: a sharded sweep
 //! executed by real child `rainbow shard-worker` processes and merged
-//! from the shared cache must match the serial replay byte-for-byte.
+//! from the shared cache must match the serial replay byte-for-byte —
+//! and across WORKER DEATH: a dynamically-dispatched (job-queue) sweep
+//! must survive a SIGKILLed `queue-worker` mid-run, re-lease its jobs,
+//! and still match the serial replay byte-for-byte.
 
-use rainbow::report::netstore::CacheServer;
+use rainbow::report::netstore::{CacheServer, NetStore};
 use rainbow::report::serde_kv::{metrics_to_kv, spec_from_kv, spec_to_kv};
 use rainbow::report::shard::{self, ShardConfig};
 use rainbow::report::sweep::{self, SweepConfig};
@@ -183,6 +186,84 @@ fn sharded_sweep_through_cache_server_no_shared_fs() {
     assert_eq!(held.len(), unique);
     handle.stop().expect("clean cache-server shutdown");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The work-stealing form of the shared-nothing contract, THROUGH a
+/// worker death: the matrix is enqueued on an in-memory cache server's
+/// job queue, real child `rainbow queue-worker` processes lease one
+/// spec at a time, and one of them is SIGKILLed mid-run. Any lease the
+/// victim died holding must expire (500 ms deadline here) and be
+/// re-granted to the survivors, duplicate COMPLETEs from stragglers
+/// must stay idempotent, and the merged metrics must still be
+/// byte-identical to a serial `run_uncached` replay — zero shared
+/// filesystem, zero lost or double-counted cells.
+#[test]
+fn queued_sweep_survives_worker_death_byte_identical() {
+    let server = CacheServer::bind("127.0.0.1:0", Store::mem())
+        .expect("bind ephemeral port")
+        .with_lease_ms(500);
+    let hostport = server.local_addr().to_string();
+    let handle = server.spawn();
+
+    let specs = matrix();
+    let client = NetStore::new(&hostport);
+    let stat = client.enqueue_jobs(&specs).expect("enqueue");
+    assert_eq!(stat.total as usize, specs.len());
+    assert_eq!(stat.pending as usize, specs.len());
+
+    let spawn_worker = |id: &str| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_rainbow"))
+            .arg("queue-worker")
+            .arg("--store").arg(format!("tcp://{hostport}"))
+            .arg("--worker-id").arg(id)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn queue-worker")
+    };
+
+    // The victim starts alone; once it has at least one COMPLETE in,
+    // kill it cold (SIGKILL — no goodbye, no REQUEUE: whatever lease
+    // it held simply times out server-side).
+    let mut victim = spawn_worker("victim");
+    let mut seen_completed = 0;
+    for _ in 0..2000 {
+        let s = client.queue_stat().expect("qstat");
+        seen_completed = s.completed;
+        if s.completed >= 1 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(seen_completed >= 1, "victim never completed a job");
+    victim.kill().expect("kill victim");
+    victim.wait().expect("reap victim");
+
+    // Two survivors drain the rest — including any job the victim died
+    // holding, which rejoins the pending set once its deadline passes.
+    // A queue-worker only exits 0 when the server reports the queue
+    // drained, so a clean join here IS the drain barrier.
+    let mut survivors = vec![spawn_worker("survivor-1"),
+                             spawn_worker("survivor-2")];
+    for w in &mut survivors {
+        let status = w.wait().expect("wait survivor");
+        assert!(status.success(), "survivor exited non-zero");
+    }
+    let stat = client.queue_stat().expect("qstat after drain");
+    assert!(stat.drained(), "queue not drained: {stat:?}");
+    assert_eq!(stat.completed as usize, specs.len(),
+               "every cell must be completed exactly once");
+
+    // The merged result set — served purely from the server's memory,
+    // no cache directory anywhere — is byte-identical to serial replay.
+    let store = Store::net(&hostport);
+    let metrics = sweep::collect_stored(&store, &specs).expect("collect");
+    for (s, m) in specs.iter().zip(&metrics) {
+        assert_eq!(metrics_to_kv(&run_uncached(s)), metrics_to_kv(m),
+                   "{} x {} diverged through the job queue",
+                   s.workload, s.policy);
+    }
+    handle.stop().expect("clean cache-server shutdown");
 }
 
 /// An unreachable cache server must fail a sharded sweep fast — one

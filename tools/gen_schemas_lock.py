@@ -26,6 +26,14 @@ TRACKED = [
     ("perf.rs", "PerfConfig", "perf.rs", "SCHEMA"),
     ("perf.rs", "BenchEntry", "perf.rs", "SCHEMA"),
     ("perf.rs", "PerfReport", "perf.rs", "SCHEMA"),
+    ("report/queue.rs", "LeaseRequest", "report/serde_kv.rs",
+     "QUEUE_WIRE_VERSION"),
+    ("report/queue.rs", "LeaseReply", "report/serde_kv.rs",
+     "QUEUE_WIRE_VERSION"),
+    ("report/queue.rs", "CompleteRequest", "report/serde_kv.rs",
+     "QUEUE_WIRE_VERSION"),
+    ("report/queue.rs", "QueueStat", "report/serde_kv.rs",
+     "QUEUE_WIRE_VERSION"),
 ]
 
 
