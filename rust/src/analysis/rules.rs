@@ -136,7 +136,8 @@ const CLOCK_EXEMPT: &[&str] = &["util/bench.rs", "perf.rs"];
 
 /// Protocol code bound to the loud-but-clean error contract.
 const PROTOCOL_FILES: &[&str] = &["report/netstore.rs", "report/store.rs",
-                                  "report/shard.rs", "report/queue.rs"];
+                                  "report/shard.rs", "report/queue.rs",
+                                  "report/replica.rs", "report/wal.rs"];
 
 fn is_hot(path: &str) -> bool {
     HOT_PREFIXES.iter().any(|p| path.starts_with(p))

@@ -117,6 +117,13 @@ pub const TRACKED: &[Tracked] = &[
         version_file: "report/serde_kv.rs",
         version_const: "QUEUE_WIRE_VERSION",
     },
+    // Cache-server durability-log record framing (--log).
+    Tracked {
+        struct_file: "report/wal.rs",
+        struct_name: "LogRecord",
+        version_file: "report/serde_kv.rs",
+        version_const: "CACHE_LOG_VERSION",
+    },
 ];
 
 fn fnv1a(bytes: &[u8]) -> u64 {

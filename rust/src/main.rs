@@ -47,9 +47,11 @@ const OPTS: &[OptSpec] = &[
                      target/rainbow_results)",
               default: None, is_flag: false },
     OptSpec { name: "store",
-              help: "results store: a cache directory, or \
-                     tcp://host:port for a `rainbow cache-server` \
-                     (overrides --cache-dir)",
+              help: "results store: a cache directory, tcp://host:port \
+                     for a `rainbow cache-server`, or \
+                     tcp://a,tcp://b,... for a replicated server set \
+                     (consistent-hash placement, write-through, \
+                     read-repair; overrides --cache-dir)",
               default: None, is_flag: false },
     OptSpec { name: "listen",
               help: "cache-server: bind address (port 0 = ephemeral; \
@@ -67,6 +69,12 @@ const OPTS: &[OptSpec] = &[
               help: "cache-server: serve an ephemeral in-memory store \
                      instead of a directory",
               default: None, is_flag: true },
+    OptSpec { name: "log",
+              help: "cache-server: append-only durability log for \
+                     --mem (fsynced per PUT, replayed on startup, \
+                     torn tails truncated loudly, snapshot+compacted \
+                     on clean shutdown)",
+              default: None, is_flag: false },
     OptSpec { name: "fig",
               help: "figure/table id: \
                      1,7,8,9,10,11,12,13,14,15,16,t1,t2,t6,remap",
@@ -456,11 +464,13 @@ fn cmd_shard_worker(args: &Args) -> Result<(), String> {
 /// the server; no spec files, no shared filesystem.
 fn cmd_queue_worker(args: &Args) -> Result<(), String> {
     let store = store_from_args(args)?;
-    let hostport = match store.addr().strip_prefix("tcp://") {
-        Some(hp) if store.is_remote() => hp.to_string(),
-        _ => {
-            return Err("queue-worker: --store tcp://host:port required \
-                        (the cache server is the scheduler)".into())
+    let hostport = match store.scheduler_hostport() {
+        Some(hp) => hp.to_string(),
+        None => {
+            return Err("queue-worker: --store tcp://host:port (or a \
+                        replicated tcp://a,tcp://b,... set, whose first \
+                        endpoint schedules) required — the cache server \
+                        is the scheduler".into())
         }
     };
     let worker_id = match args.get("worker-id") {
@@ -476,7 +486,7 @@ fn cmd_queue_worker(args: &Args) -> Result<(), String> {
     // reconnecting after a server restart fans out instead of
     // thundering-herding.
     let client = NetStore::new(&hostport).with_worker_jitter(&worker_id);
-    let n = queue::worker_loop(&client, &worker_id)?;
+    let n = queue::worker_loop(&client, &store, &worker_id)?;
     println!("queue-worker {worker_id}: {n} job(s) completed; queue \
               drained at {}", store.addr());
     Ok(())
@@ -496,7 +506,30 @@ fn cmd_cache_server(args: &Args) -> Result<(), String> {
                   acknowledged");
         return Ok(());
     }
-    let store = if args.flag("mem") {
+    let store = if let Some(log_path) = args.get("log") {
+        if !args.flag("mem") {
+            return Err("--log requires --mem (the log is the \
+                        durability story for the in-memory store; a \
+                        directory store is already durable)".into());
+        }
+        let (store, stats) = Store::logged(Path::new(log_path))?;
+        println!(
+            "cache-server: replayed {} record(s) from {log_path}\
+             {}{}",
+            stats.loaded,
+            if stats.skipped_stale > 0 {
+                format!(" ({} stale skipped)", stats.skipped_stale)
+            } else {
+                String::new()
+            },
+            if stats.truncated_bytes > 0 {
+                format!(" ({} torn byte(s) truncated)",
+                        stats.truncated_bytes)
+            } else {
+                String::new()
+            });
+        store
+    } else if args.flag("mem") {
         Store::mem()
     } else {
         match args.get("store") {
@@ -528,6 +561,13 @@ fn cmd_cache_server(args: &Args) -> Result<(), String> {
     println!("cache-server: stop with `rainbow cache-server --stop \
               tcp://{addr}`");
     server.serve()?;
+    // Clean (--stop) shutdown: snapshot+compact the durability log,
+    // if one backs this server, so the next startup replays one
+    // record per live entry instead of the full append history.
+    store.compact().map_err(|e| format!("cache-server: compact: {e}"))?;
+    if let Some(log_path) = args.get("log") {
+        println!("cache-server: log compacted at {log_path}");
+    }
     println!("cache-server: clean shutdown");
     Ok(())
 }

@@ -14,12 +14,14 @@ use crate::workloads::Workload;
 pub mod figures;
 pub mod netstore;
 pub mod queue;
+pub mod replica;
 pub mod serde_kv;
 pub mod shard;
 pub mod spec;
 pub mod spec_cli;
 pub mod store;
 pub mod sweep;
+pub mod wal;
 
 pub use spec::RunSpec;
 pub use store::{CacheStore, FsStore, MemStore, Store, StoreKind};

@@ -324,12 +324,19 @@ impl NetStore {
     /// `COMPLETE`: acknowledge that `fingerprint`'s entry is in the
     /// store (the server verifies and records its checksum; duplicate
     /// completions with identical bytes are accepted idempotently).
+    /// `checksum` is the worker's declared [`queue::entry_checksum`]
+    /// — required when the results store is replicated (the
+    /// scheduler's own store may not be a ring replica for this
+    /// fingerprint), omitted for single-server stores where the
+    /// scheduler's store is the sole witness.
     pub fn complete_job(&self, worker: &str, fingerprint: &str,
-                        lease_id: u64) -> Result<(), String> {
+                        lease_id: u64, checksum: Option<u64>)
+                        -> Result<(), String> {
         let req = queue::CompleteRequest {
             worker: worker.to_string(),
             fingerprint: fingerprint.to_string(),
             lease_id,
+            checksum,
         };
         let payload = queue::complete_request_to_kv(&req);
         self.queue_text_reply(op::COMPLETE, "COMPLETE",
@@ -698,11 +705,16 @@ fn serve_requeue(stream: &mut TcpStream, queue: &Mutex<QueueState>,
     }
 }
 
-/// `COMPLETE` trusts the store, not the worker: the claimed entry is
-/// read back from the backing store and its canonical checksum is
-/// what the completion is recorded (and, on duplicates, compared)
-/// against. A `COMPLETE` for an entry the store does not hold is an
-/// error — `PUT` must land first.
+/// `COMPLETE` trusts the store over the worker: when the backing
+/// store holds the claimed entry, its canonical checksum is
+/// authoritative — it is what the completion is recorded (and, on
+/// duplicates, compared) against, and a *declared* checksum (wire v2)
+/// must agree with it. When the store does **not** hold the entry,
+/// a declared checksum stands in — that is the replicated-store case,
+/// where the consistent-hash ring may have placed the entry on
+/// replicas other than this scheduler. With neither a stored entry
+/// nor a declared checksum the completion is rejected — `PUT` must
+/// land first.
 fn serve_complete(stream: &mut TcpStream, store: &Store,
                   queue: &Mutex<QueueState>, payload: &[u8],
                   now_ms: u64) -> io::Result<()> {
@@ -714,12 +726,29 @@ fn serve_complete(stream: &mut TcpStream, store: &Store,
                 return Err("COMPLETE: malformed fingerprint".to_string());
             }
             let checksum = match store.get(&req.fingerprint) {
-                Ok(Some(m)) => queue::entry_checksum(&m),
-                Ok(None) => {
-                    return Err(format!(
-                        "COMPLETE {}: no metrics entry in the store \
-                         (PUT must precede COMPLETE)", req.fingerprint))
+                Ok(Some(m)) => {
+                    let own = queue::entry_checksum(&m);
+                    if let Some(declared) = req.checksum {
+                        if declared != own {
+                            return Err(format!(
+                                "COMPLETE {}: declared checksum \
+                                 {declared:016x} diverges from the \
+                                 stored entry's {own:016x} — \
+                                 determinism violation",
+                                req.fingerprint));
+                        }
+                    }
+                    own
                 }
+                Ok(None) => match req.checksum {
+                    Some(declared) => declared,
+                    None => {
+                        return Err(format!(
+                            "COMPLETE {}: no metrics entry in the \
+                             store (PUT must precede COMPLETE)",
+                            req.fingerprint))
+                    }
+                },
                 Err(e) => {
                     return Err(format!(
                         "COMPLETE {}: {e}", req.fingerprint))

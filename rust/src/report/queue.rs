@@ -55,7 +55,7 @@ use super::netstore::NetStore;
 use super::serde_kv::{self, QUEUE_WIRE_VERSION};
 use super::spec::fnv1a;
 use super::spec_cli;
-use super::store::Store;
+use super::store::{Store, StoreKind};
 use super::sweep::{self, SweepOutcome};
 use super::{run_stored, RunSpec};
 
@@ -132,12 +132,22 @@ pub struct LeaseReply {
 
 /// `COMPLETE` request payload: worker acknowledges that the entry for
 /// `fingerprint` is in the store. The server verifies that claim
-/// against the store itself — the request carries no metrics.
+/// against the store itself — the request carries no metrics. Wire v2:
+/// when the results store is *replicated*, the ring may have placed
+/// the entry on servers other than the scheduler, so the worker
+/// declares the entry's [`entry_checksum`] and the scheduler verifies
+/// against that (its own store, when it does hold the entry, remains
+/// authoritative and the declared checksum must agree).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CompleteRequest {
     pub worker: String,
     pub fingerprint: String,
     pub lease_id: u64,
+    /// Declared [`entry_checksum`] of the completed entry. `None`
+    /// preserves the v1 semantics: the scheduler's own store is the
+    /// sole witness, and an entry it cannot see is a rejected
+    /// completion.
+    pub checksum: Option<u64>,
 }
 
 /// Queue counters: a `QSTAT` (and `REQUEUE`) reply. `total` counts
@@ -280,8 +290,12 @@ pub fn lease_reply_from_kv(text: &str) -> Result<LeaseReply, String> {
 }
 
 pub fn complete_request_to_kv(r: &CompleteRequest) -> String {
-    format!("{}worker={}\nfingerprint={}\nleaseid={}\n",
-            kv_header(), r.worker, r.fingerprint, r.lease_id)
+    let mut out = format!("{}worker={}\nfingerprint={}\nleaseid={}\n",
+                          kv_header(), r.worker, r.fingerprint, r.lease_id);
+    if let Some(sum) = r.checksum {
+        out.push_str(&format!("checksum={sum:016x}\n"));
+    }
+    out
 }
 
 pub fn complete_request_from_kv(text: &str)
@@ -291,11 +305,17 @@ pub fn complete_request_from_kv(text: &str)
     let worker = take_field(&mut f, WHAT, "worker")?;
     let fingerprint = take_field(&mut f, WHAT, "fingerprint")?;
     let lease_id = take_u64(&mut f, WHAT, "leaseid")?;
+    let checksum = match f.remove("checksum") {
+        Some(v) => Some(u64::from_str_radix(&v, 16).map_err(|_| {
+            format!("{WHAT}: checksum: expected 16 hex digits, got {v:?}")
+        })?),
+        None => None,
+    };
     reject_unknown(&f, WHAT)?;
     if !valid_worker_id(&worker) {
         return Err(format!("{WHAT}: malformed worker id {worker:?}"));
     }
-    Ok(CompleteRequest { worker, fingerprint, lease_id })
+    Ok(CompleteRequest { worker, fingerprint, lease_id, checksum })
 }
 
 pub fn queue_stat_to_kv(s: &QueueStat) -> String {
@@ -505,21 +525,27 @@ impl QueueState {
 
 // ------------------------------------------------------- worker loop
 
-/// The queue-worker main loop (`rainbow queue-worker`): lease,
-/// simulate through `run_stored` (which publishes the entry via the
-/// ordinary `PUT` path — or serves a cache hit, which is exactly how
-/// a re-leased spec whose first worker died after `PUT` avoids
-/// re-simulating), acknowledge with `COMPLETE`, repeat until the
-/// queue reports `Drained`. Returns the number of jobs this worker
-/// completed.
-pub fn worker_loop(client: &NetStore, worker_id: &str)
+/// The queue-worker main loop (`rainbow queue-worker`): lease from
+/// the scheduler `client`, simulate through `run_stored` against
+/// `store` (which publishes the entry via the ordinary `PUT` path —
+/// or serves a cache hit, which is exactly how a re-leased spec whose
+/// first worker died after `PUT` avoids re-simulating), acknowledge
+/// with `COMPLETE`, repeat until the queue reports `Drained`. Returns
+/// the number of jobs this worker completed.
+///
+/// `store` is usually `Store::from_net(client.clone())` — the
+/// scheduler doubling as the results store — but a replicated
+/// `tcp://a,tcp://b,...` store also works: results then land on their
+/// ring replicas, and the `COMPLETE` carries the entry's declared
+/// checksum so the scheduler can verify entries its own store never
+/// sees.
+pub fn worker_loop(client: &NetStore, store: &Store, worker_id: &str)
                    -> Result<usize, String> {
     if !valid_worker_id(worker_id) {
         return Err(format!(
             "queue-worker: malformed worker id {worker_id:?} (1-64 \
              chars, alphanumeric/._-)"));
     }
-    let store = Store::from_net(client.clone());
     let mut done = 0usize;
     loop {
         let reply = client.lease_job(worker_id)?;
@@ -537,8 +563,15 @@ pub fn worker_loop(client: &NetStore, worker_id: &str)
                     format!("queue-worker {worker_id}: leased spec: {e}")
                 })?;
                 let fp = spec.fingerprint();
-                run_stored(&store, &spec)?;
-                client.complete_job(worker_id, &fp, reply.lease_id)?;
+                let m = run_stored(store, &spec)?;
+                // Single-server stores keep the v1 contract (the
+                // scheduler's store is the sole witness); a replicated
+                // store declares the checksum because the ring may
+                // have placed the entry away from the scheduler.
+                let declared = (store.kind() == StoreKind::Repl)
+                    .then(|| entry_checksum(&m));
+                client.complete_job(
+                    worker_id, &fp, reply.lease_id, declared)?;
                 done += 1;
                 println!("[{worker_id}] {} x {} done ({fp})",
                          spec.workload, spec.policy);
@@ -553,16 +586,13 @@ pub fn worker_loop(client: &NetStore, worker_id: &str)
 
 // -------------------------------------------------------- coordinator
 
-fn tcp_hostport(store: &Store) -> Result<&str, String> {
-    store
-        .addr()
-        .strip_prefix("tcp://")
-        .filter(|_| store.is_remote())
-        .ok_or_else(|| {
-            format!(
-                "dynamic dispatch requires a tcp:// store (the cache \
-                 server doubles as the scheduler); got {}", store.addr())
-        })
+fn scheduler_hostport(store: &Store) -> Result<&str, String> {
+    store.scheduler_hostport().ok_or_else(|| {
+        format!(
+            "dynamic dispatch requires a tcp:// store (the cache \
+             server doubles as the scheduler; for a replicated store \
+             the first listed endpoint schedules); got {}", store.addr())
+    })
 }
 
 /// Dynamic-dispatch sweep (`sweep --queue`): enqueue the deduplicated
@@ -577,7 +607,7 @@ fn tcp_hostport(store: &Store) -> Result<&str, String> {
 /// so it fails loudly rather than poll forever).
 pub fn run_queued(specs: &[RunSpec], store: &Store, workers: usize)
                   -> Result<SweepOutcome, String> {
-    let hostport = tcp_hostport(store)?;
+    let hostport = scheduler_hostport(store)?;
     let client = NetStore::new(hostport);
     let stat = client.enqueue_jobs(specs)?;
     let mut uniq = BTreeSet::new();
@@ -712,9 +742,23 @@ mod tests {
             worker: "w-1".to_string(),
             fingerprint: "v2_DICT_flat_s64".to_string(),
             lease_id: 42,
+            checksum: None,
         };
         assert_eq!(complete_request_from_kv(&complete_request_to_kv(&comp))
                        .unwrap(), comp);
+        // v2: the optional declared checksum rides only when present.
+        assert!(!complete_request_to_kv(&comp).contains("checksum="));
+        let comp = CompleteRequest {
+            checksum: Some(0x00ab_cdef_0123_4567),
+            ..comp
+        };
+        let text = complete_request_to_kv(&comp);
+        assert!(text.contains("checksum=00abcdef01234567"), "{text}");
+        assert_eq!(complete_request_from_kv(&text).unwrap(), comp);
+        let e = complete_request_from_kv(
+            &text.replace("checksum=00abcdef01234567", "checksum=zz"))
+            .unwrap_err();
+        assert!(e.contains("checksum"), "got: {e}");
         let stat = QueueStat {
             total: 8, pending: 3, leased: 2, completed: 3, expired: 1,
         };
@@ -722,13 +766,13 @@ mod tests {
                    stat);
         // Version skew and malformed input are loud.
         let skew = lease_request_to_kv(&req)
-            .replace("queuewireversion=1", "queuewireversion=99");
+            .replace("queuewireversion=2", "queuewireversion=99");
         let e = lease_request_from_kv(&skew).unwrap_err();
         assert!(e.contains("unsupported"), "got: {e}");
         let e = queue_stat_from_kv("total=1\n").unwrap_err();
         assert!(e.contains("queuewireversion"), "got: {e}");
         let e = queue_stat_from_kv(
-            "queuewireversion=1\ntotal=1\npending=0\nleased=0\n\
+            "queuewireversion=2\ntotal=1\npending=0\nleased=0\n\
              completed=1\nexpired=0\nbogus=7\n").unwrap_err();
         assert!(e.contains("unknown key"), "got: {e}");
     }
@@ -737,19 +781,19 @@ mod tests {
     fn malformed_lease_replies_fail_loudly() {
         // granted without a spec block
         let e = lease_reply_from_kv(
-            "queuewireversion=1\nstate=granted\nleaseid=1\n\
+            "queuewireversion=2\nstate=granted\nleaseid=1\n\
              deadlinems=5\nretryms=0\n").unwrap_err();
         assert!(e.contains("no spec"), "got: {e}");
         // spec attached to a drained reply
         let text = format!(
-            "queuewireversion=1\nstate=drained\nleaseid=0\n\
+            "queuewireversion=2\nstate=drained\nleaseid=0\n\
              deadlinems=0\nretryms=5\n---\n{}",
             serde_kv::spec_to_kv(&tiny("DICT", "flat")));
         let e = lease_reply_from_kv(&text).unwrap_err();
         assert!(e.contains("drained"), "got: {e}");
         // unknown state
         let e = lease_reply_from_kv(
-            "queuewireversion=1\nstate=maybe\nleaseid=0\n\
+            "queuewireversion=2\nstate=maybe\nleaseid=0\n\
              deadlinems=0\nretryms=5\n").unwrap_err();
         assert!(e.contains("unknown state"), "got: {e}");
     }
@@ -891,7 +935,8 @@ mod tests {
         let stat = client.enqueue_jobs(&specs).unwrap();
         assert_eq!((stat.total, stat.pending), (2, 2));
         // An in-process worker drains the queue.
-        let done = worker_loop(&client, "t-worker").unwrap();
+        let wstore = Store::from_net(client.clone());
+        let done = worker_loop(&client, &wstore, "t-worker").unwrap();
         assert_eq!(done, 2);
         let stat = client.queue_stat().unwrap();
         assert!(stat.drained());
@@ -907,17 +952,28 @@ mod tests {
         }
         // Duplicate COMPLETE over the wire: idempotent.
         let fp = specs[0].fingerprint();
-        client.complete_job("t-worker", &fp, 1).unwrap();
-        // COMPLETE without a store entry is rejected server-side.
+        client.complete_job("t-worker", &fp, 1, None).unwrap();
+        // A declared checksum that matches the stored entry is also
+        // accepted; a divergent one is a determinism violation.
+        let stored = store.get(&fp).unwrap().unwrap();
+        let sum = entry_checksum(&stored);
+        client.complete_job("t-worker", &fp, 1, Some(sum)).unwrap();
+        let e = client
+            .complete_job("t-worker", &fp, 1, Some(sum ^ 1))
+            .unwrap_err();
+        assert!(e.contains("diverges"), "got: {e}");
+        // COMPLETE without a store entry is rejected server-side
+        // (v1 semantics: no declared checksum, the store is the sole
+        // witness).
         let mut orphan = tiny("GUPS", "rainbow");
         orphan.instructions = 30_000;
         client.enqueue_jobs(&[orphan.clone()]).unwrap();
         let e = client
-            .complete_job("t-worker", &orphan.fingerprint(), 7)
+            .complete_job("t-worker", &orphan.fingerprint(), 7, None)
             .unwrap_err();
         assert!(e.contains("no metrics entry"), "got: {e}");
         // Leave the queue drained so the server can stop cleanly.
-        let done = worker_loop(&client, "t-worker2").unwrap();
+        let done = worker_loop(&client, &wstore, "t-worker2").unwrap();
         assert_eq!(done, 1);
         handle.stop().unwrap();
     }

@@ -1,0 +1,377 @@
+//! Replicated results store: `--store tcp://a,tcp://b,tcp://c` places
+//! every fingerprint on [`REPLICATION`] servers of a consistent-hash
+//! ring ([`Ring`]: FNV-1a over `endpoint#vnode`, [`VNODES`] virtual
+//! nodes per endpoint) and fronts them with a [`ReplStore`] that:
+//!
+//! * **writes through** to every placed replica, succeeding (with a
+//!   loud warning) while at least one replica takes the write;
+//! * **reads from the primary** (the first placed replica), falling
+//!   back along the placement order, and **read-repairs** a replica
+//!   that missed when a later one hits;
+//! * **degrades gracefully**: a dead replica is a warning, not a
+//!   failure, for every operation that another replica can serve —
+//!   only when *all* placed replicas fail does an operation error.
+//!
+//! Placement hashes endpoint *addresses*, not list positions, so it is
+//! deterministic and independent of the order endpoints are listed in
+//! (property-tested below). The listed order still matters for one
+//! thing: the **first** endpoint is the queue scheduler for
+//! `sweep --queue` (see [`Store::scheduler_hostport`]).
+//!
+//! Determinism makes this replication scheme unusually simple: every
+//! writer of a fingerprint writes identical bytes, so there are no
+//! write conflicts to resolve, read-repair can never propagate a wrong
+//! value, and a fingerprint missing from every live replica is healed
+//! by re-simulation rather than data loss.
+//!
+//! [`Store::scheduler_hostport`]: super::store::Store::scheduler_hostport
+
+use std::collections::BTreeSet;
+
+use crate::sim::RunMetrics;
+
+use super::netstore::NetStore;
+use super::spec::fnv1a;
+use super::store::CacheStore;
+
+/// Virtual nodes per endpoint on the ring. Enough that a 10k-sample
+/// keyspace splits near-evenly across a handful of servers; cheap
+/// enough that ring construction stays trivial.
+pub const VNODES: usize = 64;
+
+/// Replicas per fingerprint (clamped to the endpoint count). Two
+/// copies means any single replica can die mid-sweep without losing
+/// an entry.
+pub const REPLICATION: usize = 2;
+
+/// Consistent-hash ring over endpoint addresses. Each endpoint
+/// contributes [`VNODES`] points at `fnv1a("addr#v")`; a fingerprint
+/// lands at `fnv1a(fp)` and its replicas are the first `r` *distinct*
+/// endpoints clockwise from there.
+pub struct Ring {
+    /// `(point, endpoint index)`, sorted by point.
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    pub fn new(addrs: &[String]) -> Ring {
+        let mut points = Vec::with_capacity(addrs.len() * VNODES);
+        for (i, addr) in addrs.iter().enumerate() {
+            for v in 0..VNODES {
+                points.push((fnv1a(format!("{addr}#{v}").as_bytes()), i));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// The first `r` distinct endpoint indices clockwise from the
+    /// fingerprint's hash — `replicas(..)[0]` is the primary. Returns
+    /// fewer than `r` only when the ring has fewer endpoints.
+    pub fn replicas(&self, fingerprint: &str, r: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(r);
+        if self.points.is_empty() || r == 0 {
+            return out;
+        }
+        let h = fnv1a(fingerprint.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for k in 0..self.points.len() {
+            let (_, idx) = self.points[(start + k) % self.points.len()];
+            if !out.contains(&idx) {
+                out.push(idx);
+                if out.len() == r {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// [`CacheStore`] over N cache servers with ring placement,
+/// write-through replication, primary-first reads with read-repair,
+/// and warn-don't-fail degradation. Built by
+/// `Store::parse("tcp://a,tcp://b,...")`.
+pub struct ReplStore {
+    /// Clients in the order the user listed them (index 0 doubles as
+    /// the queue scheduler); ring placement is order-independent.
+    endpoints: Vec<NetStore>,
+    ring: Ring,
+    replication: usize,
+}
+
+impl ReplStore {
+    pub fn new(endpoints: Vec<NetStore>) -> ReplStore {
+        let addrs: Vec<String> = endpoints
+            .iter()
+            .map(|e| e.addr().to_string())
+            .collect();
+        let ring = Ring::new(&addrs);
+        let replication = REPLICATION.clamp(1, endpoints.len().max(1));
+        ReplStore {
+            endpoints,
+            ring,
+            replication,
+        }
+    }
+
+    /// Endpoint indices holding `fingerprint`, primary first.
+    pub fn placement(&self, fingerprint: &str) -> Vec<usize> {
+        self.ring.replicas(fingerprint, self.replication)
+    }
+
+    fn addr_of(&self, idx: usize) -> &str {
+        self.endpoints
+            .get(idx)
+            .map(|e| e.addr())
+            .unwrap_or("<unknown replica>")
+    }
+}
+
+impl CacheStore for ReplStore {
+    /// Primary-first read with fallback and read-repair: the first
+    /// placed replica that holds the entry answers, and every
+    /// earlier replica that reported a miss is repaired with it
+    /// (best-effort — a failed repair is a warning). All placed
+    /// replicas missing is a plain miss; a mix of misses and dead
+    /// replicas is a *degraded* miss (warned, then re-simulated by the
+    /// caller — determinism makes that equivalent to a read); only
+    /// every placed replica failing is an error.
+    fn get(&self, fingerprint: &str)
+           -> Result<Option<RunMetrics>, String> {
+        let placed = self.placement(fingerprint);
+        let mut missed: Vec<usize> = Vec::new();
+        let mut errors: Vec<String> = Vec::new();
+        for &i in &placed {
+            match self.endpoints[i].get(fingerprint) {
+                Ok(Some(m)) => {
+                    for &j in &missed {
+                        if let Err(e) =
+                            self.endpoints[j].put(fingerprint, &m)
+                        {
+                            eprintln!(
+                                "warning: replica {}: read-repair \
+                                 {fingerprint}: {e}",
+                                self.addr_of(j));
+                        }
+                    }
+                    return Ok(Some(m));
+                }
+                Ok(None) => missed.push(i),
+                Err(e) => {
+                    eprintln!(
+                        "warning: replica {} failed GET {fingerprint} \
+                         (degraded read): {e}",
+                        self.addr_of(i));
+                    errors.push(format!("{}: {e}", self.addr_of(i)));
+                }
+            }
+        }
+        if missed.is_empty() {
+            Err(format!(
+                "GET {fingerprint}: all {} placed replica(s) failed: {}",
+                placed.len(), errors.join("; ")))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Write-through to every placed replica. Succeeds while at least
+    /// one replica takes the write (the others are warned about);
+    /// errors only when all of them fail.
+    fn put(&self, fingerprint: &str, metrics: &RunMetrics)
+           -> Result<(), String> {
+        let placed = self.placement(fingerprint);
+        let mut ok = 0usize;
+        let mut errors: Vec<String> = Vec::new();
+        for &i in &placed {
+            match self.endpoints[i].put(fingerprint, metrics) {
+                Ok(()) => ok += 1,
+                Err(e) => {
+                    errors.push(format!("{}: {e}", self.addr_of(i)))
+                }
+            }
+        }
+        if ok == 0 {
+            Err(format!(
+                "PUT {fingerprint}: all {} placed replica(s) failed: {}",
+                placed.len(), errors.join("; ")))
+        } else {
+            if !errors.is_empty() {
+                eprintln!(
+                    "warning: PUT {fingerprint} degraded to {ok} of {} \
+                     replica(s): {}",
+                    placed.len(), errors.join("; "));
+            }
+            Ok(())
+        }
+    }
+
+    /// Union of every reachable endpoint's listing (an entry may live
+    /// on any subset of replicas while repairs are pending), sorted.
+    fn list(&self) -> Result<Vec<String>, String> {
+        let mut all: BTreeSet<String> = BTreeSet::new();
+        let mut live = 0usize;
+        let mut errors: Vec<String> = Vec::new();
+        for ep in &self.endpoints {
+            match ep.list() {
+                Ok(fps) => {
+                    live += 1;
+                    all.extend(fps);
+                }
+                Err(e) => errors.push(format!("{}: {e}", ep.addr())),
+            }
+        }
+        if live == 0 {
+            return Err(format!(
+                "LIST: all {} replica(s) failed: {}",
+                self.endpoints.len(), errors.join("; ")));
+        }
+        if !errors.is_empty() {
+            eprintln!(
+                "warning: LIST degraded to {live} of {} replica(s): {}",
+                self.endpoints.len(), errors.join("; "));
+        }
+        Ok(all.into_iter().collect())
+    }
+
+    /// Alive while at least one replica answers (each dead one is
+    /// warned about) — a sweep must be able to start, and its children
+    /// must pass their store pre-flight, while the set is degraded.
+    fn ping(&self) -> Result<(), String> {
+        let mut live = 0usize;
+        let mut errors: Vec<String> = Vec::new();
+        for ep in &self.endpoints {
+            match ep.ping() {
+                Ok(()) => live += 1,
+                Err(e) => errors.push(format!("{}: {e}", ep.addr())),
+            }
+        }
+        if live == 0 {
+            return Err(format!(
+                "PING: all {} replica(s) failed: {}",
+                self.endpoints.len(), errors.join("; ")));
+        }
+        if !errors.is_empty() {
+            eprintln!(
+                "warning: {live} of {} replica(s) alive; dead: {}",
+                self.endpoints.len(), errors.join("; "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{}:7700", i + 1)).collect()
+    }
+
+    fn sample_fps(n: usize) -> Vec<String> {
+        (0..n)
+            .map(|i| format!("v2_app{i}_x_s{}_i{}_r0", i % 7, i * 131))
+            .collect()
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_distinct() {
+        let ring = Ring::new(&addrs(3));
+        for fp in sample_fps(100) {
+            let a = ring.replicas(&fp, 2);
+            let b = ring.replicas(&fp, 2);
+            assert_eq!(a, b, "placement must be deterministic");
+            assert_eq!(a.len(), 2);
+            assert_ne!(a[0], a[1], "replicas must be distinct endpoints");
+        }
+        // Asking for more replicas than endpoints yields all of them.
+        assert_eq!(ring.replicas("fp", 9).len(), 3);
+        assert!(Ring::new(&[]).replicas("fp", 2).is_empty());
+    }
+
+    #[test]
+    fn placement_is_order_independent_across_permutations() {
+        // Property: placement depends on endpoint *addresses*, never
+        // on the order the user listed them in.
+        let base = addrs(3);
+        let perms: Vec<Vec<String>> = vec![
+            vec![base[0].clone(), base[1].clone(), base[2].clone()],
+            vec![base[2].clone(), base[0].clone(), base[1].clone()],
+            vec![base[1].clone(), base[2].clone(), base[0].clone()],
+            vec![base[2].clone(), base[1].clone(), base[0].clone()],
+        ];
+        let fps = sample_fps(1_000);
+        let canonical: Vec<Vec<String>> = {
+            let ring = Ring::new(&perms[0]);
+            fps.iter()
+                .map(|fp| {
+                    ring.replicas(fp, 2)
+                        .into_iter()
+                        .map(|i| perms[0][i].clone())
+                        .collect()
+                })
+                .collect()
+        };
+        for perm in &perms[1..] {
+            let ring = Ring::new(perm);
+            for (fp, want) in fps.iter().zip(&canonical) {
+                let got: Vec<String> = ring
+                    .replicas(fp, 2)
+                    .into_iter()
+                    .map(|i| perm[i].clone())
+                    .collect();
+                assert_eq!(
+                    &got, want,
+                    "{fp}: placement must not depend on listing order");
+            }
+        }
+    }
+
+    #[test]
+    fn adding_an_endpoint_remaps_a_bounded_fraction() {
+        // Property: growing a 3-ring to 4 endpoints remaps ~1/N of the
+        // keyspace, and every remapped primary moves TO the new
+        // endpoint (consistent hashing's whole point — a naive
+        // `hash % n` would reshuffle nearly everything).
+        let three = addrs(3);
+        let mut four = three.clone();
+        four.push("10.0.0.99:7700".to_string());
+        let ring3 = Ring::new(&three);
+        let ring4 = Ring::new(&four);
+        let fps = sample_fps(10_000);
+        let mut moved = 0usize;
+        for fp in &fps {
+            let before = &three[ring3.replicas(fp, 1)[0]];
+            let after = &four[ring4.replicas(fp, 1)[0]];
+            if before != after {
+                moved += 1;
+                assert_eq!(
+                    after, "10.0.0.99:7700",
+                    "{fp}: a remapped primary must move to the new \
+                     endpoint, not shuffle among survivors");
+            }
+        }
+        let frac = moved as f64 / fps.len() as f64;
+        assert!(
+            frac > 0.05 && frac < 0.45,
+            "expected ~1/4 of primaries to move, got {frac:.3}");
+    }
+
+    #[test]
+    fn vnodes_spread_load_roughly_evenly() {
+        let ring = Ring::new(&addrs(3));
+        let fps = sample_fps(10_000);
+        let mut counts = [0usize; 3];
+        for fp in &fps {
+            counts[ring.replicas(fp, 1)[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let share = c as f64 / fps.len() as f64;
+            assert!(
+                share > 0.15 && share < 0.55,
+                "endpoint {i} holds {share:.3} of primaries — vnodes \
+                 should spread load, got {counts:?}");
+        }
+    }
+}

@@ -40,7 +40,19 @@ pub const SPEC_LIST_VERSION: u64 = 1;
 /// requests/replies, completion requests, and queue-stat snapshots
 /// exchanged over the LEASE/COMPLETE/REQUEUE/QSTAT opcodes. Bump on
 /// any incompatible change (the structs are schema-locked against it).
-pub const QUEUE_WIRE_VERSION: u64 = 1;
+/// v2: `CompleteRequest` carries an optional declared entry checksum so
+/// a replicated store's scheduler can verify completions for entries
+/// the consistent-hash ring placed on *other* replicas.
+pub const QUEUE_WIRE_VERSION: u64 = 2;
+
+/// Version of the cache-server durability-log format (`report::wal`):
+/// the header line (`cachelogversion=`) and the checksummed,
+/// length-prefixed `put=` record framing around [`metrics_to_kv`]
+/// payloads. Bump on any incompatible change (the [`report::wal::LogRecord`]
+/// framing struct is schema-locked against it).
+///
+/// [`report::wal::LogRecord`]: crate::report::wal::LogRecord
+pub const CACHE_LOG_VERSION: u64 = 1;
 
 /// Canonical, order-independent serialization of a [`RunSpec`]: one
 /// `key=value` per line, fixed field order, overrides as sorted

@@ -13,12 +13,19 @@
 //! * `NetStore` (in [`super::netstore`]) — a TCP client speaking the
 //!   framed cache-server protocol, for shared-nothing sweeps where
 //!   workers and coordinator share no filesystem at all.
+//! * `LogStore` (in [`super::wal`]) — [`MemStore`] plus an append-only
+//!   durability log (`cache-server --mem --log PATH`): fsynced before
+//!   ack, replayed on startup, compacted on clean shutdown.
+//! * `ReplStore` (in [`super::replica`]) — N cache servers behind a
+//!   consistent-hash ring (`--store tcp://a,tcp://b,...`): write-through
+//!   replication, primary-first reads with read-repair, warn-don't-fail
+//!   degradation while ≥1 replica holds an entry.
 //!
 //! [`Store`] is the cloneable handle the config structs carry: a
 //! `CacheStore` behind an `Arc` plus the textual address
-//! (`DIR` | `tcp://host:port`) it was built from, so the shard
-//! coordinator can re-serialize the store location onto a child
-//! worker's command line (`--store <addr>`).
+//! (`DIR` | `tcp://host:port` | `tcp://a,tcp://b,...`) it was built
+//! from, so the shard coordinator can re-serialize the store location
+//! onto a child worker's command line (`--store <addr>`).
 //!
 //! Error contract (the integrity satellite): `get` returns `Ok(None)`
 //! for *absent* and for *stale* entries (an older `version=` — expected
@@ -61,6 +68,13 @@ pub trait CacheStore: Send + Sync {
     fn ping(&self) -> Result<(), String> {
         Ok(())
     }
+
+    /// Snapshot/compact any durability log behind the store (a no-op
+    /// for stores without one). The cache server calls this once after
+    /// a clean `--stop` shutdown.
+    fn compact(&self) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 /// Which transport a [`Store`] handle wraps.
@@ -72,6 +86,12 @@ pub enum StoreKind {
     Mem,
     /// A `rainbow cache-server` reached over TCP (`NetStore`).
     Net,
+    /// [`MemStore`] plus an append-only durability log
+    /// ([`super::wal::LogStore`], `cache-server --mem --log PATH`).
+    Log,
+    /// A replicated set of cache servers behind a consistent-hash ring
+    /// ([`super::replica::ReplStore`], `tcp://a,tcp://b,...`).
+    Repl,
 }
 
 /// Cloneable handle to a [`CacheStore`], carrying the textual address
@@ -133,27 +153,83 @@ impl Store {
         }
     }
 
-    /// Parse the CLI `--store` form: `tcp://host:port` for a cache
-    /// server, anything else (scheme-free) is a cache directory.
+    /// In-memory store backed by an append-only durability log
+    /// (`cache-server --mem --log PATH`): the log is replayed here,
+    /// and the returned stats say what survived. This handle never
+    /// rides a child's `--store` argument — the log belongs to exactly
+    /// one server process.
+    pub fn logged(path: &Path)
+                  -> Result<(Store, super::wal::ReplayStats), String> {
+        let (backend, stats) = super::wal::LogStore::open(path)?;
+        let store = Store {
+            addr: format!("mem+log:{}", path.display()),
+            kind: StoreKind::Log,
+            dir: None,
+            backend: Arc::new(backend),
+        };
+        Ok((store, stats))
+    }
+
+    /// Replicated store over N cache servers (consistent-hash
+    /// placement, write-through, read-repair — see [`super::replica`]).
+    /// The first endpoint doubles as the queue scheduler.
+    pub fn repl(hostports: &[String]) -> Store {
+        let clients: Vec<NetStore> =
+            hostports.iter().map(|hp| NetStore::new(hp)).collect();
+        let addr = hostports
+            .iter()
+            .map(|hp| format!("tcp://{hp}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        Store {
+            addr,
+            kind: StoreKind::Repl,
+            dir: None,
+            backend: Arc::new(super::replica::ReplStore::new(clients)),
+        }
+    }
+
+    /// Parse the CLI `--store` form: `tcp://host:port` for a single
+    /// cache server, `tcp://a,tcp://b,...` (every endpoint with its
+    /// own prefix) for a replicated set, anything else (scheme-free)
+    /// is a cache directory.
     pub fn parse(arg: &str) -> Result<Store, String> {
         let arg = arg.trim();
         if arg.is_empty() {
             return Err("store: empty address".to_string());
         }
-        if let Some(hp) = arg.strip_prefix("tcp://") {
-            match hp.rsplit_once(':') {
-                Some((host, port))
-                    if !host.is_empty() && port.parse::<u16>().is_ok() =>
-                {
-                    Ok(Store::net(hp))
+        if arg.starts_with("tcp://") && arg.contains(',') {
+            let mut hostports: Vec<String> = Vec::new();
+            for part in arg.split(',') {
+                let part = part.trim();
+                let hp = part.strip_prefix("tcp://").ok_or_else(|| {
+                    format!(
+                        "store {arg:?}: every replica endpoint needs \
+                         its own tcp:// prefix, got {part:?}")
+                })?;
+                tcp_hostport(hp).map_err(|_| {
+                    format!(
+                        "store {arg:?}: expected tcp://host:port for \
+                         endpoint {part:?}")
+                })?;
+                if hostports.iter().any(|h| h == hp) {
+                    return Err(format!(
+                        "store {arg:?}: duplicate endpoint {part:?}"));
                 }
-                _ => Err(format!(
+                hostports.push(hp.to_string());
+            }
+            return Ok(Store::repl(&hostports));
+        }
+        if let Some(hp) = arg.strip_prefix("tcp://") {
+            match tcp_hostport(hp) {
+                Ok(hp) => Ok(Store::net(hp)),
+                Err(()) => Err(format!(
                     "store {arg:?}: expected tcp://host:port")),
             }
         } else if arg.contains("://") {
             Err(format!(
                 "store {arg:?}: unsupported scheme (use a directory \
-                 path or tcp://host:port)"))
+                 path, tcp://host:port, or tcp://a,tcp://b,...)"))
         } else {
             Ok(Store::fs(PathBuf::from(arg)))
         }
@@ -171,9 +247,26 @@ impl Store {
     }
 
     /// Whether operations cross a network (failures must be fatal, not
-    /// silently degraded to local simulation).
+    /// silently degraded to local simulation). A replicated store is
+    /// remote, but only errors when *every* placed replica fails — a
+    /// single dead replica degrades with warnings instead.
     pub fn is_remote(&self) -> bool {
-        self.kind == StoreKind::Net
+        matches!(self.kind, StoreKind::Net | StoreKind::Repl)
+    }
+
+    /// The `host:port` the job queue lives on: the server itself for a
+    /// single `tcp://` store, the **first listed** endpoint for a
+    /// replicated one (placement is order-independent, so the listing
+    /// order is free to carry exactly this one meaning). `None` for
+    /// local stores, which have no scheduler.
+    pub fn scheduler_hostport(&self) -> Option<&str> {
+        if !self.is_remote() {
+            return None;
+        }
+        self.addr
+            .split(',')
+            .next()
+            .and_then(|a| a.strip_prefix("tcp://"))
     }
 
     /// The backing directory, for fs stores only (shard layout
@@ -198,6 +291,24 @@ impl Store {
 
     pub fn ping(&self) -> Result<(), String> {
         self.backend.ping()
+    }
+
+    /// Snapshot/compact the durability log, if the backend keeps one.
+    pub fn compact(&self) -> Result<(), String> {
+        self.backend.compact()
+    }
+}
+
+/// Validate a `host:port` endpoint (the part after `tcp://`): host
+/// nonempty, port a valid u16. IPv6 splits on the LAST colon.
+fn tcp_hostport(hp: &str) -> Result<&str, ()> {
+    match hp.rsplit_once(':') {
+        Some((host, port))
+            if !host.is_empty() && port.parse::<u16>().is_ok() =>
+        {
+            Ok(hp)
+        }
+        _ => Err(()),
     }
 }
 
@@ -366,8 +477,33 @@ mod tests {
     }
 
     #[test]
+    fn parse_accepts_replica_sets_and_rejects_malformed_ones() {
+        let s = Store::parse("tcp://a:1,tcp://b:2,tcp://c:3").unwrap();
+        assert_eq!(s.kind(), StoreKind::Repl);
+        assert!(s.is_remote());
+        assert_eq!(s.addr(), "tcp://a:1,tcp://b:2,tcp://c:3");
+        // The first listed endpoint is the queue scheduler.
+        assert_eq!(s.scheduler_hostport(), Some("a:1"));
+        assert_eq!(
+            Store::parse("tcp://s:7700").unwrap().scheduler_hostport(),
+            Some("s:7700"));
+        assert_eq!(Store::mem().scheduler_hostport(), None);
+        for bad in [
+            "tcp://a:1,b:2",          // missing per-endpoint prefix
+            "tcp://a:1,tcp://b",      // no port
+            "tcp://a:1,tcp://",       // empty endpoint
+            "tcp://a:1,",             // trailing comma
+            "tcp://a:1,tcp://a:1",    // duplicate endpoint
+            "tcp://a:1,tcp://b:bad",  // bad port
+        ] {
+            assert!(Store::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
     fn store_addr_round_trips_through_parse() {
-        for arg in ["target/cache_rt", "tcp://127.0.0.1:7700"] {
+        for arg in ["target/cache_rt", "tcp://127.0.0.1:7700",
+                    "tcp://a:1,tcp://b:2,tcp://c:3"] {
             let s = Store::parse(arg).unwrap();
             let t = Store::parse(s.addr()).unwrap();
             assert_eq!(s.kind(), t.kind());

@@ -1,0 +1,532 @@
+//! Append-only durability log for the in-memory cache server: a
+//! `cache-server --mem --log PATH` wraps its [`MemStore`] in a
+//! [`LogStore`] that appends every acked `PUT` to a checksummed,
+//! length-prefixed log (fsynced *before* the ack), replays the log on
+//! startup, and snapshot+compacts it on clean shutdown. SIGKILL the
+//! server at any point and a restart on the same log serves every
+//! entry that was ever acknowledged; a torn tail from a crash
+//! mid-append is truncated with a loud warning, never parsed into
+//! silently different metrics.
+//!
+//! On-disk format (versioned by [`serde_kv::CACHE_LOG_VERSION`], one
+//! header line then zero or more records):
+//!
+//! ```text
+//! cachelogversion=1
+//! put=<fingerprint> len=<payload bytes> checksum=<fnv1a, 16 hex>
+//! <payload: the metrics_to_kv entry, exactly len bytes>
+//! <newline>
+//! ```
+//!
+//! The record checksum is FNV-1a over `<fingerprint>\n<payload>`; the
+//! payload is the same versioned, self-checksummed [`metrics_to_kv`]
+//! text a [`FsStore`] writes to `<fingerprint>.kv`, so the log reuses
+//! the serde_kv entry framing end to end. Replay is strict about
+//! *complete* records (a full record with a bad checksum or garbage
+//! header is corruption — a hard error naming the offset) and lenient
+//! about the *tail* (fewer bytes than the last record declares is the
+//! expected crash signature — truncate, warn, continue). Stale-version
+//! payloads are skipped on replay exactly as [`FsStore`] treats stale
+//! entries: re-simulation heals them, and the next compaction drops
+//! them.
+//!
+//! [`metrics_to_kv`]: serde_kv::metrics_to_kv
+//! [`FsStore`]: super::store::FsStore
+
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::sim::RunMetrics;
+
+use super::serde_kv::{self, MetricsError, CACHE_LOG_VERSION};
+use super::spec::fnv1a;
+use super::store::{CacheStore, MemStore};
+
+/// Framing of one log record, as serialized on the `put=` header line
+/// (schema-locked against [`serde_kv::CACHE_LOG_VERSION`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogRecord {
+    /// Results-cache fingerprint this record (over)writes.
+    pub fingerprint: String,
+    /// Exact payload length in bytes (the `metrics_to_kv` text).
+    pub len: u64,
+    /// FNV-1a over `<fingerprint>\n<payload>`.
+    pub checksum: u64,
+}
+
+impl LogRecord {
+    fn checksum_of(fingerprint: &str, payload: &[u8]) -> u64 {
+        let mut bytes =
+            Vec::with_capacity(fingerprint.len() + 1 + payload.len());
+        bytes.extend_from_slice(fingerprint.as_bytes());
+        bytes.push(b'\n');
+        bytes.extend_from_slice(payload);
+        fnv1a(&bytes)
+    }
+
+    /// The full serialized record: header line + payload + newline.
+    fn encode(fingerprint: &str, payload: &str) -> String {
+        let rec = LogRecord {
+            fingerprint: fingerprint.to_string(),
+            len: payload.len() as u64,
+            checksum: LogRecord::checksum_of(
+                fingerprint, payload.as_bytes()),
+        };
+        format!(
+            "put={} len={} checksum={:016x}\n{}\n",
+            rec.fingerprint, rec.len, rec.checksum, payload)
+    }
+
+    /// Parse a *complete* header line (no trailing newline). A line
+    /// that made it to its newline is never a torn tail, so any parse
+    /// failure here is corruption, not a crash artifact.
+    fn parse_header(line: &str) -> Result<LogRecord, String> {
+        let mut fields = line.split(' ');
+        let fp = fields
+            .next()
+            .and_then(|t| t.strip_prefix("put="))
+            .ok_or_else(|| format!("expected put=<fp>, got {line:?}"))?;
+        let len = fields
+            .next()
+            .and_then(|t| t.strip_prefix("len="))
+            .and_then(|v| v.parse::<u64>().ok())
+            .ok_or_else(|| format!("expected len=<bytes> in {line:?}"))?;
+        let checksum = fields
+            .next()
+            .and_then(|t| t.strip_prefix("checksum="))
+            .and_then(|v| u64::from_str_radix(v, 16).ok())
+            .ok_or_else(|| {
+                format!("expected checksum=<16 hex> in {line:?}")
+            })?;
+        if fp.is_empty() || fields.next().is_some() {
+            return Err(format!("malformed record header {line:?}"));
+        }
+        Ok(LogRecord {
+            fingerprint: fp.to_string(),
+            len,
+            checksum,
+        })
+    }
+}
+
+/// What replaying a log found — surfaced by `cache-server --log` so an
+/// operator restarting after a crash sees exactly what survived.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Records applied (later records overwrite earlier ones, so this
+    /// counts appends, not distinct fingerprints).
+    pub loaded: usize,
+    /// Records skipped because their payload carried an older
+    /// `version=` (re-simulation heals; compaction drops them).
+    pub skipped_stale: usize,
+    /// Torn bytes truncated from the end of the log (crash mid-append).
+    pub truncated_bytes: u64,
+}
+
+/// [`MemStore`] wrapped in an append-only log: every `put` is appended
+/// and fsynced before it is acknowledged, so the entry survives
+/// SIGKILL; `get`/`list` are served from memory. [`LogStore::compact`]
+/// rewrites the log as one record per live entry (atomically, via
+/// temp-file + rename).
+pub struct LogStore {
+    path: PathBuf,
+    inner: MemStore,
+    /// Appends are serialized (header + payload + fsync must land as
+    /// one contiguous record) and the handle is swapped under this
+    /// lock when compaction renames a fresh log into place.
+    file: Mutex<File>,
+}
+
+/// Longest clean prefix of `bytes` (header + whole records), the
+/// replayed records, and the per-record outcomes. Returns `Err` only
+/// for *corruption* — a complete record that fails its checksum or a
+/// header that is not a cache log; a short tail is normal crash
+/// fallout and is reported via `ReplayStats::truncated_bytes`.
+fn replay(
+    bytes: &[u8],
+    inner: &MemStore,
+    path: &Path,
+) -> Result<(usize, ReplayStats), String> {
+    let mut stats = ReplayStats::default();
+    if bytes.is_empty() {
+        return Ok((0, stats));
+    }
+    let header = format!("cachelogversion={CACHE_LOG_VERSION}\n");
+    let keep = if let Some(nl) = bytes.iter().position(|&b| b == b'\n') {
+        let line = &bytes[..=nl];
+        if line != header.as_bytes() {
+            return Err(format!(
+                "cache log {}: bad header {:?} (expected {:?}) — not a \
+                 rainbow cache log of this version; refusing to touch it",
+                path.display(),
+                String::from_utf8_lossy(&bytes[..nl]),
+                header.trim_end()));
+        }
+        nl + 1
+    } else if bytes.len() < header.len() {
+        // Crash while writing the very first header: nothing durable
+        // was ever acked against this log, start over.
+        stats.truncated_bytes = bytes.len() as u64;
+        return Ok((0, stats));
+    } else {
+        return Err(format!(
+            "cache log {}: no header line in the first {} bytes — not \
+             a rainbow cache log; refusing to touch it",
+            path.display(), header.len()));
+    };
+
+    let mut off = keep;
+    let mut keep = keep;
+    while off < bytes.len() {
+        let rest = &bytes[off..];
+        let Some(nl) = rest.iter().position(|&b| b == b'\n') else {
+            // Header line never reached its newline: torn tail.
+            break;
+        };
+        let line = match std::str::from_utf8(&rest[..nl]) {
+            Ok(l) => l,
+            Err(_) => {
+                return Err(format!(
+                    "cache log {}: non-UTF-8 record header at byte \
+                     {off}", path.display()));
+            }
+        };
+        let rec = LogRecord::parse_header(line).map_err(|e| {
+            format!("cache log {}: byte {off}: {e}", path.display())
+        })?;
+        let len = rec.len as usize;
+        let total = nl + 1 + len + 1;
+        if rest.len() < total {
+            // Payload (or its trailing newline) is short: torn tail.
+            break;
+        }
+        let payload = &rest[nl + 1..nl + 1 + len];
+        if rest[nl + 1 + len] != b'\n' {
+            return Err(format!(
+                "cache log {}: record at byte {off} is not \
+                 newline-terminated after its declared {len} payload \
+                 bytes — corrupt log", path.display()));
+        }
+        let got = LogRecord::checksum_of(&rec.fingerprint, payload);
+        if got != rec.checksum {
+            return Err(format!(
+                "cache log {}: record {} at byte {off}: checksum \
+                 mismatch (header says {:016x}, payload hashes to \
+                 {got:016x}) — corrupt log",
+                path.display(), rec.fingerprint, rec.checksum));
+        }
+        let text = match std::str::from_utf8(payload) {
+            Ok(t) => t,
+            Err(_) => {
+                return Err(format!(
+                    "cache log {}: record {} at byte {off}: non-UTF-8 \
+                     payload", path.display(), rec.fingerprint));
+            }
+        };
+        match serde_kv::metrics_from_kv_checked(text) {
+            Ok(m) => {
+                inner.put(&rec.fingerprint, &m)?;
+                stats.loaded += 1;
+            }
+            Err(MetricsError::Stale { found }) => {
+                eprintln!(
+                    "warning: cache log {}: skipping stale entry {} \
+                     (version {found}); re-simulation will heal it",
+                    path.display(), rec.fingerprint);
+                stats.skipped_stale += 1;
+            }
+            Err(e) => {
+                return Err(format!(
+                    "cache log {}: record {} at byte {off}: {e}",
+                    path.display(), rec.fingerprint));
+            }
+        }
+        off += total;
+        keep = off;
+    }
+    if keep < bytes.len() {
+        stats.truncated_bytes = (bytes.len() - keep) as u64;
+    }
+    Ok((keep, stats))
+}
+
+impl LogStore {
+    /// Open (or create) a log, replaying every intact record into the
+    /// in-memory store. A torn tail — the signature of a crash
+    /// mid-append — is truncated from the file with a loud warning;
+    /// mid-log corruption is a hard error (the log is the durability
+    /// story, silently dropping acked entries would betray it).
+    pub fn open(path: &Path) -> Result<(LogStore, ReplayStats), String> {
+        let bytes = match fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Vec::new()
+            }
+            Err(e) => {
+                return Err(format!(
+                    "cache log {}: {e}", path.display()))
+            }
+        };
+        let inner = MemStore::new();
+        let (keep, stats) = replay(&bytes, &inner, path)?;
+        if stats.truncated_bytes > 0 {
+            eprintln!(
+                "warning: cache log {}: truncating {} torn byte(s) at \
+                 the end of the log (crash mid-append); {} intact \
+                 record(s) retained",
+                path.display(), stats.truncated_bytes, stats.loaded);
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| format!("cache log {}: {e}", path.display()))?;
+        file.set_len(keep as u64).map_err(|e| {
+            format!("cache log {}: truncate: {e}", path.display())
+        })?;
+        if keep == 0 {
+            let header = format!("cachelogversion={CACHE_LOG_VERSION}\n");
+            file.write_all(header.as_bytes()).map_err(|e| {
+                format!("cache log {}: write header: {e}", path.display())
+            })?;
+        }
+        file.sync_data().map_err(|e| {
+            format!("cache log {}: sync: {e}", path.display())
+        })?;
+        // Reopen in append mode so every write lands at the (possibly
+        // truncated) end regardless of the handle's cursor.
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("cache log {}: {e}", path.display()))?;
+        let store = LogStore {
+            path: path.to_path_buf(),
+            inner,
+            file: Mutex::new(file),
+        };
+        Ok((store, stats))
+    }
+
+    /// The log path this store appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn file_locked(&self)
+                   -> Result<std::sync::MutexGuard<'_, File>, String> {
+        self.file.lock().map_err(|_| {
+            format!(
+                "cache log {}: mutex poisoned by a panicked writer",
+                self.path.display())
+        })
+    }
+}
+
+impl CacheStore for LogStore {
+    fn get(&self, fingerprint: &str)
+           -> Result<Option<RunMetrics>, String> {
+        self.inner.get(fingerprint)
+    }
+
+    fn put(&self, fingerprint: &str, metrics: &RunMetrics)
+           -> Result<(), String> {
+        let payload = serde_kv::metrics_to_kv(metrics);
+        let rec = LogRecord::encode(fingerprint, &payload);
+        {
+            // Durability before acknowledgement: the record is on
+            // stable storage before the entry becomes visible (and
+            // before the server acks the PUT), so SIGKILL after an ack
+            // can never lose the entry.
+            let mut f = self.file_locked()?;
+            f.write_all(rec.as_bytes()).map_err(|e| {
+                format!(
+                    "cache log {}: append {fingerprint}: {e}",
+                    self.path.display())
+            })?;
+            f.sync_data().map_err(|e| {
+                format!(
+                    "cache log {}: sync {fingerprint}: {e}",
+                    self.path.display())
+            })?;
+        }
+        self.inner.put(fingerprint, metrics)
+    }
+
+    fn list(&self) -> Result<Vec<String>, String> {
+        self.inner.list()
+    }
+
+    /// Snapshot + compact: rewrite the log as exactly one record per
+    /// live entry (sorted by fingerprint), atomically via temp-file +
+    /// rename. Overwritten duplicates and stale-version records are
+    /// dropped. Called on the server's clean `--stop` shutdown.
+    fn compact(&self) -> Result<(), String> {
+        let mut text =
+            format!("cachelogversion={CACHE_LOG_VERSION}\n");
+        for fp in self.inner.list()? {
+            let Some(m) = self.inner.get(&fp)? else {
+                continue;
+            };
+            text.push_str(&LogRecord::encode(
+                &fp, &serde_kv::metrics_to_kv(&m)));
+        }
+        let tmp = self.path.with_extension(
+            format!("compact.{}", std::process::id()));
+        let mut f = File::create(&tmp).map_err(|e| {
+            format!("cache log compact {}: {e}", tmp.display())
+        })?;
+        f.write_all(text.as_bytes())
+            .and_then(|()| f.sync_data())
+            .map_err(|e| {
+                let _ = fs::remove_file(&tmp);
+                format!("cache log compact {}: {e}", tmp.display())
+            })?;
+        drop(f);
+        // Swap under the append lock so no in-flight append can land
+        // on the pre-compaction inode after the rename.
+        let mut guard = self.file_locked()?;
+        fs::rename(&tmp, &self.path).map_err(|e| {
+            let _ = fs::remove_file(&tmp);
+            format!(
+                "cache log compact: rename {} -> {}: {e}",
+                tmp.display(), self.path.display())
+        })?;
+        *guard = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| {
+                format!("cache log {}: {e}", self.path.display())
+            })?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_log(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "rainbow_wal_{tag}_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        dir.join("cache.log")
+    }
+
+    fn metrics(seed: u64) -> RunMetrics {
+        RunMetrics {
+            instructions: 1_000 + seed,
+            cycles: 5_000 + seed * 3,
+            mem_ops: 400 + seed,
+            migrations: seed,
+            energy_pj: 123.5 + seed as f64,
+            sp_hit_rate: 0.5,
+            ..RunMetrics::default()
+        }
+    }
+
+    #[test]
+    fn record_header_round_trips_and_rejects_junk() {
+        let enc = LogRecord::encode("fp_x", "payload");
+        let line = enc.lines().next().unwrap();
+        let rec = LogRecord::parse_header(line).unwrap();
+        assert_eq!(rec.fingerprint, "fp_x");
+        assert_eq!(rec.len, 7);
+        assert_eq!(
+            rec.checksum,
+            LogRecord::checksum_of("fp_x", b"payload"));
+        for bad in [
+            "", "put=", "put=fp", "put=fp len=3",
+            "put=fp len=x checksum=0", "put=fp len=3 checksum=zz",
+            "len=3 checksum=0 put=fp",
+            "put=fp len=3 checksum=0 extra=1",
+        ] {
+            assert!(
+                LogRecord::parse_header(bad).is_err(),
+                "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn entries_survive_reopen_and_torn_tails_truncate() {
+        let path = tmp_log("reopen");
+        let _ = fs::remove_file(&path);
+        let m_a = metrics(1);
+        let m_b = metrics(2);
+        {
+            let (store, stats) = LogStore::open(&path).unwrap();
+            assert_eq!(stats, ReplayStats::default());
+            store.put("fp_a", &m_a).unwrap();
+            store.put("fp_b", &m_b).unwrap();
+            store.put("fp_a", &m_a).unwrap(); // overwrite appends
+        }
+        let clean_len = fs::metadata(&path).unwrap().len();
+        // Simulate a crash mid-append: a record whose payload is short
+        // of its declared length.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"put=fp_torn len=4096 checksum=0123456789abcdef\ntruncated")
+            .unwrap();
+        drop(f);
+        let (store, stats) = LogStore::open(&path).unwrap();
+        assert_eq!(stats.loaded, 3);
+        assert!(stats.truncated_bytes > 0);
+        assert_eq!(fs::metadata(&path).unwrap().len(), clean_len);
+        assert_eq!(store.list().unwrap(), vec!["fp_a", "fp_b"]);
+        let got = store.get("fp_a").unwrap().unwrap();
+        assert_eq!(
+            serde_kv::metrics_to_kv(&got), serde_kv::metrics_to_kv(&m_a));
+        // Compaction drops the duplicate fp_a record.
+        store.compact().unwrap();
+        assert!(fs::metadata(&path).unwrap().len() < clean_len);
+        drop(store);
+        let (store, stats) = LogStore::open(&path).unwrap();
+        assert_eq!(stats.loaded, 2);
+        assert_eq!(stats.truncated_bytes, 0);
+        assert_eq!(store.list().unwrap(), vec!["fp_a", "fp_b"]);
+    }
+
+    #[test]
+    fn mid_log_corruption_is_a_hard_error_not_a_truncation() {
+        let path = tmp_log("corrupt");
+        let _ = fs::remove_file(&path);
+        {
+            let (store, _) = LogStore::open(&path).unwrap();
+            store.put("fp_a", &metrics(3)).unwrap();
+        }
+        let mut bytes = fs::read(&path).unwrap();
+        // Flip a payload byte without touching the framing.
+        let n = bytes.len();
+        bytes[n - 10] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let e = LogStore::open(&path).unwrap_err();
+        assert!(e.contains("checksum mismatch"), "{e}");
+    }
+
+    #[test]
+    fn foreign_files_are_refused_not_truncated() {
+        let path = tmp_log("foreign");
+        fs::write(&path, "this is not a cache log, honest\n").unwrap();
+        let e = LogStore::open(&path).unwrap_err();
+        assert!(e.contains("refusing"), "{e}");
+        // The file was not modified.
+        assert_eq!(
+            fs::read_to_string(&path).unwrap(),
+            "this is not a cache log, honest\n");
+    }
+
+    #[test]
+    fn torn_header_on_a_fresh_log_restarts_empty() {
+        let path = tmp_log("torn_header");
+        fs::write(&path, "cachelogv").unwrap();
+        let (store, stats) = LogStore::open(&path).unwrap();
+        assert_eq!(stats.loaded, 0);
+        assert_eq!(stats.truncated_bytes, 9);
+        assert!(store.list().unwrap().is_empty());
+        store.put("fp_a", &metrics(4)).unwrap();
+        drop(store);
+        let (store, stats) = LogStore::open(&path).unwrap();
+        assert_eq!(stats.loaded, 1);
+        assert_eq!(store.list().unwrap(), vec!["fp_a"]);
+    }
+}

@@ -286,9 +286,13 @@ fn manual_covers_every_subcommand_knob_and_profile() {
         assert!(manual.contains(key),
                 "MANUAL.md must describe the {key} format");
     }
-    // The store surface: the --store argument forms and the wire
-    // protocol's integrity story must be documented for operators.
-    for needle in ["--store", "tcp://", "checksum"] {
+    // The store surface: the --store argument forms (single server AND
+    // replicated set), the wire protocol's integrity story, and the
+    // durability/replication semantics must be documented for
+    // operators.
+    for needle in ["--store", "tcp://", "checksum", "--log",
+                   "cachelogversion", "tcp://a,tcp://b", "read-repair",
+                   "consistent-hash"] {
         assert!(manual.contains(needle),
                 "MANUAL.md must describe the results-store {needle} \
                  surface");
@@ -316,10 +320,12 @@ fn manual_covers_every_subcommand_knob_and_profile() {
     }
 }
 
-/// The CLI's `--store` argument accepts exactly a directory or a
-/// `tcp://host:port`; everything else is a clear error (the same
-/// `Store::parse` the shard coordinator re-serializes onto child
-/// worker command lines).
+/// The CLI's `--store` argument accepts exactly a directory, a
+/// `tcp://host:port`, or a replicated `tcp://a,tcp://b,...` endpoint
+/// set; everything else is a clear error (the same `Store::parse` the
+/// shard coordinator re-serializes onto child worker command lines —
+/// including the multi-endpoint form, which rides `--store` as one
+/// argv token).
 #[test]
 fn store_argument_forms() {
     use rainbow::report::{Store, StoreKind};
@@ -328,7 +334,14 @@ fn store_argument_forms() {
     let s = Store::parse("tcp://127.0.0.1:7700").unwrap();
     assert_eq!(s.kind(), StoreKind::Net);
     assert_eq!(s.addr(), "tcp://127.0.0.1:7700");
-    for bad in ["", "tcp://", "tcp://nohost", "tcp://h:x", "ftp://h:1"] {
+    let s = Store::parse("tcp://h1:7700,tcp://h2:7700,tcp://h3:7700")
+        .unwrap();
+    assert_eq!(s.kind(), StoreKind::Repl);
+    assert_eq!(s.addr(), "tcp://h1:7700,tcp://h2:7700,tcp://h3:7700");
+    assert_eq!(s.scheduler_hostport(), Some("h1:7700"));
+    for bad in ["", "tcp://", "tcp://nohost", "tcp://h:x", "ftp://h:1",
+                "tcp://h1:7700,h2:7700", "tcp://h1:7700,tcp://h1:7700",
+                "tcp://h1:7700,"] {
         assert!(Store::parse(bad).is_err(), "{bad:?} must be rejected");
     }
 }

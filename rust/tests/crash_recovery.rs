@@ -1,0 +1,174 @@
+//! Crash-recovery contract of the durable cache server: a real child
+//! `rainbow cache-server --mem --log` process is populated over TCP,
+//! SIGKILLed with no warning, and restarted on the same log file —
+//! every entry that was acknowledged before the kill must be served
+//! byte-identical afterwards, a torn tail appended by the "crash" must
+//! be truncated loudly (never parsed into metrics), re-running the
+//! same matrix must repopulate only fingerprints that are actually
+//! missing, and a clean `--stop` must compact the log to one record
+//! per live entry.
+
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+
+use rainbow::report::serde_kv::metrics_to_kv;
+use rainbow::report::{run_stored, run_uncached, RunSpec, Store};
+
+fn tiny(workload: &str, policy: &str, seed: u64) -> RunSpec {
+    RunSpec::new(workload, policy)
+        .with_scale(64)
+        .with_instructions(40_000)
+        .with_seed(seed)
+}
+
+/// Six distinct cells — enough appends that the kill lands on a log
+/// with real history, small enough to stay fast.
+fn specs() -> Vec<RunSpec> {
+    let mut out = Vec::new();
+    for p in ["flat", "rainbow", "hscc4k"] {
+        for seed in [41, 42] {
+            out.push(tiny("DICT", p, seed));
+        }
+    }
+    out
+}
+
+/// Spawn `cache-server --mem --log` on an ephemeral port and wait for
+/// its port file; optionally capture stdout (the replay banner).
+fn spawn_server(log: &Path, port_file: &Path, stdout_to: Option<&Path>)
+                -> (Child, String) {
+    let _ = fs::remove_file(port_file);
+    let stdout = match stdout_to {
+        Some(p) => {
+            Stdio::from(fs::File::create(p).expect("stdout capture file"))
+        }
+        None => Stdio::null(),
+    };
+    let child = Command::new(env!("CARGO_BIN_EXE_rainbow"))
+        .arg("cache-server")
+        .arg("--mem")
+        .arg("--log").arg(log)
+        .arg("--listen").arg("127.0.0.1:0")
+        .arg("--port-file").arg(port_file)
+        .stdout(stdout)
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cache-server");
+    let mut hostport = String::new();
+    for _ in 0..400 {
+        if let Ok(s) = fs::read_to_string(port_file) {
+            if !s.trim().is_empty() {
+                hostport = s.trim().to_string();
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert!(!hostport.is_empty(),
+            "cache-server never wrote its port file");
+    (child, hostport)
+}
+
+#[test]
+fn sigkilled_log_server_restarts_with_every_acked_entry() {
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_crash_e2e_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).expect("mkdir");
+    let log = dir.join("cache.log");
+    let port_file = dir.join("port.txt");
+    let specs = specs();
+
+    // Phase 1: populate through a live server. run_stored returning Ok
+    // IS the acknowledgement — and the log contract fsyncs every
+    // record before the server acks, so each of these entries is on
+    // stable storage by the time the loop advances.
+    let (mut child, hostport) =
+        spawn_server(&log, &port_file, None);
+    let store = Store::net(&hostport);
+    for s in &specs {
+        run_stored(&store, s).expect("populate");
+    }
+    assert_eq!(store.list().expect("list").len(), specs.len());
+
+    // SIGKILL: no goodbye, no compaction, no flush beyond what each
+    // acked PUT already forced.
+    child.kill().expect("SIGKILL cache-server");
+    child.wait().expect("reap cache-server");
+    let clean_len = fs::metadata(&log).expect("log exists").len();
+
+    // Stack the other crash signature on top: a record header whose
+    // declared payload never made it to disk (kill mid-append).
+    let mut f = OpenOptions::new().append(true).open(&log).unwrap();
+    f.write_all(b"put=fp_torn len=4096 checksum=0123456789abcdef\nshort")
+        .unwrap();
+    drop(f);
+
+    // Phase 2: restart on the same log.
+    let banner_path = dir.join("restart.stdout");
+    let (mut child, hostport) =
+        spawn_server(&log, &port_file, Some(&banner_path));
+    let store = Store::net(&hostport);
+
+    // Every acked entry survived, byte-identical to a serial replay.
+    for s in &specs {
+        let m = store
+            .get(&s.fingerprint())
+            .expect("get after restart")
+            .expect("acked entry must survive SIGKILL + restart");
+        assert_eq!(metrics_to_kv(&run_uncached(s)), metrics_to_kv(&m),
+                   "{} x {} (seed {}) diverged across the crash",
+                   s.workload, s.policy, s.seed);
+    }
+    // The torn tail was truncated — loudly (the replay banner says how
+    // many bytes) — never served as an entry.
+    assert!(store.get("fp_torn").expect("get").is_none(),
+            "a torn record must not become an entry");
+    assert_eq!(fs::metadata(&log).unwrap().len(), clean_len,
+               "restart must truncate the log back to its clean prefix");
+    let banner = fs::read_to_string(&banner_path).unwrap();
+    assert!(banner.contains(
+                &format!("replayed {} record(s)", specs.len())),
+            "replay banner must count the records: {banner}");
+    assert!(banner.contains("torn byte(s) truncated"),
+            "replay banner must admit the truncation: {banner}");
+
+    // Re-running the matrix plus one genuinely new cell repopulates
+    // ONLY the missing fingerprint: cached cells are served, not
+    // re-put, so each old fingerprint still has exactly one record.
+    let mut more = specs.clone();
+    more.push(tiny("streamcluster", "rainbow", 7));
+    for s in &more {
+        run_stored(&store, s).expect("re-run after restart");
+    }
+    assert_eq!(store.list().expect("list").len(), more.len());
+    let log_text = fs::read_to_string(&log).unwrap();
+    for s in &specs {
+        let header = format!("put={} ", s.fingerprint());
+        assert_eq!(log_text.matches(&header).count(), 1,
+                   "{}: a cache hit must not append a duplicate record",
+                   s.fingerprint());
+    }
+
+    // Clean `--stop` compacts: a reopen replays exactly one record per
+    // live entry, with nothing torn.
+    let status = Command::new(env!("CARGO_BIN_EXE_rainbow"))
+        .arg("cache-server")
+        .arg("--stop").arg(format!("tcp://{hostport}"))
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .expect("run cache-server --stop");
+    assert!(status.success(), "--stop must succeed");
+    let status = child.wait().expect("wait server after --stop");
+    assert!(status.success(), "server must exit 0 after --stop");
+    let (reopened, stats) =
+        Store::logged(&log).expect("reopen compacted log");
+    assert_eq!(stats.loaded, more.len(),
+               "compaction must leave one record per live entry");
+    assert_eq!(stats.truncated_bytes, 0);
+    assert_eq!(reopened.list().expect("list").len(), more.len());
+    let _ = fs::remove_dir_all(&dir);
+}

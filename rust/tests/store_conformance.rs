@@ -1,15 +1,19 @@
 //! Conformance contract for every `CacheStore` implementation: one
 //! parameterized suite (get/put round-trip, missing key, list,
 //! concurrent puts of the same fingerprint, liveness) run against
-//! `FsStore`, `MemStore`, and `NetStore` — the latter talking to a
-//! real `CacheServer` on an ephemeral port in this process — plus
-//! per-store corrupt-entry rejection (a clean error naming the entry,
-//! never a panic, never silently different metrics) and the server's
-//! input hardening.
+//! `FsStore`, `MemStore`, `NetStore` — the latter talking to a
+//! real `CacheServer` on an ephemeral port in this process —
+//! `LogStore` (the `--log` durable form, restarted between put and
+//! get), and `ReplStore` (three in-process servers behind one
+//! consistent-hash handle, including read-repair and degraded
+//! operation with dead replicas) — plus per-store corrupt-entry
+//! rejection (a clean error naming the entry, never a panic, never
+//! silently different metrics) and the server's input hardening.
 
 use std::thread;
 
 use rainbow::report::netstore::CacheServer;
+use rainbow::report::replica::{Ring, REPLICATION};
 use rainbow::report::serde_kv::metrics_to_kv;
 use rainbow::report::Store;
 use rainbow::sim::RunMetrics;
@@ -119,6 +123,116 @@ fn net_store_conformance_against_in_process_server() {
     // A stopped server is a clean client error, not a hang or panic.
     let e = store.ping().unwrap_err();
     assert!(e.contains(&hostport), "error must name the server: {e}");
+}
+
+/// The durable form of the suite: a log-backed store passes the full
+/// contract, and — the satellite's restart clause — a store reopened
+/// on the same log serves every previously-acked entry byte-identical,
+/// with compaction (what a clean `--stop` runs) collapsing the append
+/// history to one record per live entry.
+#[test]
+fn log_store_conformance_and_durability_across_restart() {
+    let dir = tmp_dir("wal");
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("cache.log");
+    {
+        let (store, stats) = Store::logged(&log).unwrap();
+        assert_eq!(stats.loaded, 0, "fresh log must replay empty");
+        conformance(&store, "LogStore");
+    }
+    // "Restart": the store above is dropped (the crash boundary the
+    // in-process form can express) and reopened on the same log file.
+    let (store, stats) = Store::logged(&log).unwrap();
+    assert!(stats.loaded >= 3,
+            "replay must apply every logged append, got {stats:?}");
+    assert_eq!(stats.truncated_bytes, 0);
+    assert_eq!(store.list().unwrap(), vec!["fp_a", "fp_b", "fp_conc"]);
+    for (fp, seed) in [("fp_a", 7), ("fp_b", 9), ("fp_conc", 11)] {
+        let got = store.get(fp).unwrap().expect(fp);
+        assert_eq!(metrics_to_kv(&sample_metrics(seed)),
+                   metrics_to_kv(&got),
+                   "{fp}: restart must preserve the entry byte-for-byte");
+    }
+    // Compaction drops overwritten duplicates; a reopen replays
+    // exactly one record per live entry.
+    store.compact().unwrap();
+    drop(store);
+    let (store, stats) = Store::logged(&log).unwrap();
+    assert_eq!(stats.loaded, 3, "compacted log: one record per entry");
+    assert_eq!(store.list().unwrap(), vec!["fp_a", "fp_b", "fp_conc"]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The replicated form of the suite: three in-process servers behind
+/// one `tcp://a,tcp://b,tcp://c` handle pass the full contract; a read
+/// served by a fallback replica repairs the primary; and a dead
+/// replica degrades every operation to a warning — not a failure —
+/// until the last replica dies.
+#[test]
+fn repl_store_conformance_read_repair_and_degraded_operation() {
+    let mut hostports: Vec<String> = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let server =
+            CacheServer::bind("127.0.0.1:0", Store::mem()).unwrap();
+        hostports.push(server.local_addr().to_string());
+        handles.push(Some(server.spawn()));
+    }
+    let addr = hostports
+        .iter()
+        .map(|hp| format!("tcp://{hp}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    let store = Store::parse(&addr).unwrap();
+    conformance(&store, "ReplStore");
+
+    // Read-repair: plant an entry directly on the FALLBACK replica
+    // only (bypassing the handle — the state a crashed-and-restarted
+    // primary would be in), then read through the handle: the fallback
+    // answers, and the primary is repaired with the entry.
+    let ring = Ring::new(&hostports);
+    let placed = ring.replicas("fp_repair", REPLICATION);
+    assert_eq!(placed.len(), 2);
+    let m = sample_metrics(21);
+    Store::net(&hostports[placed[1]]).put("fp_repair", &m).unwrap();
+    let primary = Store::net(&hostports[placed[0]]);
+    assert!(primary.get("fp_repair").unwrap().is_none(),
+            "precondition: the primary must start without the entry");
+    let got = store.get("fp_repair").unwrap().expect("fallback hit");
+    assert_eq!(metrics_to_kv(&m), metrics_to_kv(&got));
+    let healed = primary
+        .get("fp_repair")
+        .unwrap()
+        .expect("read-repair must populate the primary");
+    assert_eq!(metrics_to_kv(&m), metrics_to_kv(&healed));
+
+    // Degraded operation: stop the replica that is primary for
+    // fp_repair, then drive a fingerprint placed on it — put, get,
+    // list, and ping must all still succeed off the surviving partner.
+    let dead = placed[0];
+    handles[dead].take().unwrap().stop().unwrap();
+    let on_dead = (0..)
+        .map(|i| format!("fp_deg_{i}"))
+        .find(|fp| ring.replicas(fp, REPLICATION).contains(&dead))
+        .unwrap();
+    let m2 = sample_metrics(22);
+    store.put(&on_dead, &m2)
+        .expect("put must degrade, not fail, with one replica dead");
+    let got = store.get(&on_dead).unwrap().expect("degraded get");
+    assert_eq!(metrics_to_kv(&m2), metrics_to_kv(&got));
+    assert!(store.list().unwrap().contains(&on_dead));
+    store.ping().expect("ping must succeed while any replica lives");
+
+    // Only when EVERY replica is gone do operations error.
+    for h in handles.iter_mut() {
+        if let Some(h) = h.take() {
+            h.stop().unwrap();
+        }
+    }
+    assert!(store.ping().is_err(),
+            "ping must fail once every replica is dead");
+    assert!(store.put("fp_doomed", &m2).is_err(),
+            "put must fail once every placed replica is dead");
 }
 
 #[test]

@@ -266,6 +266,116 @@ fn queued_sweep_survives_worker_death_byte_identical() {
     handle.stop().expect("clean cache-server shutdown");
 }
 
+/// The replicated form of the work-stealing contract, THROUGH a
+/// REPLICA death: the matrix is enqueued on the first endpoint of a
+/// 3-server `--store tcp://a,tcp://b,tcp://c` set, real child
+/// `rainbow queue-worker` processes execute it against the replicated
+/// store, and one replica is SIGKILLed mid-sweep. Consistent-hash
+/// placement keeps every fingerprint on 2 replicas and a dead replica
+/// degrades reads/writes to warnings, so the workers must finish
+/// cleanly and the merged metrics must still be byte-identical to a
+/// serial `run_uncached` replay.
+#[test]
+fn queued_sweep_survives_replica_death_byte_identical() {
+    // Scheduler (first endpoint) and one survivor run in-process; the
+    // victim is a real child `cache-server --mem` process so it can be
+    // SIGKILLed with no chance to flush or say goodbye.
+    let server_a = CacheServer::bind("127.0.0.1:0", Store::mem())
+        .expect("bind scheduler");
+    let a = server_a.local_addr().to_string();
+    let handle_a = server_a.spawn();
+    let server_b = CacheServer::bind("127.0.0.1:0", Store::mem())
+        .expect("bind survivor");
+    let b = server_b.local_addr().to_string();
+    let handle_b = server_b.spawn();
+
+    let dir = std::env::temp_dir().join(format!(
+        "rainbow_repl_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let port_file = dir.join("victim.port");
+    let mut victim =
+        std::process::Command::new(env!("CARGO_BIN_EXE_rainbow"))
+            .arg("cache-server")
+            .arg("--mem")
+            .arg("--listen").arg("127.0.0.1:0")
+            .arg("--port-file").arg(&port_file)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn victim cache-server");
+    let mut c = String::new();
+    for _ in 0..400 {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            if !s.trim().is_empty() {
+                c = s.trim().to_string();
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert!(!c.is_empty(), "victim cache-server never wrote its port");
+
+    let store_arg = format!("tcp://{a},tcp://{b},tcp://{c}");
+    let specs = matrix();
+    let client = NetStore::new(&a);
+    let stat = client.enqueue_jobs(&specs).expect("enqueue");
+    assert_eq!(stat.pending as usize, specs.len());
+
+    let spawn_worker = |id: &str| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_rainbow"))
+            .arg("queue-worker")
+            .arg("--store").arg(&store_arg)
+            .arg("--worker-id").arg(id)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn queue-worker")
+    };
+    let mut workers =
+        vec![spawn_worker("repl-w1"), spawn_worker("repl-w2")];
+
+    // SIGKILL the victim once the sweep is demonstrably under way —
+    // entries already replicated, more still being written.
+    let mut seen_completed = 0;
+    for _ in 0..2000 {
+        let s = client.queue_stat().expect("qstat");
+        seen_completed = s.completed;
+        if seen_completed >= 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(seen_completed >= 2, "workers never completed early cells");
+    victim.kill().expect("SIGKILL victim replica");
+    victim.wait().expect("reap victim replica");
+
+    // The workers must drain the queue anyway — a dead replica is a
+    // warning on their side, never a failed cell.
+    for w in &mut workers {
+        let status = w.wait().expect("wait queue-worker");
+        assert!(status.success(),
+                "a worker failed after the replica death");
+    }
+    let stat = client.queue_stat().expect("qstat after drain");
+    assert!(stat.drained(), "queue not drained: {stat:?}");
+
+    // Byte-identity through the degraded store: collect_stored never
+    // simulates, so every cell must be served from a surviving replica
+    // — each fingerprint lives on 2 of 3 endpoints, and write-through
+    // put every acked entry on at least one endpoint that is still up.
+    let store = Store::parse(&store_arg).expect("parse replicated store");
+    let metrics = sweep::collect_stored(&store, &specs).expect("collect");
+    for (s, m) in specs.iter().zip(&metrics) {
+        assert_eq!(metrics_to_kv(&run_uncached(s)), metrics_to_kv(m),
+                   "{} x {} diverged through the replicated store",
+                   s.workload, s.policy);
+    }
+    handle_a.stop().expect("clean scheduler shutdown");
+    handle_b.stop().expect("clean survivor shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// An unreachable cache server must fail a sharded sweep fast — one
 /// clean coordinator-side error before any child spawns, not N
 /// identical worker failures (or a hang).

@@ -34,6 +34,8 @@ TRACKED = [
      "QUEUE_WIRE_VERSION"),
     ("report/queue.rs", "QueueStat", "report/serde_kv.rs",
      "QUEUE_WIRE_VERSION"),
+    ("report/wal.rs", "LogRecord", "report/serde_kv.rs",
+     "CACHE_LOG_VERSION"),
 ]
 
 
