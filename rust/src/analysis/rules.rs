@@ -1,6 +1,6 @@
 //! The lint rules and the engine that runs them over a [`SourceTree`].
 //!
-//! Four enforced invariant families (DESIGN.md §11):
+//! Five enforced invariant families (DESIGN.md §11):
 //!
 //! * **hot-path purity** (`hot-collections`, `hot-alloc`) — the
 //!   per-access pipeline stays HashMap-free and allocation-free, the
@@ -15,6 +15,9 @@
 //! * **panic hygiene** (`panic-protocol`, `unsafe-audit`) — protocol
 //!   code fails loud-but-clean (PR 5 contract), and any `unsafe` must
 //!   carry a `SAFETY:` justification next to its `#[allow]`.
+//! * **observability** (`raw-eprintln`) — report-layer diagnostics go
+//!   through the leveled `util::log` sink, never bare `eprintln!`, so
+//!   `RAINBOW_LOG` filtering and test capture see every message.
 //!
 //! Suppression: a finding on line `L` is silenced by a
 //! `rainbow-lint: allow(rule-id, reason)` comment on line `L` or
@@ -88,6 +91,14 @@ pub const RULES: &[RuleInfo] = &[
         family: "panic-hygiene",
         summary: "`unsafe` without an adjacent SAFETY: comment \
                   (the crate root denies unsafe_code)",
+        suppressible: true,
+    },
+    RuleInfo {
+        id: "raw-eprintln",
+        family: "observability",
+        summary: "eprintln! in report/ non-test code (route through \
+                  util::log so RAINBOW_LOG leveling and test capture \
+                  apply)",
         suppressible: true,
     },
     RuleInfo {
@@ -412,6 +423,7 @@ pub fn lint_file(path: &str, text: &str) -> FileLint {
     let hot = is_hot(path);
     let clock_exempt = CLOCK_EXEMPT.contains(&path);
     let protocol = PROTOCOL_FILES.contains(&path);
+    let report_layer = path.starts_with("report/");
 
     for (k, t) in toks.iter().enumerate() {
         let ctx = &ctxs[k];
@@ -498,6 +510,12 @@ pub fn lint_file(path: &str, text: &str) -> FileLint {
                      or poisoned lock must surface as a propagated \
                      error, not a process abort (PR 5 contract)"));
             }
+        }
+        if report_layer && macro_call(toks, k, "eprintln") {
+            push(t.line, "raw-eprintln", format!(
+                "eprintln! in {path}: report-layer diagnostics go \
+                 through util::log::{{warn,info,debug}} so RAINBOW_LOG \
+                 leveling and test capture apply"));
         }
         if t.is_ident("unsafe") {
             let has_safety = lexed.comments.iter().any(|c| {
@@ -733,6 +751,27 @@ mod tests {
         // Test code in protocol files may unwrap.
         let d = one("report/store.rs",
                     "#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); }\n}");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn raw_eprintln_scoped_to_report_files() {
+        let src = "fn f(e: u8) { eprintln!(\"cache: {e}\"); }";
+        let d = one("report/queue.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "raw-eprintln");
+        // The log sink itself and other layers may write to stderr.
+        assert!(one("util/log.rs", src).is_empty());
+        assert!(one("main.rs", src).is_empty());
+        // Test code in report files may print directly.
+        let d = one("report/queue.rs",
+                    "#[cfg(test)]\nmod tests {\n  fn t() { \
+                     eprintln!(\"dbg\"); }\n}");
+        assert!(d.is_empty(), "{d:?}");
+        // Suppressible with a reasoned marker.
+        let d = one("report/queue.rs",
+                    "// rainbow-lint: allow(raw-eprintln, boot banner)\n\
+                     fn f() { eprintln!(\"up\"); }");
         assert!(d.is_empty(), "{d:?}");
     }
 

@@ -124,6 +124,32 @@ pub const TRACKED: &[Tracked] = &[
         version_file: "report/serde_kv.rs",
         version_const: "CACHE_LOG_VERSION",
     },
+    // Telemetry trace records (`run --trace-out` JSON-lines).
+    Tracked {
+        struct_file: "telemetry/mod.rs",
+        struct_name: "Event",
+        version_file: "telemetry/mod.rs",
+        version_const: "TRACE_VERSION",
+    },
+    Tracked {
+        struct_file: "telemetry/mod.rs",
+        struct_name: "EpochSample",
+        version_file: "telemetry/mod.rs",
+        version_const: "TRACE_VERSION",
+    },
+    Tracked {
+        struct_file: "telemetry/trace.rs",
+        struct_name: "TraceMeta",
+        version_file: "telemetry/mod.rs",
+        version_const: "TRACE_VERSION",
+    },
+    // Fleet stats snapshot (STATS opcode / `rainbow stats`).
+    Tracked {
+        struct_file: "report/netstore.rs",
+        struct_name: "ServerStats",
+        version_file: "report/serde_kv.rs",
+        version_const: "STATS_WIRE_VERSION",
+    },
 ];
 
 fn fnv1a(bytes: &[u8]) -> u64 {

@@ -24,6 +24,7 @@ pub mod rainbow;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod tlb;
 pub mod util;
 pub mod workloads;

@@ -175,6 +175,17 @@ const OPTS: &[OptSpec] = &[
               help: "perf: validate an existing report FILE against \
                      the rainbow-bench-v1 schema and exit",
               default: None, is_flag: false },
+    OptSpec { name: "trace-out",
+              help: "run: write the telemetry trace (JSON-lines: meta, \
+                     per-epoch series, cycle-stamped events, summary) \
+                     to FILE; the traced run bypasses the results \
+                     cache but produces identical metrics",
+              default: None, is_flag: false },
+    OptSpec { name: "csv-series",
+              help: "sweep: also write every cell's per-epoch \
+                     time-series to a CSV FILE (one row per epoch per \
+                     cell, from deterministic traced re-runs)",
+              default: None, is_flag: false },
 ];
 
 const COMMANDS: &[(&str, &str)] = &[
@@ -198,6 +209,13 @@ const COMMANDS: &[(&str, &str)] = &[
     ("perf", "measure hot-path throughput and emit a machine-readable \
               rainbow-bench-v1 JSON report (--out FILE; --validate \
               FILE checks an existing report)"),
+    ("stats", "print one fleet-stats row per cache-server endpoint of \
+               --store (STATS opcode: per-opcode request counts, \
+               lease-latency quantiles, WAL durability and \
+               replica-degradation counters)"),
+    ("trace-summary", "strictly validate a `run --trace-out` trace \
+                       file and print its identity, event counts, and \
+                       per-epoch time-series"),
     ("lint", "static-analysis pass enforcing the hot-path, determinism, \
               wire-format, and panic-hygiene invariants (--list-rules; \
               --fix-allow; --stale-allows; --update-schemas; exits \
@@ -293,6 +311,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<(), String> {
             Ok(())
         }
         "perf" => cmd_perf(args),
+        "stats" => cmd_stats(args),
+        "trace-summary" => cmd_trace_summary(args),
         "lint" => cmd_lint(args),
         "list" => {
             println!("workloads: {}", report::all_workloads().join(", "));
@@ -354,7 +374,21 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let spec = spec_from_args(args)?;
     // rainbow-lint: allow(nondet-clock, operator-facing wall-clock display only)
     let t0 = Instant::now();
-    let m = if args.flag("no-cache") {
+    let m = if let Some(path) = args.get("trace-out") {
+        // Traced runs bypass the cache in both directions: stored
+        // metrics carry no rings, and the sink never feeds back into
+        // timing, so the metrics printed below still equal a cached
+        // run's bit-for-bit (pinned in sweep_determinism.rs).
+        let (m, tel) = report::run_traced(&spec);
+        let text = rainbow::telemetry::trace::render_trace(
+            &report::trace_meta(&spec), &m, &tel);
+        std::fs::write(path, &text)
+            .map_err(|e| format!("--trace-out {path}: {e}"))?;
+        println!("trace: {} event(s) held ({} dropped), {} epoch(s) \
+                  written to {path}",
+                 tel.events_held(), tel.events_dropped(), tel.epochs());
+        m
+    } else if args.flag("no-cache") {
         report::run_uncached(&spec)
     } else {
         report::run_stored(&store_from_args(args)?, &spec)?
@@ -699,6 +733,10 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     }
     t.emit(csv_path(args, "sweep").as_deref());
 
+    if let Some(path) = args.get("csv-series") {
+        write_csv_series(path, &specs)?;
+    }
+
     if args.flag("check") {
         use rainbow::report::serde_kv::metrics_to_kv;
         let side = if queue_mode {
@@ -725,6 +763,121 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         println!("sweep check: {side} metrics byte-identical to serial \
                   run_uncached for all {} runs", specs.len());
     }
+    Ok(())
+}
+
+/// `sweep --csv-series FILE`: one CSV row per (cell, epoch), from a
+/// deterministic traced re-run of every cell. Traces never land in the
+/// results store (stored metrics carry no rings), so the series is
+/// re-simulated here; determinism makes the re-run's epochs exactly
+/// the ones the sweep's cells went through.
+fn write_csv_series(path: &str, specs: &[RunSpec]) -> Result<(), String> {
+    use std::fmt::Write as _;
+    let mut out = String::from(
+        "workload,policy,epoch,cycle,instructions,tlb_misses,\
+         migrated_bytes,dram_row_hits,dram_row_misses,nvm_row_hits,\
+         nvm_row_misses,dram_util_bp\n");
+    let mut epochs = 0u64;
+    for s in specs {
+        let (_, tel) = report::run_traced(s);
+        for e in tel.series() {
+            epochs += 1;
+            let _ = writeln!(
+                out, "{},{},{},{},{},{},{},{},{},{},{},{}",
+                s.workload, s.policy, e.epoch, e.cycle, e.instructions,
+                e.tlb_misses, e.migrated_bytes, e.dram_row_hits,
+                e.dram_row_misses, e.nvm_row_hits, e.nvm_row_misses,
+                e.dram_util_bp);
+        }
+    }
+    std::fs::write(path, &out)
+        .map_err(|e| format!("--csv-series {path}: {e}"))?;
+    println!("csv-series: {epochs} epoch row(s) across {} cell(s) \
+              written to {path}", specs.len());
+    Ok(())
+}
+
+/// `stats`: ask every cache-server endpoint of `--store` for its
+/// fleet-stats snapshot (the protocol-v3 STATS opcode) and print one
+/// row per server: per-opcode request counts, lease-latency quantiles,
+/// WAL durability counters, and replica-degradation counters.
+fn cmd_stats(args: &Args) -> Result<(), String> {
+    let arg = args.get("store").ok_or(
+        "stats: --store tcp://host:port (or a replicated \
+         tcp://a,tcp://b,... set) required")?;
+    let store = Store::parse(arg).map_err(|e| format!("--store: {e}"))?;
+    if !store.is_remote() {
+        return Err("stats: --store must be a tcp:// cache server (a \
+                    directory store has no server to ask)".into());
+    }
+    let mut t = Table::new(
+        "fleet stats (one row per cache-server endpoint)",
+        &["endpoint", "gets", "puts", "lists", "pings", "leases",
+          "completes", "requeues", "qstats", "stats",
+          "lease ms p50/p95/p99", "wal app/fsync/replay",
+          "degraded get/put/repair"]);
+    for ep in arg.split(',') {
+        let hostport = ep.strip_prefix("tcp://").unwrap_or(ep);
+        let s = NetStore::new(hostport).server_stats()?;
+        t.row(&[ep.to_string(), s.gets.to_string(), s.puts.to_string(),
+                s.lists.to_string(), s.pings.to_string(),
+                s.leases.to_string(), s.completes.to_string(),
+                s.requeues.to_string(), s.qstats.to_string(),
+                s.stats_reqs.to_string(),
+                format!("{}/{}/{}", s.lease_ms_p50, s.lease_ms_p95,
+                        s.lease_ms_p99),
+                format!("{}/{}/{}", s.wal_appends, s.wal_fsyncs,
+                        s.wal_replayed),
+                format!("{}/{}/{}", s.degraded_gets, s.degraded_puts,
+                        s.read_repairs)]);
+    }
+    t.emit(csv_path(args, "stats").as_deref());
+    Ok(())
+}
+
+/// `trace-summary FILE`: strictly validate a `run --trace-out` file
+/// (the same locked-schema reader CI's trace-smoke job uses) and print
+/// its identity, end-of-run scalars, event counts, and per-epoch
+/// time-series.
+fn cmd_trace_summary(args: &Args) -> Result<(), String> {
+    use rainbow::telemetry::{trace, EventKind, TRACE_VERSION};
+    let path = args.positional.first().ok_or(
+        "trace-summary: usage `rainbow trace-summary FILE` (a file \
+         written by `run --trace-out`)")?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("trace-summary {path}: {e}"))?;
+    let s = trace::read_trace(&text)
+        .map_err(|e| format!("trace-summary {path}: {e}"))?;
+    println!("trace {path}: {} on {} (fingerprint {}, interval {} \
+              cycles, {} instructions)",
+             s.meta.policy, s.meta.workload, s.meta.fingerprint,
+             s.meta.interval_cycles, s.meta.instructions);
+    println!("summary: {} cycles, IPC {:.4}, {} migration(s), \
+              mig p99 {} cyc, ptw p99 {} cyc",
+             s.cycles, s.ipc, s.migrations, s.mig_lat_p99,
+             s.ptw_lat_p99);
+    let counts: Vec<String> = EventKind::ALL
+        .iter()
+        .zip(s.event_counts)
+        .map(|(k, n)| format!("{}={n}", k.name()))
+        .collect();
+    println!("events: {}", counts.join(" "));
+    let mut t = Table::new(
+        &format!("per-epoch series ({} epoch(s))", s.epochs.len()),
+        &["epoch", "cycle", "instructions", "tlb_misses",
+          "migrated_bytes", "dram_row_hits", "nvm_row_hits",
+          "dram_util_bp"]);
+    for e in &s.epochs {
+        t.row(&[e.epoch.to_string(), e.cycle.to_string(),
+                e.instructions.to_string(), e.tlb_misses.to_string(),
+                e.migrated_bytes.to_string(),
+                e.dram_row_hits.to_string(),
+                e.nvm_row_hits.to_string(),
+                e.dram_util_bp.to_string()]);
+    }
+    t.emit(csv_path(args, "trace_summary").as_deref());
+    println!("trace-summary {path}: valid traceversion {TRACE_VERSION} \
+              file ({} line(s))", text.lines().count());
     Ok(())
 }
 

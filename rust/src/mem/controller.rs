@@ -8,6 +8,7 @@
 //!   [dram.size, dram.size+nvm.size) -> NVM (device-local = paddr - base)
 
 use crate::config::Config;
+use crate::telemetry::{EventKind, Telemetry};
 
 use super::device::Device;
 use super::req::{MemKind, MemReq, MemResult};
@@ -77,8 +78,19 @@ impl HybridMemory {
     }
 
     /// Bulk page copy between flat physical addresses (migration).
-    pub fn migrate(&mut self, now: u64, src: u64, dst: u64, bytes: u64)
-                   -> CopyResult {
+    /// Stamps `migration_start`/`migration_done` telemetry events
+    /// (frame numbers + completion latency) when the sink is enabled.
+    pub fn migrate(&mut self, now: u64, src: u64, dst: u64, bytes: u64,
+                   tel: &mut Telemetry) -> CopyResult {
+        tel.event(now, EventKind::MigrationStart, src >> 12, dst >> 12);
+        let r = self.migrate_inner(now, src, dst, bytes);
+        tel.event(r.done_at, EventKind::MigrationDone, dst >> 12,
+                  r.done_at - now);
+        r
+    }
+
+    fn migrate_inner(&mut self, now: u64, src: u64, dst: u64, bytes: u64)
+                     -> CopyResult {
         let (src_kind, dst_kind) = (self.kind_of(src), self.kind_of(dst));
         let (src_local, dst_local) = (self.local(src), self.local(dst));
         match (src_kind, dst_kind) {
@@ -183,11 +195,28 @@ mod tests {
     fn migration_counted_as_bulk() {
         let mut m = mem();
         let nvm_page = m.nvm_base() + 4096;
-        let r = m.migrate(0, nvm_page, 0, 4096);
+        let r = m.migrate(0, nvm_page, 0, 4096, &mut Telemetry::default());
         assert_eq!(r.bytes, 4096);
         assert_eq!(m.nvm.stats.bulk_bytes, 4096);
         assert_eq!(m.dram.stats.bulk_bytes, 4096);
         assert_eq!(m.migration_bytes(), 8192);
+    }
+
+    #[test]
+    fn migration_emits_cycle_stamped_events() {
+        let mut m = mem();
+        let mut tel = Telemetry::default();
+        tel.enable(8, 8);
+        let nvm_page = m.nvm_base() + 4096;
+        let r = m.migrate(100, nvm_page, 0, 4096, &mut tel);
+        let ev: Vec<_> = tel.events().collect();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].kind, EventKind::MigrationStart);
+        assert_eq!(ev[0].cycle, 100);
+        assert_eq!((ev[0].a, ev[0].b), (nvm_page >> 12, 0));
+        assert_eq!(ev[1].kind, EventKind::MigrationDone);
+        assert_eq!(ev[1].cycle, r.done_at);
+        assert_eq!(ev[1].b, r.done_at - 100);
     }
 
     #[test]

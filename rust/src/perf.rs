@@ -21,6 +21,7 @@ use crate::rainbow::counters::TwoStageCounters;
 use crate::rainbow::migration::UtilityParams;
 use crate::rainbow::RemapTable;
 use crate::runtime::HotPageIdentifier;
+use crate::telemetry::{EventKind, Telemetry};
 use crate::tlb::CoreTlbs;
 use crate::util::bench::{black_box, Bencher, Measurement};
 use crate::util::json::Json;
@@ -160,13 +161,18 @@ impl PerfReport {
 
 /// The hot-path stages every report must cover (beyond the per-policy
 /// `policy.<name>.access` entries): workload generation, remap-table
-/// lookup, split-TLB lookup, and the two interval-analytics stages.
-pub const REQUIRED_STAGES: [&str; 5] = [
+/// lookup, split-TLB lookup, the two interval-analytics stages, and
+/// the telemetry sink's record path with the sink disabled (the
+/// default every simulation runs with — the DESIGN.md §14 <2% budget)
+/// and enabled (one ring write).
+pub const REQUIRED_STAGES: [&str; 7] = [
     "synth.next_mem",
     "remap.lookup",
     "tlb.lookup",
     "analytics.select_top",
     "analytics.classify",
+    "telemetry.record_off",
+    "telemetry.record_on",
 ];
 
 /// Run the full hot-path suite and collect the report.
@@ -239,6 +245,26 @@ pub fn run_suite(cfg: &PerfConfig) -> PerfReport {
     }).into());
     benches.push(b.run("analytics.classify", || {
         black_box(id.classify(&counters, &up));
+    }).into());
+
+    // Stage: the telemetry sink's record path. Disabled is the state
+    // every ordinary simulation runs in — this stage is the measured
+    // half of the "<2% when off" budget; enabled costs one ring write
+    // (pre-allocated by `enable`, wraparound included).
+    let mut tel_off = Telemetry::default();
+    let mut toff = 0u64;
+    benches.push(b.run("telemetry.record_off", || {
+        toff += 1;
+        tel_off.event(toff, EventKind::Shootdown, toff, 1);
+        black_box(tel_off.events_held());
+    }).into());
+    let mut tel_on = Telemetry::default();
+    tel_on.enable(1 << 12, 1 << 8);
+    let mut ton = 0u64;
+    benches.push(b.run("telemetry.record_on", || {
+        ton += 1;
+        tel_on.event(ton, EventKind::Shootdown, ton, 1);
+        black_box(tel_on.events_held());
     }).into());
 
     PerfReport {

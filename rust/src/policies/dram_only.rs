@@ -60,6 +60,7 @@ impl Policy for DramOnly {
                 cycles += walk;
                 self.m.metrics.xlat.sptw_cycles += walk;
                 self.m.metrics.tlb_miss_cycles += walk;
+                self.m.tel.ptw_hist.record(walk);
                 let pa = self.ensure_mapped(vaddr);
                 self.m.tlbs[core].insert_2m(vaddr >> SP_SHIFT, pa >> SP_SHIFT);
                 pa

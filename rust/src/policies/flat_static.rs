@@ -77,6 +77,7 @@ impl Policy for FlatStatic {
                 cycles += walk;
                 self.m.metrics.xlat.ptw_cycles += walk;
                 self.m.metrics.tlb_miss_cycles += walk;
+                self.m.tel.ptw_hist.record(walk);
                 let pa = self.ensure_mapped(vaddr);
                 self.m.tlbs[core]
                     .insert_4k(vaddr >> PAGE_SHIFT, pa >> PAGE_SHIFT);

@@ -4,7 +4,6 @@
 //! penalty Figs. 10/11 quantify (it can even underperform HSCC-4KB).
 
 use crate::config::{Config, SP_SHIFT, SP_SIZE};
-use crate::mem::sched::copy_page;
 use crate::os::{AddressSpace, DramMgr, PageTable, Reclaim, Region};
 use crate::rainbow::migration::{ThresholdCtl, UtilityParams};
 use crate::sim::machine::{Machine, TableHome};
@@ -80,14 +79,15 @@ impl Hscc2M {
         }
         if dirty {
             // Background DMA + the constant CPU charge (512 x 4 KB unit).
-            self.m.mem.migrate(now, dram_pa, home, SP_SIZE);
+            self.m.mem.migrate(now, dram_pa, home, SP_SIZE,
+                               &mut self.m.tel);
             cycles += self.m.cfg.t_mig_2m;
             self.m.metrics.writebacks += 1;
             self.m.metrics.writeback_bytes += SP_SIZE;
         }
         self.aspace.pt_2m.remap(svpn, home >> SP_SHIFT);
         let sd = shootdown_2m(&self.m.cfg, &mut self.m.tlbs, svpn,
-                              &mut self.sd_stats);
+                              &mut self.sd_stats, &mut self.m.tel, now);
         cycles += sd;
         self.m.metrics.rt.shootdown_cycles += sd;
         self.m.metrics.shootdowns += 1;
@@ -117,12 +117,8 @@ impl Hscc2M {
         for wb in wbs {
             self.m.mem.access(now, wb.addr, true, 64);
         }
-        {
-            let (nvm_dev, dram_dev) =
-                (&mut self.m.mem.nvm, &mut self.m.mem.dram);
-            copy_page(nvm_dev, dram_dev, src - self.nvm.base, dst, SP_SIZE,
-                      now + cycles);
-        }
+        self.m.mem.migrate(now + cycles, src, dst, SP_SIZE,
+                           &mut self.m.tel);
         // Background DMA; CPU pays the superpage T_mig (512x the 4 KB
         // constant) — the cost Figs. 10/11 attribute to HSCC-2MB.
         cycles += self.m.cfg.t_mig_2m;
@@ -130,11 +126,13 @@ impl Hscc2M {
         self.m.metrics.migrated_bytes += SP_SIZE;
         self.aspace.pt_2m.remap(svpn, dst >> SP_SHIFT);
         let sd = shootdown_2m(&self.m.cfg, &mut self.m.tlbs, svpn,
-                              &mut self.sd_stats);
+                              &mut self.sd_stats, &mut self.m.tel,
+                              now + cycles);
         cycles += sd;
         self.m.metrics.rt.shootdown_cycles += sd;
         self.m.metrics.shootdowns += 1;
         self.frame_owner.set(grant.frame, svpn);
+        self.m.tel.mig_hist.record(cycles);
         cycles
     }
 
@@ -163,6 +161,7 @@ impl Policy for Hscc2M {
                 cycles += walk;
                 self.m.metrics.xlat.sptw_cycles += walk;
                 self.m.metrics.tlb_miss_cycles += walk;
+                self.m.tel.ptw_hist.record(walk);
                 let pa = self.ensure_mapped(vaddr);
                 self.m.tlbs[core].insert_2m(vaddr >> SP_SHIFT, pa >> SP_SHIFT);
                 pa
@@ -232,6 +231,10 @@ impl Policy for Hscc2M {
 
     fn machine_mut(&mut self) -> &mut Machine {
         &mut self.m
+    }
+
+    fn dram_utilization(&self) -> f64 {
+        self.dram.utilization()
     }
 }
 

@@ -6,7 +6,6 @@
 //! page table, so it costs a TLB shootdown + clflush.
 
 use crate::config::{Config, PAGE_SHIFT, PAGE_SIZE};
-use crate::mem::sched::copy_page;
 use crate::os::{AddressSpace, DramMgr, PageTable, Reclaim, Region};
 use crate::rainbow::migration::{ThresholdCtl, UtilityParams};
 use crate::sim::machine::{Machine, TableHome};
@@ -83,7 +82,8 @@ impl Hscc4K {
         if dirty {
             // The copy occupies the devices (background DMA); the CPU is
             // charged the paper's constant T_writeback (Eq. 2).
-            self.m.mem.migrate(now, dram_pa, home, PAGE_SIZE);
+            self.m.mem.migrate(now, dram_pa, home, PAGE_SIZE,
+                               &mut self.m.tel);
             cycles += self.m.cfg.t_writeback_4k;
             self.m.metrics.writebacks += 1;
             self.m.metrics.writeback_bytes += PAGE_SIZE;
@@ -91,7 +91,7 @@ impl Hscc4K {
         // Remap back to NVM + shoot down the stale DRAM translation.
         self.aspace.pt_4k.remap(vpn, home >> PAGE_SHIFT);
         let sd = shootdown_4k(&self.m.cfg, &mut self.m.tlbs, vpn,
-                              &mut self.sd_stats);
+                              &mut self.sd_stats, &mut self.m.tel, now);
         cycles += sd;
         self.m.metrics.rt.shootdown_cycles += sd;
         self.m.metrics.shootdowns += 1;
@@ -123,12 +123,8 @@ impl Hscc4K {
         for wb in wbs {
             self.m.mem.access(now, wb.addr, true, 64);
         }
-        {
-            let (nvm_dev, dram_dev) =
-                (&mut self.m.mem.nvm, &mut self.m.mem.dram);
-            copy_page(nvm_dev, dram_dev, src - self.nvm.base, dst,
-                      PAGE_SIZE, now + cycles);
-        }
+        self.m.mem.migrate(now + cycles, src, dst, PAGE_SIZE,
+                           &mut self.m.tel);
         // Background DMA; the CPU pays the paper's T_mig constant (Eq. 1).
         cycles += self.m.cfg.t_mig_4k;
         self.m.metrics.migrations += 1;
@@ -136,11 +132,13 @@ impl Hscc4K {
         // Remap + shootdown (HSCC changes the address the TLBs hold).
         self.aspace.pt_4k.remap(vpn, dst >> PAGE_SHIFT);
         let sd = shootdown_4k(&self.m.cfg, &mut self.m.tlbs, vpn,
-                              &mut self.sd_stats);
+                              &mut self.sd_stats, &mut self.m.tel,
+                              now + cycles);
         cycles += sd;
         self.m.metrics.rt.shootdown_cycles += sd;
         self.m.metrics.shootdowns += 1;
         self.frame_owner.set(grant.frame, vpn);
+        self.m.tel.mig_hist.record(cycles);
         cycles
     }
 
@@ -169,6 +167,7 @@ impl Policy for Hscc4K {
                 cycles += walk;
                 self.m.metrics.xlat.ptw_cycles += walk;
                 self.m.metrics.tlb_miss_cycles += walk;
+                self.m.tel.ptw_hist.record(walk);
                 let pa = self.ensure_mapped(vaddr);
                 self.m.tlbs[core]
                     .insert_4k(vaddr >> PAGE_SHIFT, pa >> PAGE_SHIFT);
@@ -250,6 +249,10 @@ impl Policy for Hscc4K {
 
     fn machine_mut(&mut self) -> &mut Machine {
         &mut self.m
+    }
+
+    fn dram_utilization(&self) -> f64 {
+        self.dram.utilization()
     }
 }
 

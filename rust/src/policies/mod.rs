@@ -32,6 +32,13 @@ pub trait Policy {
 
     fn machine_mut(&mut self) -> &mut Machine;
 
+    /// Fraction of the fast tier's frames in use, for the per-epoch
+    /// telemetry series. Policies without a managed DRAM pool (flat
+    /// placement, DRAM-only) report 0.
+    fn dram_utilization(&self) -> f64 {
+        0.0
+    }
+
     /// End-of-run rollup; policies may override to adjust counters whose
     /// meaning is policy-specific (e.g. Rainbow's 4 KB-side misses).
     fn finalize(&mut self, elapsed: u64) {

@@ -17,12 +17,12 @@ use std::path::PathBuf;
 
 use crate::config::{Config, PAGES_PER_SP, PAGE_SHIFT, PAGE_SIZE, SP_SHIFT,
                     SP_SIZE};
-use crate::mem::sched::copy_page;
 use crate::os::{AddressSpace, DramMgr, Reclaim, Region};
 use crate::policies::flat_static::TABLE_RESERVE;
 use crate::policies::Policy;
 use crate::runtime::HotPageIdentifier;
 use crate::sim::machine::{Machine, TableHome};
+use crate::telemetry::EventKind;
 use crate::tlb::{shootdown_4k, ShootdownStats};
 
 use super::bitmap::{BitmapCache, MigrationBitmap};
@@ -172,7 +172,8 @@ impl Rainbow {
         }
         if dirty {
             // Background DMA + the Eq.-2 constant T_writeback.
-            self.m.mem.migrate(now, dram_pa, nvm_addr, PAGE_SIZE);
+            self.m.mem.migrate(now, dram_pa, nvm_addr, PAGE_SIZE,
+                               &mut self.m.tel);
             cycles += self.m.cfg.t_writeback_4k;
             self.m.metrics.writeback_bytes += PAGE_SIZE;
         } else {
@@ -190,7 +191,7 @@ impl Rainbow {
         if svpn != NO_SVPN {
             let vpn = svpn * PAGES_PER_SP + page_in_sp as u64;
             let sd = shootdown_4k(&self.m.cfg, &mut self.m.tlbs, vpn,
-                                  &mut self.sd_stats);
+                                  &mut self.sd_stats, &mut self.m.tel, now);
             cycles += sd;
             self.m.metrics.rt.shootdown_cycles += sd;
             self.m.metrics.shootdowns += 1;
@@ -225,12 +226,8 @@ impl Rainbow {
         for wb in wbs {
             self.m.mem.access(now, wb.addr, true, 64);
         }
-        {
-            let (nvm_dev, dram_dev) =
-                (&mut self.m.mem.nvm, &mut self.m.mem.dram);
-            copy_page(nvm_dev, dram_dev, nvm_addr - self.nvm_base, dram_pa,
-                      PAGE_SIZE, now + cycles);
-        }
+        self.m.mem.migrate(now + cycles, nvm_addr, dram_pa, PAGE_SIZE,
+                           &mut self.m.tel);
         // Background DMA; CPU pays the Eq.-1 constant T_mig.
         cycles += self.m.cfg.t_mig_4k;
         // Store the destination pointer in the page's original residence
@@ -241,6 +238,7 @@ impl Rainbow {
         self.remap.insert(nvm_page, grant.frame);
         self.m.metrics.migrations += 1;
         self.m.metrics.migrated_bytes += PAGE_SIZE;
+        self.m.tel.mig_hist.record(cycles);
         cycles
     }
 
@@ -307,6 +305,7 @@ impl Policy for Rainbow {
                 cycles += walk;
                 self.m.metrics.xlat.sptw_cycles += walk;
                 self.m.metrics.tlb_miss_cycles += walk;
+                self.m.tel.ptw_hist.record(walk);
                 let sp_base = self.ensure_sp(vaddr);
                 self.m.tlbs[core].insert_2m(vaddr >> SP_SHIFT,
                                             sp_base >> SP_SHIFT);
@@ -385,6 +384,8 @@ impl Policy for Rainbow {
 
         // Stage 1: choose next interval's monitored top-N, reset counters.
         let top = self.identifier.select_top(&self.counters, &self.params);
+        self.m.tel.event(now + cycles, EventKind::CounterRotate,
+                         top.len() as u64, 0);
         self.counters.rotate(&top);
         self.threshold.update(
             self.m.metrics.migrated_bytes - migrated_before,
@@ -399,6 +400,10 @@ impl Policy for Rainbow {
 
     fn machine_mut(&mut self) -> &mut Machine {
         &mut self.m
+    }
+
+    fn dram_utilization(&self) -> f64 {
+        self.dram.utilization()
     }
 
     fn finalize(&mut self, elapsed: u64) {

@@ -9,6 +9,8 @@ use std::path::{Path, PathBuf};
 
 use crate::policies::{self, Policy};
 use crate::sim::{engine, EngineConfig, RunMetrics};
+use crate::telemetry::{self, trace::TraceMeta, Telemetry};
+use crate::util::log;
 use crate::workloads::Workload;
 
 pub mod figures;
@@ -24,7 +26,7 @@ pub mod sweep;
 pub mod wal;
 
 pub use spec::RunSpec;
-pub use store::{CacheStore, FsStore, MemStore, Store, StoreKind};
+pub use store::{CacheStore, FsStore, MemStore, Store, StoreKind, StoreObs};
 
 /// Default on-disk results-cache directory: the `RAINBOW_CACHE` env var
 /// if set (read-only — nothing in the crate mutates it), else
@@ -76,7 +78,7 @@ pub fn run_stored(store: &Store, spec: &RunSpec)
             if store.is_remote() {
                 return Err(e);
             }
-            eprintln!("warning: {e}; re-simulating");
+            log::warn(&format!("{e}; re-simulating"));
         }
     }
     let m = run_uncached(spec);
@@ -99,6 +101,39 @@ pub fn run_uncached(spec: &RunSpec) -> RunMetrics {
             .unwrap_or_else(|| panic!("unknown policy {}", spec.policy));
     let ecfg = EngineConfig::new(spec.instructions, cfg.interval_cycles);
     engine::run(policy.as_mut(), &mut workload, &ecfg).metrics
+}
+
+/// Always simulate with event/series telemetry enabled; returns the
+/// run's metrics together with the captured [`Telemetry`] sink.
+/// Bypasses every cache (stored metrics do not carry rings). The sink
+/// never feeds back into timing, so the metrics equal an untraced
+/// run's bit-for-bit — pinned in `rust/tests/sweep_determinism.rs`.
+pub fn run_traced(spec: &RunSpec) -> (RunMetrics, Telemetry) {
+    let cfg = spec.config();
+    let mut workload =
+        Workload::by_name(&spec.workload, cfg.cores, spec.scale, spec.seed)
+            .unwrap_or_else(|| panic!("unknown workload {}", spec.workload));
+    let mut policy: Box<dyn Policy> =
+        policies::from_name(&spec.policy, &cfg, spec.accel)
+            .unwrap_or_else(|| panic!("unknown policy {}", spec.policy));
+    policy.machine_mut().tel.enable(telemetry::DEFAULT_EVENT_CAP,
+                                    telemetry::DEFAULT_SERIES_CAP);
+    let ecfg = EngineConfig::new(spec.instructions, cfg.interval_cycles);
+    let metrics = engine::run(policy.as_mut(), &mut workload, &ecfg).metrics;
+    let tel = std::mem::take(&mut policy.machine_mut().tel);
+    (metrics, tel)
+}
+
+/// The trace-file identity header for a spec (the `meta` record of
+/// `run --trace-out`).
+pub fn trace_meta(spec: &RunSpec) -> TraceMeta {
+    TraceMeta {
+        workload: spec.workload.clone(),
+        policy: spec.policy.clone(),
+        fingerprint: spec.fingerprint(),
+        interval_cycles: spec.config().interval_cycles,
+        instructions: spec.instructions,
+    }
 }
 
 /// The five evaluated systems in figure order.

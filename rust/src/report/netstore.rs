@@ -35,6 +35,15 @@
 //! payloads are the versioned `key=value` records of
 //! `report::queue` (`queuewireversion=`).
 //!
+//! Protocol v3 adds STATS, the fleet observability surface
+//! (`rainbow stats --store tcp://...`): a [`ServerStats`] snapshot of
+//! per-opcode request counts, the job queue's grant-to-complete
+//! latency quantiles, the backing store's durability-log counters
+//! (appends/fsyncs/replayed records, when it is a `--log` store) and
+//! replica degradation counters (when it is replicated). The reply is
+//! a versioned `key=value` record guarded by
+//! [`serde_kv::STATS_WIRE_VERSION`] and schema-locked.
+//!
 //! ## Failure modes
 //!
 //! The client fails *loudly*: connect timeouts with bounded retries
@@ -52,23 +61,26 @@
 //! connections, and lets `serve` return `Ok` — the clean-shutdown path
 //! the CI smoke job asserts.
 
+use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::sim::RunMetrics;
+use crate::util::log;
 
 use super::queue::{self, QueueState};
-use super::serde_kv;
+use super::serde_kv::{self, STATS_WIRE_VERSION};
 use super::spec::fnv1a;
 use super::store::{CacheStore, Store};
 
 /// Version of the framed request/response protocol.
 /// v2: job-queue opcodes (LEASE/COMPLETE/REQUEUE/QSTAT).
-pub const PROTOCOL_VERSION: u16 = 2;
+/// v3: STATS opcode (fleet observability snapshot).
+pub const PROTOCOL_VERSION: u16 = 3;
 
 const MAGIC: [u8; 4] = *b"RBKV";
 const HEADER_LEN: usize = 4 + 2 + 1 + 4 + 8;
@@ -94,6 +106,9 @@ pub mod op {
     pub const REQUEUE: u8 = 8;
     /// Job queue: snapshot the queue counters.
     pub const QSTAT: u8 = 9;
+    /// Fleet stats (protocol v3): snapshot the server's observability
+    /// counters ([`super::ServerStats`]).
+    pub const STATS: u8 = 10;
     pub const R_OK: u8 = 0x80;
     pub const R_MISSING: u8 = 0x81;
     pub const R_ERR: u8 = 0x82;
@@ -172,6 +187,162 @@ fn valid_fingerprint(fp: &str) -> bool {
                 || b == b'-'
                 || b == b'%'
         })
+}
+
+// ---------------------------------------------------------- fleet stats
+
+/// Snapshot of one cache server's observability counters — the `STATS`
+/// reply (protocol v3) and the row format of `rainbow stats`.
+/// Serialized as a versioned `key=value` record
+/// ([`server_stats_to_kv`], `statswireversion=`) and schema-locked
+/// against [`STATS_WIRE_VERSION`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Requests served since bind, by opcode. A `STATS` request counts
+    /// itself (the bump lands before the reply is assembled).
+    pub gets: u64,
+    pub puts: u64,
+    pub lists: u64,
+    pub pings: u64,
+    pub leases: u64,
+    pub completes: u64,
+    pub requeues: u64,
+    pub qstats: u64,
+    pub stats_reqs: u64,
+    /// Lease grant-to-first-completion latency (ms): sample count and
+    /// power-of-two bucket quantiles from the queue's histogram.
+    pub lease_count: u64,
+    pub lease_ms_p50: u64,
+    pub lease_ms_p95: u64,
+    pub lease_ms_p99: u64,
+    /// Backing-store counters (`Store::obs`): durability-log activity
+    /// and replica degradation; zero when the store has neither.
+    pub wal_appends: u64,
+    pub wal_fsyncs: u64,
+    pub wal_replayed: u64,
+    pub degraded_gets: u64,
+    pub degraded_puts: u64,
+    pub read_repairs: u64,
+}
+
+/// Serialize a [`ServerStats`] snapshot: versioned header line, then
+/// one `key=value` per field in fixed order.
+pub fn server_stats_to_kv(s: &ServerStats) -> String {
+    format!(
+        "statswireversion={STATS_WIRE_VERSION}\n\
+         gets={}\nputs={}\nlists={}\npings={}\nleases={}\n\
+         completes={}\nrequeues={}\nqstats={}\nstats_reqs={}\n\
+         lease_count={}\nlease_ms_p50={}\nlease_ms_p95={}\n\
+         lease_ms_p99={}\nwal_appends={}\nwal_fsyncs={}\n\
+         wal_replayed={}\ndegraded_gets={}\ndegraded_puts={}\n\
+         read_repairs={}\n",
+        s.gets, s.puts, s.lists, s.pings, s.leases, s.completes,
+        s.requeues, s.qstats, s.stats_reqs, s.lease_count,
+        s.lease_ms_p50, s.lease_ms_p95, s.lease_ms_p99, s.wal_appends,
+        s.wal_fsyncs, s.wal_replayed, s.degraded_gets, s.degraded_puts,
+        s.read_repairs)
+}
+
+/// Strict parse of a [`server_stats_to_kv`] record: the version must
+/// match, every field must be present exactly once, and unknown keys
+/// are rejected — version skew or truncation is a loud error, never a
+/// silently partial snapshot.
+pub fn server_stats_from_kv(text: &str) -> Result<ServerStats, String> {
+    let mut fields: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut version = None;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            format!("server stats: expected key=value, got {line:?}")
+        })?;
+        let v = v.parse::<u64>().map_err(|_| {
+            format!("server stats: {k}: expected integer, got {v:?}")
+        })?;
+        if k == "statswireversion" {
+            version = Some(v);
+        } else if fields.insert(k, v).is_some() {
+            return Err(format!("server stats: duplicate key {k:?}"));
+        }
+    }
+    match version {
+        Some(STATS_WIRE_VERSION) => {}
+        Some(v) => {
+            return Err(format!(
+                "server stats version {v} unsupported \
+                 (expected {STATS_WIRE_VERSION})"))
+        }
+        None => {
+            return Err(
+                "server stats missing statswireversion".to_string())
+        }
+    }
+    let mut take = |k: &str| {
+        fields.remove(k)
+            .ok_or_else(|| format!("server stats missing field {k:?}"))
+    };
+    let s = ServerStats {
+        gets: take("gets")?,
+        puts: take("puts")?,
+        lists: take("lists")?,
+        pings: take("pings")?,
+        leases: take("leases")?,
+        completes: take("completes")?,
+        requeues: take("requeues")?,
+        qstats: take("qstats")?,
+        stats_reqs: take("stats_reqs")?,
+        lease_count: take("lease_count")?,
+        lease_ms_p50: take("lease_ms_p50")?,
+        lease_ms_p95: take("lease_ms_p95")?,
+        lease_ms_p99: take("lease_ms_p99")?,
+        wal_appends: take("wal_appends")?,
+        wal_fsyncs: take("wal_fsyncs")?,
+        wal_replayed: take("wal_replayed")?,
+        degraded_gets: take("degraded_gets")?,
+        degraded_puts: take("degraded_puts")?,
+        read_repairs: take("read_repairs")?,
+    };
+    if let Some(k) = fields.keys().next() {
+        return Err(format!("server stats: unknown key {k:?}"));
+    }
+    Ok(s)
+}
+
+/// Per-opcode request counters shared by every connection handler of
+/// one server.
+#[derive(Debug, Default)]
+struct OpCounters {
+    gets: AtomicU64,
+    puts: AtomicU64,
+    lists: AtomicU64,
+    pings: AtomicU64,
+    leases: AtomicU64,
+    completes: AtomicU64,
+    requeues: AtomicU64,
+    qstats: AtomicU64,
+    stats: AtomicU64,
+}
+
+impl OpCounters {
+    /// Count a request frame. Unknown (and response) opcodes are not
+    /// counted — they answer `R_ERR` and say nothing about load.
+    fn bump(&self, opcode: u8) {
+        let c = match opcode {
+            op::GET => &self.gets,
+            op::PUT => &self.puts,
+            op::LIST => &self.lists,
+            op::PING => &self.pings,
+            op::LEASE => &self.leases,
+            op::COMPLETE => &self.completes,
+            op::REQUEUE => &self.requeues,
+            op::QSTAT => &self.qstats,
+            op::STATS => &self.stats,
+            _ => return,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 // ---------------------------------------------------------------- client
@@ -350,6 +521,13 @@ impl NetStore {
         queue::queue_stat_from_kv(&text)
             .map_err(|e| format!("cache server {}: QSTAT: {e}", self.addr))
     }
+
+    /// `STATS`: the server's observability snapshot (`rainbow stats`).
+    pub fn server_stats(&self) -> Result<ServerStats, String> {
+        let text = self.queue_text_reply(op::STATS, "STATS", &[])?;
+        server_stats_from_kv(&text)
+            .map_err(|e| format!("cache server {}: STATS: {e}", self.addr))
+    }
 }
 
 impl CacheStore for NetStore {
@@ -440,6 +618,7 @@ pub struct CacheServer {
     store: Store,
     local: SocketAddr,
     queue: Arc<Mutex<QueueState>>,
+    counters: Arc<OpCounters>,
     epoch: Instant,
 }
 
@@ -458,6 +637,7 @@ impl CacheServer {
             local,
             queue: Arc::new(Mutex::new(QueueState::new(
                 queue::DEFAULT_LEASE_MS))),
+            counters: Arc::new(OpCounters::default()),
             // rainbow-lint: allow(nondet-clock, lease deadlines are relative to a private server epoch; never serialized into results or compared across hosts)
             epoch: Instant::now(),
         })
@@ -487,7 +667,7 @@ impl CacheServer {
             let stream = match conn {
                 Ok(s) => s,
                 Err(e) => {
-                    eprintln!("cache-server: accept: {e}");
+                    log::warn(&format!("cache-server: accept: {e}"));
                     continue;
                 }
             };
@@ -495,9 +675,11 @@ impl CacheServer {
             let sd = Arc::clone(&shutdown);
             let local = self.local;
             let queue = Arc::clone(&self.queue);
+            let counters = Arc::clone(&self.counters);
             let epoch = self.epoch;
             handlers.push(thread::spawn(move || {
-                handle_conn(stream, &store, &sd, local, &queue, epoch)
+                handle_conn(stream, &store, &sd, local, &queue,
+                            &counters, epoch)
             }));
             handlers.retain(|h| !h.is_finished());
         }
@@ -549,7 +731,8 @@ impl ServerHandle {
 
 fn handle_conn(mut stream: TcpStream, store: &Store,
                shutdown: &AtomicBool, local: SocketAddr,
-               queue: &Mutex<QueueState>, epoch: Instant) {
+               queue: &Mutex<QueueState>, counters: &OpCounters,
+               epoch: Instant) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(120)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(120)));
@@ -561,6 +744,7 @@ fn handle_conn(mut stream: TcpStream, store: &Store,
             Err(_) => return,
         };
         let now_ms = epoch.elapsed().as_millis() as u64;
+        counters.bump(opcode);
         let sent = match opcode {
             op::GET => serve_get(&mut stream, store, &payload),
             op::PUT => serve_put(&mut stream, store, &payload),
@@ -579,6 +763,9 @@ fn handle_conn(mut stream: TcpStream, store: &Store,
                 serve_requeue(&mut stream, queue, &payload, now_ms)
             }
             op::QSTAT => serve_qstat(&mut stream, queue, now_ms),
+            op::STATS => {
+                serve_stats(&mut stream, store, queue, counters)
+            }
             op::SHUTDOWN => {
                 // Flag first, acknowledge second, then poke the accept
                 // loop awake so it observes the flag and exits. A
@@ -775,6 +962,44 @@ fn serve_qstat(stream: &mut TcpStream, queue: &Mutex<QueueState>,
     }
 }
 
+/// `STATS`: assemble the observability snapshot from the per-opcode
+/// counters, the queue's lease-latency histogram, and the backing
+/// store's own counters.
+fn serve_stats(stream: &mut TcpStream, store: &Store,
+               queue: &Mutex<QueueState>, counters: &OpCounters)
+               -> io::Result<()> {
+    let stats = lock_queue(queue).map(|q| {
+        let lat = q.lease_latency();
+        let obs = store.obs();
+        ServerStats {
+            gets: counters.gets.load(Ordering::Relaxed),
+            puts: counters.puts.load(Ordering::Relaxed),
+            lists: counters.lists.load(Ordering::Relaxed),
+            pings: counters.pings.load(Ordering::Relaxed),
+            leases: counters.leases.load(Ordering::Relaxed),
+            completes: counters.completes.load(Ordering::Relaxed),
+            requeues: counters.requeues.load(Ordering::Relaxed),
+            qstats: counters.qstats.load(Ordering::Relaxed),
+            stats_reqs: counters.stats.load(Ordering::Relaxed),
+            lease_count: lat.count(),
+            lease_ms_p50: lat.quantile(50),
+            lease_ms_p95: lat.quantile(95),
+            lease_ms_p99: lat.quantile(99),
+            wal_appends: obs.wal_appends,
+            wal_fsyncs: obs.wal_fsyncs,
+            wal_replayed: obs.wal_replayed,
+            degraded_gets: obs.degraded_gets,
+            degraded_puts: obs.degraded_puts,
+            read_repairs: obs.read_repairs,
+        }
+    });
+    match stats {
+        Ok(s) => write_frame(stream, op::R_OK,
+                             server_stats_to_kv(&s).as_bytes()),
+        Err(e) => write_frame(stream, op::R_ERR, e.as_bytes()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -840,6 +1065,69 @@ mod tests {
             assert!(j.retry_backoff >= base, "jitter only adds delay");
             assert!(j.retry_backoff < base * 2, "jitter < one base step");
         }
+    }
+
+    #[test]
+    fn server_stats_kv_round_trips_and_parses_strictly() {
+        let s = ServerStats {
+            gets: 1, puts: 2, lists: 3, pings: 4, leases: 5,
+            completes: 6, requeues: 7, qstats: 8, stats_reqs: 9,
+            lease_count: 10, lease_ms_p50: 63, lease_ms_p95: 127,
+            lease_ms_p99: 255, wal_appends: 11, wal_fsyncs: 12,
+            wal_replayed: 13, degraded_gets: 14, degraded_puts: 15,
+            read_repairs: 16,
+        };
+        let kv = server_stats_to_kv(&s);
+        assert!(kv.starts_with(&format!(
+            "statswireversion={STATS_WIRE_VERSION}\n")));
+        assert_eq!(server_stats_from_kv(&kv).unwrap(), s);
+        // Version skew is a loud error.
+        let skew = kv.replace(
+            &format!("statswireversion={STATS_WIRE_VERSION}"),
+            "statswireversion=99");
+        let e = server_stats_from_kv(&skew).unwrap_err();
+        assert!(e.contains("unsupported"), "got: {e}");
+        // A dropped field, an unknown key, a duplicate, and a
+        // non-integer value are all rejected.
+        let e = server_stats_from_kv(&kv.replace("wal_fsyncs=12\n", ""))
+            .unwrap_err();
+        assert!(e.contains("missing field"), "got: {e}");
+        let e = server_stats_from_kv(&format!("{kv}bogus=1\n"))
+            .unwrap_err();
+        assert!(e.contains("unknown key"), "got: {e}");
+        let e = server_stats_from_kv(&format!("{kv}gets=1\n"))
+            .unwrap_err();
+        assert!(e.contains("duplicate"), "got: {e}");
+        let e = server_stats_from_kv(&kv.replace("puts=2", "puts=x"))
+            .unwrap_err();
+        assert!(e.contains("integer"), "got: {e}");
+        assert!(server_stats_from_kv("gets=1\n").is_err());
+    }
+
+    #[test]
+    fn stats_surface_counts_requests_and_reads_back_zeroed_histograms() {
+        let server =
+            CacheServer::bind("127.0.0.1:0", Store::mem()).unwrap();
+        let handle = server.spawn();
+        let client = NetStore::new(&handle.host_port());
+        client.ping().unwrap();
+        client.ping().unwrap();
+        assert!(client.get("v2_mcf_rainbow_s8").unwrap().is_none());
+        let s = client.server_stats().unwrap();
+        assert_eq!(s.pings, 2);
+        assert_eq!(s.gets, 1);
+        assert_eq!(s.puts, 0);
+        // The STATS request counts itself.
+        assert_eq!(s.stats_reqs, 1);
+        // No leases completed, no durability log: zeros, not garbage.
+        assert_eq!(s.lease_count, 0);
+        assert_eq!(s.lease_ms_p99, 0);
+        assert_eq!(s.wal_appends, 0);
+        assert_eq!(s.degraded_gets, 0);
+        let s2 = client.server_stats().unwrap();
+        assert_eq!(s2.stats_reqs, 2);
+        assert_eq!(s2.pings, 2);
+        handle.stop().unwrap();
     }
 
     #[test]

@@ -40,7 +40,7 @@
 //! are reproducible.
 //!
 //! The wire records below ride the framed netstore protocol
-//! (`report::netstore`, protocol v2) as versioned `key=value` text,
+//! (`report::netstore`, protocol v3) as versioned `key=value` text,
 //! guarded by [`serde_kv::QUEUE_WIRE_VERSION`] and schema-locked like
 //! every other serialized struct in the crate.
 
@@ -50,6 +50,8 @@ use std::thread;
 use std::time::Duration;
 
 use crate::sim::RunMetrics;
+use crate::telemetry::Hist;
+use crate::util::log;
 
 use super::netstore::NetStore;
 use super::serde_kv::{self, QUEUE_WIRE_VERSION};
@@ -151,8 +153,10 @@ pub struct CompleteRequest {
 }
 
 /// Queue counters: a `QSTAT` (and `REQUEUE`) reply. `total` counts
-/// every job ever enqueued; `expired` counts lease expiries (a
-/// diagnostic — how often stragglers were re-leased).
+/// every job ever enqueued; `expired` counts lease expiries and
+/// `requeued` (wire v3) counts re-grants of a previously expired job —
+/// together they say how often straggler recovery actually fired, not
+/// just how often deadlines lapsed.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueueStat {
     pub total: u64,
@@ -160,6 +164,7 @@ pub struct QueueStat {
     pub leased: u64,
     pub completed: u64,
     pub expired: u64,
+    pub requeued: u64,
 }
 
 impl QueueStat {
@@ -320,8 +325,10 @@ pub fn complete_request_from_kv(text: &str)
 
 pub fn queue_stat_to_kv(s: &QueueStat) -> String {
     format!(
-        "{}total={}\npending={}\nleased={}\ncompleted={}\nexpired={}\n",
-        kv_header(), s.total, s.pending, s.leased, s.completed, s.expired)
+        "{}total={}\npending={}\nleased={}\ncompleted={}\nexpired={}\n\
+         requeued={}\n",
+        kv_header(), s.total, s.pending, s.leased, s.completed, s.expired,
+        s.requeued)
 }
 
 pub fn queue_stat_from_kv(text: &str) -> Result<QueueStat, String> {
@@ -333,6 +340,7 @@ pub fn queue_stat_from_kv(text: &str) -> Result<QueueStat, String> {
         leased: take_u64(&mut f, WHAT, "leased")?,
         completed: take_u64(&mut f, WHAT, "completed")?,
         expired: take_u64(&mut f, WHAT, "expired")?,
+        requeued: take_u64(&mut f, WHAT, "requeued")?,
     };
     reject_unknown(&f, WHAT)?;
     Ok(stat)
@@ -352,6 +360,9 @@ struct LeaseInfo {
     lease_id: u64,
     worker: String,
     deadline_ms: u64,
+    /// When the lease was granted; grant-to-complete feeds the
+    /// lease-latency histogram surfaced by the `STATS` opcode.
+    granted_ms: u64,
 }
 
 /// Outcome of a `COMPLETE`, for callers that want to distinguish the
@@ -379,6 +390,13 @@ pub struct QueueState {
     completed: BTreeMap<String, u64>,
     next_lease_id: u64,
     expired_total: u64,
+    requeued_total: u64,
+    /// Fingerprints whose lease has expired at least once; a later
+    /// grant of one of these is a *requeue* (straggler recovery that
+    /// actually fired, vs an expiry whose job completed anyway).
+    expired_fps: BTreeSet<String>,
+    /// Grant-to-complete latency (ms) of first completions.
+    lease_lat: Hist,
 }
 
 impl QueueState {
@@ -391,6 +409,9 @@ impl QueueState {
             completed: BTreeMap::new(),
             next_lease_id: 0,
             expired_total: 0,
+            requeued_total: 0,
+            expired_fps: BTreeSet::new(),
+            lease_lat: Hist::new(),
         }
     }
 
@@ -428,6 +449,7 @@ impl QueueState {
             .collect();
         for fp in dead {
             self.leased.remove(&fp);
+            self.expired_fps.insert(fp.clone());
             self.pending.insert(fp);
             self.expired_total += 1;
         }
@@ -439,6 +461,9 @@ impl QueueState {
         self.expire(now_ms);
         if let Some(fp) = self.pending.iter().next().cloned() {
             self.pending.remove(&fp);
+            if self.expired_fps.remove(&fp) {
+                self.requeued_total += 1;
+            }
             self.next_lease_id += 1;
             let lease_id = self.next_lease_id;
             let deadline_ms = now_ms.saturating_add(self.lease_ms);
@@ -447,6 +472,7 @@ impl QueueState {
                 lease_id,
                 worker: worker.to_string(),
                 deadline_ms,
+                granted_ms: now_ms,
             });
             return LeaseReply {
                 state: LeaseState::Granted,
@@ -497,7 +523,10 @@ impl QueueState {
                      spec)"))
             };
         }
-        self.leased.remove(fingerprint);
+        if let Some(info) = self.leased.remove(fingerprint) {
+            self.lease_lat
+                .record(now_ms.saturating_sub(info.granted_ms));
+        }
         self.pending.remove(fingerprint);
         self.completed.insert(fingerprint.to_string(), checksum);
         Ok(CompleteOutcome::Recorded)
@@ -513,6 +542,7 @@ impl QueueState {
             leased: self.leased.len() as u64,
             completed: self.completed.len() as u64,
             expired: self.expired_total,
+            requeued: self.requeued_total,
         }
     }
 
@@ -520,6 +550,12 @@ impl QueueState {
     /// diagnostics).
     pub fn holder_of(&self, fingerprint: &str) -> Option<&str> {
         self.leased.get(fingerprint).map(|l| l.worker.as_str())
+    }
+
+    /// Grant-to-complete latency histogram (ms), for the `STATS`
+    /// fleet surface.
+    pub fn lease_latency(&self) -> &Hist {
+        &self.lease_lat
     }
 }
 
@@ -636,10 +672,23 @@ pub fn run_queued(specs: &[RunSpec], store: &Store, workers: usize)
             .map_err(|e| format!("queue: spawn worker {wid}: {e}"))?;
         children.push((wid, Some(child)));
     }
+    // Progress cadence: every ~40th poll (~1 s at POLL_MS = 25),
+    // counted in iterations — no wall-clock read, so the coordinator
+    // stays `nondet-clock`-clean.
+    const POLLS_PER_PROGRESS: u64 = 40;
+    let mut polls = 0u64;
     let drained = loop {
         let stat = client.queue_stat()?;
         if stat.drained() {
             break stat;
+        }
+        polls += 1;
+        if polls % POLLS_PER_PROGRESS == 0 {
+            println!(
+                "queue: {}/{} complete ({} pending, {} leased, {} \
+                 expired, {} requeued)",
+                stat.completed, stat.total, stat.pending, stat.leased,
+                stat.expired, stat.requeued);
         }
         let mut alive = 0usize;
         for (wid, slot) in children.iter_mut() {
@@ -647,10 +696,10 @@ pub fn run_queued(specs: &[RunSpec], store: &Store, workers: usize)
             match child.try_wait() {
                 Ok(Some(status)) => {
                     if !status.success() {
-                        eprintln!(
+                        log::warn(&format!(
                             "queue: worker {wid} exited ({status}) with \
                              jobs remaining — its lease(s) will re-issue \
-                             on deadline expiry");
+                             on deadline expiry"));
                     }
                     *slot = None;
                 }
@@ -681,8 +730,9 @@ pub fn run_queued(specs: &[RunSpec], store: &Store, workers: usize)
     }
     if drained.expired > 0 {
         println!(
-            "queue: drained with {} lease expiry(ies) — straggler or \
-             dead-worker recovery re-leased those jobs", drained.expired);
+            "queue: drained with {} lease expiry(ies), {} requeue(s) — \
+             straggler or dead-worker recovery re-leased those jobs",
+            drained.expired, drained.requeued);
     }
     let metrics = sweep::collect_stored(store, specs)
         .map_err(|e| format!("queue merge: {e}"))?;
@@ -761,19 +811,26 @@ mod tests {
         assert!(e.contains("checksum"), "got: {e}");
         let stat = QueueStat {
             total: 8, pending: 3, leased: 2, completed: 3, expired: 1,
+            requeued: 1,
         };
         assert_eq!(queue_stat_from_kv(&queue_stat_to_kv(&stat)).unwrap(),
                    stat);
         // Version skew and malformed input are loud.
         let skew = lease_request_to_kv(&req)
-            .replace("queuewireversion=2", "queuewireversion=99");
+            .replace("queuewireversion=3", "queuewireversion=99");
         let e = lease_request_from_kv(&skew).unwrap_err();
         assert!(e.contains("unsupported"), "got: {e}");
         let e = queue_stat_from_kv("total=1\n").unwrap_err();
         assert!(e.contains("queuewireversion"), "got: {e}");
+        // Wire v2 (no requeued counter) is a version-skew error, not a
+        // silent zero.
         let e = queue_stat_from_kv(
             "queuewireversion=2\ntotal=1\npending=0\nleased=0\n\
-             completed=1\nexpired=0\nbogus=7\n").unwrap_err();
+             completed=1\nexpired=0\n").unwrap_err();
+        assert!(e.contains("unsupported"), "got: {e}");
+        let e = queue_stat_from_kv(
+            "queuewireversion=3\ntotal=1\npending=0\nleased=0\n\
+             completed=1\nexpired=0\nrequeued=0\nbogus=7\n").unwrap_err();
         assert!(e.contains("unknown key"), "got: {e}");
     }
 
@@ -781,19 +838,19 @@ mod tests {
     fn malformed_lease_replies_fail_loudly() {
         // granted without a spec block
         let e = lease_reply_from_kv(
-            "queuewireversion=2\nstate=granted\nleaseid=1\n\
+            "queuewireversion=3\nstate=granted\nleaseid=1\n\
              deadlinems=5\nretryms=0\n").unwrap_err();
         assert!(e.contains("no spec"), "got: {e}");
         // spec attached to a drained reply
         let text = format!(
-            "queuewireversion=2\nstate=drained\nleaseid=0\n\
+            "queuewireversion=3\nstate=drained\nleaseid=0\n\
              deadlinems=0\nretryms=5\n---\n{}",
             serde_kv::spec_to_kv(&tiny("DICT", "flat")));
         let e = lease_reply_from_kv(&text).unwrap_err();
         assert!(e.contains("drained"), "got: {e}");
         // unknown state
         let e = lease_reply_from_kv(
-            "queuewireversion=2\nstate=maybe\nleaseid=0\n\
+            "queuewireversion=3\nstate=maybe\nleaseid=0\n\
              deadlinems=0\nretryms=5\n").unwrap_err();
         assert!(e.contains("unknown state"), "got: {e}");
     }
@@ -840,14 +897,25 @@ mod tests {
         let s = q.stat(499);
         assert_eq!((s.pending, s.leased, s.expired), (1, 2, 0));
         // ...at the deadline both leases return to pending, and the
-        // re-lease order is fingerprint order again.
+        // re-lease order is fingerprint order again. Expiry alone is
+        // not a requeue yet — the re-grant is.
         let s = q.stat(500);
         assert_eq!((s.pending, s.leased, s.expired), (3, 0, 2));
+        assert_eq!(s.requeued, 0);
         assert_eq!(q.holder_of(&fps[0]), None);
         let r = q.lease("rescuer", 500);
         assert_eq!(r.spec.unwrap().fingerprint(), fps[0]);
         assert_eq!(r.deadline_ms, 1_000);
         assert_eq!(q.holder_of(&fps[0]), Some("rescuer"));
+        assert_eq!(q.stat(500).requeued, 1);
+        // fps[1] had also expired: its re-grant is the second requeue.
+        let r = q.lease("rescuer", 500);
+        assert_eq!(r.spec.unwrap().fingerprint(), fps[1]);
+        assert_eq!(q.stat(500).requeued, 2);
+        // fps[2] never expired: its first grant is not a requeue.
+        let r = q.lease("rescuer", 500);
+        assert_eq!(r.spec.unwrap().fingerprint(), fps[2]);
+        assert_eq!(q.stat(500).requeued, 2);
     }
 
     #[test]
@@ -871,6 +939,24 @@ mod tests {
         // Unknown fingerprint: not a queued job.
         let e = q.complete("not_a_job", 1, 0xAB, 5).unwrap_err();
         assert!(e.contains("not a queued job"), "got: {e}");
+    }
+
+    #[test]
+    fn lease_latency_records_first_completions_only() {
+        let specs = three_specs();
+        let fps = sorted_fps(&specs);
+        let mut q = QueueState::new(1_000);
+        q.enqueue(&specs, 0);
+        let a = q.lease("w", 0);
+        q.complete(&fps[0], a.lease_id, 1, 40).unwrap();
+        assert_eq!(q.lease_latency().count(), 1);
+        // 40 ms grant-to-complete lands in the [32, 64) bucket; the
+        // quantile reports that bucket's upper bound.
+        assert_eq!(q.lease_latency().quantile(99), 63);
+        // A duplicate completion records nothing.
+        q.complete(&fps[0], a.lease_id, 1, 500).unwrap();
+        assert_eq!(q.lease_latency().count(), 1);
+        assert_eq!(q.lease_latency().max(), 40);
     }
 
     #[test]

@@ -27,12 +27,14 @@
 //! [`Store::scheduler_hostport`]: super::store::Store::scheduler_hostport
 
 use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sim::RunMetrics;
+use crate::util::log;
 
 use super::netstore::NetStore;
 use super::spec::fnv1a;
-use super::store::CacheStore;
+use super::store::{CacheStore, StoreObs};
 
 /// Virtual nodes per endpoint on the ring. Enough that a 10k-sample
 /// keyspace splits near-evenly across a handful of servers; cheap
@@ -98,6 +100,12 @@ pub struct ReplStore {
     endpoints: Vec<NetStore>,
     ring: Ring,
     replication: usize,
+    /// Reads served despite at least one failed replica.
+    degraded_gets: AtomicU64,
+    /// Writes acked with less than full replication.
+    degraded_puts: AtomicU64,
+    /// Read-repair writes that landed on a lagging replica.
+    read_repairs: AtomicU64,
 }
 
 impl ReplStore {
@@ -112,6 +120,9 @@ impl ReplStore {
             endpoints,
             ring,
             replication,
+            degraded_gets: AtomicU64::new(0),
+            degraded_puts: AtomicU64::new(0),
+            read_repairs: AtomicU64::new(0),
         }
     }
 
@@ -146,23 +157,29 @@ impl CacheStore for ReplStore {
             match self.endpoints[i].get(fingerprint) {
                 Ok(Some(m)) => {
                     for &j in &missed {
-                        if let Err(e) =
-                            self.endpoints[j].put(fingerprint, &m)
-                        {
-                            eprintln!(
-                                "warning: replica {}: read-repair \
+                        match self.endpoints[j].put(fingerprint, &m) {
+                            Ok(()) => {
+                                self.read_repairs
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => log::warn(&format!(
+                                "replica {}: read-repair \
                                  {fingerprint}: {e}",
-                                self.addr_of(j));
+                                self.addr_of(j))),
                         }
+                    }
+                    if !errors.is_empty() {
+                        self.degraded_gets
+                            .fetch_add(1, Ordering::Relaxed);
                     }
                     return Ok(Some(m));
                 }
                 Ok(None) => missed.push(i),
                 Err(e) => {
-                    eprintln!(
-                        "warning: replica {} failed GET {fingerprint} \
+                    log::warn(&format!(
+                        "replica {} failed GET {fingerprint} \
                          (degraded read): {e}",
-                        self.addr_of(i));
+                        self.addr_of(i)));
                     errors.push(format!("{}: {e}", self.addr_of(i)));
                 }
             }
@@ -172,6 +189,9 @@ impl CacheStore for ReplStore {
                 "GET {fingerprint}: all {} placed replica(s) failed: {}",
                 placed.len(), errors.join("; ")))
         } else {
+            if !errors.is_empty() {
+                self.degraded_gets.fetch_add(1, Ordering::Relaxed);
+            }
             Ok(None)
         }
     }
@@ -198,10 +218,11 @@ impl CacheStore for ReplStore {
                 placed.len(), errors.join("; ")))
         } else {
             if !errors.is_empty() {
-                eprintln!(
-                    "warning: PUT {fingerprint} degraded to {ok} of {} \
+                self.degraded_puts.fetch_add(1, Ordering::Relaxed);
+                log::warn(&format!(
+                    "PUT {fingerprint} degraded to {ok} of {} \
                      replica(s): {}",
-                    placed.len(), errors.join("; "));
+                    placed.len(), errors.join("; ")));
             }
             Ok(())
         }
@@ -228,9 +249,9 @@ impl CacheStore for ReplStore {
                 self.endpoints.len(), errors.join("; ")));
         }
         if !errors.is_empty() {
-            eprintln!(
-                "warning: LIST degraded to {live} of {} replica(s): {}",
-                self.endpoints.len(), errors.join("; "));
+            log::warn(&format!(
+                "LIST degraded to {live} of {} replica(s): {}",
+                self.endpoints.len(), errors.join("; ")));
         }
         Ok(all.into_iter().collect())
     }
@@ -253,11 +274,20 @@ impl CacheStore for ReplStore {
                 self.endpoints.len(), errors.join("; ")));
         }
         if !errors.is_empty() {
-            eprintln!(
-                "warning: {live} of {} replica(s) alive; dead: {}",
-                self.endpoints.len(), errors.join("; "));
+            log::warn(&format!(
+                "{live} of {} replica(s) alive; dead: {}",
+                self.endpoints.len(), errors.join("; ")));
         }
         Ok(())
+    }
+
+    fn obs(&self) -> StoreObs {
+        StoreObs {
+            degraded_gets: self.degraded_gets.load(Ordering::Relaxed),
+            degraded_puts: self.degraded_puts.load(Ordering::Relaxed),
+            read_repairs: self.read_repairs.load(Ordering::Relaxed),
+            ..StoreObs::default()
+        }
     }
 }
 

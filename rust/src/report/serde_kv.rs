@@ -21,11 +21,13 @@ use crate::report::RunSpec;
 use crate::sim::metrics::{RunMetrics, RuntimeBreakdown, XlatBreakdown};
 
 /// Version of the results-cache entry serialization.
+/// v6: migration and page-walk latency quantiles (p50/p95/p99) from
+/// the always-on telemetry histograms.
 /// v5: versioned header + FNV-1a checksum line (same integrity
 /// treatment as spec-list files — a torn or tampered entry fails
 /// loudly instead of parsing into silently different metrics).
 /// v4: per-tier row-buffer hit/miss counters (backend comparisons).
-pub const METRICS_VERSION: u64 = 5;
+pub const METRICS_VERSION: u64 = 6;
 
 // Internal alias so the (de)serializers below read naturally.
 const VERSION: u64 = METRICS_VERSION;
@@ -40,10 +42,17 @@ pub const SPEC_LIST_VERSION: u64 = 1;
 /// requests/replies, completion requests, and queue-stat snapshots
 /// exchanged over the LEASE/COMPLETE/REQUEUE/QSTAT opcodes. Bump on
 /// any incompatible change (the structs are schema-locked against it).
+/// v3: `QueueStat` gains `expired` and `requeued` counters so
+/// lease-expiry churn is visible in `QSTAT`.
 /// v2: `CompleteRequest` carries an optional declared entry checksum so
 /// a replicated store's scheduler can verify completions for entries
 /// the consistent-hash ring placed on *other* replicas.
-pub const QUEUE_WIRE_VERSION: u64 = 2;
+pub const QUEUE_WIRE_VERSION: u64 = 3;
+
+/// Version of the server-stats snapshot (`report::netstore::ServerStats`)
+/// returned by the `STATS` opcode. Bump on any incompatible change
+/// (the struct is schema-locked against it).
+pub const STATS_WIRE_VERSION: u64 = 1;
 
 /// Version of the cache-server durability-log format (`report::wal`):
 /// the header line (`cachelogversion=`) and the checksummed,
@@ -316,6 +325,12 @@ fn metrics_body_kv(m: &RunMetrics) -> String {
     put("energy_pj", format!("{:.3}", m.energy_pj));
     put("mem_stall_cycles", m.mem_stall_cycles.to_string());
     put("llc_misses", m.llc_misses.to_string());
+    put("mig_lat_p50", m.mig_lat_p50.to_string());
+    put("mig_lat_p95", m.mig_lat_p95.to_string());
+    put("mig_lat_p99", m.mig_lat_p99.to_string());
+    put("ptw_lat_p50", m.ptw_lat_p50.to_string());
+    put("ptw_lat_p95", m.ptw_lat_p95.to_string());
+    put("ptw_lat_p99", m.ptw_lat_p99.to_string());
     s
 }
 
@@ -440,6 +455,12 @@ pub fn metrics_from_kv_checked(text: &str)
             "energy_pj" => m.energy_pj = f()?,
             "mem_stall_cycles" => m.mem_stall_cycles = u()?,
             "llc_misses" => m.llc_misses = u()?,
+            "mig_lat_p50" => m.mig_lat_p50 = u()?,
+            "mig_lat_p95" => m.mig_lat_p95 = u()?,
+            "mig_lat_p99" => m.mig_lat_p99 = u()?,
+            "ptw_lat_p50" => m.ptw_lat_p50 = u()?,
+            "ptw_lat_p95" => m.ptw_lat_p95 = u()?,
+            "ptw_lat_p99" => m.ptw_lat_p99 = u()?,
             _ => {} // forward-compatible: ignore unknown keys
         }
     }
@@ -487,6 +508,12 @@ mod tests {
             energy_pj: 1234.5,
             mem_stall_cycles: 999,
             llc_misses: 55,
+            mig_lat_p50: 511,
+            mig_lat_p95: 1023,
+            mig_lat_p99: 2047,
+            ptw_lat_p50: 31,
+            ptw_lat_p95: 63,
+            ptw_lat_p99: 127,
         }
     }
 

@@ -75,6 +75,33 @@ pub trait CacheStore: Send + Sync {
     fn compact(&self) -> Result<(), String> {
         Ok(())
     }
+
+    /// Observability counters for the fleet stats surface (the STATS
+    /// opcode / `rainbow stats`). All-zero by default; `LogStore`
+    /// reports its durability-log activity, `ReplStore` its
+    /// degradation counters.
+    fn obs(&self) -> StoreObs {
+        StoreObs::default()
+    }
+}
+
+/// Counters a store implementation exports for the fleet stats surface.
+/// Fields a given backend has no machinery for stay zero.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreObs {
+    /// Durability-log records appended ([`super::wal::LogStore`]).
+    pub wal_appends: u64,
+    /// Durability-log fsyncs issued before acks.
+    pub wal_fsyncs: u64,
+    /// Records replayed from the log at startup.
+    pub wal_replayed: u64,
+    /// Reads that succeeded despite at least one failed replica
+    /// ([`super::replica::ReplStore`]).
+    pub degraded_gets: u64,
+    /// Writes acknowledged with less than full replication.
+    pub degraded_puts: u64,
+    /// Read-repair writes issued to replicas that had missed an entry.
+    pub read_repairs: u64,
 }
 
 /// Which transport a [`Store`] handle wraps.
@@ -296,6 +323,11 @@ impl Store {
     /// Snapshot/compact the durability log, if the backend keeps one.
     pub fn compact(&self) -> Result<(), String> {
         self.backend.compact()
+    }
+
+    /// The backend's observability counters (fleet stats surface).
+    pub fn obs(&self) -> StoreObs {
+        self.backend.obs()
     }
 }
 

@@ -36,13 +36,15 @@
 use std::fs::{self, File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::sim::RunMetrics;
+use crate::util::log;
 
 use super::serde_kv::{self, MetricsError, CACHE_LOG_VERSION};
 use super::spec::fnv1a;
-use super::store::{CacheStore, MemStore};
+use super::store::{CacheStore, MemStore, StoreObs};
 
 /// Framing of one log record, as serialized on the `put=` header line
 /// (schema-locked against [`serde_kv::CACHE_LOG_VERSION`]).
@@ -137,6 +139,12 @@ pub struct LogStore {
     /// one contiguous record) and the handle is swapped under this
     /// lock when compaction renames a fresh log into place.
     file: Mutex<File>,
+    /// Records appended since open (fleet stats surface).
+    appends: AtomicU64,
+    /// fsyncs issued since open (one per append, plus compactions).
+    fsyncs: AtomicU64,
+    /// Records replayed from the log at open.
+    replayed: u64,
 }
 
 /// Longest clean prefix of `bytes` (header + whole records), the
@@ -231,10 +239,10 @@ fn replay(
                 stats.loaded += 1;
             }
             Err(MetricsError::Stale { found }) => {
-                eprintln!(
-                    "warning: cache log {}: skipping stale entry {} \
+                log::warn(&format!(
+                    "cache log {}: skipping stale entry {} \
                      (version {found}); re-simulation will heal it",
-                    path.display(), rec.fingerprint);
+                    path.display(), rec.fingerprint));
                 stats.skipped_stale += 1;
             }
             Err(e) => {
@@ -272,11 +280,11 @@ impl LogStore {
         let inner = MemStore::new();
         let (keep, stats) = replay(&bytes, &inner, path)?;
         if stats.truncated_bytes > 0 {
-            eprintln!(
-                "warning: cache log {}: truncating {} torn byte(s) at \
+            log::warn(&format!(
+                "cache log {}: truncating {} torn byte(s) at \
                  the end of the log (crash mid-append); {} intact \
                  record(s) retained",
-                path.display(), stats.truncated_bytes, stats.loaded);
+                path.display(), stats.truncated_bytes, stats.loaded));
         }
         let mut file = OpenOptions::new()
             .create(true)
@@ -305,6 +313,9 @@ impl LogStore {
             path: path.to_path_buf(),
             inner,
             file: Mutex::new(file),
+            appends: AtomicU64::new(0),
+            fsyncs: AtomicU64::new(0),
+            replayed: stats.loaded as u64,
         };
         Ok((store, stats))
     }
@@ -351,6 +362,8 @@ impl CacheStore for LogStore {
                     self.path.display())
             })?;
         }
+        self.appends.fetch_add(1, Ordering::Relaxed);
+        self.fsyncs.fetch_add(1, Ordering::Relaxed);
         self.inner.put(fingerprint, metrics)
     }
 
@@ -399,7 +412,17 @@ impl CacheStore for LogStore {
             .map_err(|e| {
                 format!("cache log {}: {e}", self.path.display())
             })?;
+        self.fsyncs.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    fn obs(&self) -> StoreObs {
+        StoreObs {
+            wal_appends: self.appends.load(Ordering::Relaxed),
+            wal_fsyncs: self.fsyncs.load(Ordering::Relaxed),
+            wal_replayed: self.replayed,
+            ..StoreObs::default()
+        }
     }
 }
 
@@ -484,6 +507,30 @@ mod tests {
         assert_eq!(stats.loaded, 2);
         assert_eq!(stats.truncated_bytes, 0);
         assert_eq!(store.list().unwrap(), vec!["fp_a", "fp_b"]);
+    }
+
+    #[test]
+    fn obs_counts_appends_fsyncs_and_replays() {
+        let path = tmp_log("obs");
+        let _ = fs::remove_file(&path);
+        {
+            let (store, _) = LogStore::open(&path).unwrap();
+            assert_eq!(store.obs(), StoreObs::default());
+            store.put("fp_a", &metrics(7)).unwrap();
+            store.put("fp_b", &metrics(8)).unwrap();
+            let o = store.obs();
+            assert_eq!(o.wal_appends, 2);
+            assert_eq!(o.wal_fsyncs, 2);
+            assert_eq!(o.wal_replayed, 0);
+            assert_eq!(o.degraded_gets, 0);
+        }
+        // A reopen replays what was appended; its own counters restart.
+        let (store, _) = LogStore::open(&path).unwrap();
+        let o = store.obs();
+        assert_eq!(o.wal_replayed, 2);
+        assert_eq!(o.wal_appends, 0);
+        store.compact().unwrap();
+        assert_eq!(store.obs().wal_fsyncs, 1);
     }
 
     #[test]

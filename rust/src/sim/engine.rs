@@ -10,6 +10,7 @@
 
 use crate::policies::Policy;
 use crate::sim::metrics::RunMetrics;
+use crate::telemetry::CumStats;
 use crate::workloads::{Op, Workload};
 
 /// Engine configuration.
@@ -35,6 +36,23 @@ pub struct RunOutcome {
     /// Policy name for reporting.
     pub policy: &'static str,
     pub workload: String,
+}
+
+/// Cumulative machine counters at an epoch boundary; the telemetry sink
+/// differences consecutive snapshots into per-epoch deltas.
+fn cum_stats(policy: &dyn Policy, retired: &[u64]) -> CumStats {
+    let m = policy.machine();
+    CumStats {
+        instructions: retired.iter().sum(),
+        tlb_misses: m.tlbs.iter()
+            .map(|t| t.misses_4k() + t.misses_2m())
+            .sum(),
+        migrated_bytes: m.metrics.migrated_bytes,
+        dram_row_hits: m.mem.dram.stats.row_hits,
+        dram_row_misses: m.mem.dram.stats.row_misses,
+        nvm_row_hits: m.mem.nvm.stats.row_hits,
+        nvm_row_misses: m.mem.nvm.stats.row_misses,
+    }
 }
 
 /// Run `workload` under `policy` for `cfg.instructions` instructions.
@@ -88,6 +106,15 @@ pub fn run(policy: &mut dyn Policy, workload: &mut Workload,
             let os_start = *clock.iter().max().unwrap();
             let os_cycles = policy.on_interval(os_start);
             workload.advance_phase();
+            // Epoch telemetry: one time-series sample per interval,
+            // stamped with the deterministic simulated clock. The
+            // cumulative snapshot lives here (not in the sink) so the
+            // sink stays policy-agnostic.
+            let util_bp =
+                (policy.dram_utilization() * 10_000.0).round() as u64;
+            let cum = cum_stats(policy, &retired);
+            policy.machine_mut().tel.epoch_roll(os_start + os_cycles,
+                                                os_cycles, cum, util_bp);
             // Stop-the-world: OS work extends every core's timeline.
             for c in clock.iter_mut() {
                 *c += os_cycles;
@@ -170,6 +197,30 @@ mod tests {
         assert_eq!(a.metrics.cycles, b.metrics.cycles);
         assert_eq!(a.metrics.mem_ops, b.metrics.mem_ops);
         assert!((a.metrics.energy_pj - b.metrics.energy_pj).abs() < 1e-6);
+    }
+
+    #[test]
+    fn epoch_series_recorded_when_enabled() {
+        let cfg = small_cfg();
+        let mut w = small_workload(&cfg);
+        let mut p = from_name("rainbow", &cfg, false).unwrap();
+        p.machine_mut().tel.enable(4096, 1024);
+        let out = run(p.as_mut(), &mut w,
+                      &EngineConfig::new(400_000, cfg.interval_cycles));
+        let tel = &p.machine().tel;
+        assert!(tel.epochs() > 0, "intervals must have fired");
+        let series: Vec<_> = tel.series().collect();
+        assert_eq!(series.len() as u64, tel.epochs());
+        // Samples are cycle-ordered and the deltas roll up to no more
+        // than the run totals.
+        for pair in series.windows(2) {
+            assert!(pair[0].cycle <= pair[1].cycle);
+            assert_eq!(pair[0].epoch + 1, pair[1].epoch);
+        }
+        let instr: u64 = series.iter().map(|s| s.instructions).sum();
+        assert!(instr <= out.metrics.instructions);
+        let mig: u64 = series.iter().map(|s| s.migrated_bytes).sum();
+        assert!(mig <= out.metrics.migrated_bytes);
     }
 
     #[test]

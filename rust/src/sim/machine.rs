@@ -5,6 +5,7 @@
 use crate::cache::CacheHierarchy;
 use crate::config::Config;
 use crate::mem::HybridMemory;
+use crate::telemetry::Telemetry;
 use crate::tlb::{CoreTlbs, Walker, WalkerConfig};
 
 use super::metrics::RunMetrics;
@@ -25,6 +26,11 @@ pub struct Machine {
     /// Walker for superpage tables (may target a different device).
     pub sp_walker: Walker,
     pub metrics: RunMetrics,
+    /// Cycle-stamped telemetry sink. The latency histograms are always
+    /// on (they feed the quantiles in [`RunMetrics`]); event/series
+    /// rings record only after `tel.enable(..)` — see
+    /// [`crate::telemetry`].
+    pub tel: Telemetry,
 }
 
 impl Machine {
@@ -58,6 +64,7 @@ impl Machine {
             walker,
             sp_walker,
             metrics: RunMetrics::default(),
+            tel: Telemetry::default(),
         }
     }
 
@@ -115,6 +122,12 @@ impl Machine {
             self.tlbs.iter().map(|t| t.sp_hit_rate()).collect();
         m.sp_hit_rate =
             rates.iter().sum::<f64>() / rates.len().max(1) as f64;
+        m.mig_lat_p50 = self.tel.mig_hist.quantile(50);
+        m.mig_lat_p95 = self.tel.mig_hist.quantile(95);
+        m.mig_lat_p99 = self.tel.mig_hist.quantile(99);
+        m.ptw_lat_p50 = self.tel.ptw_hist.quantile(50);
+        m.ptw_lat_p95 = self.tel.ptw_hist.quantile(95);
+        m.ptw_lat_p99 = self.tel.ptw_hist.quantile(99);
     }
 }
 

@@ -93,6 +93,16 @@ pub struct RunMetrics {
     /// Cycles cores spent stalled on memory (cache miss path).
     pub mem_stall_cycles: u64,
     pub llc_misses: u64,
+
+    // Latency quantiles from the always-on telemetry histograms
+    // (`telemetry::Hist` upper-bound-of-bucket convention: each value
+    // is the power-of-two bucket bound holding the nearest rank).
+    pub mig_lat_p50: u64,
+    pub mig_lat_p95: u64,
+    pub mig_lat_p99: u64,
+    pub ptw_lat_p50: u64,
+    pub ptw_lat_p95: u64,
+    pub ptw_lat_p99: u64,
 }
 
 impl RunMetrics {

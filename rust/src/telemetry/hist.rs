@@ -1,0 +1,230 @@
+//! Power-of-two-bucket latency histogram with mergeable quantiles.
+//!
+//! Bucket `i` (i >= 1) holds values in `[2^(i-1), 2^i)`; bucket 0 holds
+//! zero. 65 buckets cover the full `u64` range, so `record` is a
+//! leading-zeros count plus one array increment — cheap enough to stay
+//! always-on in the simulator's migration and page-walk paths. Merging
+//! is element-wise addition, which makes quantiles associative across
+//! shards/workers: `quantile(merge(a, b)) == quantile(merge(b, a))` and
+//! grouping does not matter (property-tested below).
+//!
+//! Quantiles are reported as the *upper bound* of the bucket containing
+//! the requested rank, so for any true value `v` the reported quantile
+//! `q` satisfies `v <= q <= 2v + 1` — a bounded, deterministic
+//! overestimate that never invents precision the buckets don't have.
+
+/// Number of buckets: one for zero plus one per bit position.
+pub const BUCKETS: usize = 65;
+
+#[derive(Clone, Debug)]
+pub struct Hist {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist { buckets: [0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Bucket index of `v`: its significant-bit count (0 for zero).
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Upper bound of bucket `i` (the value a quantile in it reports).
+    fn bound_of(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            64 => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Element-wise merge (shard/worker aggregation).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The `pct`-th percentile (1..=100) as the upper bound of the
+    /// bucket holding that rank; 0 when the histogram is empty.
+    /// Integer math throughout so shards agree bit-for-bit.
+    pub fn quantile(&self, pct: u64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let pct = pct.clamp(1, 100);
+        // Nearest-rank: the smallest rank r with r >= count * pct / 100.
+        let rank = (self.count * pct).div_ceil(100).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bound_of(i);
+            }
+        }
+        Self::bound_of(BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    fn hist_of(vals: &[u64]) -> Hist {
+        let mut h = Hist::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h
+    }
+
+    /// Sorted-vec reference model: nearest-rank percentile.
+    fn model_quantile(vals: &[u64], pct: u64) -> u64 {
+        if vals.is_empty() {
+            return 0;
+        }
+        let mut s = vals.to_vec();
+        s.sort_unstable();
+        let rank = ((vals.len() as u64 * pct).div_ceil(100)).max(1);
+        s[(rank - 1) as usize]
+    }
+
+    fn gen_vals(rng: &mut Rng) -> Vec<u64> {
+        let n = (rng.next_u64() % 64) as usize;
+        (0..n)
+            .map(|_| {
+                let bits = rng.next_u64() % 40;
+                rng.next_u64() & ((1u64 << bits.max(1)) - 1)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(50), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn single_value_quantiles() {
+        let h = hist_of(&[100]);
+        for pct in [1, 50, 99, 100] {
+            let q = h.quantile(pct);
+            assert!((100..=201).contains(&q), "pct {pct}: q={q}");
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_are_powers_of_two() {
+        assert_eq!(Hist::bound_of(0), 0);
+        assert_eq!(Hist::bound_of(1), 1);
+        assert_eq!(Hist::bound_of(10), 1023);
+        assert_eq!(Hist::bound_of(64), u64::MAX);
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        assert_eq!(Hist::bucket_of(1023), 10);
+        assert_eq!(Hist::bucket_of(1024), 11);
+    }
+
+    #[test]
+    fn prop_quantile_bounded_by_sorted_vec_model() {
+        forall("hist quantile vs model", 0x51ab, 300, gen_vals, |vals| {
+            let h = hist_of(vals);
+            for pct in [50, 95, 99] {
+                let q = h.quantile(pct);
+                let m = model_quantile(vals, pct);
+                // Upper-bound-of-bucket reporting: m <= q <= 2m + 1.
+                if q < m || q > m.saturating_mul(2).saturating_add(1) {
+                    return Err(format!(
+                        "pct {pct}: hist {q} outside [{m}, {}]",
+                        m.saturating_mul(2).saturating_add(1)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_merge_associative_and_commutative() {
+        let gen = |rng: &mut Rng| {
+            (gen_vals(rng), gen_vals(rng), gen_vals(rng))
+        };
+        forall("hist merge assoc", 0x9e37, 300, gen, |(a, b, c)| {
+            let (ha, hb, hc) = (hist_of(a), hist_of(b), hist_of(c));
+            // (a + b) + c
+            let mut left = ha.clone();
+            left.merge(&hb);
+            left.merge(&hc);
+            // a + (b + c)
+            let mut bc = hb.clone();
+            bc.merge(&hc);
+            let mut right = ha.clone();
+            right.merge(&bc);
+            // b + a + c (commuted)
+            let mut comm = hb.clone();
+            comm.merge(&ha);
+            comm.merge(&hc);
+            for pct in [50, 95, 99, 100] {
+                if left.quantile(pct) != right.quantile(pct)
+                    || left.quantile(pct) != comm.quantile(pct)
+                {
+                    return Err(format!("pct {pct} differs across groupings"));
+                }
+            }
+            if left.count() != right.count() || left.count() != comm.count() {
+                return Err("counts differ".to_string());
+            }
+            // Merged hist == hist of concatenated samples.
+            let mut all = a.clone();
+            all.extend_from_slice(b);
+            all.extend_from_slice(c);
+            let whole = hist_of(&all);
+            if whole.quantile(95) != left.quantile(95)
+                || whole.sum() != left.sum()
+                || whole.max() != left.max()
+            {
+                return Err("merge != concat".to_string());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,354 @@
+//! Deterministic simulation telemetry (DESIGN.md §14).
+//!
+//! A [`Telemetry`] sink lives in every [`Machine`](crate::sim::machine::Machine)
+//! and observes the run without perturbing it: recording is keyed off
+//! the simulated cycle clock only (never wall time, so traces are
+//! byte-identical across reruns and compatible with the `nondet-clock`
+//! lint), and the sink never feeds back into timing — metrics from a
+//! traced run equal metrics from an untraced run bit-for-bit, which
+//! `rust/tests/sweep_determinism.rs` pins.
+//!
+//! Two cost classes:
+//! * **Always-on**: the migration- and page-walk-latency [`Hist`]s.
+//!   Recording is a leading-zeros count and two adds per (rare)
+//!   migration or walk; their p50/p95/p99 land in `RunMetrics`.
+//! * **Off-by-default**: cycle-stamped [`Event`]s and per-epoch
+//!   [`EpochSample`]s into fixed-capacity ring buffers, pre-allocated
+//!   once by [`Telemetry::enable`] — the hot path never allocates, and
+//!   when disabled every record call is a single branch (measured by
+//!   the `telemetry.record_off` perf stage, budgeted <2%).
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::Hist;
+
+/// Version of the JSON-lines trace record format emitted by
+/// `run --trace-out` and read back by `rainbow trace-summary`. Bump on
+/// any incompatible change ([`Event`], [`EpochSample`], and
+/// [`TraceMeta`] are schema-locked against it in `rust/schemas.lock`).
+pub const TRACE_VERSION: u64 = 1;
+
+/// Default event ring capacity (per run).
+pub const DEFAULT_EVENT_CAP: usize = 65_536;
+/// Default epoch-series ring capacity (per run).
+pub const DEFAULT_SERIES_CAP: usize = 8_192;
+
+/// What happened, encoded small enough to record on hot paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Bulk page copy issued (`a` = source page number, `b` = dest
+    /// page number). NVM→DRAM is a migration, DRAM→NVM a writeback.
+    MigrationStart,
+    /// Bulk page copy retired (`a` = dest page number, `b` = copy
+    /// latency in cycles).
+    MigrationDone,
+    /// TLB shootdown broadcast (`a` = virtual page number, `b` = cores
+    /// that actually held the entry).
+    Shootdown,
+    /// Two-stage counter rotation at an interval boundary (`a` = pages
+    /// monitored next interval).
+    CounterRotate,
+    /// Sampling-interval boundary crossed (`a` = epoch index, `b` = OS
+    /// cycles charged stop-the-world).
+    EpochRoll,
+}
+
+impl EventKind {
+    /// Stable wire name (the `kind` field of a trace `event` record).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::MigrationStart => "migration_start",
+            EventKind::MigrationDone => "migration_done",
+            EventKind::Shootdown => "shootdown",
+            EventKind::CounterRotate => "counter_rotate",
+            EventKind::EpochRoll => "epoch_roll",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EventKind> {
+        Some(match s {
+            "migration_start" => EventKind::MigrationStart,
+            "migration_done" => EventKind::MigrationDone,
+            "shootdown" => EventKind::Shootdown,
+            "counter_rotate" => EventKind::CounterRotate,
+            "epoch_roll" => EventKind::EpochRoll,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [EventKind; 5] = [
+        EventKind::MigrationStart,
+        EventKind::MigrationDone,
+        EventKind::Shootdown,
+        EventKind::CounterRotate,
+        EventKind::EpochRoll,
+    ];
+}
+
+/// One cycle-stamped trace event. `a`/`b` are kind-specific arguments
+/// (see [`EventKind`]); fixed-width so the ring is allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub cycle: u64,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Per-epoch time-series snapshot: deltas over one sampling interval,
+/// taken at the interval boundary by the engine. Counters are raw
+/// deltas (readers derive IPC/MPKI); `dram_util_bp` is the DRAM-tier
+/// frame occupancy in basis points (0..=10000) at the boundary —
+/// fixed-point so records carry no floats.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EpochSample {
+    pub epoch: u64,
+    /// Cycle of the interval boundary (before OS work).
+    pub cycle: u64,
+    pub instructions: u64,
+    pub tlb_misses: u64,
+    pub migrated_bytes: u64,
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+    pub nvm_row_hits: u64,
+    pub nvm_row_misses: u64,
+    pub dram_util_bp: u64,
+}
+
+/// Cumulative machine counters the engine hands to
+/// [`Telemetry::epoch_roll`]; the sink differences them against the
+/// previous boundary to produce an [`EpochSample`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CumStats {
+    pub instructions: u64,
+    pub tlb_misses: u64,
+    pub migrated_bytes: u64,
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+    pub nvm_row_hits: u64,
+    pub nvm_row_misses: u64,
+}
+
+/// Fixed-capacity overwrite-oldest ring. Deterministic: contents are a
+/// pure function of the recorded sequence and the capacity.
+#[derive(Clone, Debug)]
+struct Ring<T> {
+    buf: Vec<T>,
+    head: usize,
+    total: u64,
+    cap: usize,
+}
+
+// Manual impl: the derive would demand `T: Default` even though an
+// empty ring needs no element values.
+impl<T> Default for Ring<T> {
+    fn default() -> Ring<T> {
+        Ring { buf: Vec::new(), head: 0, total: 0, cap: 0 }
+    }
+}
+
+impl<T: Copy> Ring<T> {
+    fn with_capacity(cap: usize) -> Ring<T> {
+        Ring { buf: Vec::with_capacity(cap), head: 0, total: 0, cap }
+    }
+
+    #[inline]
+    fn push(&mut self, v: T) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else if self.cap > 0 {
+            self.buf[self.head] = v;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Oldest-to-newest iteration.
+    fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Records pushed but no longer held (overwritten by wraparound).
+    fn dropped(&self) -> u64 {
+        self.total - self.buf.len() as u64
+    }
+}
+
+/// The per-run telemetry sink. One per [`Machine`]; see the module
+/// docs for the always-on vs off-by-default split.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    enabled: bool,
+    /// Migration/writeback bulk-copy latency (cycles), always-on.
+    pub mig_hist: Hist,
+    /// Page-table / superpage-table walk latency (cycles), always-on.
+    pub ptw_hist: Hist,
+    events: Ring<Event>,
+    series: Ring<EpochSample>,
+    epoch: u64,
+    prev: CumStats,
+}
+
+impl Telemetry {
+    /// Turn on event/series recording, pre-allocating the rings. The
+    /// one allocation site — everything after this is ring writes.
+    pub fn enable(&mut self, event_cap: usize, series_cap: usize) {
+        self.enabled = true;
+        self.events = Ring::with_capacity(event_cap);
+        self.series = Ring::with_capacity(series_cap);
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record a cycle-stamped event. One branch when disabled.
+    #[inline]
+    pub fn event(&mut self, cycle: u64, kind: EventKind, a: u64, b: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push(Event { cycle, kind, a, b });
+    }
+
+    /// Interval-boundary hook (engine): stamps an `epoch_roll` event
+    /// and differences `cum` against the previous boundary into an
+    /// [`EpochSample`]. `cycle` is the boundary cycle, `os_cycles` the
+    /// stop-the-world OS charge, `dram_util_bp` the policy's DRAM
+    /// occupancy in basis points.
+    pub fn epoch_roll(&mut self, cycle: u64, os_cycles: u64, cum: CumStats,
+                      dram_util_bp: u64) {
+        let epoch = self.epoch;
+        self.epoch += 1;
+        if !self.enabled {
+            return;
+        }
+        let p = self.prev;
+        self.series.push(EpochSample {
+            epoch,
+            cycle,
+            instructions: cum.instructions - p.instructions,
+            tlb_misses: cum.tlb_misses - p.tlb_misses,
+            migrated_bytes: cum.migrated_bytes - p.migrated_bytes,
+            dram_row_hits: cum.dram_row_hits - p.dram_row_hits,
+            dram_row_misses: cum.dram_row_misses - p.dram_row_misses,
+            nvm_row_hits: cum.nvm_row_hits - p.nvm_row_hits,
+            nvm_row_misses: cum.nvm_row_misses - p.nvm_row_misses,
+            dram_util_bp,
+        });
+        self.prev = cum;
+        self.events.push(Event {
+            cycle,
+            kind: EventKind::EpochRoll,
+            a: epoch,
+            b: os_cycles,
+        });
+    }
+
+    /// Epochs completed so far (counted even when disabled, so traced
+    /// and untraced runs tick identically).
+    pub fn epochs(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter()
+    }
+
+    pub fn series(&self) -> impl Iterator<Item = &EpochSample> {
+        self.series.iter()
+    }
+
+    pub fn events_held(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events_dropped(&self) -> u64 {
+        self.events.dropped()
+    }
+
+    pub fn series_dropped(&self) -> u64 {
+        self.series.dropped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing_but_counts_epochs() {
+        let mut t = Telemetry::default();
+        assert!(!t.enabled());
+        t.event(10, EventKind::Shootdown, 1, 2);
+        t.epoch_roll(100, 5, CumStats::default(), 0);
+        assert_eq!(t.events_held(), 0);
+        assert_eq!(t.series().count(), 0);
+        assert_eq!(t.epochs(), 1);
+    }
+
+    #[test]
+    fn enabled_sink_stamps_events_in_order() {
+        let mut t = Telemetry::default();
+        t.enable(8, 8);
+        t.event(5, EventKind::MigrationStart, 100, 7);
+        t.event(9, EventKind::MigrationDone, 7, 4);
+        let ev: Vec<Event> = t.events().copied().collect();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].cycle, 5);
+        assert_eq!(ev[0].kind, EventKind::MigrationStart);
+        assert_eq!(ev[1].b, 4);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut t = Telemetry::default();
+        t.enable(4, 4);
+        for i in 0..10u64 {
+            t.event(i, EventKind::Shootdown, i, 0);
+        }
+        assert_eq!(t.events_held(), 4);
+        assert_eq!(t.events_dropped(), 6);
+        let cycles: Vec<u64> = t.events().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![6, 7, 8, 9], "oldest-to-newest survivors");
+    }
+
+    #[test]
+    fn epoch_roll_differences_cumulative_counters() {
+        let mut t = Telemetry::default();
+        t.enable(16, 16);
+        t.epoch_roll(1000, 50, CumStats {
+            instructions: 500, tlb_misses: 10, migrated_bytes: 4096,
+            ..Default::default()
+        }, 2500);
+        t.epoch_roll(2000, 60, CumStats {
+            instructions: 900, tlb_misses: 25, migrated_bytes: 4096,
+            ..Default::default()
+        }, 5000);
+        let s: Vec<EpochSample> = t.series().copied().collect();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].epoch, 0);
+        assert_eq!(s[0].instructions, 500);
+        assert_eq!(s[1].instructions, 400, "second epoch is a delta");
+        assert_eq!(s[1].tlb_misses, 15);
+        assert_eq!(s[1].migrated_bytes, 0);
+        assert_eq!(s[1].dram_util_bp, 5000);
+        // Each roll also stamps an epoch_roll event.
+        assert_eq!(
+            t.events().filter(|e| e.kind == EventKind::EpochRoll).count(), 2);
+    }
+
+    #[test]
+    fn event_kind_names_round_trip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,362 @@
+//! JSON-lines trace emission and strict read-back.
+//!
+//! `rainbow run --trace-out PATH` writes one compact JSON document per
+//! line through [`crate::util::json`]; `rainbow trace-summary PATH`
+//! parses it back with the strict reader here, which doubles as the
+//! schema validator the CI `trace-smoke` job runs. Record catalog
+//! (documented in `docs/MANUAL.md` §Observability):
+//!
+//! * `meta`    — one per file, first line: trace version + run identity.
+//! * `epoch`   — one per sampling interval: [`EpochSample`] deltas.
+//! * `event`   — one per held ring entry: [`Event`] (cycle, kind, a, b).
+//! * `summary` — one per file, last line: end-of-run scalars and the
+//!   mergeable latency quantiles.
+//!
+//! Emission is deterministic: records are ordered (meta, epochs by
+//! epoch index, events oldest-to-newest, summary) and every number is
+//! an exact integer except the summary's `ipc`, so two runs of the
+//! same spec produce byte-identical files (pinned in
+//! `rust/tests/sweep_determinism.rs`).
+
+use crate::sim::metrics::RunMetrics;
+use crate::util::json::Json;
+
+use super::{EpochSample, Event, EventKind, Telemetry, TRACE_VERSION};
+
+/// Run-identity header of a trace file (the `meta` record). Schema-
+/// locked against [`TRACE_VERSION`] in `rust/schemas.lock`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceMeta {
+    pub workload: String,
+    pub policy: String,
+    /// Spec fingerprint (cache identity of the run).
+    pub fingerprint: String,
+    pub interval_cycles: u64,
+    pub instructions: u64,
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn meta_line(meta: &TraceMeta, tel: &Telemetry) -> Json {
+    obj(vec![
+        ("type", Json::Str("meta".into())),
+        ("traceversion", num(TRACE_VERSION)),
+        ("workload", Json::Str(meta.workload.clone())),
+        ("policy", Json::Str(meta.policy.clone())),
+        ("fingerprint", Json::Str(meta.fingerprint.clone())),
+        ("interval_cycles", num(meta.interval_cycles)),
+        ("instructions", num(meta.instructions)),
+        ("events_dropped", num(tel.events_dropped())),
+        ("epochs_dropped", num(tel.series_dropped())),
+    ])
+}
+
+fn epoch_line(s: &EpochSample) -> Json {
+    obj(vec![
+        ("type", Json::Str("epoch".into())),
+        ("epoch", num(s.epoch)),
+        ("cycle", num(s.cycle)),
+        ("instructions", num(s.instructions)),
+        ("tlb_misses", num(s.tlb_misses)),
+        ("migrated_bytes", num(s.migrated_bytes)),
+        ("dram_row_hits", num(s.dram_row_hits)),
+        ("dram_row_misses", num(s.dram_row_misses)),
+        ("nvm_row_hits", num(s.nvm_row_hits)),
+        ("nvm_row_misses", num(s.nvm_row_misses)),
+        ("dram_util_bp", num(s.dram_util_bp)),
+    ])
+}
+
+fn event_line(e: &Event) -> Json {
+    obj(vec![
+        ("type", Json::Str("event".into())),
+        ("cycle", num(e.cycle)),
+        ("kind", Json::Str(e.kind.name().into())),
+        ("a", num(e.a)),
+        ("b", num(e.b)),
+    ])
+}
+
+fn summary_line(m: &RunMetrics, tel: &Telemetry) -> Json {
+    obj(vec![
+        ("type", Json::Str("summary".into())),
+        ("cycles", num(m.cycles)),
+        ("instructions", num(m.instructions)),
+        ("ipc", Json::Num(m.ipc())),
+        ("migrations", num(m.migrations)),
+        ("migrated_bytes", num(m.migrated_bytes)),
+        ("shootdowns", num(m.shootdowns)),
+        ("mig_lat_p50", num(m.mig_lat_p50)),
+        ("mig_lat_p95", num(m.mig_lat_p95)),
+        ("mig_lat_p99", num(m.mig_lat_p99)),
+        ("ptw_lat_p50", num(m.ptw_lat_p50)),
+        ("ptw_lat_p95", num(m.ptw_lat_p95)),
+        ("ptw_lat_p99", num(m.ptw_lat_p99)),
+        ("events_total", num(tel.events_held() as u64
+            + tel.events_dropped())),
+        ("epochs", num(tel.epochs())),
+    ])
+}
+
+/// Render a complete trace: meta, epochs, events, summary — one
+/// compact JSON document per line.
+pub fn render_trace(meta: &TraceMeta, metrics: &RunMetrics,
+                    tel: &Telemetry) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str(&meta_line(meta, tel).compact());
+    out.push('\n');
+    for s in tel.series() {
+        out.push_str(&epoch_line(s).compact());
+        out.push('\n');
+    }
+    for e in tel.events() {
+        out.push_str(&event_line(e).compact());
+        out.push('\n');
+    }
+    out.push_str(&summary_line(metrics, tel).compact());
+    out.push('\n');
+    out
+}
+
+/// Everything a strict read of a trace file yields.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub meta: TraceMeta,
+    pub epochs: Vec<EpochSample>,
+    pub events: Vec<Event>,
+    /// Event counts indexed like [`EventKind::ALL`].
+    pub event_counts: [u64; EventKind::ALL.len()],
+    pub cycles: u64,
+    pub run_instructions: u64,
+    pub ipc: f64,
+    pub migrations: u64,
+    pub mig_lat_p99: u64,
+    pub ptw_lat_p99: u64,
+}
+
+fn req_u64(j: &Json, key: &str, line: usize) -> Result<u64, String> {
+    j.get(key).and_then(Json::as_u64).ok_or_else(|| {
+        format!("trace line {line}: missing or non-integer {key:?}")
+    })
+}
+
+fn req_str(j: &Json, key: &str, line: usize) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| {
+            format!("trace line {line}: missing or non-string {key:?}")
+        })
+}
+
+/// Strict parse of a JSON-lines trace: every line must be valid JSON,
+/// every record type known with all required fields present and typed,
+/// the `meta` record first (with a matching `traceversion`) and the
+/// `summary` record last. This is the locked-schema validation the CI
+/// `trace-smoke` job runs over emitted traces.
+pub fn read_trace(text: &str) -> Result<TraceSummary, String> {
+    let mut out = TraceSummary::default();
+    let mut saw_meta = false;
+    let mut saw_summary = false;
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        if line.trim().is_empty() {
+            return Err(format!("trace line {lineno}: blank line"));
+        }
+        let j = crate::util::json::parse(line)
+            .map_err(|e| format!("trace line {lineno}: {e}"))?;
+        if saw_summary {
+            return Err(format!(
+                "trace line {lineno}: records after the summary"));
+        }
+        let ty = req_str(&j, "type", lineno)?;
+        match ty.as_str() {
+            "meta" => {
+                if saw_meta {
+                    return Err(format!(
+                        "trace line {lineno}: duplicate meta record"));
+                }
+                if lineno != 1 {
+                    return Err(format!(
+                        "trace line {lineno}: meta must be the first line"));
+                }
+                let v = req_u64(&j, "traceversion", lineno)?;
+                if v != TRACE_VERSION {
+                    return Err(format!(
+                        "trace version {v} unsupported \
+                         (expected {TRACE_VERSION})"));
+                }
+                out.meta = TraceMeta {
+                    workload: req_str(&j, "workload", lineno)?,
+                    policy: req_str(&j, "policy", lineno)?,
+                    fingerprint: req_str(&j, "fingerprint", lineno)?,
+                    interval_cycles: req_u64(&j, "interval_cycles", lineno)?,
+                    instructions: req_u64(&j, "instructions", lineno)?,
+                };
+                saw_meta = true;
+            }
+            "epoch" => {
+                if !saw_meta {
+                    return Err(format!(
+                        "trace line {lineno}: epoch before meta"));
+                }
+                out.epochs.push(EpochSample {
+                    epoch: req_u64(&j, "epoch", lineno)?,
+                    cycle: req_u64(&j, "cycle", lineno)?,
+                    instructions: req_u64(&j, "instructions", lineno)?,
+                    tlb_misses: req_u64(&j, "tlb_misses", lineno)?,
+                    migrated_bytes: req_u64(&j, "migrated_bytes", lineno)?,
+                    dram_row_hits: req_u64(&j, "dram_row_hits", lineno)?,
+                    dram_row_misses: req_u64(&j, "dram_row_misses", lineno)?,
+                    nvm_row_hits: req_u64(&j, "nvm_row_hits", lineno)?,
+                    nvm_row_misses: req_u64(&j, "nvm_row_misses", lineno)?,
+                    dram_util_bp: req_u64(&j, "dram_util_bp", lineno)?,
+                });
+            }
+            "event" => {
+                if !saw_meta {
+                    return Err(format!(
+                        "trace line {lineno}: event before meta"));
+                }
+                let kind_name = req_str(&j, "kind", lineno)?;
+                let kind =
+                    EventKind::from_name(&kind_name).ok_or_else(|| {
+                        format!("trace line {lineno}: unknown event kind \
+                                 {kind_name:?}")
+                    })?;
+                let idx = EventKind::ALL
+                    .iter()
+                    .position(|k| *k == kind)
+                    .expect("kind came from ALL");
+                out.event_counts[idx] += 1;
+                out.events.push(Event {
+                    cycle: req_u64(&j, "cycle", lineno)?,
+                    kind,
+                    a: req_u64(&j, "a", lineno)?,
+                    b: req_u64(&j, "b", lineno)?,
+                });
+            }
+            "summary" => {
+                out.cycles = req_u64(&j, "cycles", lineno)?;
+                out.run_instructions = req_u64(&j, "instructions", lineno)?;
+                out.ipc = j
+                    .get("ipc")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!(
+                        "trace line {lineno}: missing or non-number \"ipc\""))?;
+                out.migrations = req_u64(&j, "migrations", lineno)?;
+                out.mig_lat_p99 = req_u64(&j, "mig_lat_p99", lineno)?;
+                out.ptw_lat_p99 = req_u64(&j, "ptw_lat_p99", lineno)?;
+                saw_summary = true;
+            }
+            other => {
+                return Err(format!(
+                    "trace line {lineno}: unknown record type {other:?}"));
+            }
+        }
+    }
+    if !saw_meta {
+        return Err("trace: no meta record (empty file?)".to_string());
+    }
+    if !saw_summary {
+        return Err("trace: missing summary record (truncated?)".to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::CumStats;
+
+    fn sample_trace() -> String {
+        let mut tel = Telemetry::default();
+        tel.enable(16, 16);
+        tel.event(5, EventKind::MigrationStart, 9, 2);
+        tel.event(11, EventKind::MigrationDone, 2, 6);
+        tel.event(40, EventKind::Shootdown, 77, 3);
+        tel.epoch_roll(100, 9, CumStats {
+            instructions: 50, tlb_misses: 4, migrated_bytes: 4096,
+            ..Default::default()
+        }, 1234);
+        let m = RunMetrics {
+            instructions: 50,
+            cycles: 109,
+            migrations: 1,
+            migrated_bytes: 4096,
+            mig_lat_p50: 7,
+            mig_lat_p95: 7,
+            mig_lat_p99: 7,
+            ptw_lat_p50: 31,
+            ptw_lat_p95: 63,
+            ptw_lat_p99: 63,
+            ..Default::default()
+        };
+        let meta = TraceMeta {
+            workload: "DICT".into(),
+            policy: "rainbow".into(),
+            fingerprint: "deadbeef".into(),
+            interval_cycles: 100,
+            instructions: 50,
+        };
+        render_trace(&meta, &m, &tel)
+    }
+
+    #[test]
+    fn render_and_read_round_trip() {
+        let text = sample_trace();
+        let s = read_trace(&text).unwrap();
+        assert_eq!(s.meta.workload, "DICT");
+        assert_eq!(s.meta.policy, "rainbow");
+        assert_eq!(s.epochs.len(), 1);
+        assert_eq!(s.epochs[0].tlb_misses, 4);
+        assert_eq!(s.epochs[0].dram_util_bp, 1234);
+        // 3 explicit events + the epoch_roll stamped by epoch_roll().
+        assert_eq!(s.events.len(), 4);
+        assert_eq!(s.mig_lat_p99, 7);
+        assert_eq!(s.ptw_lat_p99, 63);
+        assert!((s.ipc - 50.0 / 109.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        assert_eq!(sample_trace(), sample_trace());
+    }
+
+    #[test]
+    fn reader_rejects_malformed_traces() {
+        let text = sample_trace();
+        // Truncation (summary lost).
+        let no_summary: String = text
+            .lines()
+            .take(text.lines().count() - 1)
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(read_trace(&no_summary).unwrap_err().contains("summary"));
+        // Unknown record type.
+        let bad = text.replace("\"type\":\"epoch\"", "\"type\":\"wat\"");
+        assert!(read_trace(&bad).unwrap_err().contains("unknown record"));
+        // Unknown event kind.
+        let bad = text.replace("\"kind\":\"shootdown\"",
+                               "\"kind\":\"teleport\"");
+        assert!(read_trace(&bad).unwrap_err().contains("unknown event kind"));
+        // Missing required field.
+        let bad = text.replace("\"tlb_misses\":4,", "");
+        assert!(read_trace(&bad).unwrap_err().contains("tlb_misses"));
+        // Wrong version.
+        let bad = text.replace(
+            &format!("\"traceversion\":{TRACE_VERSION}"),
+            "\"traceversion\":999");
+        assert!(read_trace(&bad).unwrap_err().contains("unsupported"));
+        // Not JSON at all.
+        assert!(read_trace("nope\n").is_err());
+        // Empty.
+        assert!(read_trace("").unwrap_err().contains("no meta"));
+    }
+}

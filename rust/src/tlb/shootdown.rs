@@ -8,6 +8,7 @@
 //! `t_shootdown` from the config as the 8-core full-broadcast cost.
 
 use crate::config::Config;
+use crate::telemetry::{EventKind, Telemetry};
 
 use super::split::CoreTlbs;
 
@@ -19,12 +20,15 @@ pub struct ShootdownStats {
 }
 
 /// Broadcast invalidation of a 4 KB translation across all cores.
-/// Returns the cycles charged to the initiating core.
+/// Returns the cycles charged to the initiating core. Stamps a
+/// `shootdown` telemetry event (vpn + holder count) when enabled.
 pub fn shootdown_4k(
     cfg: &Config,
     tlbs: &mut [CoreTlbs],
     vpn: u64,
     stats: &mut ShootdownStats,
+    tel: &mut Telemetry,
+    now: u64,
 ) -> u64 {
     let mut present = 0u64;
     for t in tlbs.iter_mut() {
@@ -32,6 +36,7 @@ pub fn shootdown_4k(
             present += 1;
         }
     }
+    tel.event(now, EventKind::Shootdown, vpn, present);
     charge(cfg, present, stats)
 }
 
@@ -41,6 +46,8 @@ pub fn shootdown_2m(
     tlbs: &mut [CoreTlbs],
     vpn: u64,
     stats: &mut ShootdownStats,
+    tel: &mut Telemetry,
+    now: u64,
 ) -> u64 {
     let mut present = 0u64;
     for t in tlbs.iter_mut() {
@@ -48,6 +55,7 @@ pub fn shootdown_2m(
             present += 1;
         }
     }
+    tel.event(now, EventKind::Shootdown, vpn, present);
     charge(cfg, present, stats)
 }
 
@@ -74,9 +82,14 @@ mod tests {
             t.insert_4k(77, 700);
         }
         let mut st = ShootdownStats::default();
-        let c = shootdown_4k(&cfg, &mut tlbs, 77, &mut st);
+        let mut tel = Telemetry::default();
+        tel.enable(8, 8);
+        let c = shootdown_4k(&cfg, &mut tlbs, 77, &mut st, &mut tel, 42);
         assert!(c >= cfg.t_shootdown);
         assert_eq!(st.entries_invalidated, 4);
+        let ev: Vec<_> = tel.events().collect();
+        assert_eq!(ev.len(), 1);
+        assert_eq!((ev[0].cycle, ev[0].a, ev[0].b), (42, 77, 4));
         for t in &mut tlbs {
             assert_eq!(t.lookup(77 << 12).small.ppn, None);
         }
@@ -88,7 +101,8 @@ mod tests {
         let mut tlbs: Vec<CoreTlbs> =
             (0..2).map(|_| CoreTlbs::new(&cfg)).collect();
         let mut st = ShootdownStats::default();
-        let c = shootdown_2m(&cfg, &mut tlbs, 123, &mut st);
+        let c = shootdown_2m(&cfg, &mut tlbs, 123, &mut st,
+                             &mut Telemetry::default(), 0);
         assert_eq!(c, cfg.t_shootdown);
         assert_eq!(st.entries_invalidated, 0);
         assert_eq!(st.shootdowns, 1);

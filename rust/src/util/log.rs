@@ -1,0 +1,156 @@
+//! Leveled diagnostics sink for the report/fleet layer.
+//!
+//! Replaces the ad-hoc `eprintln!` warnings that used to be scattered
+//! through `report/{queue,replica,wal,netstore}.rs` (the `raw-eprintln`
+//! lint rule now bans them there). Three levels, filtered by the
+//! `RAINBOW_LOG` environment variable (`warn` | `info` | `debug`;
+//! unset or unknown means `warn`, preserving the old always-on warning
+//! behaviour). Output goes to stderr so machine-readable stdout
+//! (tables, JSON traces) stays clean.
+//!
+//! Tests capture instead of printing: [`capture`] installs a global
+//! buffer for the duration of a closure and returns every message
+//! emitted, bypassing the level filter so assertions do not depend on
+//! the caller's environment. Captures are serialized by a global gate
+//! so parallel tests cannot interleave buffers.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// Message severity, most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Warn = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+impl Level {
+    /// Stderr prefix for the level.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Warn => "warning",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Cached threshold: 0..=2 is a [`Level`], `UNSET` means the env var
+/// has not been consulted yet.
+const UNSET: u8 = u8::MAX;
+static THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+
+fn threshold() -> u8 {
+    let t = THRESHOLD.load(Ordering::Relaxed);
+    if t != UNSET {
+        return t;
+    }
+    let t = match std::env::var("RAINBOW_LOG").ok().as_deref() {
+        Some("debug") => Level::Debug as u8,
+        Some("info") => Level::Info as u8,
+        // Unset or unrecognized: warnings only, the old behaviour.
+        _ => Level::Warn as u8,
+    };
+    THRESHOLD.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Test-only capture buffer; `None` means "print to stderr".
+static CAPTURE: Mutex<Option<Vec<(Level, String)>>> = Mutex::new(None);
+/// Serializes concurrent [`capture`] calls (tests run in parallel).
+static CAPTURE_GATE: Mutex<()> = Mutex::new(());
+
+fn emit(level: Level, msg: &str) {
+    {
+        let mut cap = match CAPTURE.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(buf) = cap.as_mut() {
+            buf.push((level, msg.to_string()));
+            return;
+        }
+    }
+    if (level as u8) <= threshold() {
+        eprintln!("{}: {}", level.tag(), msg);
+    }
+}
+
+/// Something went wrong but the operation degraded instead of failing
+/// (replica down, stale log record, worker exit). Printed by default.
+pub fn warn(msg: &str) {
+    emit(Level::Warn, msg);
+}
+
+/// Progress and lifecycle notes (`RAINBOW_LOG=info`).
+pub fn info(msg: &str) {
+    emit(Level::Info, msg);
+}
+
+/// High-volume diagnostics (`RAINBOW_LOG=debug`).
+pub fn debug(msg: &str) {
+    emit(Level::Debug, msg);
+}
+
+/// Run `f` with all log output captured; returns `f`'s result and the
+/// messages emitted, regardless of the `RAINBOW_LOG` threshold.
+pub fn capture<R>(f: impl FnOnce() -> R) -> (R, Vec<(Level, String)>) {
+    let _gate = match CAPTURE_GATE.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    {
+        let mut cap = match CAPTURE.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *cap = Some(Vec::new());
+    }
+    let r = f();
+    let logs = {
+        let mut cap = match CAPTURE.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        cap.take().unwrap_or_default()
+    };
+    (r, logs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_collects_all_levels_in_order() {
+        let ((), logs) = capture(|| {
+            warn("a failed");
+            info("b progressed");
+            debug("c detailed");
+        });
+        assert_eq!(logs.len(), 3);
+        assert_eq!(logs[0], (Level::Warn, "a failed".to_string()));
+        assert_eq!(logs[1].0, Level::Info);
+        assert_eq!(logs[2].0, Level::Debug);
+    }
+
+    #[test]
+    fn capture_is_scoped() {
+        let ((), logs) = capture(|| warn("inside"));
+        assert_eq!(logs.len(), 1);
+        // After the capture ends the buffer is gone; this emit goes to
+        // stderr (or is filtered) and must not leak into a later capture.
+        debug("outside");
+        let ((), logs) = capture(|| {});
+        assert!(logs.is_empty());
+    }
+
+    #[test]
+    fn levels_order_and_tags() {
+        assert!(Level::Warn < Level::Info && Level::Info < Level::Debug);
+        assert_eq!(Level::Warn.tag(), "warning");
+        assert_eq!(Level::Info.tag(), "info");
+        assert_eq!(Level::Debug.tag(), "debug");
+    }
+}

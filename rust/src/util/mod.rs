@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

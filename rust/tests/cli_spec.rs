@@ -268,7 +268,8 @@ fn manual_covers_every_subcommand_knob_and_profile() {
         include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/MANUAL.md"));
     for cmd in ["run", "sweep", "shard-worker", "queue-worker",
                 "cache-server", "backends", "figure", "suite", "analyze",
-                "storage", "perf", "lint", "list"] {
+                "storage", "perf", "stats", "trace-summary", "lint",
+                "list"] {
         assert!(manual.contains(&format!("`{cmd}`")),
                 "MANUAL.md must document the `{cmd}` subcommand");
     }
@@ -305,6 +306,15 @@ fn manual_covers_every_subcommand_knob_and_profile() {
                    "--worker-id"] {
         assert!(manual.contains(needle),
                 "MANUAL.md must describe the job-queue {needle} surface");
+    }
+    // The observability surface: the trace record catalog and its
+    // version key, the emission flags, the fleet-stats opcode and wire
+    // version, and the leveled log sink's env knob must be documented.
+    for needle in ["--trace-out", "--csv-series", "traceversion",
+                   "STATS", "statswireversion", "RAINBOW_LOG"] {
+        assert!(manual.contains(needle),
+                "MANUAL.md must describe the observability {needle} \
+                 surface");
     }
     // The lint surface: every rule id, the suppression-marker syntax,
     // and the wire-format lock workflow must be documented.

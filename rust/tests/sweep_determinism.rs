@@ -452,6 +452,36 @@ fn sharded_sweep_reports_failed_workers() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The telemetry contract (DESIGN.md §14): tracing observes without
+/// perturbing. Two traced runs of the same spec must render
+/// byte-identical `--trace-out` files, and the traced run's metrics
+/// must equal an untraced run's bit-for-bit (via the kv
+/// serialization) — the sink never feeds back into timing.
+#[test]
+fn traced_runs_render_byte_identical_and_do_not_perturb_metrics() {
+    use rainbow::report::{run_traced, trace_meta};
+    use rainbow::telemetry::trace::{read_trace, render_trace};
+    let spec = tiny("DICT", "rainbow");
+    let meta = trace_meta(&spec);
+    let (m1, t1) = run_traced(&spec);
+    let (m2, t2) = run_traced(&spec);
+    let a = render_trace(&meta, &m1, &t1);
+    let b = render_trace(&meta, &m2, &t2);
+    assert_eq!(a, b, "repeated traced runs must render byte-identical");
+    assert_eq!(metrics_to_kv(&m1), metrics_to_kv(&m2));
+    assert_eq!(metrics_to_kv(&m1), metrics_to_kv(&run_uncached(&spec)),
+               "tracing must not perturb the simulated outcome");
+    // The emitted file passes its own strict reader (the trace-smoke
+    // validation), carries the run's identity, and its records are
+    // internally consistent: epochs held + dropped account for every
+    // roll, and events arrive cycle-ordered.
+    let s = read_trace(&a).expect("emitted trace must parse strictly");
+    assert_eq!(s.meta.fingerprint, spec.fingerprint());
+    assert_eq!(s.epochs.len() as u64 + t1.series_dropped(), t1.epochs());
+    assert!(s.events.windows(2).all(|w| w[0].cycle <= w[1].cycle),
+            "events must be cycle-ordered");
+}
+
 #[test]
 fn overrides_change_identity_and_outcome() {
     // The override-bearing spec must not collide with its base spec in

@@ -36,6 +36,13 @@ TRACKED = [
      "QUEUE_WIRE_VERSION"),
     ("report/wal.rs", "LogRecord", "report/serde_kv.rs",
      "CACHE_LOG_VERSION"),
+    ("telemetry/mod.rs", "Event", "telemetry/mod.rs", "TRACE_VERSION"),
+    ("telemetry/mod.rs", "EpochSample", "telemetry/mod.rs",
+     "TRACE_VERSION"),
+    ("telemetry/trace.rs", "TraceMeta", "telemetry/mod.rs",
+     "TRACE_VERSION"),
+    ("report/netstore.rs", "ServerStats", "report/serde_kv.rs",
+     "STATS_WIRE_VERSION"),
 ]
 
 
